@@ -1,0 +1,82 @@
+//! Regenerate every table and figure of the paper's evaluation and write
+//! the markdown to `EXPERIMENTS_GENERATED.md`.
+//!
+//! ```bash
+//! cargo run --release --example paper_figures                 # default scale (300 convs)
+//! cargo run --release --example paper_figures -- --paper      # full scale (1000 convs)
+//! cargo run --release --example paper_figures -- --quick      # smoke scale (80 convs)
+//! ```
+
+use fastswitch::coordinator::priority::Pattern;
+use fastswitch::exp;
+use fastswitch::exp::runner::Scale;
+use fastswitch::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = if args.flag("paper") {
+        Scale::paper()
+    } else if args.flag("quick") {
+        Scale::quick()
+    } else {
+        Scale::default()
+    };
+    let freqs = [0.01, 0.02, 0.04, 0.08];
+    eprintln!(
+        "regenerating all figures at {} conversations (this runs ~40 simulations)...",
+        scale.conversations
+    );
+
+    let mut reports = Vec::new();
+    let t0 = std::time::Instant::now();
+
+    eprintln!("[1/11] fig1 latency breakdown");
+    reports.push(exp::fig1::run(&scale));
+    eprintln!("[2/11] fig2 waiting fractions");
+    reports.push(exp::fig2::run(&scale));
+    eprintln!("[3/11] fig3 granularity timeline");
+    reports.push(exp::fig3::run());
+    eprintln!("[4/11] fig4 workload distributions");
+    reports.push(exp::fig4::run(&scale));
+    eprintln!("[5/11] fig6 asynchrony degrees + fig8(a-d) tail latency ladders");
+    reports.push(exp::fig6::run());
+    for testbed in ["llama8b", "qwen32b"] {
+        for pat in [Pattern::Markov, Pattern::Random] {
+            reports.push(exp::fig8::run_latency(testbed, pat, &scale));
+        }
+    }
+    eprintln!("[6/11] fig8(e-f) throughput sweeps");
+    for testbed in ["llama8b", "qwen32b"] {
+        reports.push(exp::fig8::run_throughput(
+            testbed,
+            Pattern::Markov,
+            &freqs,
+            &scale,
+        ));
+    }
+    eprintln!("[7/11] fig9 call-stack overhead");
+    reports.push(exp::fig9::run(&freqs, &scale));
+    eprintln!("[8/11] fig10 context-switch overhead");
+    reports.push(exp::fig10::run(&freqs, &scale));
+    eprintln!("[9/11] fig11 block-group size sensitivity");
+    reports.push(exp::fig11::run(&[64, 256, 1000, 2000, 3000], &[0.02, 0.04], &scale));
+    eprintln!("[10/11] fig12 token-generation efficiency");
+    reports.push(exp::fig12::run(&scale));
+    eprintln!("[11/11] fig13 CPU memory sensitivity + table1 swap volume");
+    reports.push(exp::fig13::run(&[2, 8, 20, 40, 60, 80], &scale));
+    reports.push(exp::table1::run(&scale));
+
+    let mut md = format!(
+        "# Generated paper figures (scale: {} conversations, seed {})\n\n",
+        scale.conversations, scale.seed
+    );
+    for r in &reports {
+        println!("{}", r.render());
+        md.push_str(&r.markdown());
+    }
+    std::fs::write("EXPERIMENTS_GENERATED.md", md).expect("write");
+    eprintln!(
+        "done in {:.1}s — wrote EXPERIMENTS_GENERATED.md",
+        t0.elapsed().as_secs_f64()
+    );
+}

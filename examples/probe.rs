@@ -1,0 +1,22 @@
+use fastswitch::config::{EngineConfig, Preset};
+use fastswitch::coordinator::priority::Pattern;
+use fastswitch::exp::runner::{run_sim, Scale};
+
+fn main() {
+    for rate in [0.3, 0.5] {
+        let scale = Scale { conversations: 150, request_rate: rate, ..Scale::default() };
+        println!("--- qwen32b @ {rate} req/s ---");
+        for cfg0 in [EngineConfig::vllm_baseline(), EngineConfig::with_dbg_reuse(), EngineConfig::fastswitch()] {
+            let mut cfg = cfg0.clone();
+            cfg.scheduler.priority_update_freq = 0.02;
+            let out = run_sim(cfg, Preset::qwen32b_a100(), Pattern::Markov, &scale);
+            let ttft = out.recorder.ttft();
+            let tbt = out.recorder.tbt();
+            println!(
+                "{:<16} P99TTFT={:8.2}s P99.9TBT={:7.2}s tput={:6.1} recompute={:6} contam={:7}",
+                out.label, ttft.p(99.0), tbt.p(99.9), out.throughput(),
+                out.recorder.recompute_preemptions, out.contaminated,
+            );
+        }
+    }
+}

@@ -1,0 +1,195 @@
+"""AOT pipeline: lower the L2 model to HLO *text* artifacts for Rust.
+
+Python runs ONCE, at build time (`make artifacts`); the Rust binary is
+self-contained afterwards. Interchange format is HLO text, NOT
+``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Emitted artifacts (``artifacts/``):
+
+- ``decode_b{B}.hlo.txt``  — one decode iteration at batch size B, for
+  each B in ``cfg.decode_batch_sizes``. The runtime picks the smallest
+  variant that fits the scheduled batch and pads.
+- ``prefill_t{T}.hlo.txt`` — one prefill chunk (T tokens) with prefix
+  reuse for a single request.
+- ``params.bin``           — raw little-endian f32 weights, in
+  ``model.param_spec`` order.
+- ``model_meta.txt``       — line-based config + tensor manifest parsed
+  by ``rust/src/runtime/meta.rs``.
+
+Input convention of every HLO entry computation: the flattened jit
+arguments in order — params[0..N), k_cache, v_cache, then the per-call
+dynamic operands. Outputs are lowered with ``return_tuple=True``.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import DEFAULT, ModelConfig
+from .model import decode_step, init_params, param_spec, prefill_chunk
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _cache_struct(cfg: ModelConfig):
+    shape = (cfg.n_layers, cfg.num_blocks, cfg.block_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _param_structs(cfg: ModelConfig):
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_spec(cfg)]
+
+
+def lower_decode(cfg: ModelConfig, batch: int) -> str:
+    fn = functools.partial(decode_step, cfg)
+    i32 = jnp.int32
+    lowered = jax.jit(fn).lower(
+        _param_structs(cfg),
+        _cache_struct(cfg),
+        _cache_struct(cfg),
+        jax.ShapeDtypeStruct((batch,), i32),  # token_ids
+        jax.ShapeDtypeStruct((batch,), i32),  # positions
+        jax.ShapeDtypeStruct((batch, cfg.max_blocks_per_seq), i32),
+        jax.ShapeDtypeStruct((batch,), i32),  # context_lens
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_prefill(cfg: ModelConfig) -> str:
+    fn = functools.partial(prefill_chunk, cfg)
+    i32 = jnp.int32
+    lowered = jax.jit(fn).lower(
+        _param_structs(cfg),
+        _cache_struct(cfg),
+        _cache_struct(cfg),
+        jax.ShapeDtypeStruct((cfg.prefill_chunk,), i32),  # token_ids
+        jax.ShapeDtypeStruct((), i32),  # prefix_len
+        jax.ShapeDtypeStruct((), i32),  # t_actual
+        jax.ShapeDtypeStruct((cfg.max_blocks_per_seq,), i32),
+    )
+    return to_hlo_text(lowered)
+
+
+def write_params(cfg: ModelConfig, out_dir: str, seed: int) -> int:
+    params = init_params(cfg, seed=seed)
+    path = os.path.join(out_dir, "params.bin")
+    with open(path, "wb") as f:
+        for arr in params:
+            f.write(np.asarray(arr, dtype="<f4").tobytes())
+    return os.path.getsize(path)
+
+
+def write_meta(cfg: ModelConfig, out_dir: str) -> None:
+    lines = ["fastswitch-model-meta v1"]
+    for key in ("vocab", "d_model", "n_layers", "n_heads", "n_kv_heads",
+                "head_dim", "d_ff", "max_seq", "num_blocks", "block_size",
+                "max_blocks_per_seq", "prefill_chunk"):
+        lines.append(f"{key} {getattr(cfg, key)}")
+    lines.append(
+        "decode_batch_sizes " + ",".join(str(b) for b in cfg.decode_batch_sizes)
+    )
+    for name, shape in param_spec(cfg):
+        lines.append("tensor " + name + " " + "x".join(str(d) for d in shape))
+    with open(os.path.join(out_dir, "model_meta.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def write_golden(cfg: ModelConfig, out_dir: str, seed: int, n_decode: int = 20) -> None:
+    """Golden transcript for the Rust runtime parity test: prefill a fixed
+    prompt through the same decode/prefill functions that were lowered,
+    then decode greedily. The Rust integration test must reproduce every
+    token through PJRT."""
+    import numpy as np
+
+    from .model import decode_step, init_params, prefill_chunk
+
+    params = init_params(cfg, seed=seed)
+    rng = np.random.default_rng(1234)
+    prompt = rng.integers(1, cfg.vocab, cfg.prefill_chunk + 7).astype(np.int32)
+
+    shape = (cfg.n_layers, cfg.num_blocks, cfg.block_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    kc = jnp.zeros(shape, jnp.float32)
+    vc = jnp.zeros(shape, jnp.float32)
+    # Block table: blocks 1.. (block 0 reserved).
+    bt = jnp.asarray(
+        [i + 1 for i in range(cfg.max_blocks_per_seq)], jnp.int32
+    )
+
+    # Chunked prefill.
+    T = cfg.prefill_chunk
+    pos = 0
+    next_tok = None
+    while pos < len(prompt):
+        chunk = prompt[pos : pos + T]
+        ta = len(chunk)
+        padded = np.zeros(T, np.int32)
+        padded[:ta] = chunk
+        next_tok, kc, vc = prefill_chunk(
+            cfg, params, kc, vc, jnp.asarray(padded), pos, ta, bt
+        )
+        pos += ta
+
+    out_tokens = [int(next_tok)]
+    ctx = len(prompt) + 1
+    btab = jnp.zeros((1, cfg.max_blocks_per_seq), jnp.int32).at[0].set(bt)
+    for _ in range(n_decode - 1):
+        tok = jnp.asarray([out_tokens[-1]], jnp.int32)
+        positions = jnp.asarray([ctx - 1], jnp.int32)
+        cl = jnp.asarray([ctx], jnp.int32)
+        nxt, kc, vc = decode_step(cfg, params, kc, vc, tok, positions, btab, cl)
+        out_tokens.append(int(nxt[0]))
+        ctx += 1
+
+    with open(os.path.join(out_dir, "golden.txt"), "w") as f:
+        f.write("prompt " + ",".join(str(t) for t in prompt) + "\n")
+        f.write("continuation " + ",".join(str(t) for t in out_tokens) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = DEFAULT
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for b in cfg.decode_batch_sizes:
+        text = lower_decode(cfg, b)
+        path = os.path.join(args.out_dir, f"decode_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    text = lower_prefill(cfg)
+    path = os.path.join(args.out_dir, f"prefill_t{cfg.prefill_chunk}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    n = write_params(cfg, args.out_dir, args.seed)
+    print(f"wrote params.bin ({n} bytes)")
+    write_meta(cfg, args.out_dir)
+    print("wrote model_meta.txt")
+    write_golden(cfg, args.out_dir, args.seed)
+    print("wrote golden.txt")
+
+
+if __name__ == "__main__":
+    main()

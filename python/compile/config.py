@@ -1,0 +1,47 @@
+"""Model / cache configuration shared by the L1 kernels, L2 model and AOT.
+
+The Rust coordinator reads the same values from ``artifacts/model_meta.txt``
+(emitted by :mod:`compile.aot`), so this file is the single source of truth
+for the real-execution model.
+
+The model is intentionally small: the paper's SLO dynamics come from the
+scheduler / swap subsystem, not model quality (see DESIGN.md, hardware
+substitution table). Sizes are chosen so a full end-to-end serve run on the
+CPU PJRT backend finishes in seconds, while exercising exactly the same
+paged-KV data path a large model would.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Configuration of the paged-KV transformer used for real execution."""
+
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    max_seq: int = 1024
+
+    # Paged KV cache geometry (mirrors vLLM: block_size tokens per block).
+    num_blocks: int = 256
+    block_size: int = 16
+    # Max blocks per sequence = max_seq / block_size.
+    max_blocks_per_seq: int = 64
+
+    # AOT-compiled shape variants.
+    decode_batch_sizes: tuple = (1, 4, 8)
+    prefill_chunk: int = 64
+
+    def __post_init__(self):
+        assert self.d_model == self.n_heads * self.head_dim
+        assert self.n_heads % self.n_kv_heads == 0
+        assert self.max_seq == self.max_blocks_per_seq * self.block_size
+        assert self.max_seq <= self.num_blocks * self.block_size
+
+
+DEFAULT = ModelConfig()

@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the serving hot-spots.
+
+- paged_attention: decode-time attention over a vLLM-style block table.
+- prefix_prefill: prefill-with-prefix for multi-turn conversations (the
+  lightllm kernel the paper integrates), rethought for Pallas/TPU.
+- ref: pure-jnp oracles used by the pytest suite.
+"""
+
+from .paged_attention import paged_attention
+from .prefix_prefill import prefix_prefill
+
+__all__ = ["paged_attention", "prefix_prefill"]

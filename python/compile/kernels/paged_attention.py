@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: decode-time paged attention over a vLLM block table.
+
+One query token per request; KV lives in a paged cache indexed through a
+per-request block table. This is the serving hot-spot: every decode
+iteration of every running request goes through this kernel.
+
+TPU adaptation of the paper's CUDA data path (DESIGN.md
+§Hardware-Adaptation): instead of one CUDA thread block per (request,
+kv-split) with shared-memory staging, we run a Pallas grid over requests;
+each program streams the request's KV blocks HBM→VMEM and maintains an
+online-softmax accumulator in registers/VMEM. The q·kᵀ and p·v contractions
+are shaped to land on the MXU ([BS, D] x [D, G·KH] tiles). VMEM footprint
+per program = one KV block pair + accumulator:
+    2·BS·KH·D·4B + KH·G·D·4B ≈ 2·16·4·64·4 + 4·1·64·4 ≈ 33 KB  « 16 MB.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; the interpret path lowers to plain HLO, which is what the
+Rust runtime executes (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_attention_kernel(
+    q_ref,  # [1, H, D]
+    bt_ref,  # [1, MAXB] int32
+    cl_ref,  # [1] int32
+    k_ref,  # [NB, BS, KH, D] (full cache)
+    v_ref,  # [NB, BS, KH, D]
+    o_ref,  # [1, H, D]
+    *,
+    block_size: int,
+    n_kv_heads: int,
+):
+    H, D = q_ref.shape[1], q_ref.shape[2]
+    KH = n_kv_heads
+    G = H // KH
+    BS = block_size
+    scale = 1.0 / (D**0.5)
+    max_blocks = bt_ref.shape[1]
+
+    q = q_ref[0].reshape(KH, G, D).astype(jnp.float32)
+    ctx = cl_ref[0]
+
+    def body(i, carry):
+        m, l, acc = carry  # [KH,G], [KH,G], [KH,G,D]
+        blk = bt_ref[0, i]
+        # HBM→VMEM stage of one KV block (dynamic gather through the block
+        # table — the Pallas analogue of vLLM's per-block pointer chase).
+        k = pl.load(k_ref, (pl.dslice(blk, 1),))[0].astype(jnp.float32)  # [BS,KH,D]
+        v = pl.load(v_ref, (pl.dslice(blk, 1),))[0].astype(jnp.float32)
+        # MXU contraction: scores[KH,G,BS]
+        s = jnp.einsum("kgd,skd->kgs", q, k) * scale
+        # Mask token slots beyond the context length.
+        pos = i * BS + jnp.arange(BS)
+        s = jnp.where((pos < ctx)[None, None, :], s, NEG_INF)
+        # Online softmax update.
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])  # [KH,G,BS]
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("kgs,skd->kgd", p, v)
+        return m_new, l_new, acc_new
+
+    # Only walk blocks that actually hold context; later block-table
+    # entries may be stale/null.
+    n_blocks = (ctx + BS - 1) // BS
+    m0 = jnp.full((KH, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((KH, G), jnp.float32)
+    acc0 = jnp.zeros((KH, G, D), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    del max_blocks
+    out = acc / l[..., None]
+    o_ref[0] = out.reshape(H, D).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_cache, v_cache, block_tables, context_lens, *, block_size):
+    """Paged attention for a batch of single-token (decode) queries.
+
+    Shapes match :func:`compile.kernels.ref.ref_paged_attention`.
+    """
+    B, H, D = q.shape
+    NB, BS, KH, _ = k_cache.shape
+    assert BS == block_size
+    MAXB = block_tables.shape[1]
+
+    kernel = functools.partial(
+        _paged_attention_kernel, block_size=block_size, n_kv_heads=KH
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, MAXB), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            # Full-cache residency: the block table's indirection is dynamic,
+            # so the cache cannot be tiled by the grid; on real TPU this is
+            # the HBM-resident operand that pl.load streams per-block.
+            pl.BlockSpec((NB, BS, KH, D), lambda b: (0, 0, 0, 0)),
+            pl.BlockSpec((NB, BS, KH, D), lambda b: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=True,
+    )(q, block_tables, context_lens, k_cache, v_cache)

@@ -1,0 +1,129 @@
+"""L1 Pallas kernel: prefill-with-prefix for multi-turn conversations.
+
+The paper integrates lightllm's triton "prefill with prefix" kernel so a
+new conversation turn attends over the previous turns' KV (already resident
+in the paged cache — possibly just swapped back in from CPU) without
+recomputing it. This is the TPU/Pallas rethink of that kernel: a single
+program per request streams the paged prefix KV block-by-block (online
+softmax, same as the decode kernel) and then applies the causally-masked
+new-token block in one MXU-shaped contraction.
+
+VMEM footprint per program: one KV block pair + the new-token tile +
+accumulators ≈ (2·BS·KH·D + 3·T·KH·D + T·KH·G·D) · 4 B; with the default
+T=64 geometry ≈ 330 KB « 16 MB, leaving room to scale T or D.
+
+interpret=True: see paged_attention.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _prefix_prefill_kernel(
+    q_ref,  # [T, H, D]
+    kn_ref,  # [T, KH, D]  new-token keys
+    vn_ref,  # [T, KH, D]
+    bt_ref,  # [MAXB] int32
+    pfx_ref,  # [1] int32   prefix length
+    ta_ref,  # [1] int32   actual new-token count
+    k_ref,  # [NB, BS, KH, D] paged prefix cache
+    v_ref,  # [NB, BS, KH, D]
+    o_ref,  # [T, H, D]
+    *,
+    block_size: int,
+    n_kv_heads: int,
+):
+    T, H, D = q_ref.shape
+    KH = n_kv_heads
+    G = H // KH
+    BS = block_size
+    scale = 1.0 / (D**0.5)
+
+    q = q_ref[...].reshape(T, KH, G, D).astype(jnp.float32)
+    pfx = pfx_ref[0]
+    ta = ta_ref[0]
+
+    # ---- Stage 1: stream the paged prefix, online softmax over all T
+    # queries at once (no causal mask: every new token sees the whole
+    # prefix).
+    def body(i, carry):
+        m, l, acc = carry  # [T,KH,G], [T,KH,G], [T,KH,G,D]
+        blk = bt_ref[i]
+        k = pl.load(k_ref, (pl.dslice(blk, 1),))[0].astype(jnp.float32)  # [BS,KH,D]
+        v = pl.load(v_ref, (pl.dslice(blk, 1),))[0].astype(jnp.float32)
+        s = jnp.einsum("tkgd,skd->tkgs", q, k) * scale  # [T,KH,G,BS]
+        pos = i * BS + jnp.arange(BS)
+        s = jnp.where((pos < pfx)[None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("tkgs,skd->tkgd", p, v)
+        return m_new, l_new, acc_new
+
+    n_pfx_blocks = (pfx + BS - 1) // BS
+    m0 = jnp.full((T, KH, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((T, KH, G), jnp.float32)
+    acc0 = jnp.zeros((T, KH, G, D), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_pfx_blocks, body, (m0, l0, acc0))
+
+    # ---- Stage 2: new-token self-attention block with causal mask,
+    # merged into the same online softmax state.
+    kn = kn_ref[...].astype(jnp.float32)  # [T,KH,D]
+    vn = vn_ref[...].astype(jnp.float32)
+    s = jnp.einsum("tkgd,skd->tkgs", q, kn) * scale  # [T,KH,G,T]
+    t_idx = jnp.arange(T)
+    causal = t_idx[None, :] <= t_idx[:, None]  # key j visible to query i
+    valid = t_idx[None, :] < ta
+    s = jnp.where((causal & valid)[:, None, None, :], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    corr = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l = l * corr + p.sum(axis=-1)
+    acc = acc * corr[..., None] + jnp.einsum("tkgs,skd->tkgd", p, vn)
+
+    out = acc / l[..., None]  # [T,KH,G,D]
+    out = jnp.where((t_idx < ta)[:, None, None, None], out, 0.0)
+    o_ref[...] = out.reshape(T, H, D).astype(o_ref.dtype)
+
+
+def prefix_prefill(
+    q, k_new, v_new, k_cache, v_cache, block_table, prefix_len, t_actual, *, block_size
+):
+    """Prefill-with-prefix attention for one request.
+
+    Shapes match :func:`compile.kernels.ref.ref_prefix_prefill`;
+    ``prefix_len`` / ``t_actual`` are scalar int32 arrays (traced).
+    """
+    T, H, D = q.shape
+    NB, BS, KH, _ = k_cache.shape
+    assert BS == block_size
+    MAXB = block_table.shape[0]
+
+    kernel = functools.partial(
+        _prefix_prefill_kernel, block_size=block_size, n_kv_heads=KH
+    )
+    pfx = jnp.asarray(prefix_len, jnp.int32).reshape(1)
+    ta = jnp.asarray(t_actual, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((T, H, D), lambda i: (0, 0, 0)),
+            pl.BlockSpec((T, KH, D), lambda i: (0, 0, 0)),
+            pl.BlockSpec((T, KH, D), lambda i: (0, 0, 0)),
+            pl.BlockSpec((MAXB,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((NB, BS, KH, D), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((NB, BS, KH, D), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((T, H, D), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, H, D), q.dtype),
+        interpret=True,
+    )(q, k_new, v_new, block_table, pfx, ta, k_cache, v_cache)

@@ -1,0 +1,93 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks the kernels against:
+dense, gather-based attention with no paging tricks, written for clarity
+rather than speed.
+"""
+
+import jax.numpy as jnp
+
+
+def gather_paged_kv(cache, block_table, ctx_len, block_size):
+    """Gather a request's KV from the paged cache into a dense array.
+
+    cache:        [num_blocks, block_size, n_kv_heads, head_dim]
+    block_table:  [max_blocks_per_seq] int32 (entries past the context are
+                  arbitrary — typically 0, the reserved null block)
+    ctx_len:      python int — number of valid tokens
+    returns       [ctx_len, n_kv_heads, head_dim]
+    """
+    n_blocks = (ctx_len + block_size - 1) // block_size
+    parts = [cache[block_table[i]] for i in range(n_blocks)]
+    dense = jnp.concatenate(parts, axis=0) if parts else cache[:0, 0]
+    return dense[:ctx_len]
+
+
+def ref_paged_attention(q, k_cache, v_cache, block_tables, context_lens, *, block_size):
+    """Decode-time paged attention, one query token per request.
+
+    q:            [B, n_heads, head_dim]
+    k_cache:      [num_blocks, block_size, n_kv_heads, head_dim]
+    v_cache:      same shape as k_cache
+    block_tables: [B, max_blocks_per_seq] int32
+    context_lens: [B] int32 (>=1; the query token's own KV is already in
+                  the cache, mirroring the vLLM decode contract)
+    returns       [B, n_heads, head_dim]
+    """
+    B, H, D = q.shape
+    KH = k_cache.shape[2]
+    G = H // KH
+    scale = 1.0 / (D**0.5)
+    outs = []
+    for b in range(B):
+        ctx = int(context_lens[b])
+        k = gather_paged_kv(k_cache, block_tables[b], ctx, block_size)  # [ctx, KH, D]
+        v = gather_paged_kv(v_cache, block_tables[b], ctx, block_size)
+        # GQA: head h attends with kv head h // G
+        qh = q[b].reshape(KH, G, D)
+        scores = jnp.einsum("kgd,tkd->kgt", qh, k) * scale  # [KH, G, ctx]
+        p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+        p = p / p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("kgt,tkd->kgd", p, v)
+        outs.append(o.reshape(H, D))
+    return jnp.stack(outs)
+
+
+def ref_prefix_prefill(
+    q, k_new, v_new, k_cache, v_cache, block_table, prefix_len, t_actual, *, block_size
+):
+    """Prefill-with-prefix attention for a single request.
+
+    q:          [T, n_heads, head_dim]   — new-token queries (rows >= t_actual
+                are padding; their output is unspecified and zeroed here)
+    k_new:      [T, n_kv_heads, head_dim] — new-token keys
+    v_new:      [T, n_kv_heads, head_dim]
+    k_cache:    paged prefix KV, [num_blocks, block_size, KH, D]
+    block_table:[max_blocks_per_seq] int32
+    prefix_len: python int — reused prefix length (tokens already in cache)
+    t_actual:   python int — number of valid new tokens (<= T)
+    returns     [T, n_heads, head_dim] (rows >= t_actual zeroed)
+    """
+    T, H, D = q.shape
+    KH = k_new.shape[1]
+    G = H // KH
+    scale = 1.0 / (D**0.5)
+
+    kp = gather_paged_kv(k_cache, block_table, prefix_len, block_size)  # [P, KH, D]
+    vp = gather_paged_kv(v_cache, block_table, prefix_len, block_size)
+    k_all = jnp.concatenate([kp, k_new[:t_actual]], axis=0)  # [P+t, KH, D]
+    v_all = jnp.concatenate([vp, v_new[:t_actual]], axis=0)
+
+    qh = q.reshape(T, KH, G, D)
+    scores = jnp.einsum("tkgd,skd->tkgs", qh, k_all) * scale  # [T, KH, G, P+t]
+    # Causal mask in the new-token suffix: query i sees the whole prefix
+    # plus new tokens 0..i.
+    t_idx = jnp.arange(T)[:, None]
+    s_idx = jnp.arange(prefix_len + t_actual)[None, :]
+    mask = s_idx <= (prefix_len + t_idx)  # [T, P+t]
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("tkgs,skd->tkgd", p, v_all).reshape(T, H, D)
+    valid = (jnp.arange(T) < t_actual)[:, None, None]
+    return jnp.where(valid, o, 0.0)

@@ -1,0 +1,240 @@
+"""L2: paged-KV transformer for real execution on the serving path.
+
+A decoder-only transformer whose attention reads/writes a vLLM-style paged
+KV cache through the L1 Pallas kernels. Two entry points, both AOT-lowered
+to HLO text by :mod:`compile.aot` and executed from the Rust runtime:
+
+- :func:`decode_step` — one token per running request (the decode
+  iteration of continuous batching).
+- :func:`prefill_chunk` — one chunk of a single request's prompt, with
+  prefix reuse (previous turns' KV already in the cache).
+
+Contracts with the Rust coordinator (rust/src/runtime/):
+
+- Block 0 of the paged cache is the reserved *null block*: padded batch
+  slots and padded block-table entries point at it, so scatters from
+  inactive slots land there harmlessly. The Rust allocator never hands
+  out block 0 in real mode.
+- ``context_lens[b]`` counts tokens *including* the one being decoded;
+  inactive slots have ``context_lens[b] == 0`` and ``token_ids[b] == 0``.
+- The caches are carried functionally: each call returns the updated
+  caches, which the runtime feeds to the next call (kept device-resident
+  as PJRT buffers on the Rust side).
+
+Weights are an explicit, ordered list of arrays (see param_spec) so the
+Rust side can stream them from ``artifacts/params.bin`` without pytree
+guesswork.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .kernels import paged_attention, prefix_prefill
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list — the params.bin layout contract."""
+    spec = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.max_seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.n_heads * cfg.head_dim)),
+            (p + "wk", (cfg.d_model, cfg.n_kv_heads * cfg.head_dim)),
+            (p + "wv", (cfg.d_model, cfg.n_kv_heads * cfg.head_dim)),
+            (p + "wo", (cfg.n_heads * cfg.head_dim, cfg.d_model)),
+            (p + "ln2", (cfg.d_model,)),
+            (p + "w_in", (cfg.d_model, cfg.d_ff)),
+            (p + "w_gate", (cfg.d_model, cfg.d_ff)),
+            (p + "w_out", (cfg.d_ff, cfg.d_model)),
+        ]
+    spec += [
+        ("ln_f", (cfg.d_model,)),
+        ("unembed", (cfg.d_model, cfg.vocab)),
+    ]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Random (but well-scaled) weights as the ordered list of arrays."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            arr = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else cfg.d_model
+            arr = rng.standard_normal(shape).astype(np.float32) / np.sqrt(fan_in)
+        params.append(jnp.asarray(arr))
+    return params
+
+
+def params_by_name(cfg: ModelConfig, params):
+    return dict(zip([n for n, _ in param_spec(cfg)], params))
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def _rmsnorm(x, scale):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _mlp(x, w_in, w_gate, w_out):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_in)) @ w_out
+
+
+def _scatter_kv(cache_l, blk_ids, offsets, kv):
+    """Write per-row KV vectors into the paged cache.
+
+    cache_l: [NB, BS, KH, D]; blk_ids/offsets: [R] int32; kv: [R, KH, D].
+    Rows whose block id is 0 target the null block (padding contract).
+    """
+    return cache_l.at[blk_ids, offsets].set(kv)
+
+
+# --------------------------------------------------------------------------
+# Decode step
+# --------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, k_cache, v_cache, token_ids,
+                positions, block_tables, context_lens):
+    """One decode iteration for a (padded) batch.
+
+    k_cache/v_cache: [L, NB, BS, KH, D]
+    token_ids:       [B] int32
+    positions:       [B] int32 (0-based position of the token being decoded)
+    block_tables:    [B, MAXB] int32
+    context_lens:    [B] int32 (includes the current token; 0 = inactive)
+    returns (next_token_ids [B] int32, k_cache, v_cache)
+    """
+    P = params_by_name(cfg, params)
+    B = token_ids.shape[0]
+    BS = cfg.block_size
+    H, KH, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    active = context_lens > 0
+    safe_pos = jnp.where(active, positions, 0)
+    x = P["embed"][token_ids] + P["pos_embed"][safe_pos]  # [B, d]
+
+    rows = jnp.arange(B)
+    blk_ids = jnp.where(active, block_tables[rows, safe_pos // BS], 0)
+    offsets = safe_pos % BS
+    # The kernel needs ctx >= 1 even on padded slots (they attend into the
+    # null block and their output is discarded).
+    kernel_cl = jnp.maximum(context_lens, 1)
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = _rmsnorm(x, P[p + "ln1"])
+        q = (h @ P[p + "wq"]).reshape(B, H, D)
+        k = (h @ P[p + "wk"]).reshape(B, KH, D)
+        v = (h @ P[p + "wv"]).reshape(B, KH, D)
+        k_cache = k_cache.at[i].set(_scatter_kv(k_cache[i], blk_ids, offsets, k))
+        v_cache = v_cache.at[i].set(_scatter_kv(v_cache[i], blk_ids, offsets, v))
+        attn = paged_attention(
+            q, k_cache[i], v_cache[i], block_tables, kernel_cl, block_size=BS
+        )
+        x = x + attn.reshape(B, H * D) @ P[p + "wo"]
+        x = x + _mlp(_rmsnorm(x, P[p + "ln2"]), P[p + "w_in"], P[p + "w_gate"],
+                     P[p + "w_out"])
+
+    logits = _rmsnorm(x, P["ln_f"]) @ P["unembed"]  # [B, vocab]
+    next_ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    next_ids = jnp.where(active, next_ids, 0)
+    return next_ids, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# Prefill (chunked, with prefix reuse)
+# --------------------------------------------------------------------------
+
+def prefill_chunk(cfg: ModelConfig, params, k_cache, v_cache, token_ids,
+                  prefix_len, t_actual, block_table):
+    """Prefill one chunk of one request's prompt on top of a reused prefix.
+
+    k_cache/v_cache: [L, NB, BS, KH, D]
+    token_ids:   [T] int32 (rows >= t_actual are padding)
+    prefix_len:  scalar int32 — tokens already in the cache (previous turns
+                 and/or previously prefilled chunks of this prompt)
+    t_actual:    scalar int32 — valid tokens in this chunk (>= 1)
+    block_table: [MAXB] int32
+    returns (next_token_id scalar int32, k_cache, v_cache)
+
+    The returned token is the greedy continuation after the chunk's last
+    valid token — only meaningful for the prompt's final chunk.
+    """
+    P = params_by_name(cfg, params)
+    T = token_ids.shape[0]
+    BS = cfg.block_size
+    H, KH, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    idx = jnp.arange(T)
+    valid = idx < t_actual
+    positions = prefix_len + idx
+    safe_pos = jnp.where(valid, positions, 0)
+    x = P["embed"][token_ids] + P["pos_embed"][safe_pos]  # [T, d]
+
+    blk_ids = jnp.where(valid, block_table[safe_pos // BS], 0)
+    offsets = safe_pos % BS
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = _rmsnorm(x, P[p + "ln1"])
+        q = (h @ P[p + "wq"]).reshape(T, H, D)
+        k = (h @ P[p + "wk"]).reshape(T, KH, D)
+        v = (h @ P[p + "wv"]).reshape(T, KH, D)
+        k_cache = k_cache.at[i].set(_scatter_kv(k_cache[i], blk_ids, offsets, k))
+        v_cache = v_cache.at[i].set(_scatter_kv(v_cache[i], blk_ids, offsets, v))
+        attn = prefix_prefill(
+            q, k, v, k_cache[i], v_cache[i], block_table, prefix_len, t_actual,
+            block_size=BS,
+        )
+        x = x + attn.reshape(T, H * D) @ P[p + "wo"]
+        x = x + _mlp(_rmsnorm(x, P[p + "ln2"]), P[p + "w_in"], P[p + "w_gate"],
+                     P[p + "w_out"])
+
+    last = _rmsnorm(x[t_actual - 1], P["ln_f"])
+    logits = last @ P["unembed"]
+    return jnp.argmax(logits).astype(jnp.int32), k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# Dense reference (for tests): same model, ordinary causal attention
+# --------------------------------------------------------------------------
+
+def dense_forward(cfg: ModelConfig, params, token_ids):
+    """Run the model densely over a full sequence; returns logits of every
+    position. Used by tests to validate the paged decode/prefill paths
+    end-to-end."""
+    P = params_by_name(cfg, params)
+    S = token_ids.shape[0]
+    H, KH, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KH
+    x = P["embed"][token_ids] + P["pos_embed"][jnp.arange(S)]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = _rmsnorm(x, P[p + "ln1"])
+        q = (h @ P[p + "wq"]).reshape(S, KH, G, D)
+        k = (h @ P[p + "wk"]).reshape(S, KH, D)
+        v = (h @ P[p + "wv"]).reshape(S, KH, D)
+        s = jnp.einsum("tkgd,skd->tkgs", q, k) / (D**0.5)
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("tkgs,skd->tkgd", pr, v).reshape(S, H * D)
+        x = x + attn @ P[p + "wo"]
+        x = x + _mlp(_rmsnorm(x, P[p + "ln2"]), P[p + "w_in"], P[p + "w_gate"],
+                     P[p + "w_out"])
+    return _rmsnorm(x, P["ln_f"]) @ P["unembed"]

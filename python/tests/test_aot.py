@@ -1,0 +1,88 @@
+"""AOT pipeline sanity: HLO text artifacts, params manifest, meta file."""
+
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.config import DEFAULT, ModelConfig
+from compile.model import param_spec
+
+TINY = ModelConfig(
+    vocab=64, d_model=32, n_layers=1, n_heads=2, n_kv_heads=2, head_dim=16,
+    d_ff=64, max_seq=32, num_blocks=8, block_size=8, max_blocks_per_seq=4,
+    prefill_chunk=8, decode_batch_sizes=(1, 2),
+)
+
+
+def entry_param_count(text):
+    """Count parameters of the ENTRY computation only (fused
+    subcomputations declare their own `parameter(N)` lines)."""
+    entry = text[text.index("ENTRY") :]
+    entry = entry[: entry.index("\n}")]
+    return entry.count("parameter(")
+
+
+def test_decode_hlo_text_is_parseable_hlo(tmp_path):
+    text = aot.lower_decode(TINY, 2)
+    assert "ENTRY" in text and "HloModule" in text
+    # params + 2 caches + 4 dynamic operands
+    n_inputs = len(param_spec(TINY)) + 2 + 4
+    assert entry_param_count(text) == n_inputs
+
+
+def test_prefill_hlo_text_is_parseable_hlo():
+    text = aot.lower_prefill(TINY)
+    assert "ENTRY" in text and "HloModule" in text
+    n_inputs = len(param_spec(TINY)) + 2 + 4
+    assert entry_param_count(text) == n_inputs
+
+
+def test_params_bin_size(tmp_path):
+    n = aot.write_params(TINY, str(tmp_path), seed=0)
+    expect = sum(int(np.prod(s)) for _, s in param_spec(TINY)) * 4
+    assert n == expect
+
+
+def test_params_bin_deterministic(tmp_path):
+    aot.write_params(TINY, str(tmp_path), seed=3)
+    a = (tmp_path / "params.bin").read_bytes()
+    aot.write_params(TINY, str(tmp_path), seed=3)
+    b = (tmp_path / "params.bin").read_bytes()
+    assert a == b
+
+
+def test_meta_roundtrip(tmp_path):
+    aot.write_meta(TINY, str(tmp_path))
+    lines = (tmp_path / "model_meta.txt").read_text().splitlines()
+    assert lines[0] == "fastswitch-model-meta v1"
+    kv = dict(
+        line.split(" ", 1) for line in lines[1:] if not line.startswith("tensor")
+    )
+    assert int(kv["vocab"]) == TINY.vocab
+    assert int(kv["block_size"]) == TINY.block_size
+    assert kv["decode_batch_sizes"] == "1,2"
+    tensors = [line.split() for line in lines if line.startswith("tensor")]
+    assert len(tensors) == len(param_spec(TINY))
+    for (_, name, dims), (sname, sshape) in zip(tensors, param_spec(TINY)):
+        assert name == sname
+        assert tuple(int(d) for d in dims.split("x")) == tuple(sshape)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(Path(__file__).resolve().parents[2] / "artifacts" / ".stamp"),
+    reason="run `make artifacts` first",
+)
+def test_shipped_artifacts_consistent():
+    root = Path(__file__).resolve().parents[2] / "artifacts"
+    cfg = DEFAULT
+    for b in cfg.decode_batch_sizes:
+        text = (root / f"decode_b{b}.hlo.txt").read_text()
+        assert "ENTRY" in text
+    expect = sum(int(np.prod(s)) for _, s in param_spec(cfg)) * 4
+    assert (root / "params.bin").stat().st_size == expect

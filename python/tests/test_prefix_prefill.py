@@ -1,0 +1,91 @@
+"""Kernel-vs-oracle correctness: prefix_prefill (multi-turn prefill)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import prefix_prefill
+from compile.kernels.ref import ref_prefix_prefill
+
+SET = dict(deadline=None, max_examples=10, print_blob=True)
+
+
+def make_case(rng, T, H, KH, D, NB, BS, MAXB):
+    q = jnp.asarray(rng.standard_normal((T, H, D)), jnp.float32)
+    kn = jnp.asarray(rng.standard_normal((T, KH, D)), jnp.float32)
+    vn = jnp.asarray(rng.standard_normal((T, KH, D)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((NB, BS, KH, D)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((NB, BS, KH, D)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(NB)[:MAXB], jnp.int32)
+    return q, kn, vn, kc, vc, bt
+
+
+def check(T, H, KH, D, NB, BS, MAXB, pfx, ta, seed=0, rtol=3e-5):
+    rng = np.random.default_rng(seed)
+    q, kn, vn, kc, vc, bt = make_case(rng, T, H, KH, D, NB, BS, MAXB)
+    out = prefix_prefill(q, kn, vn, kc, vc, bt, pfx, ta, block_size=BS)
+    ref = ref_prefix_prefill(q, kn, vn, kc, vc, bt, pfx, ta, block_size=BS)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=rtol, atol=rtol)
+
+
+@settings(**SET)
+@given(
+    T=st.sampled_from([4, 8, 16]),
+    KH=st.integers(1, 4),
+    G=st.sampled_from([1, 2]),
+    D=st.sampled_from([8, 16, 32]),
+    BS=st.sampled_from([4, 8]),
+    data=st.data(),
+)
+def test_prefix_prefill_matches_ref(T, KH, G, D, BS, data):
+    H = KH * G
+    MAXB = 8
+    NB = MAXB + 2
+    pfx = data.draw(st.integers(0, (MAXB - 2) * BS))
+    ta = data.draw(st.integers(1, T))
+    check(T, H, KH, D, NB, BS, MAXB, pfx, ta, seed=data.draw(st.integers(0, 2**16)))
+
+
+def test_no_prefix_pure_causal():
+    """prefix_len = 0 degenerates to plain causal self-attention."""
+    check(16, 4, 2, 16, 10, 8, 8, pfx=0, ta=16)
+
+
+def test_single_new_token_equals_decode_shape():
+    """ta = 1: the turn's first decode-like step through the prefill path."""
+    check(8, 2, 2, 8, 10, 8, 8, pfx=24, ta=1)
+
+
+def test_prefix_at_block_boundary():
+    check(8, 2, 2, 8, 10, 8, 8, pfx=16, ta=8)
+
+
+def test_prefix_mid_block():
+    check(8, 2, 2, 8, 10, 8, 8, pfx=13, ta=5)
+
+
+def test_padded_rows_zeroed():
+    rng = np.random.default_rng(3)
+    q, kn, vn, kc, vc, bt = make_case(rng, 8, 2, 2, 8, 10, 8, 8)
+    out = prefix_prefill(q, kn, vn, kc, vc, bt, 5, 3, block_size=8)
+    assert np.allclose(np.asarray(out[3:]), 0.0)
+
+
+def test_padding_rows_do_not_leak_into_valid_rows():
+    """Changing padded-row inputs must not change valid-row outputs."""
+    rng = np.random.default_rng(4)
+    q, kn, vn, kc, vc, bt = make_case(rng, 8, 2, 2, 8, 10, 8, 8)
+    out1 = prefix_prefill(q, kn, vn, kc, vc, bt, 9, 4, block_size=8)
+    q2 = np.asarray(q).copy()
+    kn2 = np.asarray(kn).copy()
+    q2[4:] = 99.0
+    kn2[4:] = -99.0
+    out2 = prefix_prefill(
+        jnp.asarray(q2), jnp.asarray(kn2), vn, kc, vc, bt, 9, 4, block_size=8
+    )
+    np.testing.assert_allclose(np.asarray(out1[:4]), np.asarray(out2[:4]), rtol=1e-6)

@@ -1,0 +1,12 @@
+//! Bench: Fig. 10 — context-switch overhead, fixed vs block groups.
+use fastswitch::exp::{self, runner::Scale};
+use fastswitch::util::bench::{bench, section};
+
+fn main() {
+    section("fig10: context-switch overhead across frequencies");
+    let mut rep = None;
+    bench("fig10 (2 freqs x 2 systems)", 0, 1, || {
+        rep = Some(exp::fig10::run(&[0.02, 0.08], &Scale::quick()));
+    });
+    println!("{}", rep.unwrap().render());
+}

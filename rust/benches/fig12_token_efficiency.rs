@@ -1,0 +1,13 @@
+//! Bench: Fig. 12 — token-generation efficiency with/without the
+//! Multithreading Swap Manager.
+use fastswitch::exp::{self, runner::Scale};
+use fastswitch::util::bench::{bench, section};
+
+fn main() {
+    section("fig12: token-generation efficiency (MTSM on/off)");
+    let mut rep = None;
+    bench("fig12 (2 sims)", 0, 1, || {
+        rep = Some(exp::fig12::run(&Scale::quick()));
+    });
+    println!("{}", rep.unwrap().render());
+}

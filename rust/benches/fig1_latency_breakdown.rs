@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig. 1 (latency breakdown across percentiles) and
+//! time the run. `cargo bench --bench fig1_latency_breakdown`.
+use fastswitch::exp::{self, runner::Scale};
+use fastswitch::util::bench::{bench, section};
+
+fn main() {
+    section("fig1: latency breakdown (vLLM baseline)");
+    let mut last = None;
+    bench("fig1 quick-scale sim", 0, 3, || {
+        last = Some(exp::fig1::run(&Scale::quick()));
+    });
+    println!("{}", last.unwrap().render());
+}

@@ -1,0 +1,15 @@
+//! Bench: Fig. 3 microbenchmark — fixed-block vs block-group preemption
+//! cost at several preemption sizes.
+use fastswitch::exp;
+use fastswitch::util::bench::{bench, section};
+
+fn main() {
+    section("fig3: preemption granularity timeline");
+    for blocks in [16, 63, 128, 256] {
+        let mut rep = None;
+        bench(&format!("build+simulate preemption of {blocks} blocks"), 1, 20, || {
+            rep = Some(exp::fig3::run_with_blocks(blocks));
+        });
+        println!("{}", rep.unwrap().render());
+    }
+}

@@ -1,0 +1,27 @@
+//! Bench: Fig. 8 end-to-end — the headline ladder + throughput sweep,
+//! timed. `cargo bench --bench fig8_end_to_end`.
+use fastswitch::coordinator::priority::Pattern;
+use fastswitch::exp::{self, runner::Scale};
+use fastswitch::util::bench::{bench, section};
+
+fn main() {
+    let scale = Scale::quick();
+    section("fig8(a-d): tail-latency ablation ladder (llama8b, Markov)");
+    let mut rep = None;
+    bench("ladder of 4 sims", 0, 1, || {
+        rep = Some(exp::fig8::run_latency("llama8b", Pattern::Markov, &scale));
+    });
+    println!("{}", rep.unwrap().render());
+
+    section("fig8(e-f): throughput sweep");
+    let mut rep = None;
+    bench("throughput sweep (2 freqs x 2 systems)", 0, 1, || {
+        rep = Some(exp::fig8::run_throughput(
+            "llama8b",
+            Pattern::Markov,
+            &[0.02, 0.08],
+            &scale,
+        ));
+    });
+    println!("{}", rep.unwrap().render());
+}

@@ -1,0 +1,151 @@
+//! Hot-path microbenchmarks for the L3 coordinator — the §Perf targets:
+//! allocator churn, swap-op segment building, swap-manager submission,
+//! scheduler admission, and a full engine iteration. The paper's budget
+//! (Fig. 9) is scheduler work < 1% of a ~30 ms iteration, i.e. well
+//! under 300 µs per iteration for everything here combined.
+use fastswitch::block::{buddy::BlockGroupAllocator, fixed::FixedBlockAllocator, KvAllocator};
+use fastswitch::config::{
+    DispatchMode, GpuSpec, Granularity, ModelSpec, SwapCostConfig, SwapMode,
+};
+use fastswitch::coordinator::request::ReqState;
+use fastswitch::coordinator::scheduler::{schedule, Candidate};
+use fastswitch::sim::link::{Direction, PcieLink};
+use fastswitch::swap::engine::{BlockMove, SegmentBuilder};
+use fastswitch::swap::manager::SwapManager;
+use fastswitch::util::bench::{bench, black_box, section};
+use fastswitch::util::rng::Rng;
+
+fn bench_allocators() {
+    section("allocators (1556-block A10 space, churn mix)");
+    bench("fixed: alloc+release 32 blocks", 10, 2000, || {
+        let mut a = FixedBlockAllocator::new(1556);
+        for r in 0..8 {
+            black_box(a.allocate(r, 32));
+        }
+        for r in 0..8 {
+            black_box(a.release(r));
+        }
+    });
+    bench("buddy: alloc+release 32 blocks", 10, 2000, || {
+        let mut a = BlockGroupAllocator::new(1556, 60, 1);
+        for r in 0..8 {
+            black_box(a.allocate(r, 32));
+        }
+        for r in 0..8 {
+            black_box(a.release(r));
+        }
+    });
+    bench("buddy: churned steady-state step", 5, 200, || {
+        let mut a = BlockGroupAllocator::new(1556, 60, 1);
+        let mut rng = Rng::new(3);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..500 {
+            if !live.is_empty() && rng.chance(0.45) {
+                let i = rng.usize(0, live.len());
+                a.release(live.swap_remove(i));
+            } else if a.allocate(next, rng.usize(4, 40)).is_some() {
+                live.push(next);
+                next += 1;
+            }
+        }
+        black_box(live.len());
+    });
+}
+
+fn bench_segments() {
+    section("segment building (63-block preemption, 32 layers)");
+    let model = ModelSpec::llama8b();
+    let moves: Vec<BlockMove> = (0..63)
+        .map(|i| BlockMove { logical: i, gpu: 10 + i, cpu: 100 + i })
+        .collect();
+    let fixed = SegmentBuilder::new(model.clone(), Granularity::FixedBlock);
+    let group = SegmentBuilder::new(
+        model,
+        Granularity::BlockGroup { init_group_blocks: 60 },
+    );
+    bench("fixed (2016 segments)", 10, 5000, || {
+        black_box(fixed.build(1, Direction::Out, &moves));
+    });
+    bench("block-group (32 segments)", 10, 5000, || {
+        black_box(group.build(1, Direction::Out, &moves));
+    });
+}
+
+fn bench_swap_manager() {
+    section("swap manager submission");
+    let model = ModelSpec::llama8b();
+    let group = SegmentBuilder::new(
+        model,
+        Granularity::BlockGroup { init_group_blocks: 60 },
+    );
+    let moves: Vec<BlockMove> = (0..63)
+        .map(|i| BlockMove { logical: i, gpu: 10 + i, cpu: 100 + i })
+        .collect();
+    bench("submit_swap_out (coalesced, threadpool)", 10, 2000, || {
+        let mut m = SwapManager::new(
+            SwapMode::Adaptive,
+            DispatchMode::ThreadPool { workers: 4 },
+            &SwapCostConfig::default(),
+            PcieLink::new(GpuSpec::a10()),
+        );
+        let op = group.build(1, Direction::Out, &moves);
+        black_box(m.submit_swap_out(op, 0));
+    });
+}
+
+fn bench_scheduler() {
+    section("scheduler admission (256 candidates)");
+    let cands: Vec<Candidate> = (0..256)
+        .map(|i| Candidate {
+            id: i,
+            priority: (i % 8) as i64,
+            turn_arrival: i,
+            state: if i % 3 == 0 {
+                ReqState::Running
+            } else if i % 3 == 1 {
+                ReqState::SwappedOut
+            } else {
+                ReqState::Queued
+            },
+            blocks_held: if i % 3 == 0 { 60 } else { 0 },
+            blocks_needed: 30,
+        })
+        .collect();
+    bench("schedule() 256 candidates", 10, 5000, || {
+        black_box(schedule(&cands, 1556, 32));
+    });
+}
+
+fn bench_engine_iteration() {
+    section("end-to-end engine (quick sim, wall time per virtual iteration)");
+    use fastswitch::config::{EngineConfig, Preset};
+    use fastswitch::coordinator::priority::Pattern;
+    use fastswitch::exp::runner::{run_sim, Scale};
+    let scale = Scale { conversations: 40, ..Scale::quick() };
+    let mut iters = 0u64;
+    let mut cfgs = vec![EngineConfig::vllm_baseline(), EngineConfig::fastswitch()];
+    for cfg in cfgs.drain(..) {
+        let label = format!("full sim 40 convs ({})", cfg.label);
+        let mut c = cfg;
+        c.scheduler.priority_update_freq = 0.04;
+        let res = bench(&label, 0, 3, || {
+            let out = run_sim(c.clone(), Preset::llama8b_a10(), Pattern::Markov, &scale);
+            iters = out.iterations;
+            black_box(out.recorder.total_tokens);
+        });
+        println!(
+            "  -> {:.2} µs wall per virtual iteration ({} iterations)",
+            res.mean_ns / 1e3 / iters as f64,
+            iters
+        );
+    }
+}
+
+fn main() {
+    bench_allocators();
+    bench_segments();
+    bench_swap_manager();
+    bench_scheduler();
+    bench_engine_iteration();
+}

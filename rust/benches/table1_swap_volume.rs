@@ -1,0 +1,12 @@
+//! Bench: Table 1 — swap-out volume, traditional vs KV Cache Reuse.
+use fastswitch::exp::{self, runner::Scale};
+use fastswitch::util::bench::{bench, section};
+
+fn main() {
+    section("table1: swap-out volume microbenchmark");
+    let mut rep = None;
+    bench("table1 (2 sims)", 0, 1, || {
+        rep = Some(exp::table1::run(&Scale::quick()));
+    });
+    println!("{}", rep.unwrap().render());
+}

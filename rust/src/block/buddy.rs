@@ -1,0 +1,412 @@
+//! Dynamic Block Group Manager (paper §3.1) — FastSwitch's I/O-aware
+//! KV-cache allocator.
+//!
+//! Analogous to an OS buddy allocator: KV memory is handed out as *block
+//! groups* — contiguous runs of vLLM blocks — kept in a Free Block Group
+//! Manager (the `free` range map, with split on allocation and merge on
+//! release) and a Used Block Group Manager (`groups`, per request). The
+//! most recently allocated group of a request is *active*: it holds a
+//! reserved tail (`len - used`) that absorbs the request's future growth
+//! in place. When the free manager runs dry, the reserved tail of a
+//! randomly selected request's active group is *stolen* (split off and
+//! reallocated) — so, like vLLM, the allocator wastes no memory under
+//! pressure, yet under normal operation swap traffic coalesces into
+//! few large segments.
+//!
+//! Granularity outcome (paper: ≈ 20 blocks/group average on the A10
+//! testbed): see `exp::fig11` and the churn tests below.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::KvAllocator;
+use crate::memory::{BlockId, GpuBlockSpace, RequestId};
+use crate::util::rng::Rng;
+
+/// One contiguous block group owned by a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Group {
+    pub start: BlockId,
+    /// Total blocks (used + reserved tail).
+    pub len: u32,
+    /// Blocks actually holding KV (a prefix of the group).
+    pub used: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct BlockGroupAllocator {
+    space: GpuBlockSpace,
+    /// Free Block Group Manager: start -> len, coalesced.
+    free: BTreeMap<BlockId, u32>,
+    /// Used Block Group Manager: request -> groups in logical order.
+    groups: HashMap<RequestId, Vec<Group>>,
+    tables: HashMap<RequestId, Vec<BlockId>>,
+    init_group_blocks: u32,
+    rng: Rng,
+    // ---- statistics (Fig. 10/11) ----
+    pub splits: u64,
+    pub steals: u64,
+    pub groups_created: u64,
+}
+
+impl BlockGroupAllocator {
+    pub fn new(n_blocks: usize, init_group_blocks: usize, seed: u64) -> Self {
+        let mut free = BTreeMap::new();
+        if n_blocks > 0 {
+            free.insert(1, n_blocks as u32);
+        }
+        BlockGroupAllocator {
+            space: GpuBlockSpace::new(n_blocks),
+            free,
+            groups: HashMap::new(),
+            tables: HashMap::new(),
+            init_group_blocks: init_group_blocks.max(1) as u32,
+            rng: Rng::new(seed ^ 0xD8B6),
+            splits: 0,
+            steals: 0,
+            groups_created: 0,
+        }
+    }
+
+    pub fn groups_of(&self, req: RequestId) -> &[Group] {
+        self.groups.get(&req).map(|g| g.as_slice()).unwrap_or(&[])
+    }
+
+    fn free_total(&self) -> u32 {
+        self.free.values().sum()
+    }
+
+    /// Total reserved (stealable) tail blocks across all used groups.
+    fn reserved_tails(&self) -> u32 {
+        self.groups
+            .values()
+            .flat_map(|gs| gs.iter())
+            .map(|g| g.len - g.used)
+            .sum()
+    }
+
+    fn take_range(&mut self, start: BlockId, len: u32) {
+        let (&rs, &rl) = self.free.range(..=start).next_back().expect("not free");
+        assert!(start >= rs && start + len <= rs + rl, "range not free");
+        self.free.remove(&rs);
+        if start > rs {
+            self.free.insert(rs, start - rs);
+            self.splits += 1;
+        }
+        if rs + rl > start + len {
+            self.free.insert(start + len, rs + rl - (start + len));
+            self.splits += 1;
+        }
+    }
+
+    fn release_range(&mut self, start: BlockId, len: u32) {
+        if len == 0 {
+            return;
+        }
+        let mut start = start;
+        let mut len = len;
+        if let Some((&ps, &pl)) = self.free.range(..start).next_back() {
+            assert!(ps + pl <= start, "double free of block range");
+            if ps + pl == start {
+                self.free.remove(&ps);
+                start = ps;
+                len += pl;
+            }
+        }
+        if let Some((&ns, &nl)) = self.free.range(start + len..).next() {
+            if start + len == ns {
+                self.free.remove(&ns);
+                len += nl;
+            }
+        }
+        self.free.insert(start, len);
+    }
+
+    /// Best-fit free range of length >= want; returns (start, len of range).
+    fn best_fit(&self, want: u32) -> Option<(BlockId, u32)> {
+        self.free
+            .iter()
+            .filter(|(_, &l)| l >= want)
+            .min_by_key(|(_, &l)| l)
+            .map(|(&s, &l)| (s, l))
+    }
+
+    fn largest(&self) -> Option<(BlockId, u32)> {
+        self.free
+            .iter()
+            .max_by_key(|(_, &l)| l)
+            .map(|(&s, &l)| (s, l))
+    }
+
+    /// Steal the reserved tail of a randomly selected request's group
+    /// (paper: "the active block group currently being used by a randomly
+    /// selected request can be taken"). Returns blocks freed.
+    fn steal_one_tail(&mut self) -> u32 {
+        let mut candidates: Vec<(RequestId, usize)> = self
+            .groups
+            .iter()
+            .flat_map(|(&r, gs)| {
+                gs.iter()
+                    .enumerate()
+                    .filter(|(_, g)| g.len > g.used)
+                    .map(move |(i, _)| (r, i))
+            })
+            .collect();
+        if candidates.is_empty() {
+            return 0;
+        }
+        // HashMap iteration order is nondeterministic — sort so the
+        // "random victim" draw is reproducible per seed.
+        candidates.sort_unstable();
+        let (req, gi) = candidates[self.rng.usize(0, candidates.len())];
+        let g = &mut self.groups.get_mut(&req).unwrap()[gi];
+        let tail = g.len - g.used;
+        let tail_start = g.start + g.used;
+        g.len = g.used;
+        for b in tail_start..tail_start + tail {
+            self.space.reclaim(b, req);
+        }
+        self.release_range(tail_start, tail);
+        self.steals += 1;
+        tail
+    }
+
+    /// How much reserve to add on top of `need` for a new group: the
+    /// paper's "expected size" (init_group_blocks ≈ 1 000 tokens),
+    /// dynamically shrunk when free memory is scarce.
+    fn reserve_for(&self, need: u32) -> u32 {
+        let free = self.free_total();
+        let headroom = free.saturating_sub(need) / 4;
+        self.init_group_blocks.saturating_sub(need).min(headroom)
+    }
+}
+
+impl KvAllocator for BlockGroupAllocator {
+    fn allocate(&mut self, req: RequestId, n: usize) -> Option<Vec<BlockId>> {
+        let mut need = n as u32;
+        // Atomicity precheck: free + reserved tails (the requester's own
+        // tail is consumed in step 1; others are stealable) must cover it.
+        if (self.free_total() + self.reserved_tails()) < need {
+            return None;
+        }
+        let mut got: Vec<BlockId> = Vec::with_capacity(n);
+
+        // 1) Fill the active group's reserved tail in place.
+        if let Some(gs) = self.groups.get_mut(&req) {
+            if let Some(g) = gs.last_mut() {
+                let take = (g.len - g.used).min(need);
+                for i in 0..take {
+                    got.push(g.start + g.used + i);
+                }
+                g.used += take;
+                need -= take;
+            }
+        }
+
+        // 2) New groups from the free manager (stealing tails on demand).
+        while need > 0 {
+            if self.free_total() == 0 && self.steal_one_tail() == 0 {
+                unreachable!("precheck guaranteed space");
+            }
+            if self.free_total() == 0 {
+                continue; // steal again
+            }
+            let reserve = self.reserve_for(need);
+            let want = need + reserve;
+            let (start, take_len) = match self.best_fit(want) {
+                Some((s, _)) => (s, want),
+                None => {
+                    let (s, l) = self.largest().unwrap();
+                    (s, l.min(want))
+                }
+            };
+            self.take_range(start, take_len);
+            for b in start..start + take_len {
+                self.space.claim(b, req);
+            }
+            let used = take_len.min(need);
+            for i in 0..used {
+                got.push(start + i);
+            }
+            self.groups.entry(req).or_default().push(Group {
+                start,
+                len: take_len,
+                used,
+            });
+            self.groups_created += 1;
+            need -= used;
+        }
+
+        self.tables.entry(req).or_default().extend(&got);
+        Some(got)
+    }
+
+    fn release(&mut self, req: RequestId) -> Vec<BlockId> {
+        let table = self.tables.remove(&req).unwrap_or_default();
+        for g in self.groups.remove(&req).unwrap_or_default() {
+            for b in g.start..g.start + g.len {
+                self.space.reclaim(b, req);
+            }
+            self.release_range(g.start, g.len);
+        }
+        table
+    }
+
+    fn table(&self, req: RequestId) -> &[BlockId] {
+        self.tables.get(&req).map(|t| t.as_slice()).unwrap_or(&[])
+    }
+
+    fn available_blocks(&self) -> usize {
+        (self.free_total() + self.reserved_tails()) as usize
+    }
+
+    fn space(&self) -> &GpuBlockSpace {
+        &self.space
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::block::runs_of_table;
+
+    fn alloc(n: usize, init: usize) -> BlockGroupAllocator {
+        BlockGroupAllocator::new(n, init, 42)
+    }
+
+    #[test]
+    fn first_allocation_is_one_contiguous_group() {
+        let mut a = alloc(256, 60);
+        let got = a.allocate(1, 10).unwrap();
+        assert_eq!(runs_of_table(&got).len(), 1, "contiguous");
+        let gs = a.groups_of(1);
+        assert_eq!(gs.len(), 1);
+        assert_eq!(gs[0].used, 10);
+        assert!(gs[0].len >= 10, "reserved tail allowed");
+        a.space().check_invariants();
+    }
+
+    #[test]
+    fn growth_fills_reserved_tail_in_place() {
+        let mut a = alloc(256, 60);
+        let first = a.allocate(1, 10).unwrap();
+        let more = a.allocate(1, 5).unwrap();
+        // Growth continues physically after the first allocation.
+        assert_eq!(more[0], *first.last().unwrap() + 1);
+        assert_eq!(runs_of_table(a.table(1)).len(), 1);
+    }
+
+    #[test]
+    fn release_merges_back_to_one_range() {
+        let mut a = alloc(128, 16);
+        a.allocate(1, 20).unwrap();
+        a.allocate(2, 20).unwrap();
+        a.allocate(3, 20).unwrap();
+        a.release(2);
+        a.release(1);
+        a.release(3);
+        assert_eq!(a.free.len(), 1);
+        assert_eq!(a.free_total(), 128);
+        a.space().check_invariants();
+    }
+
+    #[test]
+    fn steals_reserved_tail_under_pressure() {
+        let mut a = alloc(64, 60);
+        // Request 1 takes 10 used but reserves a big tail.
+        a.allocate(1, 10).unwrap();
+        let tail_before: u32 = a.groups_of(1).iter().map(|g| g.len - g.used).sum();
+        assert!(tail_before > 0);
+        // Request 2 wants more than what's in the free manager.
+        let free_now = a.free_total() as usize;
+        let got = a.allocate(2, free_now + 4).unwrap();
+        assert_eq!(got.len(), free_now + 4);
+        assert!(a.steals > 0, "tail must have been stolen");
+        a.space().check_invariants();
+    }
+
+    #[test]
+    fn refuses_when_even_steal_insufficient() {
+        let mut a = alloc(32, 8);
+        a.allocate(1, 30).unwrap();
+        assert!(a.allocate(2, 10).is_none());
+        // No partial mutation.
+        assert!(a.table(2).is_empty());
+        a.space().check_invariants();
+    }
+
+    #[test]
+    fn coarser_granularity_than_fixed_after_churn() {
+        // The headline §3.1 property: after identical churn, block-group
+        // tables have far fewer, larger runs than the fixed allocator
+        // (Fig. 3). Mirrors fixed.rs::churn_fragments_tables.
+        use crate::block::fixed::FixedBlockAllocator;
+        use crate::util::rng::Rng;
+
+        let n_blocks = 1024;
+        let mut bg = alloc(n_blocks, 60);
+        let mut fx = FixedBlockAllocator::new(n_blocks);
+        for (label, a) in [
+            ("bg", &mut bg as &mut dyn KvAllocator),
+            ("fx", &mut fx as &mut dyn KvAllocator),
+        ] {
+            let mut rng = Rng::new(7);
+            let mut live: Vec<RequestId> = Vec::new();
+            let mut next: RequestId = 0;
+            for _ in 0..600 {
+                if !live.is_empty() && rng.chance(0.45) {
+                    let idx = rng.usize(0, live.len());
+                    a.release(live.swap_remove(idx));
+                } else {
+                    // Mixed growth: new request or grow an existing one.
+                    if !live.is_empty() && rng.chance(0.5) {
+                        let r = live[rng.usize(0, live.len())];
+                        let _ = a.allocate(r, rng.usize(1, 5));
+                    } else {
+                        let nb = rng.usize(4, 40);
+                        if a.allocate(next, nb).is_some() {
+                            live.push(next);
+                        }
+                        next += 1;
+                    }
+                }
+            }
+            let mut total_blocks = 0usize;
+            let mut total_runs = 0usize;
+            for &r in &live {
+                let t = a.table(r);
+                total_blocks += t.len();
+                total_runs += runs_of_table(t).len();
+            }
+            let avg = total_blocks as f64 / total_runs.max(1) as f64;
+            println!("{label}: avg run length {avg:.2}");
+            if label == "bg" {
+                assert!(avg > 6.0, "block groups stay coarse, got {avg}");
+            } else {
+                assert!(avg < 4.0, "fixed fragments, got {avg}");
+            }
+            a.space().check_invariants();
+        }
+    }
+
+    #[test]
+    fn reserve_shrinks_when_memory_scarce() {
+        let mut a = alloc(64, 60);
+        a.allocate(1, 40).unwrap();
+        // Only ~24 blocks left; a new request must not hoard them all.
+        a.allocate(2, 4).unwrap();
+        let g2 = a.groups_of(2)[0];
+        assert!(g2.len < 16, "reserve must shrink under pressure: {g2:?}");
+    }
+
+    #[test]
+    fn multi_group_requests() {
+        let mut a = alloc(64, 8);
+        a.allocate(1, 20).unwrap();
+        a.allocate(2, 20).unwrap();
+        a.release(1); // free hole of >= 20 at the front
+        a.allocate(3, 30).unwrap(); // must span the hole + tail space
+        assert!(a.groups_of(3).len() >= 2);
+        assert_eq!(a.table(3).len(), 30);
+        a.space().check_invariants();
+    }
+}

@@ -1,0 +1,111 @@
+//! KV-cache block allocation — the heart of the paper's contribution.
+//!
+//! Two allocators over the same [`crate::memory::GpuBlockSpace`]:
+//!
+//! - [`fixed::FixedBlockAllocator`] — the vLLM baseline: individual
+//!   blocks from a LIFO free list. Near-zero waste, but after churn a
+//!   request's blocks are physically scattered, so preemption swaps one
+//!   128 KB segment per block per layer (paper Challenge #1).
+//! - [`buddy::BlockGroupAllocator`] — FastSwitch §3.1's Dynamic Block
+//!   Group Manager: buddy-style contiguous *block groups* with
+//!   split/merge and reserved-tail stealing, so swap traffic coalesces
+//!   into few large segments.
+//!
+//! [`reuse::KvCacheReuse`] adds §3.3's CPU-copy reuse on top of either.
+
+pub mod buddy;
+pub mod fixed;
+pub mod reuse;
+
+use crate::memory::{BlockId, GpuBlockSpace, RequestId};
+
+/// A physically contiguous run of blocks, in logical order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockRun {
+    pub start: BlockId,
+    pub len: u32,
+    /// Logical block index of `start` within the request's sequence.
+    pub logical_start: u32,
+}
+
+/// Common interface of both allocators.
+pub trait KvAllocator {
+    /// Append `n` blocks to `req`'s block table. Returns the new blocks
+    /// (in logical order) or `None` if space is insufficient — the caller
+    /// must preempt and retry.
+    fn allocate(&mut self, req: RequestId, n: usize) -> Option<Vec<BlockId>>;
+
+    /// Release every block of `req` and forget it. Returns the freed
+    /// block table (logical order).
+    fn release(&mut self, req: RequestId) -> Vec<BlockId>;
+
+    /// The request's block table (logical order).
+    fn table(&self, req: RequestId) -> &[BlockId];
+
+    /// Blocks that could be handed out right now without preemption
+    /// (includes reclaimable reserved tails for the buddy allocator).
+    fn available_blocks(&self) -> usize;
+
+    /// The underlying ownership space (for invariant checks).
+    fn space(&self) -> &GpuBlockSpace;
+
+    /// Decompose `req`'s table into physically contiguous runs — the
+    /// swap engine's coalescing units.
+    fn runs(&self, req: RequestId) -> Vec<BlockRun> {
+        runs_of_table(self.table(req))
+    }
+}
+
+/// Merge a logical block table into contiguous physical runs.
+pub fn runs_of_table(table: &[BlockId]) -> Vec<BlockRun> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < table.len() {
+        let start = table[i];
+        let logical_start = i as u32;
+        let mut len = 1u32;
+        while i + (len as usize) < table.len()
+            && table[i + len as usize] == start + len
+        {
+            len += 1;
+        }
+        out.push(BlockRun {
+            start,
+            len,
+            logical_start,
+        });
+        i += len as usize;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_merge_contiguous() {
+        let runs = runs_of_table(&[5, 6, 7, 10, 11, 3]);
+        assert_eq!(
+            runs,
+            vec![
+                BlockRun { start: 5, len: 3, logical_start: 0 },
+                BlockRun { start: 10, len: 2, logical_start: 3 },
+                BlockRun { start: 3, len: 1, logical_start: 5 },
+            ]
+        );
+    }
+
+    #[test]
+    fn runs_empty() {
+        assert!(runs_of_table(&[]).is_empty());
+    }
+
+    #[test]
+    fn runs_single() {
+        assert_eq!(
+            runs_of_table(&[42]),
+            vec![BlockRun { start: 42, len: 1, logical_start: 0 }]
+        );
+    }
+}

@@ -1,0 +1,248 @@
+//! KV Cache Reuse Mechanism (paper §3.3).
+//!
+//! Keeps CPU-side copies of swapped KV cache across preemptions and
+//! conversation turns, and tracks which copies are still *valid* so a
+//! swap-out transfers only the delta:
+//!
+//! - KV blocks are append-only: once a block is full, its content never
+//!   changes, so a CPU copy of a full block stays valid until the CPU
+//!   slot is reclaimed by a higher-priority request (*contamination*,
+//!   handled by [`crate::memory::CpuSwapSpace`]).
+//! - The partially filled tail block is volatile: it must be
+//!   re-transferred whenever the sequence has grown since the copy.
+//!
+//! The planner returns the exact logical block set to move; the engine
+//! turns that into DMA segments. With reuse off (vLLM baseline), every
+//! swap-out moves the full table and swap-in drops the CPU copy.
+
+use std::collections::HashMap;
+
+use crate::memory::{CpuSwapSpace, RequestId};
+
+/// Outcome of planning one swap-out.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SwapOutPlan {
+    /// Logical block indices that must be transferred GPU→CPU.
+    pub transfer: Vec<u32>,
+    /// Logical blocks skipped thanks to valid CPU copies (metrics,
+    /// Table 1).
+    pub reused: u32,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct ReuseState {
+    /// Tokens covered by the newest complete CPU copy.
+    copied_tokens: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct KvCacheReuse {
+    enabled: bool,
+    block_size: usize,
+    state: HashMap<RequestId, ReuseState>,
+    // ---- statistics (Table 1) ----
+    pub blocks_transferred_out: u64,
+    pub blocks_reused: u64,
+}
+
+impl KvCacheReuse {
+    pub fn new(enabled: bool, block_size: usize) -> Self {
+        KvCacheReuse {
+            enabled,
+            block_size: block_size.max(1),
+            state: HashMap::new(),
+            blocks_transferred_out: 0,
+            blocks_reused: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn n_blocks(&self, tokens: u64) -> u32 {
+        tokens.div_ceil(self.block_size as u64) as u32
+    }
+
+    /// Plan a swap-out of `req` currently holding `tokens` tokens.
+    /// `cpu` is consulted for currently valid copies.
+    pub fn plan_swap_out(
+        &mut self,
+        req: RequestId,
+        tokens: u64,
+        cpu: &CpuSwapSpace,
+    ) -> SwapOutPlan {
+        let total = self.n_blocks(tokens);
+        if !self.enabled {
+            self.blocks_transferred_out += total as u64;
+            return SwapOutPlan {
+                transfer: (0..total).collect(),
+                reused: 0,
+            };
+        }
+        let st = self.state.get(&req).copied().unwrap_or_default();
+        // Blocks < durable are full AND covered by the last copy; they
+        // changed only if contaminated (absent from the valid set).
+        let durable = if tokens > st.copied_tokens {
+            // Sequence grew: the previous copy's tail block (if partial)
+            // is stale.
+            (st.copied_tokens / self.block_size as u64) as u32
+        } else {
+            // No growth since the copy: everything copied is still exact.
+            self.n_blocks(st.copied_tokens)
+        };
+        let valid = cpu.valid_logical(req);
+        let mut valid_iter = valid.iter().peekable();
+        let mut transfer = Vec::new();
+        for i in 0..total {
+            while valid_iter.peek().is_some_and(|&&v| v < i) {
+                valid_iter.next();
+            }
+            let has_copy = valid_iter.peek().is_some_and(|&&v| v == i);
+            if i < durable && has_copy {
+                self.blocks_reused += 1;
+            } else {
+                transfer.push(i);
+            }
+        }
+        self.blocks_transferred_out += transfer.len() as u64;
+        SwapOutPlan {
+            reused: total - transfer.len() as u32,
+            transfer,
+        }
+    }
+
+    /// Record that the swap-out completed and the CPU copy now covers
+    /// `tokens` tokens.
+    pub fn commit_swap_out(&mut self, req: RequestId, tokens: u64) {
+        self.state.insert(req, ReuseState { copied_tokens: tokens });
+    }
+
+    /// Plan a swap-in: all blocks of the sequence move CPU→GPU.
+    pub fn plan_swap_in(&self, tokens: u64) -> Vec<u32> {
+        (0..self.n_blocks(tokens)).collect()
+    }
+
+    /// The request finished (or its copy is being abandoned): forget it.
+    pub fn forget(&mut self, req: RequestId) {
+        self.state.remove(&req);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BS: usize = 16;
+
+    fn setup(enabled: bool, cpu_slots: usize) -> (KvCacheReuse, CpuSwapSpace) {
+        (KvCacheReuse::new(enabled, BS), CpuSwapSpace::new(cpu_slots))
+    }
+
+    /// Simulate a committed swap-out: copies registered in CPU space.
+    fn do_swap_out(
+        r: &mut KvCacheReuse,
+        cpu: &mut CpuSwapSpace,
+        req: RequestId,
+        tokens: u64,
+        prio: i64,
+    ) -> SwapOutPlan {
+        let plan = r.plan_swap_out(req, tokens, cpu);
+        cpu.add_copies(req, &plan.transfer, prio).unwrap();
+        r.commit_swap_out(req, tokens);
+        plan
+    }
+
+    #[test]
+    fn baseline_transfers_everything_every_time() {
+        let (mut r, mut cpu) = setup(false, 64);
+        let p1 = do_swap_out(&mut r, &mut cpu, 1, 100, 5);
+        assert_eq!(p1.transfer.len(), 7); // ceil(100/16)
+        // Re-swap-out after growth: again everything.
+        let p2 = r.plan_swap_out(1, 120, &cpu);
+        assert_eq!(p2.transfer.len(), 8);
+        assert_eq!(p2.reused, 0);
+    }
+
+    #[test]
+    fn reuse_skips_full_copied_blocks() {
+        let (mut r, mut cpu) = setup(true, 64);
+        // First swap-out at 100 tokens: all 7 blocks move.
+        let p1 = do_swap_out(&mut r, &mut cpu, 1, 100, 5);
+        assert_eq!(p1.transfer.len(), 7);
+        // Resume, grow to 120 tokens, swap out again: blocks 0..5 are full
+        // + copied (durable); block 6 was partial at copy time (stale) and
+        // block 7 is new.
+        let p2 = r.plan_swap_out(1, 120, &cpu);
+        assert_eq!(p2.transfer, vec![6, 7]);
+        assert_eq!(p2.reused, 6);
+    }
+
+    #[test]
+    fn no_growth_means_no_transfer() {
+        let (mut r, mut cpu) = setup(true, 64);
+        do_swap_out(&mut r, &mut cpu, 1, 100, 5);
+        // Swapped in but preempted again before generating anything.
+        let p = r.plan_swap_out(1, 100, &cpu);
+        assert!(p.transfer.is_empty());
+        assert_eq!(p.reused, 7);
+    }
+
+    #[test]
+    fn contaminated_blocks_retransferred() {
+        let (mut r, mut cpu) = setup(true, 16);
+        do_swap_out(&mut r, &mut cpu, 1, 100, 1); // 7 blocks, low prio
+        cpu.set_required(1, false); // request back on GPU; copy is a backup
+        // Higher-priority request floods the CPU space.
+        cpu.contaminate_backups(12, 9);
+        let remaining = cpu.valid_logical(1);
+        assert!(remaining.len() < 7);
+        let p = r.plan_swap_out(1, 100, &cpu);
+        // Exactly the contaminated blocks must move again.
+        assert_eq!(p.transfer.len(), 7 - remaining.len());
+        for l in &remaining {
+            assert!(!p.transfer.contains(l));
+        }
+    }
+
+    #[test]
+    fn exact_block_boundary_tail_is_durable() {
+        let (mut r, mut cpu) = setup(true, 64);
+        do_swap_out(&mut r, &mut cpu, 1, 64, 5); // 4 full blocks, no partial
+        let p = r.plan_swap_out(1, 80, &cpu); // grew one block
+        assert_eq!(p.transfer, vec![4]);
+        assert_eq!(p.reused, 4);
+    }
+
+    #[test]
+    fn multi_turn_accumulates_reuse() {
+        // Table 1 shape: across turns, transferred blocks ≈ increments
+        // only → large total reduction vs baseline.
+        let (mut r, mut cpu) = setup(true, 256);
+        let (mut rb, mut cpub) = setup(false, 256);
+        let mut tokens = 0u64;
+        let mut reuse_moved = 0usize;
+        let mut base_moved = 0usize;
+        for turn in 0..6 {
+            tokens += 96; // each turn adds 6 blocks
+            reuse_moved += do_swap_out(&mut r, &mut cpu, 1, tokens, 5).transfer.len();
+            base_moved += do_swap_out(&mut rb, &mut cpub, 1, tokens, 5)
+                .transfer
+                .len();
+            let _ = turn;
+        }
+        assert!(reuse_moved * 2 < base_moved, "{reuse_moved} vs {base_moved}");
+        assert_eq!(r.blocks_transferred_out as usize, reuse_moved);
+        assert!(r.blocks_reused > 0);
+    }
+
+    #[test]
+    fn forget_resets_state() {
+        let (mut r, mut cpu) = setup(true, 64);
+        do_swap_out(&mut r, &mut cpu, 1, 100, 5);
+        r.forget(1);
+        cpu.drop_request(1);
+        let p = r.plan_swap_out(1, 100, &cpu);
+        assert_eq!(p.transfer.len(), 7, "fresh request transfers all");
+    }
+}

@@ -1,0 +1,222 @@
+//! Config-file loading: a TOML-subset parser (offline build — no `toml`
+//! crate) covering the needs of launcher configs: `[section]` headers,
+//! `key = value` with string / number / bool values, comments.
+//!
+//! Example (`examples/configs/fastswitch.toml`):
+//! ```toml
+//! [preset]
+//! name = "llama8b_a10"
+//!
+//! [engine]
+//! policy = "fastswitch"        # vllm | vllm+dbg | vllm+dbg+reuse | fastswitch
+//! priority_update_freq = 0.04
+//! max_batch = 32
+//!
+//! [workload]
+//! conversations = 1000
+//! request_rate = 1.0
+//! pattern = "markov"           # markov | random
+//! seed = 42
+//! ```
+
+use std::collections::HashMap;
+
+use crate::config::{EngineConfig, Preset};
+
+#[derive(Clone, Debug, Default)]
+pub struct ConfigFile {
+    /// section -> key -> raw value
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error at line {0}: {1}")]
+    Parse(usize, String),
+    #[error("unknown preset {0:?}")]
+    UnknownPreset(String),
+    #[error("unknown engine policy {0:?}")]
+    UnknownPolicy(String),
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut out = ConfigFile::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError::Parse(lineno + 1, "unclosed [section".into()))?;
+                section = name.trim().to_string();
+                out.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                let val = unquote(v.trim()).to_string();
+                out.sections
+                    .entry(section.clone())
+                    .or_default()
+                    .insert(key, val);
+            } else {
+                return Err(ConfigError::Parse(
+                    lineno + 1,
+                    format!("expected `key = value`, got {line:?}"),
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &str) -> Result<Self, ConfigError> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Option<u64> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            "true" | "yes" | "1" => Some(true),
+            "false" | "no" | "0" => Some(false),
+            _ => None,
+        }
+    }
+
+    /// Resolve the testbed preset named in `[preset] name`.
+    pub fn preset(&self) -> Result<Preset, ConfigError> {
+        let name = self.get("preset", "name").unwrap_or("llama8b_a10");
+        Preset::by_name(name).ok_or_else(|| ConfigError::UnknownPreset(name.into()))
+    }
+
+    /// Build the engine config from `[engine]`, starting from the named
+    /// policy and applying overrides.
+    pub fn engine(&self) -> Result<EngineConfig, ConfigError> {
+        let policy = self.get("engine", "policy").unwrap_or("fastswitch");
+        let mut cfg = match policy {
+            "vllm" => EngineConfig::vllm_baseline(),
+            "vllm+dbg" => EngineConfig::with_dbg(),
+            "vllm+dbg+reuse" => EngineConfig::with_dbg_reuse(),
+            "fastswitch" => EngineConfig::fastswitch(),
+            other => return Err(ConfigError::UnknownPolicy(other.into())),
+        };
+        if let Some(f) = self.get_f64("engine", "priority_update_freq") {
+            cfg.scheduler.priority_update_freq = f;
+        }
+        if let Some(b) = self.get_usize("engine", "max_batch") {
+            cfg.scheduler.max_batch = b;
+        }
+        if let Some(c) = self.get_usize("engine", "prefill_chunk") {
+            cfg.scheduler.prefill_chunk = c;
+        }
+        if let Some(r) = self.get_bool("engine", "reuse") {
+            cfg.reuse = r;
+        }
+        Ok(cfg)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect `#` inside quotes.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> &str {
+    v.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .unwrap_or(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DispatchMode, SwapMode};
+
+    const SAMPLE: &str = r#"
+# comment
+[preset]
+name = "llama8b_a10"
+
+[engine]
+policy = "fastswitch"
+priority_update_freq = 0.04   # paper LLaMA-8B setting
+max_batch = 16
+
+[workload]
+conversations = 1000
+pattern = "markov"
+"#;
+
+    #[test]
+    fn parse_sections_and_values() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("preset", "name"), Some("llama8b_a10"));
+        assert_eq!(c.get_f64("engine", "priority_update_freq"), Some(0.04));
+        assert_eq!(c.get_usize("workload", "conversations"), Some(1000));
+        assert_eq!(c.get("workload", "pattern"), Some("markov"));
+    }
+
+    #[test]
+    fn engine_policy_with_overrides() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        let e = c.engine().unwrap();
+        assert_eq!(e.label, "fastswitch");
+        assert_eq!(e.scheduler.priority_update_freq, 0.04);
+        assert_eq!(e.scheduler.max_batch, 16);
+        assert!(matches!(e.dispatch, DispatchMode::ThreadPool { .. }));
+        assert_eq!(e.swap_mode, SwapMode::Adaptive);
+    }
+
+    #[test]
+    fn preset_resolution() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(c.preset().unwrap().model.name, "llama-8b");
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        let c = ConfigFile::parse("[engine]\npolicy = \"nope\"").unwrap();
+        assert!(matches!(c.engine(), Err(ConfigError::UnknownPolicy(_))));
+    }
+
+    #[test]
+    fn parse_error_line_number() {
+        let err = ConfigFile::parse("[a]\njunk line").unwrap_err();
+        match err {
+            ConfigError::Parse(2, _) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let c = ConfigFile::parse("[s]\nk = \"a # b\"").unwrap();
+        assert_eq!(c.get("s", "k"), Some("a # b"));
+    }
+}

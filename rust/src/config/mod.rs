@@ -1,0 +1,460 @@
+//! Configuration system: model/GPU specs, scheduler + swap policies, and
+//! the presets reproducing the paper's two testbeds.
+//!
+//! All timing constants are calibrated to the paper's own measurements
+//! (§2.2): 128 KB per-block-per-layer swap granularity for LLaMA-8B-class
+//! models, `cudaMemcpyAsync` dispatch overhead exceeding its ~10 µs
+//! execution, dispatch = 90–95 % of total transmission at vLLM granularity,
+//! PCIe 4.0 x16 with 32 GB/s per direction and optimal efficiency ≥ 320 KB.
+
+pub mod file;
+
+/// Served-model characteristics that drive KV-cache geometry and the
+/// roofline inference model. Mirrors the paper's LLaMA-8B / Qwen-32B.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// Bytes per element of the KV cache and weights (2 = fp16/bf16).
+    pub dtype_bytes: usize,
+    /// Tokens per KV block (vLLM default 16).
+    pub block_size: usize,
+    /// Total parameter count (drives weight-read time and HBM footprint).
+    pub n_params: u64,
+}
+
+impl ModelSpec {
+    /// K+V bytes of ONE block in ONE layer — the vLLM swap granularity
+    /// (paper: 128 KB for LLaMA-8B).
+    pub fn block_bytes_per_layer(&self) -> u64 {
+        (2 * self.block_size * self.n_kv_heads * self.head_dim * self.dtype_bytes) as u64
+    }
+
+    /// K+V bytes of one block across ALL layers (the allocator unit).
+    pub fn block_bytes(&self) -> u64 {
+        self.block_bytes_per_layer() * self.n_layers as u64
+    }
+
+    pub fn weight_bytes(&self) -> u64 {
+        self.n_params * self.dtype_bytes as u64
+    }
+
+    /// Paper testbed model 1: LLaMA-8B, 32 layers. `n_kv_heads` is set so
+    /// the per-block-per-layer K+V segment is exactly the 128 KB swap
+    /// granularity the paper measures (§2.2) — i.e. kv_dim = 2048.
+    pub fn llama8b() -> Self {
+        ModelSpec {
+            name: "llama-8b".into(),
+            n_layers: 32,
+            n_kv_heads: 16,
+            head_dim: 128,
+            dtype_bytes: 2,
+            block_size: 16,
+            n_params: 8_000_000_000,
+        }
+    }
+
+    /// Paper testbed model 2: Qwen-32B, 64 layers, same 128 KB
+    /// per-block-per-layer calibration.
+    pub fn qwen32b() -> Self {
+        ModelSpec {
+            name: "qwen-32b".into(),
+            n_layers: 64,
+            n_kv_heads: 16,
+            head_dim: 128,
+            dtype_bytes: 2,
+            block_size: 16,
+            n_params: 32_000_000_000,
+        }
+    }
+
+    /// Small spec for unit tests (fast, readable numbers).
+    pub fn tiny() -> Self {
+        ModelSpec {
+            name: "tiny".into(),
+            n_layers: 2,
+            n_kv_heads: 2,
+            head_dim: 16,
+            dtype_bytes: 2,
+            block_size: 4,
+            n_params: 1_000_000,
+        }
+    }
+}
+
+/// Accelerator + host-link characteristics (simulated hardware).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    pub hbm_bytes: u64,
+    /// HBM bandwidth, bytes/s (decode is memory-bound).
+    pub hbm_bw: f64,
+    /// Peak dense fp16/bf16 FLOP/s (prefill is compute-bound).
+    pub peak_flops: f64,
+    /// PCIe bandwidth per direction, bytes/s (paper: PCIe 4.0 x16 = 32 GB/s).
+    pub pcie_bw: f64,
+    /// Transfer size at which PCIe efficiency reaches 50 % (models the
+    /// per-transfer setup cost; paper: optimal ≥ 320 KB).
+    pub pcie_half_size: u64,
+    /// Fraction of HBM usable (rest: activations, fragmentation, runtime).
+    pub mem_util: f64,
+}
+
+impl GpuSpec {
+    /// Effective PCIe bandwidth for one transfer of `size` bytes.
+    pub fn pcie_eff_bw(&self, size: u64) -> f64 {
+        self.pcie_bw * size as f64 / (size + self.pcie_half_size) as f64
+    }
+
+    /// Execution time (ns) of one DMA transfer of `size` bytes.
+    pub fn pcie_exec_ns(&self, size: u64) -> u64 {
+        (size as f64 / self.pcie_eff_bw(size) * 1e9) as u64
+    }
+
+    pub fn a10() -> Self {
+        GpuSpec {
+            name: "a10-24g".into(),
+            hbm_bytes: 24 * (1 << 30),
+            hbm_bw: 600e9,
+            peak_flops: 125e12,
+            pcie_bw: 32e9,
+            pcie_half_size: 64 * 1024,
+            mem_util: 0.92,
+        }
+    }
+
+    pub fn a100_80g() -> Self {
+        GpuSpec {
+            name: "a100-80g".into(),
+            hbm_bytes: 80 * (1 << 30),
+            hbm_bw: 2039e9,
+            peak_flops: 312e12,
+            pcie_bw: 32e9,
+            pcie_half_size: 64 * 1024,
+            mem_util: 0.92,
+        }
+    }
+
+    pub fn tiny() -> Self {
+        GpuSpec {
+            name: "tiny-gpu".into(),
+            hbm_bytes: 1 << 20,
+            hbm_bw: 1e9,
+            peak_flops: 1e12,
+            pcie_bw: 1e9,
+            pcie_half_size: 1024,
+            mem_util: 1.0,
+        }
+    }
+}
+
+/// KV-cache allocator granularity policy (the paper's core ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// vLLM baseline: individual fixed-size blocks; swap segments are one
+    /// block per layer.
+    FixedBlock,
+    /// FastSwitch §3.1: buddy-style dynamic block groups; swap segments
+    /// coalesce contiguous block runs per layer.
+    BlockGroup {
+        /// Initial group size in blocks (paper default ≈ 60–70 blocks
+        /// ≈ 1 000 tokens at block_size 16).
+        init_group_blocks: usize,
+    },
+}
+
+/// How swap copies are dispatched to the (simulated) DMA engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Python call stack under the GIL: one serialized dispatch lane with
+    /// high per-call cost (the baseline the paper measures at 90–95 % of
+    /// transmission time).
+    Gil,
+    /// FastSwitch §3.2: C++ thread-pool offload — parallel lanes, low
+    /// per-call cost.
+    ThreadPool { workers: usize },
+}
+
+/// Swap-in scheduling policy (paper §3.2 "Adaptive Swapping Strategy").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapMode {
+    /// Baseline: swap-ins stall the iteration until complete.
+    Sync,
+    /// Always overlap swap-ins with inference.
+    Async,
+    /// Profiler-driven choice between the two per iteration.
+    Adaptive,
+}
+
+/// Scheduler parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerConfig {
+    /// Max requests decoding in one iteration.
+    pub max_batch: usize,
+    /// Max sequence length (tokens) per request.
+    pub max_seq_len: usize,
+    /// Priority-update frequency: updates per iteration (paper: 0.01 =
+    /// every 100 iterations).
+    pub priority_update_freq: f64,
+    /// Prefill chunk size in tokens (chunked prefill).
+    pub prefill_chunk: usize,
+    /// Number of distinct priority levels in the traces.
+    pub priority_levels: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 32,
+            max_seq_len: 4096,
+            priority_update_freq: 0.02,
+            prefill_chunk: 512,
+            priority_levels: 8,
+        }
+    }
+}
+
+/// Dispatch-cost constants (per `cudaMemcpyAsync`-equivalent call).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SwapCostConfig {
+    /// Per-call dispatch cost under the GIL path, ns.
+    pub gil_dispatch_ns: u64,
+    /// Per-call dispatch cost via the C++ thread pool, ns.
+    pub threadpool_dispatch_ns: u64,
+    /// Dispatches between forced fine-grained synchronizations (paper
+    /// §3.2: ordered multi-stream dispatch).
+    pub dispatch_sync_interval: usize,
+    /// Cost of one fine-grained synchronization, ns.
+    pub sync_cost_ns: u64,
+    /// Adaptive policy: swap-in is made synchronous when the running
+    /// batch's predicted iteration time is below this fraction of the
+    /// predicted swap duration AND the batch is large (see
+    /// swap::manager::AdaptivePolicy).
+    pub adaptive_overlap_threshold: f64,
+}
+
+impl Default for SwapCostConfig {
+    fn default() -> Self {
+        SwapCostConfig {
+            // Paper §2.2: dispatch exceeds the ~10 µs execution of a 128 KB
+            // copy and is 90–95 % of total transmission time.
+            gil_dispatch_ns: 18_000,
+            // C++ offload: dominated by the driver call itself.
+            threadpool_dispatch_ns: 2_500,
+            dispatch_sync_interval: 64,
+            sync_cost_ns: 8_000,
+            adaptive_overlap_threshold: 0.5,
+        }
+    }
+}
+
+/// The full engine policy — spans vLLM baseline → full FastSwitch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineConfig {
+    pub granularity: Granularity,
+    pub dispatch: DispatchMode,
+    pub swap_mode: SwapMode,
+    /// KV Cache Reuse Mechanism (§3.3) on/off.
+    pub reuse: bool,
+    pub scheduler: SchedulerConfig,
+    pub swap_cost: SwapCostConfig,
+    pub label: String,
+}
+
+impl EngineConfig {
+    /// vLLM 0.3.3 baseline: fixed blocks, GIL dispatch, synchronous swap,
+    /// no CPU-copy reuse.
+    pub fn vllm_baseline() -> Self {
+        EngineConfig {
+            granularity: Granularity::FixedBlock,
+            dispatch: DispatchMode::Gil,
+            swap_mode: SwapMode::Sync,
+            reuse: false,
+            scheduler: SchedulerConfig::default(),
+            swap_cost: SwapCostConfig::default(),
+            label: "vllm".into(),
+        }
+    }
+
+    /// Ablation step 1: + Dynamic Block Group Manager.
+    pub fn with_dbg() -> Self {
+        EngineConfig {
+            granularity: Granularity::BlockGroup {
+                init_group_blocks: 60,
+            },
+            label: "vllm+dbg".into(),
+            ..Self::vllm_baseline()
+        }
+    }
+
+    /// Ablation step 2: + KV Cache Reuse Mechanism.
+    pub fn with_dbg_reuse() -> Self {
+        EngineConfig {
+            reuse: true,
+            label: "vllm+dbg+reuse".into(),
+            ..Self::with_dbg()
+        }
+    }
+
+    /// Full FastSwitch: + Multithreading Swap Manager.
+    pub fn fastswitch() -> Self {
+        EngineConfig {
+            dispatch: DispatchMode::ThreadPool { workers: 4 },
+            swap_mode: SwapMode::Adaptive,
+            label: "fastswitch".into(),
+            ..Self::with_dbg_reuse()
+        }
+    }
+
+    /// The paper's Fig. 8 ablation ladder, in order.
+    pub fn ablation_ladder() -> Vec<EngineConfig> {
+        vec![
+            Self::vllm_baseline(),
+            Self::with_dbg(),
+            Self::with_dbg_reuse(),
+            Self::fastswitch(),
+        ]
+    }
+}
+
+/// A complete testbed: model + GPU + capacities.
+#[derive(Clone, Debug)]
+pub struct Preset {
+    pub model: ModelSpec,
+    pub gpu: GpuSpec,
+    /// CPU swap space for KV copies, bytes (paper: 60 GB).
+    pub cpu_swap_bytes: u64,
+}
+
+impl Preset {
+    /// Number of GPU KV blocks available after weights.
+    pub fn gpu_blocks(&self) -> usize {
+        let usable = (self.gpu.hbm_bytes as f64 * self.gpu.mem_util) as u64;
+        let free = usable.saturating_sub(self.model.weight_bytes());
+        (free / self.model.block_bytes()) as usize
+    }
+
+    /// Number of CPU KV block slots.
+    pub fn cpu_blocks(&self) -> usize {
+        (self.cpu_swap_bytes / self.model.block_bytes()) as usize
+    }
+
+    /// Paper testbed 1: LLaMA-8B on A10 24 GB, 60 GB CPU swap.
+    pub fn llama8b_a10() -> Self {
+        Preset {
+            model: ModelSpec::llama8b(),
+            gpu: GpuSpec::a10(),
+            cpu_swap_bytes: 60 * (1 << 30),
+        }
+    }
+
+    /// Paper testbed 2: Qwen-32B on A100 80 GB, 60 GB CPU swap.
+    pub fn qwen32b_a100() -> Self {
+        Preset {
+            model: ModelSpec::qwen32b(),
+            gpu: GpuSpec::a100_80g(),
+            cpu_swap_bytes: 60 * (1 << 30),
+        }
+    }
+
+    /// Small deterministic testbed for unit/integration tests.
+    pub fn tiny() -> Self {
+        Preset {
+            model: ModelSpec::tiny(),
+            gpu: GpuSpec::tiny(),
+            cpu_swap_bytes: 1 << 20,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama8b_a10" | "llama8b" => Some(Self::llama8b_a10()),
+            "qwen32b_a100" | "qwen32b" => Some(Self::qwen32b_a100()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama8b_block_granularity_matches_paper() {
+        // Paper §2.2: 128 KB swap granularity for LLaMA-8B.
+        let m = ModelSpec::llama8b();
+        assert_eq!(m.block_bytes_per_layer(), 128 * 1024);
+        assert_eq!(m.block_bytes(), 4 * 1024 * 1024); // 4 MB across 32 layers
+    }
+
+    #[test]
+    fn qwen32b_block_bytes() {
+        let m = ModelSpec::qwen32b();
+        assert_eq!(m.block_bytes_per_layer(), 128 * 1024);
+        assert_eq!(m.block_bytes(), 8 * 1024 * 1024);
+    }
+
+    #[test]
+    fn a10_preset_capacity_is_contended() {
+        // The A10 testbed must be memory-contended (that's the regime the
+        // paper studies): a few GB of KV space after 16 GB of weights.
+        let p = Preset::llama8b_a10();
+        let blocks = p.gpu_blocks();
+        assert!(blocks > 500 && blocks < 3000, "blocks = {blocks}");
+        // 60 GB CPU swap at 4 MB/block.
+        assert_eq!(p.cpu_blocks(), 15 * 1024);
+    }
+
+    #[test]
+    fn pcie_efficiency_curve() {
+        // Paper: small 128 KB transfers under-utilize PCIe; ≥ 320 KB is
+        // near-optimal.
+        let g = GpuSpec::a10();
+        let small = g.pcie_eff_bw(128 * 1024);
+        let good = g.pcie_eff_bw(320 * 1024);
+        let big = g.pcie_eff_bw(4 * 1024 * 1024);
+        assert!(small < 0.7 * g.pcie_bw);
+        assert!(good > 0.8 * g.pcie_bw);
+        assert!(big > 0.95 * g.pcie_bw);
+    }
+
+    #[test]
+    fn dispatch_dominates_at_vllm_granularity() {
+        // Paper §2.2: at 128 KB granularity, dispatch = 90–95 % of total
+        // transmission time. With execution overlapped behind serialized
+        // dispatch, many-copy total ≈ N·dispatch, so the per-copy ratio
+        // dispatch/(dispatch+exec_tail) must be large.
+        let g = GpuSpec::a10();
+        let c = SwapCostConfig::default();
+        let exec = g.pcie_exec_ns(128 * 1024);
+        // execution of one 128 KB copy ≈ 6 µs < dispatch 18 µs — dispatch
+        // exceeds execution, as measured in the paper.
+        assert!(c.gil_dispatch_ns > exec, "exec = {exec}");
+        // aggregate fraction for a long burst (N = 100):
+        let n = 100u64;
+        let frac =
+            (n * c.gil_dispatch_ns) as f64 / ((n * c.gil_dispatch_ns) + exec) as f64;
+        assert!(frac > 0.9);
+    }
+
+    #[test]
+    fn ablation_ladder_is_monotone_in_features() {
+        let l = EngineConfig::ablation_ladder();
+        assert_eq!(l.len(), 4);
+        assert_eq!(l[0].granularity, Granularity::FixedBlock);
+        assert!(matches!(l[1].granularity, Granularity::BlockGroup { .. }));
+        assert!(!l[1].reuse && l[2].reuse);
+        assert!(matches!(l[3].dispatch, DispatchMode::ThreadPool { .. }));
+        assert_eq!(l[3].swap_mode, SwapMode::Adaptive);
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert!(Preset::by_name("llama8b_a10").is_some());
+        assert!(Preset::by_name("qwen32b").is_some());
+        assert!(Preset::by_name("nope").is_none());
+    }
+}

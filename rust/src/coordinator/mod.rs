@@ -1,0 +1,19 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! - [`request`] — per-request state machine across multi-turn
+//!   conversations (prefill → decode → turn end → think time → next turn)
+//!   and KV residency (GPU / CPU / dropped).
+//! - [`priority`] — the paper's offline priority traces (Random, Markov,
+//!   plus round-robin).
+//! - [`scheduler`] — priority admission: who runs, who is preempted, who
+//!   swaps in (pure, unit-testable).
+//! - [`engine`] — the per-iteration serving loop tying scheduler,
+//!   allocators, reuse and the swap manager together over virtual time.
+
+pub mod engine;
+pub mod priority;
+pub mod request;
+pub mod scheduler;
+
+pub use priority::{Pattern, PriorityTrace};
+pub use request::{KvLocation, ReqState, Request, RequestTable};

@@ -1,0 +1,204 @@
+//! Offline priority traces (paper §4 "Context Switching Trace
+//! Simulation").
+//!
+//! No public LLMaaS context-switching traces exist, so the paper (after
+//! Yin et al., 2024) simulates two patterns, both precomputed offline:
+//!
+//! - **Random** — priorities redrawn arbitrarily at every update epoch;
+//!   no temporal correlation (the harsher pattern: it disrupts block-group
+//!   continuity and increases KV conflicts, §5.1.1).
+//! - **Markov** — temporal locality: each conversation's priority does a
+//!   sticky random walk, so recently favored requests tend to stay
+//!   favored.
+//! - **RoundRobin** (extra, after Andes) — deterministic rotation.
+//!
+//! The trace answers "priority of conversation c at epoch e" lazily but
+//! deterministically: epoch values are memoized per conversation and
+//! stepped forward as needed, so the whole trace never needs
+//! materializing.
+
+use std::collections::HashMap;
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    Random,
+    Markov,
+    RoundRobin,
+}
+
+impl Pattern {
+    pub fn by_name(s: &str) -> Option<Pattern> {
+        match s {
+            "random" => Some(Pattern::Random),
+            "markov" => Some(Pattern::Markov),
+            "roundrobin" | "round-robin" => Some(Pattern::RoundRobin),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PriorityTrace {
+    pattern: Pattern,
+    levels: i64,
+    seed: u64,
+    /// Markov memo: conversation -> (last epoch computed, value at it).
+    memo: HashMap<u64, (u64, i64)>,
+    /// Markov stickiness: probability of staying at the current level.
+    pub sticky: f64,
+}
+
+impl PriorityTrace {
+    pub fn new(pattern: Pattern, levels: usize, seed: u64) -> Self {
+        PriorityTrace {
+            pattern,
+            levels: levels.max(1) as i64,
+            seed,
+            memo: HashMap::new(),
+            sticky: 0.8,
+        }
+    }
+
+    pub fn pattern(&self) -> Pattern {
+        self.pattern
+    }
+
+    /// Stateless per-(conv, epoch) uniform draw.
+    fn draw(&self, conv: u64, epoch: u64) -> i64 {
+        let mut r = Rng::new(
+            self.seed
+                ^ conv.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ epoch.wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+        );
+        r.range(0, self.levels as u64) as i64
+    }
+
+    /// Priority of `conv` at update epoch `epoch` (higher = better).
+    pub fn priority_of(&mut self, conv: u64, epoch: u64) -> i64 {
+        match self.pattern {
+            Pattern::Random => self.draw(conv, epoch),
+            Pattern::RoundRobin => ((conv + epoch) % self.levels as u64) as i64,
+            Pattern::Markov => {
+                // Resume from the memo when stepping forward; recompute
+                // from epoch 0 on random backwards access (each step is
+                // seeded per-(conv, epoch), so recomputation is exact).
+                let (mut e, mut v) = match self.memo.get(&conv) {
+                    Some(&(e, v)) if e <= epoch => (e, v),
+                    _ => (0, self.draw(conv, 0)),
+                };
+                while e < epoch {
+                    e += 1;
+                    let mut r = Rng::new(
+                        self.seed
+                            ^ 0xDEAD_BEEF
+                            ^ conv.wrapping_mul(0x0100_0000_01B3)
+                            ^ e.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    let u = r.f64();
+                    if u > self.sticky {
+                        // Split the remainder between up and down moves.
+                        if u < self.sticky + (1.0 - self.sticky) / 2.0 {
+                            v = (v + 1).min(self.levels - 1);
+                        } else {
+                            v = (v - 1).max(0);
+                        }
+                    }
+                }
+                self.memo.insert(conv, (epoch, v));
+                v
+            }
+        }
+    }
+
+    pub fn levels(&self) -> i64 {
+        self.levels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_is_deterministic_and_uncorrelated() {
+        let mut a = PriorityTrace::new(Pattern::Random, 8, 1);
+        let mut b = PriorityTrace::new(Pattern::Random, 8, 1);
+        for c in 0..20 {
+            for e in 0..20 {
+                assert_eq!(a.priority_of(c, e), b.priority_of(c, e));
+            }
+        }
+        // Temporal autocorrelation of the random pattern ≈ 0: count how
+        // often consecutive epochs keep the same priority.
+        let mut same = 0;
+        let mut total = 0;
+        for c in 0..200 {
+            let mut prev = a.priority_of(c, 0);
+            for e in 1..50 {
+                let v = a.priority_of(c, e);
+                same += (v == prev) as u32;
+                prev = v;
+                total += 1;
+            }
+        }
+        let frac = same as f64 / total as f64;
+        assert!(frac < 0.2, "random should rarely repeat: {frac}");
+    }
+
+    #[test]
+    fn markov_has_temporal_locality() {
+        let mut t = PriorityTrace::new(Pattern::Markov, 8, 2);
+        let mut same = 0;
+        let mut total = 0;
+        for c in 0..200 {
+            let mut prev = t.priority_of(c, 0);
+            for e in 1..50 {
+                let v = t.priority_of(c, e);
+                assert!((v - prev).abs() <= 1, "walk moves one step");
+                same += (v == prev) as u32;
+                prev = v;
+                total += 1;
+            }
+        }
+        let frac = same as f64 / total as f64;
+        assert!(frac > 0.7, "markov should be sticky: {frac}");
+    }
+
+    #[test]
+    fn markov_random_access_consistent_with_sequential() {
+        let mut seq = PriorityTrace::new(Pattern::Markov, 8, 3);
+        let vals: Vec<i64> = (0..30).map(|e| seq.priority_of(7, e)).collect();
+        let mut jump = PriorityTrace::new(Pattern::Markov, 8, 3);
+        assert_eq!(jump.priority_of(7, 29), vals[29]);
+    }
+
+    #[test]
+    fn priorities_in_range() {
+        for pat in [Pattern::Random, Pattern::Markov, Pattern::RoundRobin] {
+            let mut t = PriorityTrace::new(pat, 5, 4);
+            for c in 0..50 {
+                for e in 0..50 {
+                    let v = t.priority_of(c, e);
+                    assert!((0..5).contains(&v), "{pat:?} gave {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundrobin_rotates() {
+        let mut t = PriorityTrace::new(Pattern::RoundRobin, 4, 0);
+        assert_eq!(t.priority_of(0, 0), 0);
+        assert_eq!(t.priority_of(0, 1), 1);
+        assert_eq!(t.priority_of(1, 3), 0);
+    }
+
+    #[test]
+    fn pattern_names() {
+        assert_eq!(Pattern::by_name("markov"), Some(Pattern::Markov));
+        assert_eq!(Pattern::by_name("random"), Some(Pattern::Random));
+        assert_eq!(Pattern::by_name("x"), None);
+    }
+}

@@ -1,0 +1,298 @@
+//! Request state machine over multi-turn conversations.
+
+use crate::memory::RequestId;
+use crate::sim::clock::Ns;
+use crate::workload::Conversation;
+
+/// Where the request's KV cache currently lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvLocation {
+    /// No KV materialized (fresh, or dropped by recompute-preemption).
+    None,
+    Gpu,
+    Cpu,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqState {
+    /// Next turn hasn't arrived yet (user think time).
+    WaitingTurn,
+    /// Turn arrived; waiting for admission.
+    Queued,
+    /// Admitted; asynchronous swap-in in flight.
+    SwappingIn,
+    /// Admitted; prompt (or recompute) prefill in progress.
+    Prefilling,
+    /// Admitted; decoding.
+    Running,
+    /// Preempted; KV on CPU, waiting for re-admission.
+    SwappedOut,
+    /// Turn-end swap-out still draining; then → WaitingTurn/Finished.
+    SwappingOutTurnEnd,
+    /// Conversation complete.
+    Finished,
+}
+
+/// A live conversation being served.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub conv: Conversation,
+    pub turn: usize,
+    pub state: ReqState,
+    pub kv: KvLocation,
+    pub priority: i64,
+    /// KV tokens materialized (valid both on GPU and as the CPU copy
+    /// baseline — the context length).
+    pub tokens_in_cache: u64,
+    /// Prompt tokens of the current turn already prefilled.
+    pub prefill_done: u32,
+    /// Tokens that must be prefilled this turn (prompt, plus the whole
+    /// lost context after a recompute-preemption).
+    pub prefill_target: u32,
+    /// Output tokens generated this turn.
+    pub generated: u32,
+    /// When the current turn arrived (TTFT reference point).
+    pub turn_arrival: Ns,
+    /// First arrival of the conversation.
+    pub arrival: Ns,
+}
+
+impl Request {
+    pub fn new(id: RequestId, conv: Conversation, arrival: Ns) -> Self {
+        let prompt = conv.turns[0].prompt_tokens;
+        Request {
+            id,
+            conv,
+            turn: 0,
+            state: ReqState::Queued,
+            kv: KvLocation::None,
+            priority: 0,
+            tokens_in_cache: 0,
+            prefill_done: 0,
+            prefill_target: prompt,
+            generated: 0,
+            turn_arrival: arrival,
+            arrival,
+        }
+    }
+
+    pub fn cur_turn(&self) -> &crate::workload::Turn {
+        &self.conv.turns[self.turn]
+    }
+
+    /// Total context tokens once this turn completes.
+    pub fn turn_total_tokens(&self) -> u64 {
+        self.conv.turns[..=self.turn]
+            .iter()
+            .map(|t| (t.prompt_tokens + t.response_tokens) as u64)
+            .sum()
+    }
+
+    /// Context tokens accumulated before this turn.
+    pub fn history_tokens(&self) -> u64 {
+        self.conv.turns[..self.turn]
+            .iter()
+            .map(|t| (t.prompt_tokens + t.response_tokens) as u64)
+            .sum()
+    }
+
+    /// Remaining prompt tokens to prefill this turn.
+    pub fn prefill_remaining(&self) -> u32 {
+        self.prefill_target.saturating_sub(self.prefill_done)
+    }
+
+    /// Is the current turn's generation complete?
+    pub fn turn_done(&self) -> bool {
+        self.generated >= self.cur_turn().response_tokens
+    }
+
+    pub fn is_last_turn(&self) -> bool {
+        self.turn + 1 == self.conv.turns.len()
+    }
+
+    /// Blocks needed to hold `tokens` at the given block size.
+    pub fn blocks_for(tokens: u64, block_size: usize) -> usize {
+        tokens.div_ceil(block_size as u64) as usize
+    }
+
+    /// Begin the next turn (state → Queued). Must not be on the last turn.
+    /// If the context was dropped (recompute-preemption at turn end), the
+    /// new turn must re-prefill the whole history as well.
+    pub fn advance_turn(&mut self, now: Ns) {
+        assert!(!self.is_last_turn());
+        self.turn += 1;
+        self.state = ReqState::Queued;
+        self.prefill_done = 0;
+        self.generated = 0;
+        self.prefill_target = if self.kv == KvLocation::None {
+            (self.history_tokens() + self.cur_turn().prompt_tokens as u64) as u32
+        } else {
+            self.cur_turn().prompt_tokens
+        };
+        self.turn_arrival = now;
+    }
+
+    /// Drop the KV context entirely (recompute-preemption): the whole
+    /// history plus this turn's prompt must be prefilled again.
+    pub fn drop_context(&mut self) {
+        self.kv = KvLocation::None;
+        self.tokens_in_cache = 0;
+        // Everything materialized so far must be recomputed: history +
+        // this turn's prompt + already-generated output.
+        self.prefill_target = (self.history_tokens()
+            + self.cur_turn().prompt_tokens as u64
+            + self.generated as u64) as u32;
+        self.prefill_done = 0;
+    }
+}
+
+/// All live requests, indexed by id.
+#[derive(Clone, Debug, Default)]
+pub struct RequestTable {
+    reqs: Vec<Request>,
+    index: std::collections::HashMap<RequestId, usize>,
+}
+
+impl RequestTable {
+    pub fn insert(&mut self, r: Request) {
+        self.index.insert(r.id, self.reqs.len());
+        self.reqs.push(r);
+    }
+
+    pub fn get(&self, id: RequestId) -> &Request {
+        &self.reqs[self.index[&id]]
+    }
+
+    pub fn get_mut(&mut self, id: RequestId) -> &mut Request {
+        &mut self.reqs[self.index[&id]]
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.reqs.iter()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut Request> {
+        self.reqs.iter_mut()
+    }
+
+    pub fn ids_in_state(&self, s: ReqState) -> Vec<RequestId> {
+        self.reqs
+            .iter()
+            .filter(|r| r.state == s)
+            .map(|r| r.id)
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+
+    pub fn all_finished(&self) -> bool {
+        self.reqs.iter().all(|r| r.state == ReqState::Finished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Conversation, Turn};
+
+    fn conv(turns: &[(u32, u32)]) -> Conversation {
+        Conversation {
+            id: 0,
+            turns: turns
+                .iter()
+                .map(|&(p, r)| Turn {
+                    prompt_tokens: p,
+                    response_tokens: r,
+                    think_time_s: 1.0,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn fresh_request_targets_first_prompt() {
+        let r = Request::new(1, conv(&[(100, 50), (30, 40)]), 0);
+        assert_eq!(r.prefill_target, 100);
+        assert_eq!(r.state, ReqState::Queued);
+        assert_eq!(r.kv, KvLocation::None);
+        assert_eq!(r.turn_total_tokens(), 150);
+    }
+
+    #[test]
+    fn advance_turn_resets_counters() {
+        let mut r = Request::new(1, conv(&[(100, 50), (30, 40)]), 0);
+        r.generated = 50;
+        r.tokens_in_cache = 150;
+        r.kv = KvLocation::Cpu; // context preserved
+        r.advance_turn(1_000);
+        assert_eq!(r.turn, 1);
+        assert_eq!(r.prefill_target, 30);
+        assert_eq!(r.generated, 0);
+        assert_eq!(r.history_tokens(), 150);
+        assert_eq!(r.turn_arrival, 1_000);
+    }
+
+    #[test]
+    fn advance_turn_after_dropped_context_recomputes_history() {
+        let mut r = Request::new(1, conv(&[(100, 50), (30, 40)]), 0);
+        r.generated = 50;
+        r.kv = KvLocation::None; // context lost (recompute-preemption)
+        r.tokens_in_cache = 0;
+        r.advance_turn(1_000);
+        // history (100+50) + new prompt 30
+        assert_eq!(r.prefill_target, 180);
+    }
+
+    #[test]
+    #[should_panic]
+    fn advance_past_last_turn_panics() {
+        let mut r = Request::new(1, conv(&[(10, 10)]), 0);
+        r.advance_turn(0);
+    }
+
+    #[test]
+    fn drop_context_forces_full_recompute() {
+        let mut r = Request::new(1, conv(&[(100, 50), (30, 40)]), 0);
+        r.advance_turn(0);
+        r.prefill_done = 30;
+        r.generated = 10;
+        r.tokens_in_cache = 190;
+        r.kv = KvLocation::Gpu;
+        r.drop_context();
+        assert_eq!(r.kv, KvLocation::None);
+        assert_eq!(r.tokens_in_cache, 0);
+        // history 150 + prompt 30 + generated 10
+        assert_eq!(r.prefill_target, 190);
+        assert_eq!(r.prefill_done, 0);
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        assert_eq!(Request::blocks_for(0, 16), 0);
+        assert_eq!(Request::blocks_for(1, 16), 1);
+        assert_eq!(Request::blocks_for(16, 16), 1);
+        assert_eq!(Request::blocks_for(17, 16), 2);
+    }
+
+    #[test]
+    fn table_state_queries() {
+        let mut t = RequestTable::default();
+        t.insert(Request::new(1, conv(&[(10, 10)]), 0));
+        t.insert(Request::new(2, conv(&[(10, 10)]), 0));
+        t.get_mut(2).state = ReqState::Running;
+        assert_eq!(t.ids_in_state(ReqState::Queued), vec![1]);
+        assert_eq!(t.ids_in_state(ReqState::Running), vec![2]);
+        assert!(!t.all_finished());
+    }
+}

@@ -1,0 +1,78 @@
+//! Fig. 1 — Latency breakdown across percentiles (motivation).
+//!
+//! Paper setup: LLaMA-8B on A10, vLLM, 1 000 multi-turn ShareGPT convs,
+//! 1 req/s, priority updates every 100 iterations. Finding: P99 total
+//! iteration latency ≈ 1.6× P50, with swap stall ≈ 59.9 % of P99;
+//! P99.9 ≈ 2× inference time.
+
+use super::runner::{run_sim, Scale};
+use super::{f2, pct, Report};
+use crate::config::{EngineConfig, Preset};
+use crate::coordinator::priority::Pattern;
+use crate::util::stats::Percentiles;
+
+pub fn run(scale: &Scale) -> Report {
+    let mut cfg = EngineConfig::vllm_baseline();
+    cfg.scheduler.priority_update_freq = 0.01; // every 100 iterations
+    let out = run_sim(cfg, Preset::llama8b_a10(), Pattern::Markov, scale);
+
+    // Per-iteration (total, swap) samples; normalize to mean inference.
+    let samples = out.recorder.iteration_latency_samples();
+    let infs: Vec<f64> = out
+        .recorder
+        .iterations
+        .iter()
+        .filter(|s| s.inference_ns > 0)
+        .map(|s| s.inference_ns as f64)
+        .collect();
+    let inf_mean = infs.iter().sum::<f64>() / infs.len().max(1) as f64;
+    let totals = Percentiles::from(samples.iter().map(|(t, _)| *t).collect());
+
+    let mut rep = Report::new(
+        "fig1",
+        "Latency breakdown across percentiles (vLLM baseline, LLaMA-8B/A10)",
+        &["percentile", "total/inf", "swap share", "sched share"],
+    );
+    for p in [50.0, 95.0, 99.0, 99.9] {
+        let cut = totals.p(p);
+        // Average swap share among iterations at/above this percentile.
+        let above: Vec<&(f64, f64)> =
+            samples.iter().filter(|(t, _)| *t >= cut).collect();
+        let swap_share = above.iter().map(|(t, s)| s / t).sum::<f64>()
+            / above.len().max(1) as f64;
+        let sched: f64 = out
+            .recorder
+            .iterations
+            .iter()
+            .map(|s| s.sched_overhead_ns as f64)
+            .sum::<f64>()
+            / samples.len().max(1) as f64;
+        rep.row(vec![
+            format!("P{p}"),
+            f2(cut / inf_mean),
+            pct(swap_share),
+            pct(sched / cut),
+        ]);
+    }
+    let p99_over_p50 = totals.p(99.0) / totals.p(50.0);
+    rep.note(format!(
+        "P99/P50 = {:.2} (paper ≈ 1.6); paper swap share at P99 ≈ 59.9%",
+        p99_over_p50
+    ));
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper() {
+        let rep = run(&Scale::quick());
+        assert_eq!(rep.rows.len(), 4);
+        // Tail totals exceed median (heavy-tailed swap stalls).
+        let p50: f64 = rep.rows[0][1].parse().unwrap();
+        let p99: f64 = rep.rows[2][1].parse().unwrap();
+        assert!(p99 > p50, "tail must exceed median: {p50} vs {p99}");
+    }
+}

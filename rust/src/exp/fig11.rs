@@ -1,0 +1,70 @@
+//! Fig. 11 — Sensitivity: initial block-group size vs achieved swap
+//! granularity, across priority-update frequencies.
+//!
+//! Paper: sweeping the initial group size from 64 to 3 000 tokens changes
+//! achieved granularity by ≤ 15.13 % at fixed frequency — the allocator
+//! is robust; GPU memory per task, not the knob, determines granularity.
+
+use super::runner::{run_sim, Scale};
+use super::{f2, Report};
+use crate::config::{EngineConfig, Granularity, Preset};
+use crate::coordinator::priority::Pattern;
+
+pub fn run(init_tokens: &[usize], freqs: &[f64], scale: &Scale) -> Report {
+    let block_size = Preset::llama8b_a10().model.block_size;
+    let mut headers = vec!["init tokens".to_string(), "init blocks".to_string()];
+    for f in freqs {
+        headers.push(format!("gran@{f:.3}"));
+    }
+    let mut rep = Report::new(
+        "fig11",
+        "Avg swap granularity (blocks/call) vs initial group size",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut extremes: Vec<f64> = Vec::new();
+    for &toks in init_tokens {
+        let blocks = toks.div_ceil(block_size);
+        let mut cells = vec![toks.to_string(), blocks.to_string()];
+        for &f in freqs {
+            let mut cfg = EngineConfig::fastswitch();
+            cfg.granularity = Granularity::BlockGroup {
+                init_group_blocks: blocks,
+            };
+            cfg.scheduler.priority_update_freq = f;
+            let out = run_sim(cfg, Preset::llama8b_a10(), Pattern::Markov, scale);
+            let g = out.swap_stats.avg_granularity();
+            extremes.push(g);
+            cells.push(f2(g));
+        }
+        rep.row(cells);
+    }
+    if !extremes.is_empty() {
+        let min = extremes.iter().cloned().fold(f64::MAX, f64::min);
+        let max = extremes.iter().cloned().fold(0.0f64, f64::max);
+        rep.note(format!(
+            "spread (max-min)/min = {:.2}% (paper: <= 15.13%); paper avg ~20 blocks/group",
+            100.0 * (max - min) / min
+        ));
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn granularity_robust_to_init_size() {
+        let rep = run(&[64, 1000, 3000], &[0.04], &Scale::quick());
+        let g: Vec<f64> = rep.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        let min = g.iter().cloned().fold(f64::MAX, f64::min);
+        let max = g.iter().cloned().fold(0.0f64, f64::max);
+        // Generous bound at quick scale; the paper reports 15 %.
+        assert!(
+            (max - min) / min < 0.6,
+            "granularity too sensitive: {g:?}"
+        );
+        // Coarse in absolute terms.
+        assert!(min > 2.0, "granularity should stay coarse: {g:?}");
+    }
+}

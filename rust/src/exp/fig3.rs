@@ -1,0 +1,100 @@
+//! Fig. 3 — Timeline comparison: fixed-size-block vs dynamic-block-group
+//! preemption (dispatch-dominated vs coalesced).
+//!
+//! Microbenchmark: swap one request's KV (~1 000 tokens) out and back,
+//! measuring DMA calls, dispatch time, and end-to-end time under both
+//! granularities. LLaMA-8B geometry: a 63-block preemption at fixed
+//! granularity is 63 × 32 layers ≈ 2 000 dispatches of 128 KB.
+
+use super::{f2, pct, Report};
+use crate::config::{
+    DispatchMode, EngineConfig, GpuSpec, Granularity, ModelSpec, SwapMode,
+};
+use crate::sim::link::{Direction, PcieLink};
+use crate::swap::engine::{BlockMove, SegmentBuilder};
+use crate::swap::manager::SwapManager;
+
+pub fn run_with_blocks(n_blocks: u32) -> Report {
+    let model = ModelSpec::llama8b();
+    let mut rep = Report::new(
+        "fig3",
+        "Fixed-block vs dynamic-block-group preemption timeline",
+        &[
+            "policy", "blocks", "dma calls", "avg seg KB", "dispatch ms", "total ms",
+            "dispatch share",
+        ],
+    );
+    for (name, gran, dispatch) in [
+        ("vLLM fixed", Granularity::FixedBlock, DispatchMode::Gil),
+        (
+            "FastSwitch group",
+            Granularity::BlockGroup { init_group_blocks: 60 },
+            DispatchMode::ThreadPool { workers: 4 },
+        ),
+    ] {
+        let cost = EngineConfig::vllm_baseline().swap_cost;
+        let mut mgr = SwapManager::new(
+            SwapMode::Sync,
+            dispatch,
+            &cost,
+            PcieLink::new(GpuSpec::a10()),
+        );
+        let builder = SegmentBuilder::new(model.clone(), gran);
+        let moves: Vec<BlockMove> = (0..n_blocks)
+            .map(|i| BlockMove {
+                logical: i,
+                gpu: 10 + i,
+                cpu: 100 + i,
+            })
+            .collect();
+        let op = builder.build(1, Direction::Out, &moves);
+        let calls = op.n_calls();
+        let seg_kb = op.total_bytes() as f64 / calls as f64 / 1024.0;
+        let total = mgr.submit_swap_out(op, 0);
+        let dispatch_ns = mgr.dispatch.dispatch_time;
+        rep.row(vec![
+            name.into(),
+            n_blocks.to_string(),
+            calls.to_string(),
+            f2(seg_kb),
+            f2(dispatch_ns as f64 / 1e6),
+            f2(total as f64 / 1e6),
+            pct(dispatch_ns as f64 / total.max(1) as f64),
+        ]);
+    }
+    rep.note("paper: dispatch is 90–95% of transmission at vLLM granularity; block groups coalesce it away");
+    rep
+}
+
+pub fn run() -> Report {
+    run_with_blocks(63) // ~1 000 tokens at block_size 16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_dominates_fixed_but_not_group() {
+        let rep = run();
+        let fixed_share: f64 =
+            rep.rows[0][6].trim_end_matches('%').parse().unwrap();
+        let group_share: f64 =
+            rep.rows[1][6].trim_end_matches('%').parse().unwrap();
+        assert!(fixed_share > 85.0, "fixed dispatch share {fixed_share}");
+        assert!(group_share < fixed_share);
+        let fixed_total: f64 = rep.rows[0][5].parse().unwrap();
+        let group_total: f64 = rep.rows[1][5].parse().unwrap();
+        assert!(
+            group_total * 4.0 < fixed_total,
+            "coalescing must win big: {group_total} vs {fixed_total}"
+        );
+    }
+
+    #[test]
+    fn fixed_calls_are_blocks_times_layers() {
+        let rep = run_with_blocks(10);
+        let calls: usize = rep.rows[0][2].parse().unwrap();
+        assert_eq!(calls, 10 * 32);
+    }
+}

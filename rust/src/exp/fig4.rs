@@ -1,0 +1,73 @@
+//! Fig. 4 — ShareGPT conversation turns & length distributions.
+//!
+//! Regenerates the workload statistics the paper reports: 78 %
+//! multi-turn, 5.5 turns/conversation average, heavy-tailed lengths.
+
+use super::runner::Scale;
+use super::{f2, pct, Report};
+use crate::util::stats::Histogram;
+use crate::workload::sharegpt::{generate, stats, ShareGptConfig};
+
+pub fn run(scale: &Scale) -> Report {
+    let convs = generate(&ShareGptConfig::default(), scale.conversations.max(1000), scale.seed);
+    let s = stats(&convs);
+
+    let mut rep = Report::new(
+        "fig4",
+        "ShareGPT-like workload distribution",
+        &["statistic", "value", "paper"],
+    );
+    rep.row(vec![
+        "mean turns/conversation".into(),
+        f2(s.mean_turns),
+        "5.5".into(),
+    ]);
+    rep.row(vec![
+        "multi-turn fraction".into(),
+        pct(s.multi_turn_fraction),
+        "78%".into(),
+    ]);
+    rep.row(vec![
+        "mean prompt tokens/turn".into(),
+        f2(s.mean_prompt),
+        "(heavy-tailed)".into(),
+    ]);
+    rep.row(vec![
+        "mean response tokens/turn".into(),
+        f2(s.mean_response),
+        "(responses > prompts)".into(),
+    ]);
+    rep.row(vec![
+        "P95 conversation tokens".into(),
+        f2(s.p95_conv_tokens),
+        "-".into(),
+    ]);
+
+    // Turn-count histogram (panel 1 of the figure).
+    let mut h = Histogram::new(1.0, 21.0, 20);
+    for c in &convs {
+        h.add(c.turns.len() as f64);
+    }
+    for (center, frac) in h.normalized().iter().take(10) {
+        rep.row(vec![
+            format!("P(turns = {})", *center as u32),
+            pct(*frac),
+            "-".into(),
+        ]);
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn statistics_match_paper() {
+        let rep = run(&Scale::quick());
+        let turns: f64 = rep.rows[0][1].parse().unwrap();
+        assert!((turns - 5.5).abs() < 0.5);
+        let multi: f64 = rep.rows[1][1].trim_end_matches('%').parse().unwrap();
+        assert!((multi - 78.0).abs() < 6.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Fig. 6 — comparison of varying degrees of asynchronous preemption.
+//!
+//! The paper's three regimes for a swap occurring alongside inference:
+//! (a) fully sequential — copies AND their dispatch block the iteration
+//!     (vLLM: sync swap, GIL dispatch);
+//! (b) asynchronous execution only — DMA overlaps, but dispatch still
+//!     serializes on the main thread (the FastServe-style middle ground);
+//! (c) fully asynchronous — dispatch offloaded to worker threads too
+//!     (FastSwitch §3.2).
+//!
+//! We reproduce it as a measurable ablation: one 63-block swap-in
+//! submitted at the start of a 30 ms decode iteration; the figure's
+//! quantity is how much the iteration lengthens under each regime.
+
+use super::{f2, Report};
+use crate::config::{
+    DispatchMode, GpuSpec, Granularity, ModelSpec, SwapCostConfig, SwapMode,
+};
+use crate::sim::clock::Ns;
+use crate::sim::link::{Direction, PcieLink};
+use crate::swap::engine::{BlockMove, SegmentBuilder};
+use crate::swap::manager::{SwapInDecision, SwapManager};
+
+pub fn run() -> Report {
+    let model = ModelSpec::llama8b();
+    let iter_ns: Ns = 30_000_000; // one decode iteration
+    let blocks = 63u32;
+
+    let mut rep = Report::new(
+        "fig6",
+        "Degrees of asynchronous preemption (63-block swap-in during a 30 ms iteration)",
+        &["regime", "dispatch on main thread ms", "iteration stall ms", "iteration total ms"],
+    );
+
+    let cases = [
+        (
+            "(a) fully sequential (vLLM)",
+            SwapMode::Sync,
+            DispatchMode::Gil,
+            Granularity::FixedBlock,
+        ),
+        (
+            "(b) async execution, sync dispatch",
+            SwapMode::Async,
+            DispatchMode::Gil,
+            Granularity::FixedBlock,
+        ),
+        (
+            "(c) fully async (FastSwitch)",
+            SwapMode::Async,
+            DispatchMode::ThreadPool { workers: 4 },
+            Granularity::BlockGroup { init_group_blocks: 60 },
+        ),
+    ];
+    for (name, mode, dispatch, gran) in cases {
+        let cost = SwapCostConfig::default();
+        let mut mgr = SwapManager::new(mode, dispatch, &cost, PcieLink::new(GpuSpec::a10()));
+        let builder = SegmentBuilder::new(model.clone(), gran);
+        let moves: Vec<BlockMove> = (0..blocks)
+            .map(|i| BlockMove { logical: i, gpu: 10 + i, cpu: 100 + i })
+            .collect();
+        let op = builder.build(1, Direction::In, &moves);
+        let decision = mgr.submit_swap_in(op, 0, iter_ns, 8, 2048.0);
+        // Main-thread dispatch blocks the iteration even in regime (b).
+        let main_thread = mgr.stats.main_thread_dispatch_ns;
+        let stall = match decision {
+            SwapInDecision::Sync { done } => done,
+            SwapInDecision::Async => main_thread,
+        };
+        rep.row(vec![
+            name.into(),
+            f2(main_thread as f64 / 1e6),
+            f2(stall as f64 / 1e6),
+            f2((iter_ns + stall) as f64 / 1e6),
+        ]);
+    }
+    rep.note("paper: (a) serializes everything; (b) still pays the dispatch stage; (c) overlaps both stages");
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asynchrony_degrees_match_paper_fig6() {
+        let rep = run();
+        let total = |i: usize| -> f64 { rep.rows[i][3].parse().unwrap() };
+        // The paper's key observation: regime (b) barely improves on (a)
+        // because the dispatch stage — not DMA execution — is the
+        // bottleneck at vLLM granularity (Challenge #1/#2).
+        assert!(total(0) >= total(1), "(b) can't be worse than (a)");
+        assert!(
+            (total(0) - total(1)) / total(0) < 0.10,
+            "(b) ≈ (a): dispatch dominates ({} vs {})",
+            total(0),
+            total(1)
+        );
+        // Only regime (c) actually overlaps the context switch.
+        assert!(total(1) > 1.5 * total(2), "(c) must beat (b) decisively");
+        assert!(total(2) < 30.5, "fully async ≈ bare iteration: {}", total(2));
+        // (b) still pays the full dispatch stage on the main thread.
+        let dispatch_b: f64 = rep.rows[1][1].parse().unwrap();
+        assert!(dispatch_b > 30.0, "GIL dispatch of 2016 calls is heavy");
+    }
+}

@@ -1,0 +1,127 @@
+//! Fig. 8 — The headline end-to-end comparison.
+//!
+//! (a)–(d): P95/P99/P99.9 TTFT and P99.9 TBT for the incremental
+//! ablation (vLLM → +DBG → +DBG+Reuse → FastSwitch), for LLaMA-8B/A10
+//! (freq 0.04) and Qwen-32B/A100 (freq 0.02), under Markov and Random
+//! patterns. Paper speedups: LLaMA-8B 4.3–5.8× P95 TTFT … 2.0–2.7×
+//! P99.9 TBT; Qwen-32B 1.4–1.7× … 3.6–11.2×.
+//!
+//! (e)–(f): end-to-end throughput across priority-update frequencies
+//! (up to 1.334× / 1.444×).
+
+use super::runner::{run_ladder, run_sim, Scale};
+use super::{f2, f3, fx, Report};
+use crate::config::{EngineConfig, Preset};
+use crate::coordinator::priority::Pattern;
+
+/// Testbed settings: (preset, priority-update frequency, offered load).
+///
+/// Frequencies follow the paper (0.04 LLaMA-8B, 0.02 Qwen-32B). The
+/// offered load is scaled to each testbed's serving capacity so both
+/// operate in the paper's contended-but-not-collapsed regime: the
+/// Qwen-32B/A100 testbed holds half the KV blocks and decodes ~3× fewer
+/// tokens/s than LLaMA-8B/A10, so an open-loop 1 req/s (which the A10
+/// testbed sustains) drives it into unbounded-backlog collapse where CPU
+/// swap space exhausts and every system degenerates to recompute
+/// thrashing — a regime outside the paper's evaluation.
+fn preset_freq(name: &str) -> (Preset, f64, f64) {
+    match name {
+        "llama8b" => (Preset::llama8b_a10(), 0.04, 1.0),
+        "qwen32b" => (Preset::qwen32b_a100(), 0.02, 0.4),
+        _ => panic!("unknown testbed"),
+    }
+}
+
+/// Panels (a)–(d): latency ladder for one testbed + pattern.
+pub fn run_latency(testbed: &str, pattern: Pattern, scale: &Scale) -> Report {
+    let (preset, freq, rate) = preset_freq(testbed);
+    let mut scale = scale.clone();
+    scale.request_rate = rate;
+    let outs = run_ladder(&preset, pattern, freq, &scale);
+    let base_ttft = outs[0].recorder.ttft();
+    let base_tbt = outs[0].recorder.tbt();
+
+    let mut rep = Report::new(
+        "fig8-latency",
+        &format!("Tail latency, {testbed}, {pattern:?}, freq {freq}"),
+        &[
+            "config", "P95 TTFT s", "P99 TTFT s", "P99.9 TTFT s", "P99.9 TBT s",
+            "P95 TTFT spd", "P99 TTFT spd", "P99.9 TTFT spd", "P99.9 TBT spd",
+        ],
+    );
+    for out in &outs {
+        let ttft = out.recorder.ttft();
+        let tbt = out.recorder.tbt();
+        rep.row(vec![
+            out.label.clone(),
+            f3(ttft.p(95.0)),
+            f3(ttft.p(99.0)),
+            f3(ttft.p(99.9)),
+            f3(tbt.p(99.9)),
+            fx(base_ttft.p(95.0) / ttft.p(95.0)),
+            fx(base_ttft.p(99.0) / ttft.p(99.0)),
+            fx(base_ttft.p(99.9) / ttft.p(99.9)),
+            fx(base_tbt.p(99.9) / tbt.p(99.9)),
+        ]);
+    }
+    rep.note("paper: each added optimization lowers tail latency; FastSwitch wins every column");
+    rep
+}
+
+/// Panels (e)–(f): throughput vs priority-update frequency.
+pub fn run_throughput(testbed: &str, pattern: Pattern, freqs: &[f64], scale: &Scale) -> Report {
+    let (preset, _, rate) = preset_freq(testbed);
+    let mut scale = scale.clone();
+    scale.request_rate = rate;
+    let scale = &scale;
+    let mut rep = Report::new(
+        "fig8-throughput",
+        &format!("Throughput vs priority-update frequency, {testbed}, {pattern:?}"),
+        &["freq", "vllm tok/s", "fastswitch tok/s", "speedup"],
+    );
+    for &f in freqs {
+        let mut base = EngineConfig::vllm_baseline();
+        base.scheduler.priority_update_freq = f;
+        let mut fast = EngineConfig::fastswitch();
+        fast.scheduler.priority_update_freq = f;
+        let ob = run_sim(base, preset.clone(), pattern, scale);
+        let of = run_sim(fast, preset.clone(), pattern, scale);
+        rep.row(vec![
+            f3(f),
+            f2(ob.throughput()),
+            f2(of.throughput()),
+            fx(of.throughput() / ob.throughput()),
+        ]);
+    }
+    rep.note("paper: up to 1.334x (LLaMA-8B) / 1.444x (Qwen-32B) at high frequency");
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(cell: &str) -> f64 {
+        cell.trim_end_matches('x').parse().unwrap()
+    }
+
+    #[test]
+    fn fastswitch_wins_tail_latency_llama() {
+        let rep = run_latency("llama8b", Pattern::Markov, &Scale::quick());
+        assert_eq!(rep.rows.len(), 4);
+        let last = rep.rows.last().unwrap();
+        assert!(spd(&last[5]) > 1.0, "P95 TTFT speedup {}", last[5]);
+        assert!(spd(&last[8]) > 1.0, "P99.9 TBT speedup {}", last[8]);
+    }
+
+    #[test]
+    fn throughput_improves_at_high_frequency() {
+        let rep = run_throughput(
+            "llama8b",
+            Pattern::Markov,
+            &[0.04],
+            &Scale::quick(),
+        );
+        assert!(spd(&rep.rows[0][3]) > 1.0, "speedup {}", rep.rows[0][3]);
+    }
+}

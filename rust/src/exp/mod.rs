@@ -1,0 +1,144 @@
+//! Experiment harness: one module per paper figure/table (see the
+//! experiment index in DESIGN.md).
+//!
+//! Every experiment returns a [`Report`] — the same rows/series the paper
+//! plots — and is runnable via `fastswitch exp <id>` or
+//! `examples/paper_figures`. Absolute numbers come from the calibrated
+//! simulation testbed; the *shape* (who wins, by what factor, where the
+//! knees are) is what reproduces the paper.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig6;
+pub mod fig8;
+pub mod fig9;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod runner;
+pub mod table1;
+
+use std::fmt::Write as _;
+
+/// A printable experiment result (one table / figure's series).
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> Self {
+        Report {
+            id: id.into(),
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} — {} ==", self.id, self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &w));
+        let _ = writeln!(out, "{}", "-".repeat(w.iter().sum::<usize>() + 2 * w.len()));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r, &w));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "  note: {n}");
+        }
+        out
+    }
+
+    /// Render as a markdown table (for EXPERIMENTS.md).
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {} — {}\n", self.id, self.title);
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "\n*{n}*");
+        }
+        out.push('\n');
+        out
+    }
+}
+
+/// Format helpers.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn fx(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_render_and_markdown() {
+        let mut r = Report::new("figX", "demo", &["a", "b"]);
+        r.row(vec!["1".into(), "2".into()]);
+        r.note("hello");
+        let t = r.render();
+        assert!(t.contains("figX") && t.contains("hello"));
+        let m = r.markdown();
+        assert!(m.contains("| a | b |") && m.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut r = Report::new("x", "y", &["a", "b"]);
+        r.row(vec!["1".into()]);
+    }
+}

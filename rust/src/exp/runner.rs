@@ -1,0 +1,128 @@
+//! Shared simulation runner for all experiments.
+
+use crate::config::{EngineConfig, Preset};
+use crate::coordinator::engine::{ServeOutcome, ServingEngine};
+use crate::coordinator::priority::Pattern;
+use crate::workload::sharegpt::{generate, ShareGptConfig};
+use crate::workload::ArrivalTrace;
+
+/// Experiment scale knobs (defaults keep each figure seconds-scale; the
+/// paper's full scale is `conversations = 1000`).
+#[derive(Clone, Debug)]
+pub struct Scale {
+    pub conversations: usize,
+    pub request_rate: f64,
+    pub seed: u64,
+    pub max_iters: u64,
+    /// Charge real wall-clock scheduler overhead to the virtual clock
+    /// (needed by Fig. 9; off elsewhere for determinism).
+    pub charge_sched_overhead: bool,
+}
+
+impl Default for Scale {
+    fn default() -> Self {
+        Scale {
+            conversations: 300,
+            request_rate: 1.0,
+            seed: 42,
+            max_iters: 2_000_000,
+            charge_sched_overhead: false,
+        }
+    }
+}
+
+impl Scale {
+    pub fn paper() -> Self {
+        Scale {
+            conversations: 1000,
+            ..Default::default()
+        }
+    }
+
+    pub fn quick() -> Self {
+        Scale {
+            conversations: 80,
+            ..Default::default()
+        }
+    }
+}
+
+/// Run one simulation.
+pub fn run_sim(
+    cfg: EngineConfig,
+    preset: Preset,
+    pattern: Pattern,
+    scale: &Scale,
+) -> ServeOutcome {
+    let wl = ShareGptConfig::default();
+    let convs = generate(&wl, scale.conversations, scale.seed);
+    let arrivals = ArrivalTrace::poisson(&convs, scale.request_rate, scale.seed ^ 0x5EED);
+    let mut engine = ServingEngine::new(cfg, preset, pattern, convs, arrivals, scale.seed);
+    engine.charge_sched_overhead = scale.charge_sched_overhead;
+    engine.run(scale.max_iters)
+}
+
+/// Run the ablation ladder (vllm → +dbg → +reuse → fastswitch) at a
+/// given priority-update frequency.
+pub fn run_ladder(
+    preset: &Preset,
+    pattern: Pattern,
+    freq: f64,
+    scale: &Scale,
+) -> Vec<ServeOutcome> {
+    EngineConfig::ablation_ladder()
+        .into_iter()
+        .map(|mut cfg| {
+            cfg.scheduler.priority_update_freq = freq;
+            run_sim(cfg, preset.clone(), pattern, scale)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_completes() {
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.scheduler.priority_update_freq = 0.04;
+        let out = run_sim(
+            cfg,
+            Preset::llama8b_a10(),
+            Pattern::Markov,
+            &Scale {
+                conversations: 20,
+                ..Scale::quick()
+            },
+        );
+        assert_eq!(out.recorder.finished_conversations, 20);
+    }
+}
+
+#[cfg(test)]
+mod scale_probe {
+    use super::*;
+
+    #[test]
+    #[ignore] // manual probe: cargo test --release -- --ignored scale_probe
+    fn probe_300_conversations() {
+        let t0 = std::time::Instant::now();
+        let mut cfg = EngineConfig::vllm_baseline();
+        cfg.scheduler.priority_update_freq = 0.04;
+        let out = run_sim(
+            cfg,
+            Preset::llama8b_a10(),
+            Pattern::Markov,
+            &Scale::default(),
+        );
+        println!(
+            "300 convs: {:.1}s wall, {} iters, {} tokens, span {:.0}s, preempt {}",
+            t0.elapsed().as_secs_f64(),
+            out.iterations,
+            out.recorder.total_tokens,
+            crate::sim::clock::to_secs(out.span),
+            out.recorder.preemptions,
+        );
+    }
+}

@@ -1,0 +1,256 @@
+//! `fastswitch` CLI — launcher for simulations, experiments, and the
+//! real-model server.
+//!
+//! ```text
+//! fastswitch exp <id|all> [--conversations N] [--seed S] [--out FILE]
+//!     Regenerate a paper figure/table (fig1..fig13, table1).
+//!
+//! fastswitch simulate [--preset llama8b_a10|qwen32b_a100]
+//!     [--policy vllm|vllm+dbg|vllm+dbg+reuse|fastswitch]
+//!     [--pattern markov|random|roundrobin] [--freq F]
+//!     [--conversations N] [--rate R] [--seed S] [--config FILE]
+//!     One simulation run; prints the SLO summary.
+//!
+//! fastswitch serve [--artifacts DIR] [--requests N] [--policy ...]
+//!     Serve batched requests on the real AOT-compiled model via PJRT.
+//!
+//! fastswitch workload [--conversations N] [--seed S]
+//!     Print workload statistics (Fig. 4).
+//! ```
+
+use fastswitch::config::{file::ConfigFile, EngineConfig, Granularity, Preset};
+use fastswitch::coordinator::priority::Pattern;
+use fastswitch::exp;
+use fastswitch::exp::runner::{run_sim, Scale};
+use fastswitch::runtime::PjrtModel;
+use fastswitch::server::{RealEngine, RealEngineConfig, RealRequestSpec};
+use fastswitch::util::cli::Args;
+use fastswitch::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "exp" => cmd_exp(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "workload" => cmd_workload(&args),
+        _ => {
+            println!("{}", include_str!("main.rs").lines()
+                .skip(3)
+                .take_while(|l| l.starts_with("//!"))
+                .map(|l| l.trim_start_matches("//! ").trim_start_matches("//!"))
+                .collect::<Vec<_>>()
+                .join("\n"));
+        }
+    }
+}
+
+fn scale_from(args: &Args) -> Scale {
+    Scale {
+        conversations: args.get_usize("conversations", 300),
+        request_rate: args.get_f64("rate", 1.0),
+        seed: args.get_u64("seed", 42),
+        max_iters: args.get_u64("max-iters", 2_000_000),
+        charge_sched_overhead: false,
+    }
+}
+
+fn cmd_exp(args: &Args) {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let scale = scale_from(args);
+    let mut reports = Vec::new();
+    let freqs = args.get_f64_list("freqs", &[0.01, 0.02, 0.04, 0.08]);
+    let run_one = |id: &str, reports: &mut Vec<exp::Report>| match id {
+        "fig1" => reports.push(exp::fig1::run(&scale)),
+        "fig2" => reports.push(exp::fig2::run(&scale)),
+        "fig3" => reports.push(exp::fig3::run()),
+        "fig4" => reports.push(exp::fig4::run(&scale)),
+        "fig6" => reports.push(exp::fig6::run()),
+        "fig8" => {
+            for testbed in ["llama8b", "qwen32b"] {
+                for pat in [Pattern::Markov, Pattern::Random] {
+                    reports.push(exp::fig8::run_latency(testbed, pat, &scale));
+                }
+            }
+            for testbed in ["llama8b", "qwen32b"] {
+                reports.push(exp::fig8::run_throughput(
+                    testbed,
+                    Pattern::Markov,
+                    &freqs,
+                    &scale,
+                ));
+            }
+        }
+        "fig9" => reports.push(exp::fig9::run(&freqs, &scale)),
+        "fig10" => reports.push(exp::fig10::run(&freqs, &scale)),
+        "fig11" => reports.push(exp::fig11::run(
+            &[64, 256, 1000, 2000, 3000],
+            &[0.02, 0.04],
+            &scale,
+        )),
+        "fig12" => reports.push(exp::fig12::run(&scale)),
+        "fig13" => reports.push(exp::fig13::run(&[2, 8, 20, 40, 60, 80], &scale)),
+        "table1" => reports.push(exp::table1::run(&scale)),
+        other => eprintln!("unknown experiment {other:?}"),
+    };
+    if id == "all" {
+        for e in [
+            "fig1", "fig2", "fig3", "fig4", "fig6", "fig8", "fig9", "fig10", "fig11",
+            "fig12", "fig13", "table1",
+        ] {
+            eprintln!("[exp] running {e} ...");
+            run_one(e, &mut reports);
+        }
+    } else {
+        run_one(id, &mut reports);
+    }
+    let mut md = String::new();
+    for r in &reports {
+        println!("{}", r.render());
+        md.push_str(&r.markdown());
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, md).expect("write report");
+        eprintln!("wrote {path}");
+    }
+}
+
+fn cmd_simulate(args: &Args) {
+    let mut pattern_name = args.get_or("pattern", "markov").to_string();
+    let mut scale = scale_from(args);
+    let (mut cfg, preset) = if let Some(path) = args.get("config") {
+        let f = ConfigFile::load(path).expect("config file");
+        if let Some(n) = f.get_usize("workload", "conversations") {
+            scale.conversations = n;
+        }
+        if let Some(r) = f.get_f64("workload", "request_rate") {
+            scale.request_rate = r;
+        }
+        if let Some(s) = f.get_u64("workload", "seed") {
+            scale.seed = s;
+        }
+        if let Some(p) = f.get("workload", "pattern") {
+            pattern_name = p.to_string();
+        }
+        (f.engine().expect("engine config"), f.preset().expect("preset"))
+    } else {
+        let cfg = match args.get_or("policy", "fastswitch") {
+            "vllm" => EngineConfig::vllm_baseline(),
+            "vllm+dbg" => EngineConfig::with_dbg(),
+            "vllm+dbg+reuse" => EngineConfig::with_dbg_reuse(),
+            _ => EngineConfig::fastswitch(),
+        };
+        let preset = Preset::by_name(args.get_or("preset", "llama8b_a10"))
+            .expect("unknown preset");
+        (cfg, preset)
+    };
+    if let Some(f) = args.get("freq") {
+        cfg.scheduler.priority_update_freq = f.parse().expect("freq");
+    }
+    let pattern = Pattern::by_name(&pattern_name).expect("unknown pattern");
+
+    eprintln!(
+        "[simulate] {} on {}, pattern {:?}, freq {}, {} conversations",
+        cfg.label, preset.model.name, pattern, cfg.scheduler.priority_update_freq,
+        scale.conversations
+    );
+    let out = run_sim(cfg, preset, pattern, &scale);
+    let ttft = out.recorder.ttft();
+    let tbt = out.recorder.tbt();
+    let (inf, swap, sched) = out.recorder.stall_breakdown();
+    println!("== simulation summary ({}) ==", out.label);
+    println!("conversations finished : {}", out.recorder.finished_conversations);
+    println!("turns finished         : {}", out.recorder.finished_turns);
+    println!("tokens generated       : {}", out.recorder.total_tokens);
+    println!("span                   : {:.1}s", out.span as f64 / 1e9);
+    println!("throughput             : {:.1} tok/s", out.throughput());
+    println!(
+        "TTFT   P50/P95/P99/P99.9 : {:.3}/{:.3}/{:.3}/{:.3} s",
+        ttft.p(50.0), ttft.p(95.0), ttft.p(99.0), ttft.p(99.9)
+    );
+    println!(
+        "TBT    P50/P95/P99/P99.9 : {:.3}/{:.3}/{:.3}/{:.3} s",
+        tbt.p(50.0), tbt.p(95.0), tbt.p(99.0), tbt.p(99.9)
+    );
+    println!(
+        "time: inference {:.1}s, swap stall {:.2}s, scheduler {:.3}s",
+        inf as f64 / 1e9, swap as f64 / 1e9, sched as f64 / 1e9
+    );
+    println!(
+        "preemptions {} (recompute {}), swap ops {}/{} in/out, avg granularity {:.1} blocks/call",
+        out.recorder.preemptions,
+        out.recorder.recompute_preemptions,
+        out.swap_stats.swap_in_ops,
+        out.swap_stats.swap_out_ops,
+        out.swap_stats.avg_granularity()
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let model = PjrtModel::load(&dir).expect("load artifacts (run `make artifacts`)");
+    let vocab = model.meta.vocab;
+    println!(
+        "[serve] model loaded on {}: {} layers, {} blocks x {} tokens",
+        model.platform(),
+        model.meta.n_layers,
+        model.meta.num_blocks,
+        model.meta.block_size
+    );
+    let granularity = match args.get_or("policy", "fastswitch") {
+        "vllm" => Granularity::FixedBlock,
+        _ => Granularity::BlockGroup { init_group_blocks: 8 },
+    };
+    let mut eng = RealEngine::new(
+        model,
+        RealEngineConfig {
+            granularity,
+            copy_workers: args.get_usize("copy-workers", 4),
+            cpu_slots: args.get_usize("cpu-slots", 512),
+            max_batch: args.get_usize("max-batch", 8),
+        },
+    );
+    let n = args.get_usize("requests", 8);
+    let mut rng = Rng::new(args.get_u64("seed", 42));
+    for i in 0..n {
+        let plen = rng.usize(16, 96);
+        let prompt: Vec<i32> =
+            (0..plen).map(|_| rng.usize(1, vocab) as i32).collect();
+        eng.submit(RealRequestSpec {
+            prompt,
+            max_new_tokens: rng.usize(8, 32),
+            priority: (i % 4) as i64,
+        });
+    }
+    let out = eng.run().expect("serve");
+    println!("== real serving summary ==");
+    println!("requests        : {}", out.completions.len());
+    println!("tokens          : {}", out.tokens);
+    println!("wall time       : {:.2}s", out.wall_s);
+    println!("throughput      : {:.1} tok/s", out.throughput_tok_s);
+    println!(
+        "TTFT P50/P99    : {:.3}/{:.3} s",
+        out.ttft_s.p(50.0),
+        out.ttft_s.p(99.0)
+    );
+    println!(
+        "TBT  P50/P99    : {:.4}/{:.4} s",
+        out.tbt_s.p(50.0),
+        out.tbt_s.p(99.0)
+    );
+    println!(
+        "preemptions     : {} ({} blocks swapped)",
+        out.preemptions, out.swapped_blocks
+    );
+}
+
+fn cmd_workload(args: &Args) {
+    let scale = scale_from(args);
+    let rep = exp::fig4::run(&scale);
+    println!("{}", rep.render());
+}

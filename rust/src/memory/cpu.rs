@@ -1,0 +1,381 @@
+//! CPU swap space: range-allocated slots holding KV-cache copies, with
+//! priority-based *contamination* (paper §3.3, Challenge #3).
+//!
+//! Every request may hold a *copy map*: logical block index → CPU slot.
+//! A copy is either **required** (the request is swapped out; the CPU copy
+//! is the only version) or a **backup** (the request's KV also lives on
+//! GPU; the copy exists so a future swap-out transfers only the delta).
+//! When space runs out, backups of lower-priority requests are reclaimed
+//! ("contaminated"), always from the *tail* of the victim's copy — the
+//! prefix stays valid, preserving prefix reuse for the victim's next turn.
+//!
+//! Slots are range-allocated (best-fit with coalescing on free) so a
+//! coalesced GPU block run can land in a contiguous CPU region and remain
+//! one DMA segment; `add_copies` also honors §3.3's *preallocation*: new
+//! copies try to extend the request's existing slot run so successive
+//! turns stay adjacent.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::{RequestId, SlotId};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CopyEntry {
+    /// Logical block index within the request's sequence.
+    pub logical: u32,
+    pub slot: SlotId,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RequestCopies {
+    /// Valid copies, sorted by logical index.
+    pub entries: Vec<CopyEntry>,
+    pub priority: i64,
+    /// True while the request's only KV version is this CPU copy.
+    pub required: bool,
+    /// Number of tail entries contaminated over this copy's lifetime
+    /// (metrics for Fig. 13).
+    pub contaminated: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct CpuSwapSpace {
+    capacity: usize,
+    /// Free ranges: start -> len, coalesced.
+    free: BTreeMap<SlotId, u32>,
+    copies: HashMap<RequestId, RequestCopies>,
+    /// Total contaminations (evicted backup blocks).
+    pub total_contaminated: u64,
+}
+
+impl CpuSwapSpace {
+    pub fn new(capacity: usize) -> Self {
+        let mut free = BTreeMap::new();
+        if capacity > 0 {
+            free.insert(0, capacity as u32);
+        }
+        CpuSwapSpace {
+            capacity,
+            free,
+            copies: HashMap::new(),
+            total_contaminated: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.values().map(|&l| l as usize).sum()
+    }
+
+    pub fn used_slots(&self) -> usize {
+        self.capacity - self.free_slots()
+    }
+
+    pub fn copies_of(&self, req: RequestId) -> Option<&RequestCopies> {
+        self.copies.get(&req)
+    }
+
+    /// Logical indices with a valid CPU copy, sorted.
+    pub fn valid_logical(&self, req: RequestId) -> Vec<u32> {
+        self.copies
+            .get(&req)
+            .map(|c| c.entries.iter().map(|e| e.logical).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn set_priority(&mut self, req: RequestId, priority: i64) {
+        if let Some(c) = self.copies.get_mut(&req) {
+            c.priority = priority;
+        }
+    }
+
+    pub fn set_required(&mut self, req: RequestId, required: bool) {
+        if let Some(c) = self.copies.get_mut(&req) {
+            c.required = required;
+        }
+    }
+
+    // ---- range allocation ------------------------------------------------
+
+    fn take_range(&mut self, start: SlotId, len: u32) {
+        let (&rs, &rl) = self
+            .free
+            .range(..=start)
+            .next_back()
+            .expect("range not free");
+        assert!(start >= rs && start + len <= rs + rl, "range not free");
+        self.free.remove(&rs);
+        if start > rs {
+            self.free.insert(rs, start - rs);
+        }
+        if rs + rl > start + len {
+            self.free.insert(start + len, rs + rl - (start + len));
+        }
+    }
+
+    fn release_range(&mut self, start: SlotId, len: u32) {
+        if len == 0 {
+            return;
+        }
+        // Coalesce with neighbors.
+        let mut start = start;
+        let mut len = len;
+        if let Some((&ps, &pl)) = self.free.range(..start).next_back() {
+            assert!(ps + pl <= start, "double free");
+            if ps + pl == start {
+                self.free.remove(&ps);
+                start = ps;
+                len += pl;
+            }
+        }
+        if let Some((&ns, &nl)) = self.free.range(start + len..).next() {
+            if start + len == ns {
+                self.free.remove(&ns);
+                len += nl;
+            }
+        }
+        self.free.insert(start, len);
+    }
+
+    /// Best-fit allocation of one run of exactly `len` slots; prefers the
+    /// run starting at `prefer` if it is free (§3.3 preallocation
+    /// adjacency). Returns the start, or None.
+    fn alloc_run(&mut self, len: u32, prefer: Option<SlotId>) -> Option<SlotId> {
+        if len == 0 {
+            return None;
+        }
+        if let Some(p) = prefer {
+            if let Some((&rs, &rl)) = self.free.range(..=p).next_back() {
+                if p >= rs && p + len <= rs + rl {
+                    self.take_range(p, len);
+                    return Some(p);
+                }
+            }
+        }
+        // Best fit: smallest free range that holds `len`.
+        let cand = self
+            .free
+            .iter()
+            .filter(|(_, &l)| l >= len)
+            .min_by_key(|(_, &l)| l)
+            .map(|(&s, _)| s)?;
+        self.take_range(cand, len);
+        Some(cand)
+    }
+
+    // ---- copy management ---------------------------------------------------
+
+    /// Add copies for `logicals` (sorted, no duplicates with existing
+    /// entries). Slots are allocated contiguously where possible, adjacent
+    /// to the request's last existing slot. Returns the new (logical, slot)
+    /// pairs, or None if free space is insufficient (caller should
+    /// `contaminate_backups` and retry, or give up).
+    pub fn add_copies(
+        &mut self,
+        req: RequestId,
+        logicals: &[u32],
+        priority: i64,
+    ) -> Option<Vec<CopyEntry>> {
+        if logicals.is_empty() {
+            return Some(vec![]);
+        }
+        if self.free_slots() < logicals.len() {
+            return None;
+        }
+        let prefer = self
+            .copies
+            .get(&req)
+            .and_then(|c| c.entries.last())
+            .map(|e| e.slot + 1);
+
+        let mut out = Vec::with_capacity(logicals.len());
+        let mut remaining = logicals;
+        let mut prefer = prefer;
+        while !remaining.is_empty() {
+            // Try to place the whole remainder as one run; if no single
+            // free range fits, take the largest range (the copy spans
+            // multiple runs).
+            let want = remaining.len() as u32;
+            let (start, n) = match self.alloc_run(want, prefer) {
+                Some(s) => (s, want),
+                None => {
+                    let (&s, &l) = self
+                        .free
+                        .iter()
+                        .max_by_key(|(_, &l)| l)
+                        .expect("free_slots >= len but no free range");
+                    let take = l.min(want);
+                    self.take_range(s, take);
+                    (s, take)
+                }
+            };
+            let (head, tail) = remaining.split_at(n as usize);
+            for (i, &logical) in head.iter().enumerate() {
+                out.push(CopyEntry {
+                    logical,
+                    slot: start + i as u32,
+                });
+            }
+            remaining = tail;
+            prefer = Some(start + n);
+        }
+
+        let c = self.copies.entry(req).or_default();
+        c.priority = priority;
+        c.entries.extend(out.iter().copied());
+        c.entries.sort_by_key(|e| e.logical);
+        Some(out)
+    }
+
+    fn slot_in_free(&self, slot: SlotId) -> bool {
+        self.free
+            .range(..=slot)
+            .next_back()
+            .map(|(&s, &l)| slot >= s && slot < s + l)
+            .unwrap_or(false)
+    }
+
+    /// Contaminate (reclaim) backup copies until `needed` slots are free,
+    /// starting with the lowest-priority victims (strictly below
+    /// `requesting_priority`), always from the tail of each victim's copy.
+    /// Returns the number of slots actually freed.
+    pub fn contaminate_backups(&mut self, needed: usize, requesting_priority: i64) -> usize {
+        let mut freed = 0usize;
+        while self.free_slots() < needed {
+            // Lowest-priority victim with a non-required, non-empty copy
+            // (request-id tiebreak keeps runs deterministic).
+            let victim = self
+                .copies
+                .iter()
+                .filter(|(_, c)| !c.required && !c.entries.is_empty())
+                .filter(|(_, c)| c.priority < requesting_priority)
+                .min_by_key(|(&r, c)| (c.priority, r))
+                .map(|(&r, _)| r);
+            let Some(victim) = victim else { break };
+            let c = self.copies.get_mut(&victim).unwrap();
+            let e = c.entries.pop().unwrap();
+            c.contaminated += 1;
+            self.total_contaminated += 1;
+            self.release_range(e.slot, 1);
+            freed += 1;
+        }
+        freed
+    }
+
+    /// Drop all copies of `req` (conversation finished or copy abandoned).
+    pub fn drop_request(&mut self, req: RequestId) {
+        if let Some(c) = self.copies.remove(&req) {
+            for e in c.entries {
+                self.release_range(e.slot, 1);
+            }
+        }
+    }
+
+    /// Invariant check: no slot is both free and referenced; totals add up.
+    pub fn check_invariants(&self) {
+        let mut seen = std::collections::HashSet::new();
+        for c in self.copies.values() {
+            for e in &c.entries {
+                assert!(seen.insert(e.slot), "slot {} referenced twice", e.slot);
+                assert!(!self.slot_in_free(e.slot), "slot {} free+used", e.slot);
+                assert!((e.slot as usize) < self.capacity);
+            }
+        }
+        assert_eq!(self.free_slots() + seen.len(), self.capacity);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_drop_roundtrip() {
+        let mut s = CpuSwapSpace::new(16);
+        let added = s.add_copies(1, &[0, 1, 2], 5).unwrap();
+        assert_eq!(added.len(), 3);
+        // Contiguous run.
+        assert_eq!(added[1].slot, added[0].slot + 1);
+        assert_eq!(s.used_slots(), 3);
+        s.drop_request(1);
+        assert_eq!(s.used_slots(), 0);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn extension_stays_adjacent() {
+        let mut s = CpuSwapSpace::new(16);
+        let a = s.add_copies(1, &[0, 1], 5).unwrap();
+        let b = s.add_copies(1, &[2, 3], 5).unwrap();
+        assert_eq!(b[0].slot, a[1].slot + 1, "next turn's copies adjacent");
+        s.check_invariants();
+    }
+
+    #[test]
+    fn insufficient_space_returns_none() {
+        let mut s = CpuSwapSpace::new(4);
+        assert!(s.add_copies(1, &[0, 1, 2, 3], 5).is_some());
+        assert!(s.add_copies(2, &[0], 5).is_none());
+    }
+
+    #[test]
+    fn contamination_evicts_lowest_priority_tail_first() {
+        let mut s = CpuSwapSpace::new(8);
+        s.add_copies(1, &[0, 1, 2], 1).unwrap(); // low priority backup
+        s.add_copies(2, &[0, 1, 2], 9).unwrap(); // high priority backup
+        assert_eq!(s.free_slots(), 2);
+        let freed = s.contaminate_backups(4, 10);
+        assert_eq!(freed, 2);
+        // Victim is request 1 (lowest priority), tail-first.
+        assert_eq!(s.valid_logical(1), vec![0]);
+        assert_eq!(s.valid_logical(2), vec![0, 1, 2]);
+        assert_eq!(s.total_contaminated, 2);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn required_copies_never_contaminated() {
+        let mut s = CpuSwapSpace::new(4);
+        s.add_copies(1, &[0, 1, 2, 3], 1).unwrap();
+        s.set_required(1, true);
+        let freed = s.contaminate_backups(1, 100);
+        assert_eq!(freed, 0);
+        assert_eq!(s.valid_logical(1).len(), 4);
+    }
+
+    #[test]
+    fn equal_priority_not_contaminated() {
+        let mut s = CpuSwapSpace::new(4);
+        s.add_copies(1, &[0, 1, 2, 3], 5).unwrap();
+        assert_eq!(s.contaminate_backups(1, 5), 0, "only strictly lower prio");
+    }
+
+    #[test]
+    fn fragmented_allocation_spans_runs() {
+        let mut s = CpuSwapSpace::new(8);
+        s.add_copies(1, &[0, 1, 2], 1).unwrap(); // slots 0..3
+        s.add_copies(2, &[0], 1).unwrap(); // slot 3
+        s.drop_request(1); // free 0..3
+        // 4 slots free: 0..3 and 4..8 → a 5-block copy must span two runs.
+        let added = s.add_copies(3, &[0, 1, 2, 3, 4], 1).unwrap();
+        assert_eq!(added.len(), 5);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn free_coalescing() {
+        let mut s = CpuSwapSpace::new(8);
+        s.add_copies(1, &[0, 1], 1).unwrap();
+        s.add_copies(2, &[0, 1], 1).unwrap();
+        s.add_copies(3, &[0, 1], 1).unwrap();
+        s.drop_request(1);
+        s.drop_request(3);
+        s.drop_request(2);
+        // All free again as one range.
+        assert_eq!(s.free.len(), 1);
+        assert_eq!(s.free_slots(), 8);
+    }
+}

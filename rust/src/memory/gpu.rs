@@ -1,0 +1,106 @@
+//! GPU KV block space: ownership + free accounting over block ids
+//! `1..n_blocks` (block 0 is the reserved null block).
+
+use super::{BlockId, RequestId, NULL_BLOCK};
+
+#[derive(Clone, Debug)]
+pub struct GpuBlockSpace {
+    /// owner[b] — `None` if free. Index 0 unused.
+    owner: Vec<Option<RequestId>>,
+    free: usize,
+}
+
+impl GpuBlockSpace {
+    /// `n_blocks` *usable* blocks (ids 1..=n_blocks).
+    pub fn new(n_blocks: usize) -> Self {
+        GpuBlockSpace {
+            owner: vec![None; n_blocks + 1],
+            free: n_blocks,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.owner.len() - 1
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.capacity() - self.free
+    }
+
+    pub fn owner_of(&self, b: BlockId) -> Option<RequestId> {
+        self.owner.get(b as usize).copied().flatten()
+    }
+
+    pub fn is_free(&self, b: BlockId) -> bool {
+        b != NULL_BLOCK && (b as usize) < self.owner.len() && self.owner[b as usize].is_none()
+    }
+
+    /// Mark `b` owned by `req`. Panics on double-allocation (an allocator
+    /// bug — the property tests rely on this tripping).
+    pub fn claim(&mut self, b: BlockId, req: RequestId) {
+        assert_ne!(b, NULL_BLOCK, "null block is not allocatable");
+        let slot = &mut self.owner[b as usize];
+        assert!(slot.is_none(), "double allocation of block {b}");
+        *slot = Some(req);
+        self.free -= 1;
+    }
+
+    /// Release `b`. Panics if not owned by `req` (ownership violation).
+    pub fn reclaim(&mut self, b: BlockId, req: RequestId) {
+        let slot = &mut self.owner[b as usize];
+        assert_eq!(*slot, Some(req), "block {b} not owned by request {req}");
+        *slot = None;
+        self.free += 1;
+    }
+
+    /// Integrity check: free-count consistent with the ownership map.
+    pub fn check_invariants(&self) {
+        let counted = self.owner[1..].iter().filter(|o| o.is_none()).count();
+        assert_eq!(counted, self.free, "free-count drift");
+        assert!(self.owner[0].is_none(), "null block must stay unowned");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claim_reclaim_roundtrip() {
+        let mut s = GpuBlockSpace::new(8);
+        assert_eq!(s.free_blocks(), 8);
+        s.claim(3, 7);
+        assert_eq!(s.owner_of(3), Some(7));
+        assert_eq!(s.free_blocks(), 7);
+        s.reclaim(3, 7);
+        assert_eq!(s.free_blocks(), 8);
+        s.check_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "double allocation")]
+    fn double_claim_panics() {
+        let mut s = GpuBlockSpace::new(4);
+        s.claim(1, 1);
+        s.claim(1, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not owned")]
+    fn reclaim_wrong_owner_panics() {
+        let mut s = GpuBlockSpace::new(4);
+        s.claim(1, 1);
+        s.reclaim(1, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "null block")]
+    fn null_block_unallocatable() {
+        let mut s = GpuBlockSpace::new(4);
+        s.claim(NULL_BLOCK, 1);
+    }
+}

@@ -1,0 +1,26 @@
+//! KV-cache memory substrates: the GPU block space and the CPU swap space.
+//!
+//! These are *bookkeeping* layers shared by both allocators
+//! ([`crate::block::fixed`], [`crate::block::buddy`]) and the KV Cache
+//! Reuse Mechanism ([`crate::block::reuse`]): ownership, free accounting,
+//! and integrity invariants. In real-execution mode the same ids index
+//! physical KV storage held by [`crate::runtime`].
+
+pub mod cpu;
+pub mod gpu;
+
+pub use cpu::CpuSwapSpace;
+pub use gpu::GpuBlockSpace;
+
+/// Physical GPU block id. Block 0 is reserved (the null block padded
+/// batch slots scatter into — see python/compile/model.py) and is never
+/// allocated.
+pub type BlockId = u32;
+
+/// CPU swap-slot id.
+pub type SlotId = u32;
+
+/// Request identifier (assigned by the workload/frontend).
+pub type RequestId = u64;
+
+pub const NULL_BLOCK: BlockId = 0;

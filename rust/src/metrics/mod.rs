@@ -1,0 +1,255 @@
+//! Serving metrics: TTFT / TBT / throughput, stall accounting, and the
+//! token-generation-efficiency windows of Fig. 12.
+//!
+//! TTFT is measured **per turn** (paper §4: "latency experienced ...
+//! before the first token of each turn is generated"); TBT is the gap
+//! between consecutive generated tokens of the same turn.
+
+use crate::memory::RequestId;
+use crate::sim::clock::{to_secs, Ns};
+use crate::util::stats::Percentiles;
+use std::collections::HashMap;
+
+/// Per-iteration engine telemetry (Figs. 1, 2, 9, 12).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterationSample {
+    pub at: Ns,
+    /// Pure model execution time.
+    pub inference_ns: Ns,
+    /// Swap-induced stall on the critical path.
+    pub swap_stall_ns: Ns,
+    /// Scheduler/bookkeeping time on the critical path (call-stack
+    /// overhead, Fig. 9).
+    pub sched_overhead_ns: Ns,
+    /// Decode tokens produced this iteration.
+    pub tokens: u32,
+    /// Prefill iteration (prompt chunks) rather than a decode step.
+    pub is_prefill: bool,
+    /// Requests in the running batch.
+    pub batch: u32,
+    /// Requests currently waiting on a KV transfer (Fig. 2).
+    pub waiting_on_swap: u32,
+}
+
+#[derive(Clone, Debug, Default)]
+struct TurnRecord {
+    arrival: Ns,
+    first_token: Option<Ns>,
+    token_times: Vec<Ns>,
+}
+
+/// Collects everything the experiment harness needs.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    turns: Vec<TurnRecord>,
+    open: HashMap<(RequestId, u32), usize>,
+    pub iterations: Vec<IterationSample>,
+    pub total_tokens: u64,
+    pub finished_turns: u64,
+    pub finished_conversations: u64,
+    pub preemptions: u64,
+    pub recompute_preemptions: u64,
+    /// Conversations rejected because their context can never fit the
+    /// GPU KV space (the max-model-len admission rule).
+    pub rejected_conversations: u64,
+}
+
+impl Recorder {
+    /// A turn became servable (its request arrived / think time elapsed).
+    pub fn turn_arrival(&mut self, req: RequestId, turn: u32, at: Ns) {
+        let idx = self.turns.len();
+        self.turns.push(TurnRecord {
+            arrival: at,
+            ..Default::default()
+        });
+        self.open.insert((req, turn), idx);
+    }
+
+    /// A decode/prefill step produced a token for (req, turn).
+    pub fn token(&mut self, req: RequestId, turn: u32, at: Ns) {
+        if let Some(&idx) = self.open.get(&(req, turn)) {
+            let rec = &mut self.turns[idx];
+            if rec.first_token.is_none() {
+                rec.first_token = Some(at);
+            }
+            rec.token_times.push(at);
+            self.total_tokens += 1;
+        }
+    }
+
+    pub fn turn_finished(&mut self, req: RequestId, turn: u32) {
+        self.open.remove(&(req, turn));
+        self.finished_turns += 1;
+    }
+
+    pub fn iteration(&mut self, s: IterationSample) {
+        self.iterations.push(s);
+    }
+
+    // ---- summaries -------------------------------------------------------
+
+    /// TTFT samples in seconds (finished or in-flight turns that produced
+    /// a first token).
+    pub fn ttft(&self) -> Percentiles {
+        Percentiles::from(
+            self.turns
+                .iter()
+                .filter_map(|t| t.first_token.map(|f| to_secs(f - t.arrival)))
+                .collect(),
+        )
+    }
+
+    /// TBT samples in seconds (all inter-token gaps).
+    pub fn tbt(&self) -> Percentiles {
+        let mut gaps = Vec::new();
+        for t in &self.turns {
+            for w in t.token_times.windows(2) {
+                gaps.push(to_secs(w[1] - w[0]));
+            }
+        }
+        Percentiles::from(gaps)
+    }
+
+    /// End-to-end token throughput, tokens/s over `span`.
+    pub fn throughput(&self, span: Ns) -> f64 {
+        if span == 0 {
+            return 0.0;
+        }
+        self.total_tokens as f64 / to_secs(span)
+    }
+
+    /// Fig. 12: token-generation efficiency per fixed-size iteration
+    /// window, as percentiles. Efficiency is tokens per second **per
+    /// running request**, over *decode* iterations only: prefill
+    /// iterations are long/low-token by design, and raw batch-size
+    /// variation would otherwise mask the swap stalls the figure is
+    /// about.
+    pub fn token_gen_efficiency(&self, window: usize) -> Percentiles {
+        let decode: Vec<&IterationSample> = self
+            .iterations
+            .iter()
+            .filter(|s| !s.is_prefill && s.batch > 0)
+            .collect();
+        let mut samples = Vec::new();
+        for chunk in decode.chunks(window) {
+            if chunk.len() < window {
+                break;
+            }
+            // Per-request tokens (≡ iterations completed) over wall time.
+            let per_req_tokens: f64 = chunk
+                .iter()
+                .map(|s| s.tokens as f64 / s.batch as f64)
+                .sum();
+            let dur: Ns = chunk
+                .iter()
+                .map(|s| s.inference_ns + s.swap_stall_ns + s.sched_overhead_ns)
+                .sum();
+            if dur > 0 {
+                samples.push(per_req_tokens / to_secs(dur));
+            }
+        }
+        Percentiles::from(samples)
+    }
+
+    /// Fig. 1 / Fig. 10: total stall vs inference on the critical path.
+    pub fn stall_breakdown(&self) -> (Ns, Ns, Ns) {
+        let inf = self.iterations.iter().map(|s| s.inference_ns).sum();
+        let swap = self.iterations.iter().map(|s| s.swap_stall_ns).sum();
+        let sched = self.iterations.iter().map(|s| s.sched_overhead_ns).sum();
+        (inf, swap, sched)
+    }
+
+    /// Fig. 1: per-iteration total latency percentiles with their swap
+    /// share — (total_ns, swap_ns) pairs sorted by total.
+    pub fn iteration_latency_samples(&self) -> Vec<(f64, f64)> {
+        self.iterations
+            .iter()
+            .map(|s| {
+                (
+                    (s.inference_ns + s.swap_stall_ns + s.sched_overhead_ns) as f64,
+                    s.swap_stall_ns as f64,
+                )
+            })
+            .collect()
+    }
+
+    /// Fig. 2: per-iteration fraction of scheduled requests waiting on a
+    /// KV transfer (waiters / (batch + waiters)).
+    pub fn waiting_on_swap_fractions(&self) -> Vec<f64> {
+        self.iterations
+            .iter()
+            .filter(|s| s.batch + s.waiting_on_swap > 0)
+            .map(|s| s.waiting_on_swap as f64 / (s.batch + s.waiting_on_swap) as f64)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::clock::{MS, SEC};
+
+    #[test]
+    fn ttft_per_turn() {
+        let mut r = Recorder::default();
+        r.turn_arrival(1, 0, 0);
+        r.token(1, 0, 2 * SEC);
+        r.token(1, 0, 2 * SEC + 100 * MS);
+        r.turn_finished(1, 0);
+        r.turn_arrival(1, 1, 10 * SEC);
+        r.token(1, 1, 10 * SEC + 500 * MS);
+        let ttft = r.ttft();
+        assert_eq!(ttft.len(), 2);
+        assert!((ttft.min() - 0.5).abs() < 1e-9);
+        assert!((ttft.max() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tbt_gaps() {
+        let mut r = Recorder::default();
+        r.turn_arrival(1, 0, 0);
+        r.token(1, 0, 0);
+        r.token(1, 0, 100 * MS);
+        r.token(1, 0, 400 * MS);
+        let tbt = r.tbt();
+        assert_eq!(tbt.len(), 2);
+        assert!((tbt.max() - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput() {
+        let mut r = Recorder::default();
+        r.turn_arrival(1, 0, 0);
+        for i in 0..100 {
+            r.token(1, 0, i * MS);
+        }
+        assert!((r.throughput(10 * SEC) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_windows() {
+        let mut r = Recorder::default();
+        for i in 0..10 {
+            r.iteration(IterationSample {
+                at: i * 10 * MS,
+                inference_ns: 10 * MS,
+                swap_stall_ns: if i >= 5 { 10 * MS } else { 0 },
+                tokens: 8,
+                batch: 8,
+                ..Default::default()
+            });
+        }
+        let eff = r.token_gen_efficiency(5);
+        assert_eq!(eff.len(), 2);
+        // Second window has stalls → half the efficiency.
+        assert!((eff.max() / eff.min() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tokens_for_unknown_turn_ignored() {
+        let mut r = Recorder::default();
+        r.token(9, 0, 0);
+        assert_eq!(r.total_tokens, 0);
+        assert!(r.ttft().is_empty());
+    }
+}

@@ -1,0 +1,197 @@
+//! Parser for `artifacts/model_meta.txt` — the contract emitted by
+//! `python/compile/aot.py` describing the AOT-compiled model: geometry,
+//! shape variants, and the `params.bin` tensor manifest.
+
+use std::collections::HashMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum MetaError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad header: {0:?}")]
+    BadHeader(String),
+    #[error("missing key {0}")]
+    MissingKey(&'static str),
+    #[error("malformed line {0}: {1:?}")]
+    Malformed(usize, String),
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed model metadata.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub num_blocks: usize,
+    pub block_size: usize,
+    pub max_blocks_per_seq: usize,
+    pub prefill_chunk: usize,
+    pub decode_batch_sizes: Vec<usize>,
+    pub tensors: Vec<TensorSpec>,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<Self, MetaError> {
+        let mut lines = text.lines().enumerate();
+        let (_, header) = lines
+            .next()
+            .ok_or_else(|| MetaError::BadHeader(String::new()))?;
+        if header.trim() != "fastswitch-model-meta v1" {
+            return Err(MetaError::BadHeader(header.to_string()));
+        }
+        let mut kv: HashMap<&str, &str> = HashMap::new();
+        let mut tensors = Vec::new();
+        for (i, line) in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("tensor ") {
+                let mut parts = rest.split_whitespace();
+                let name = parts
+                    .next()
+                    .ok_or_else(|| MetaError::Malformed(i + 1, line.into()))?;
+                let dims = parts
+                    .next()
+                    .ok_or_else(|| MetaError::Malformed(i + 1, line.into()))?;
+                let shape: Result<Vec<usize>, _> =
+                    dims.split('x').map(|d| d.parse::<usize>()).collect();
+                tensors.push(TensorSpec {
+                    name: name.to_string(),
+                    shape: shape.map_err(|_| MetaError::Malformed(i + 1, line.into()))?,
+                });
+            } else if let Some((k, v)) = line.split_once(' ') {
+                kv.insert(k, v);
+            } else {
+                return Err(MetaError::Malformed(i + 1, line.into()));
+            }
+        }
+        fn get(kv: &HashMap<&str, &str>, k: &'static str) -> Result<usize, MetaError> {
+            kv.get(k)
+                .and_then(|v| v.parse().ok())
+                .ok_or(MetaError::MissingKey(k))
+        }
+        let decode_batch_sizes = kv
+            .get("decode_batch_sizes")
+            .ok_or(MetaError::MissingKey("decode_batch_sizes"))?
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect();
+        Ok(ModelMeta {
+            vocab: get(&kv, "vocab")?,
+            d_model: get(&kv, "d_model")?,
+            n_layers: get(&kv, "n_layers")?,
+            n_heads: get(&kv, "n_heads")?,
+            n_kv_heads: get(&kv, "n_kv_heads")?,
+            head_dim: get(&kv, "head_dim")?,
+            d_ff: get(&kv, "d_ff")?,
+            max_seq: get(&kv, "max_seq")?,
+            num_blocks: get(&kv, "num_blocks")?,
+            block_size: get(&kv, "block_size")?,
+            max_blocks_per_seq: get(&kv, "max_blocks_per_seq")?,
+            prefill_chunk: get(&kv, "prefill_chunk")?,
+            decode_batch_sizes,
+            tensors,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, MetaError> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Total f32 elements in params.bin.
+    pub fn total_param_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.elements()).sum()
+    }
+
+    /// Elements of one full KV cache tensor [L, NB, BS, KH, D].
+    pub fn cache_elements(&self) -> usize {
+        self.n_layers * self.num_blocks * self.block_size * self.n_kv_heads * self.head_dim
+    }
+
+    /// Elements of one block in one layer (the copy granularity).
+    pub fn block_layer_elements(&self) -> usize {
+        self.block_size * self.n_kv_heads * self.head_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+fastswitch-model-meta v1
+vocab 64
+d_model 32
+n_layers 1
+n_heads 2
+n_kv_heads 2
+head_dim 16
+d_ff 64
+max_seq 32
+num_blocks 8
+block_size 8
+max_blocks_per_seq 4
+prefill_chunk 8
+decode_batch_sizes 1,2
+tensor embed 64x32
+tensor pos_embed 32x32
+tensor ln_f 32
+";
+
+    #[test]
+    fn parse_roundtrip() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.vocab, 64);
+        assert_eq!(m.decode_batch_sizes, vec![1, 2]);
+        assert_eq!(m.tensors.len(), 3);
+        assert_eq!(m.tensors[0].shape, vec![64, 32]);
+        assert_eq!(m.tensors[2].shape, vec![32]);
+        assert_eq!(m.total_param_elements(), 64 * 32 + 32 * 32 + 32);
+        assert_eq!(m.cache_elements(), 8 * 8 * 2 * 16);
+        assert_eq!(m.block_layer_elements(), 8 * 2 * 16);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(matches!(
+            ModelMeta::parse("nope v9"),
+            Err(MetaError::BadHeader(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_missing_key() {
+        let text = SAMPLE.replace("vocab 64\n", "");
+        assert!(matches!(
+            ModelMeta::parse(&text),
+            Err(MetaError::MissingKey("vocab"))
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_tensor() {
+        let text = format!("{SAMPLE}tensor bad\n");
+        assert!(matches!(
+            ModelMeta::parse(&text),
+            Err(MetaError::Malformed(..))
+        ));
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them on
+//! the serving hot path — Python is never involved at runtime.
+//!
+//! Pipeline (see /opt/xla-example/README.md for the interchange gotchas):
+//! `python -m compile.aot` lowers the paged-KV transformer to **HLO
+//! text**; here `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` produces one loaded executable per shape variant
+//! (decode at batch 1/4/8, prefill at one chunk size). Weights stream
+//! from `params.bin` once at startup.
+//!
+//! KV caches live in Rust-owned buffers ([`model::KvState`]); each
+//! executable call passes them in and receives the updated caches back.
+//! Swap in real mode = physical `memcpy` between the GPU-pool and
+//! CPU-pool buffers, dispatched through [`crate::swap::pool::CopyPool`].
+
+pub mod meta;
+pub mod model;
+
+pub use meta::{MetaError, ModelMeta};
+pub use model::{PjrtModel, RuntimeError};

@@ -1,0 +1,264 @@
+//! The compiled model: PJRT executables + weights + Rust-owned KV state.
+
+use std::path::Path;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::meta::ModelMeta;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("meta: {0}")]
+    Meta(#[from] super::meta::MetaError),
+    #[error("params.bin size mismatch: got {got} bytes, want {want}")]
+    ParamsSize { got: usize, want: usize },
+    #[error("batch {0} exceeds the largest compiled decode variant")]
+    BatchTooLarge(usize),
+    #[error("artifact missing: {0}")]
+    ArtifactMissing(String),
+}
+
+/// Rust-owned paged KV caches (the "GPU memory" of the real backend).
+/// Layout matches the python side: `[L, NB, BS, KH, D]`, row-major f32.
+pub struct KvState {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Elements of one (layer, block): BS·KH·D.
+    pub block_layer: usize,
+    pub num_blocks: usize,
+    pub n_layers: usize,
+}
+
+impl KvState {
+    pub fn new(meta: &ModelMeta) -> Self {
+        KvState {
+            k: vec![0.0; meta.cache_elements()],
+            v: vec![0.0; meta.cache_elements()],
+            block_layer: meta.block_layer_elements(),
+            num_blocks: meta.num_blocks,
+            n_layers: meta.n_layers,
+        }
+    }
+
+    /// Flat offset of (layer, block).
+    pub fn offset(&self, layer: usize, block: usize) -> usize {
+        debug_assert!(layer < self.n_layers && block < self.num_blocks);
+        (layer * self.num_blocks + block) * self.block_layer
+    }
+}
+
+/// Loaded model: executables, weights, caches.
+///
+/// Perf (§Perf runtime): weights are uploaded to the PJRT device ONCE as
+/// [`xla::PjRtBuffer`]s and every call uses `execute_b`, so the ~22 MB of
+/// parameters are not re-transferred per decode step (they were with the
+/// `execute(&[Literal])` path). KV caches still round-trip per call:
+/// the crate returns multi-output results as a single tuple buffer whose
+/// elements cannot be re-fed as inputs, so device-resident caches are
+/// blocked at the binding layer (documented in EXPERIMENTS.md §Perf).
+pub struct PjrtModel {
+    pub meta: ModelMeta,
+    client: PjRtClient,
+    /// (batch size, executable), ascending.
+    decode: Vec<(usize, PjRtLoadedExecutable)>,
+    prefill: PjRtLoadedExecutable,
+    /// Device-resident weights, in param_spec order.
+    param_bufs: Vec<xla::PjRtBuffer>,
+    pub kv: KvState,
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable, RuntimeError> {
+    if !path.exists() {
+        return Err(RuntimeError::ArtifactMissing(path.display().to_string()));
+    }
+    let proto = HloModuleProto::from_text_file(path.to_str().unwrap())?;
+    let comp = XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+impl PjrtModel {
+    /// Load everything from `artifacts/`.
+    pub fn load(dir: &Path) -> Result<Self, RuntimeError> {
+        let meta = ModelMeta::load(&dir.join("model_meta.txt"))?;
+        let client = PjRtClient::cpu()?;
+
+        let mut decode = Vec::new();
+        for &b in &meta.decode_batch_sizes {
+            let exe = compile(&client, &dir.join(format!("decode_b{b}.hlo.txt")))?;
+            decode.push((b, exe));
+        }
+        decode.sort_by_key(|(b, _)| *b);
+        let prefill = compile(
+            &client,
+            &dir.join(format!("prefill_t{}.hlo.txt", meta.prefill_chunk)),
+        )?;
+
+        // Stream weights.
+        let raw = std::fs::read(dir.join("params.bin"))?;
+        let want = meta.total_param_elements() * 4;
+        if raw.len() != want {
+            return Err(RuntimeError::ParamsSize {
+                got: raw.len(),
+                want,
+            });
+        }
+        let mut param_bufs = Vec::with_capacity(meta.tensors.len());
+        let mut off = 0usize;
+        for t in &meta.tensors {
+            let n = t.elements();
+            let mut buf = vec![0f32; n];
+            for (i, chunk) in raw[off..off + n * 4].chunks_exact(4).enumerate() {
+                buf[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            off += n * 4;
+            // Upload once; device-resident for the process lifetime.
+            param_bufs.push(client.buffer_from_host_buffer(&buf, &t.shape, None)?);
+        }
+
+        let kv = KvState::new(&meta);
+        Ok(PjrtModel {
+            meta,
+            client,
+            decode,
+            prefill,
+            param_bufs,
+            kv,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn cache_buffers(&self) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer), RuntimeError> {
+        let m = &self.meta;
+        let dims = [
+            m.n_layers,
+            m.num_blocks,
+            m.block_size,
+            m.n_kv_heads,
+            m.head_dim,
+        ];
+        Ok((
+            self.client.buffer_from_host_buffer(&self.kv.k, &dims, None)?,
+            self.client.buffer_from_host_buffer(&self.kv.v, &dims, None)?,
+        ))
+    }
+
+    fn i32_buffer(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer, RuntimeError> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn write_back_caches(&mut self, k: &Literal, v: &Literal) -> Result<(), RuntimeError> {
+        k.copy_raw_to(&mut self.kv.k)?;
+        v.copy_raw_to(&mut self.kv.v)?;
+        Ok(())
+    }
+
+    /// One decode iteration. Slices must all have the same length
+    /// `n <= max compiled batch`; inactive behavior follows the L2
+    /// contract (token 0 / context_len 0 rows are padding).
+    /// Returns next token ids (same length as the input batch).
+    pub fn decode(
+        &mut self,
+        token_ids: &[i32],
+        positions: &[i32],
+        block_tables: &[Vec<i32>],
+        context_lens: &[i32],
+    ) -> Result<Vec<i32>, RuntimeError> {
+        let n = token_ids.len();
+        let (bsz, _) = *self
+            .decode
+            .iter()
+            .find(|(b, _)| *b >= n)
+            .ok_or(RuntimeError::BatchTooLarge(n))?;
+        let maxb = self.meta.max_blocks_per_seq;
+
+        // Pad to the variant's batch size.
+        let pad = |xs: &[i32]| -> Vec<i32> {
+            let mut v = xs.to_vec();
+            v.resize(bsz, 0);
+            v
+        };
+        let mut bt = vec![0i32; bsz * maxb];
+        for (i, row) in block_tables.iter().enumerate() {
+            for (j, &b) in row.iter().take(maxb).enumerate() {
+                bt[i * maxb + j] = b;
+            }
+        }
+
+        let (kc, vc) = self.cache_buffers()?;
+        let toks = self.i32_buffer(&pad(token_ids), &[bsz])?;
+        let pos = self.i32_buffer(&pad(positions), &[bsz])?;
+        let btl = self.i32_buffer(&bt, &[bsz, maxb])?;
+        let cl = self.i32_buffer(&pad(context_lens), &[bsz])?;
+
+        let exe = &self
+            .decode
+            .iter()
+            .find(|(b, _)| *b == bsz)
+            .unwrap()
+            .1;
+        let mut inputs: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        inputs.push(&kc);
+        inputs.push(&vc);
+        inputs.push(&toks);
+        inputs.push(&pos);
+        inputs.push(&btl);
+        inputs.push(&cl);
+
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&inputs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let (next, k_new, v_new) = (&parts[0], &parts[1], &parts[2]);
+        self.write_back_caches(k_new, v_new)?;
+        let all: Vec<i32> = next.to_vec()?;
+        Ok(all[..n].to_vec())
+    }
+
+    /// Prefill one chunk of one request (prefix reuse). Returns the
+    /// greedy next token (meaningful on the final chunk).
+    pub fn prefill(
+        &mut self,
+        token_ids: &[i32],
+        prefix_len: i32,
+        t_actual: i32,
+        block_table: &[i32],
+    ) -> Result<i32, RuntimeError> {
+        let t = self.meta.prefill_chunk;
+        let maxb = self.meta.max_blocks_per_seq;
+        let mut toks = token_ids.to_vec();
+        toks.resize(t, 0);
+        let mut btv = block_table.to_vec();
+        btv.resize(maxb, 0);
+
+        let (kc, vc) = self.cache_buffers()?;
+        let toks = self.i32_buffer(&toks, &[t])?;
+        let pfx = self.i32_buffer(&[prefix_len], &[])?;
+        let ta = self.i32_buffer(&[t_actual], &[])?;
+        let btl = self.i32_buffer(&btv, &[maxb])?;
+
+        let mut inputs: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        inputs.push(&kc);
+        inputs.push(&vc);
+        inputs.push(&toks);
+        inputs.push(&pfx);
+        inputs.push(&ta);
+        inputs.push(&btl);
+
+        let result =
+            self.prefill.execute_b::<&xla::PjRtBuffer>(&inputs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        self.write_back_caches(&parts[1], &parts[2])?;
+        let next: i32 = parts[0].get_first_element()?;
+        Ok(next)
+    }
+
+    /// Largest compiled decode batch.
+    pub fn max_batch(&self) -> usize {
+        self.decode.last().map(|(b, _)| *b).unwrap_or(0)
+    }
+}

@@ -1,0 +1,13 @@
+//! Real-execution serving backend: the FastSwitch policies driving the
+//! AOT-compiled model through PJRT, with *physical* KV block movement.
+//!
+//! This is the end-to-end proof that the three layers compose into a
+//! server: continuous batching + priority preemption + paged KV over
+//! [`crate::runtime::PjrtModel`], with swaps performed as real memcpys
+//! between the GPU-pool and CPU-pool buffers via
+//! [`crate::swap::pool::CopyPool`] worker threads (the paper's C++
+//! offload). Latencies here are wall-clock, not simulated.
+
+pub mod real;
+
+pub use real::{RealEngine, RealEngineConfig, RealOutcome, RealRequestSpec};

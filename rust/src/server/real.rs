@@ -1,0 +1,469 @@
+//! Real serving engine over PJRT (wall-clock latencies, physical swaps).
+
+use std::time::Instant;
+
+use crate::block::{buddy::BlockGroupAllocator, fixed::FixedBlockAllocator, KvAllocator};
+use crate::config::Granularity;
+use crate::memory::{CpuSwapSpace, RequestId};
+use crate::runtime::{PjrtModel, RuntimeError};
+use crate::swap::pool::{CopyPool, CopyTask};
+use crate::util::stats::Percentiles;
+
+/// One request to serve: a prompt plus a generation budget.
+#[derive(Clone, Debug)]
+pub struct RealRequestSpec {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub priority: i64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RealEngineConfig {
+    pub granularity: Granularity,
+    /// Copy-pool workers (0 → inline copies, the GIL-path analogue).
+    pub copy_workers: usize,
+    /// CPU swap slots (blocks).
+    pub cpu_slots: usize,
+    pub max_batch: usize,
+}
+
+impl Default for RealEngineConfig {
+    fn default() -> Self {
+        RealEngineConfig {
+            granularity: Granularity::BlockGroup {
+                init_group_blocks: 8,
+            },
+            copy_workers: 4,
+            cpu_slots: 512,
+            max_batch: 8,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum St {
+    Queued,
+    Running,
+    SwappedOut,
+    Done,
+}
+
+struct Slot {
+    id: RequestId,
+    spec: RealRequestSpec,
+    state: St,
+    /// Tokens whose KV is materialized (prompt prefilled + decoded).
+    context: usize,
+    prefilled: usize,
+    generated: Vec<i32>,
+    started: Instant,
+    first_token: Option<f64>,
+    token_times: Vec<f64>,
+}
+
+/// Serving results with wall-clock latencies.
+#[derive(Debug)]
+pub struct RealOutcome {
+    pub completions: Vec<(RequestId, Vec<i32>)>,
+    pub ttft_s: Percentiles,
+    pub tbt_s: Percentiles,
+    pub tokens: u64,
+    pub wall_s: f64,
+    pub preemptions: u64,
+    pub swapped_blocks: u64,
+    pub decode_iters: u64,
+    pub throughput_tok_s: f64,
+}
+
+enum Alloc {
+    Fixed(FixedBlockAllocator),
+    Group(BlockGroupAllocator),
+}
+
+impl Alloc {
+    fn a(&mut self) -> &mut dyn KvAllocator {
+        match self {
+            Alloc::Fixed(x) => x,
+            Alloc::Group(x) => x,
+        }
+    }
+    fn ar(&self) -> &dyn KvAllocator {
+        match self {
+            Alloc::Fixed(x) => x,
+            Alloc::Group(x) => x,
+        }
+    }
+}
+
+pub struct RealEngine {
+    model: PjrtModel,
+    cfg: RealEngineConfig,
+    alloc: Alloc,
+    cpu_space: CpuSwapSpace,
+    /// CPU swap pool: slot-major, per slot `n_layers · 2 · block_layer`
+    /// f32 (all layers of one block, K then V per layer).
+    cpu_pool: Vec<f32>,
+    pool: Option<CopyPool>,
+    slots: Vec<Slot>,
+    preemptions: u64,
+    swapped_blocks: u64,
+    decode_iters: u64,
+}
+
+impl RealEngine {
+    pub fn new(model: PjrtModel, cfg: RealEngineConfig) -> Self {
+        // Block 0 is the model's reserved null block; allocator ids start
+        // at 1, so hand it num_blocks-1 usable blocks.
+        let usable = model.meta.num_blocks - 1;
+        let alloc = match cfg.granularity {
+            Granularity::FixedBlock => Alloc::Fixed(FixedBlockAllocator::new(usable)),
+            Granularity::BlockGroup { init_group_blocks } => {
+                Alloc::Group(BlockGroupAllocator::new(usable, init_group_blocks, 7))
+            }
+        };
+        let slot_elems = model.meta.n_layers * 2 * model.meta.block_layer_elements();
+        let cpu_pool = vec![0f32; cfg.cpu_slots * slot_elems];
+        let pool = (cfg.copy_workers > 0).then(|| CopyPool::new(cfg.copy_workers));
+        RealEngine {
+            model,
+            cpu_space: CpuSwapSpace::new(cfg.cpu_slots),
+            cpu_pool,
+            pool,
+            cfg,
+            alloc,
+            slots: Vec::new(),
+            preemptions: 0,
+            swapped_blocks: 0,
+            decode_iters: 0,
+        }
+    }
+
+    pub fn submit(&mut self, spec: RealRequestSpec) -> RequestId {
+        let id = self.slots.len() as RequestId;
+        self.slots.push(Slot {
+            id,
+            spec,
+            state: St::Queued,
+            context: 0,
+            prefilled: 0,
+            generated: Vec::new(),
+            started: Instant::now(),
+            first_token: None,
+            token_times: Vec::new(),
+        });
+        id
+    }
+
+    fn slot_elems(&self) -> usize {
+        self.model.meta.n_layers * 2 * self.model.meta.block_layer_elements()
+    }
+
+    /// Build the copy tasks for one (gpu block, cpu slot) pair.
+    fn block_copy_tasks(&mut self, gpu_block: usize, cpu_slot: usize, to_cpu: bool)
+        -> Vec<CopyTask>
+    {
+        let bl = self.model.meta.block_layer_elements();
+        let layers = self.model.meta.n_layers;
+        let slot_base = cpu_slot * self.slot_elems();
+        let mut tasks = Vec::with_capacity(layers * 2);
+        for l in 0..layers {
+            let goff = self.model.kv.offset(l, gpu_block);
+            let coff_k = slot_base + l * 2 * bl;
+            let coff_v = coff_k + bl;
+            let (ksrc, kdst, vsrc, vdst): (*const f32, *mut f32, *const f32, *mut f32) =
+                if to_cpu {
+                    (
+                        self.model.kv.k[goff..].as_ptr(),
+                        self.cpu_pool[coff_k..].as_mut_ptr(),
+                        self.model.kv.v[goff..].as_ptr(),
+                        self.cpu_pool[coff_v..].as_mut_ptr(),
+                    )
+                } else {
+                    (
+                        self.cpu_pool[coff_k..].as_ptr(),
+                        self.model.kv.k[goff..].as_mut_ptr(),
+                        self.cpu_pool[coff_v..].as_ptr(),
+                        self.model.kv.v[goff..].as_mut_ptr(),
+                    )
+                };
+            tasks.push(CopyTask { src: ksrc, dst: kdst, len: bl });
+            tasks.push(CopyTask { src: vsrc, dst: vdst, len: bl });
+        }
+        tasks
+    }
+
+    fn run_copies(&self, tasks: Vec<CopyTask>) {
+        match &self.pool {
+            Some(p) => p.submit(tasks).wait(),
+            None => CopyPool::run_inline(tasks),
+        }
+    }
+
+    /// Preempt the lowest-priority running slot: physically move its KV
+    /// to the CPU pool and free the GPU blocks.
+    fn preempt_one(&mut self, exclude: Option<usize>) -> bool {
+        let victim = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| s.state == St::Running && Some(*i) != exclude)
+            .min_by_key(|(_, s)| (s.spec.priority, std::cmp::Reverse(s.context)))
+            .map(|(i, _)| i);
+        let Some(vi) = victim else { return false };
+        let id = self.slots[vi].id;
+        let table = self.alloc.ar().table(id).to_vec();
+        let n = table.len();
+        let logicals: Vec<u32> = (0..n as u32).collect();
+        let Some(copies) =
+            self.cpu_space
+                .add_copies(id, &logicals, self.slots[vi].spec.priority)
+        else {
+            return false; // CPU swap space full — caller handles
+        };
+        let mut tasks = Vec::new();
+        for e in &copies {
+            tasks.extend(self.block_copy_tasks(
+                table[e.logical as usize] as usize,
+                e.slot as usize,
+                true,
+            ));
+        }
+        self.run_copies(tasks);
+        self.alloc.a().release(id);
+        self.cpu_space.set_required(id, true);
+        self.slots[vi].state = St::SwappedOut;
+        self.preemptions += 1;
+        self.swapped_blocks += n as u64;
+        true
+    }
+
+    /// Swap a request back in (physical CPU→GPU copies).
+    fn swap_in(&mut self, si: usize) -> bool {
+        let id = self.slots[si].id;
+        let n = self.slots[si].context.div_ceil(self.model.meta.block_size);
+        let Some(blocks) = self.alloc.a().allocate(id, n) else {
+            return false;
+        };
+        let entries: Vec<(u32, u32)> = self
+            .cpu_space
+            .copies_of(id)
+            .map(|c| c.entries.iter().map(|e| (e.logical, e.slot)).collect())
+            .unwrap_or_default();
+        let mut tasks = Vec::new();
+        for (logical, slot) in entries {
+            tasks.extend(self.block_copy_tasks(
+                blocks[logical as usize] as usize,
+                slot as usize,
+                false,
+            ));
+        }
+        self.run_copies(tasks);
+        self.cpu_space.drop_request(id);
+        self.slots[si].state = St::Running;
+        self.swapped_blocks += n as u64;
+        true
+    }
+
+    fn ensure_blocks(&mut self, si: usize, tokens_after: usize) -> bool {
+        let id = self.slots[si].id;
+        let have = self.alloc.ar().table(id).len();
+        let need = tokens_after
+            .div_ceil(self.model.meta.block_size)
+            .saturating_sub(have);
+        if need == 0 {
+            return true;
+        }
+        loop {
+            if self.alloc.a().allocate(id, need).is_some() {
+                return true;
+            }
+            if !self.preempt_one(Some(si)) {
+                return false;
+            }
+        }
+    }
+
+    fn block_table_i32(&self, id: RequestId) -> Vec<i32> {
+        self.alloc.ar().table(id).iter().map(|&b| b as i32).collect()
+    }
+
+    /// Serve everything to completion; returns wall-clock metrics.
+    pub fn run(mut self) -> Result<RealOutcome, RuntimeError> {
+        let t0 = Instant::now();
+        loop {
+            // Admission by priority: top max_batch among non-done.
+            let mut active: Vec<usize> = (0..self.slots.len())
+                .filter(|&i| self.slots[i].state != St::Done)
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            active.sort_by_key(|&i| {
+                (
+                    std::cmp::Reverse(self.slots[i].spec.priority),
+                    self.slots[i].id,
+                )
+            });
+            let admitted: Vec<usize> =
+                active.iter().copied().take(self.cfg.max_batch).collect();
+
+            // Demote running requests that fell out of the admitted set.
+            let over: Vec<usize> = (0..self.slots.len())
+                .filter(|&i| {
+                    self.slots[i].state == St::Running && !admitted.contains(&i)
+                })
+                .collect();
+            for _ in over {
+                self.preempt_one(None);
+            }
+
+            // Promote: swap in / start prefill.
+            for &i in &admitted {
+                match self.slots[i].state {
+                    St::SwappedOut => {
+                        if !self.swap_in(i) && !self.preempt_one(Some(i)) {
+                            // Cannot make room now; retry next round.
+                        }
+                    }
+                    St::Queued => {
+                        self.slots[i].state = St::Running;
+                        self.slots[i].started = Instant::now();
+                    }
+                    _ => {}
+                }
+            }
+
+            // Prefill phase: one chunk for the highest-priority request
+            // with prompt remaining (vLLM-style prefill priority).
+            let prefill_target = admitted.iter().copied().find(|&i| {
+                self.slots[i].state == St::Running
+                    && self.slots[i].prefilled < self.slots[i].spec.prompt.len()
+            });
+            if let Some(i) = prefill_target {
+                let chunk_sz = self.model.meta.prefill_chunk;
+                let (start, end, prompt_len) = {
+                    let s = &self.slots[i];
+                    let start = s.prefilled;
+                    (
+                        start,
+                        (start + chunk_sz).min(s.spec.prompt.len()),
+                        s.spec.prompt.len(),
+                    )
+                };
+                // The completing chunk also writes the first output token's
+                // KV on the next decode — reserve its block now.
+                let after = if end == prompt_len { end + 1 } else { end };
+                if !self.ensure_blocks(i, after) {
+                    continue; // couldn't fit; retry
+                }
+                let chunk: Vec<i32> = self.slots[i].spec.prompt[start..end].to_vec();
+                let bt = self.block_table_i32(self.slots[i].id);
+                let next =
+                    self.model
+                        .prefill(&chunk, start as i32, chunk.len() as i32, &bt)?;
+                let s = &mut self.slots[i];
+                s.prefilled = end;
+                s.context = end;
+                if end == prompt_len {
+                    // First token of the response.
+                    s.context += 1;
+                    s.generated.push(next);
+                    let dt = s.started.elapsed().as_secs_f64();
+                    s.first_token = Some(dt);
+                    s.token_times.push(dt);
+                    if s.generated.len() >= s.spec.max_new_tokens {
+                        s.state = St::Done;
+                        self.alloc.a().release(s.id);
+                    }
+                }
+                continue;
+            }
+
+            // Decode phase: batch every running, fully prefilled request.
+            let batch: Vec<usize> = admitted
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    self.slots[i].state == St::Running
+                        && self.slots[i].prefilled >= self.slots[i].spec.prompt.len()
+                        && !self.slots[i].generated.is_empty()
+                })
+                .take(self.model.max_batch())
+                .collect();
+            if batch.is_empty() {
+                // Nothing runnable (e.g., everything queued couldn't fit).
+                if !admitted.iter().any(|&i| self.slots[i].state == St::Running) {
+                    break;
+                }
+                continue;
+            }
+            // Grow each by one token slot.
+            let mut ok_batch = Vec::new();
+            for &i in &batch {
+                let after = self.slots[i].context + 1;
+                if self.ensure_blocks(i, after) {
+                    ok_batch.push(i);
+                }
+            }
+            if ok_batch.is_empty() {
+                continue;
+            }
+            let toks: Vec<i32> = ok_batch
+                .iter()
+                .map(|&i| *self.slots[i].generated.last().unwrap())
+                .collect();
+            let poss: Vec<i32> = ok_batch
+                .iter()
+                .map(|&i| (self.slots[i].context - 1) as i32)
+                .collect();
+            let bts: Vec<Vec<i32>> = ok_batch
+                .iter()
+                .map(|&i| self.block_table_i32(self.slots[i].id))
+                .collect();
+            let cls: Vec<i32> = ok_batch
+                .iter()
+                .map(|&i| self.slots[i].context as i32)
+                .collect();
+            let next = self.model.decode(&toks, &poss, &bts, &cls)?;
+            self.decode_iters += 1;
+            for (bi, &i) in ok_batch.iter().enumerate() {
+                let s = &mut self.slots[i];
+                s.context += 1;
+                s.generated.push(next[bi]);
+                s.token_times.push(s.started.elapsed().as_secs_f64());
+                if s.generated.len() >= s.spec.max_new_tokens {
+                    s.state = St::Done;
+                    self.alloc.a().release(s.id);
+                    self.cpu_space.drop_request(s.id);
+                }
+            }
+        }
+
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut ttft = Vec::new();
+        let mut tbt = Vec::new();
+        let mut tokens = 0u64;
+        let mut completions = Vec::new();
+        for s in &self.slots {
+            if let Some(f) = s.first_token {
+                ttft.push(f);
+            }
+            for w in s.token_times.windows(2) {
+                tbt.push(w[1] - w[0]);
+            }
+            tokens += s.generated.len() as u64;
+            completions.push((s.id, s.generated.clone()));
+        }
+        Ok(RealOutcome {
+            completions,
+            ttft_s: Percentiles::from(ttft),
+            tbt_s: Percentiles::from(tbt),
+            tokens,
+            wall_s,
+            preemptions: self.preemptions,
+            swapped_blocks: self.swapped_blocks,
+            decode_iters: self.decode_iters,
+            throughput_tok_s: tokens as f64 / wall_s,
+        })
+    }
+}

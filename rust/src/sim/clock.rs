@@ -1,0 +1,48 @@
+//! Virtual time: nanoseconds as u64, plus formatting helpers.
+
+/// Virtual-time instant / duration in nanoseconds.
+pub type Ns = u64;
+
+pub const US: Ns = 1_000;
+pub const MS: Ns = 1_000_000;
+pub const SEC: Ns = 1_000_000_000;
+
+/// Human-readable duration.
+pub fn fmt(ns: Ns) -> String {
+    if ns < US {
+        format!("{ns}ns")
+    } else if ns < MS {
+        format!("{:.2}µs", ns as f64 / US as f64)
+    } else if ns < SEC {
+        format!("{:.2}ms", ns as f64 / MS as f64)
+    } else {
+        format!("{:.3}s", ns as f64 / SEC as f64)
+    }
+}
+
+pub fn to_secs(ns: Ns) -> f64 {
+    ns as f64 / SEC as f64
+}
+
+pub fn to_ms(ns: Ns) -> f64 {
+    ns as f64 / MS as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt(500), "500ns");
+        assert_eq!(fmt(1_500), "1.50µs");
+        assert_eq!(fmt(2_500_000), "2.50ms");
+        assert_eq!(fmt(3 * SEC), "3.000s");
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(to_secs(2 * SEC), 2.0);
+        assert_eq!(to_ms(5 * MS), 5.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Virtual-time simulation substrate.
+//!
+//! The paper's testbed (A10/A100 GPU, PCIe 4.0, CUDA streams) is replaced
+//! by calibrated timing models advancing a nanosecond virtual clock (see
+//! DESIGN.md, hardware-substitution table). Everything here is
+//! *mechanism-free*: the FastSwitch algorithms in [`crate::block`] /
+//! [`crate::swap`] / [`crate::coordinator`] operate on real data
+//! structures; these models only answer "how long would that take".
+
+pub mod clock;
+pub mod dispatch;
+pub mod link;
+pub mod perfmodel;
+
+pub use clock::Ns;
+pub use dispatch::DispatchLanes;
+pub use link::PcieLink;
+pub use perfmodel::PerfModel;

@@ -1,0 +1,535 @@
+//! Multithreading Swap Manager (paper §3.2, Algorithm 1).
+//!
+//! Owns the dispatch lanes (GIL vs thread pool) and the PCIe link, tracks
+//! in-flight operations with an event pool, and implements:
+//!
+//! - **Adaptive swapping strategy** — per-iteration choice between
+//!   asynchronous swap-in (overlapped with inference) and synchronous
+//!   swap-in (stall once), driven by a profiler window of recent swap
+//!   metrics. The paper observes async is *not* always better: with many
+//!   short requests, holding GPU blocks for several iterations while a
+//!   swap-in completes costs more tokens than a short stall.
+//! - **Conflict detection** — newly allocated GPU blocks may still be the
+//!   source of an in-flight swap-out; writing them would corrupt the copy,
+//!   so the manager synchronizes on exactly the conflicting operations.
+//! - **Ordered dispatch** — the dispatch model inserts fine-grained
+//!   synchronizations every N calls so inference-stream copies can
+//!   preempt a long swap burst (modeled in [`crate::sim::dispatch`]).
+
+use std::collections::VecDeque;
+
+use super::op::{InflightOp, SwapOp};
+use crate::config::{DispatchMode, SwapCostConfig, SwapMode};
+use crate::memory::{BlockId, RequestId};
+use crate::sim::clock::Ns;
+use crate::sim::dispatch::DispatchLanes;
+use crate::sim::link::PcieLink;
+
+/// CUDA-event pool analogue: recycled completion-tracking handles.
+#[derive(Clone, Debug, Default)]
+pub struct EventPool {
+    free: Vec<u32>,
+    next: u32,
+    pub high_water: u32,
+}
+
+impl EventPool {
+    pub fn acquire(&mut self) -> u32 {
+        if let Some(e) = self.free.pop() {
+            e
+        } else {
+            let e = self.next;
+            self.next += 1;
+            self.high_water = self.high_water.max(self.next);
+            e
+        }
+    }
+
+    pub fn release(&mut self, e: u32) {
+        self.free.push(e);
+    }
+}
+
+/// Profiler sample over one recent swap (the paper's `r_info` queue).
+#[derive(Clone, Copy, Debug)]
+pub struct RecentSwap {
+    pub bytes: u64,
+    pub calls: u32,
+    pub duration: Ns,
+}
+
+/// Cumulative statistics (feeds Figs. 9/10/12 and Table 1).
+#[derive(Clone, Debug, Default)]
+pub struct SwapStats {
+    pub swap_out_ops: u64,
+    pub swap_in_ops: u64,
+    pub async_swap_ins: u64,
+    pub sync_swap_ins: u64,
+    pub total_calls: u64,
+    pub total_bytes: u64,
+    pub total_blocks: u64,
+    pub conflicts: u64,
+    pub conflict_wait_ns: Ns,
+    /// Main-thread time consumed by dispatch (the GIL tax).
+    pub main_thread_dispatch_ns: Ns,
+    /// Stall time from synchronous swap-ins / swap-outs.
+    pub sync_stall_ns: Ns,
+    /// Sum over ops of avg blocks/call (divide by op count for the
+    /// Fig. 11 granularity metric).
+    pub granularity_sum: f64,
+}
+
+impl SwapStats {
+    pub fn avg_granularity(&self) -> f64 {
+        let ops = (self.swap_out_ops + self.swap_in_ops) as f64;
+        if ops == 0.0 {
+            0.0
+        } else {
+            self.granularity_sum / ops
+        }
+    }
+}
+
+/// How a submitted swap-in is being executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapInDecision {
+    /// Stall the iteration until `done`.
+    Sync { done: Ns },
+    /// Overlapped; the request returns via `poll_completed`.
+    Async,
+}
+
+#[derive(Clone, Debug)]
+pub struct SwapManager {
+    pub dispatch: DispatchLanes,
+    pub link: PcieLink,
+    mode: SwapMode,
+    dispatch_mode: DispatchMode,
+    ongoing_in: Vec<(InflightOp, u32)>,
+    ongoing_out: Vec<(InflightOp, u32)>,
+    events: EventPool,
+    r_info: VecDeque<RecentSwap>,
+    r_info_cap: usize,
+    pub stats: SwapStats,
+    adaptive_overlap_threshold: f64,
+}
+
+impl SwapManager {
+    pub fn new(
+        mode: SwapMode,
+        dispatch_mode: DispatchMode,
+        cost: &SwapCostConfig,
+        link: PcieLink,
+    ) -> Self {
+        SwapManager {
+            dispatch: DispatchLanes::new(dispatch_mode, cost),
+            link,
+            mode,
+            dispatch_mode,
+            ongoing_in: Vec::new(),
+            ongoing_out: Vec::new(),
+            events: EventPool::default(),
+            r_info: VecDeque::new(),
+            r_info_cap: 32,
+            stats: SwapStats::default(),
+            adaptive_overlap_threshold: cost.adaptive_overlap_threshold,
+        }
+    }
+
+    pub fn mode(&self) -> SwapMode {
+        self.mode
+    }
+
+    /// Step 1 of Algorithm 1: harvest asynchronous swap-ins whose event
+    /// has fired; the engine returns them to the running queue.
+    pub fn poll_completed(&mut self, now: Ns) -> Vec<RequestId> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.ongoing_in.len() {
+            if self.ongoing_in[i].0.exec_done <= now {
+                let (inflight, ev) = self.ongoing_in.swap_remove(i);
+                self.events.release(ev);
+                done.push(inflight.op.req);
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    /// Drop drained swap-outs (their CPU copies are now complete) and
+    /// return the finished request ids (the engine commits reuse state).
+    pub fn reap_swap_outs(&mut self, now: Ns) -> Vec<RequestId> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.ongoing_out.len() {
+            if self.ongoing_out[i].0.exec_done <= now {
+                let (inflight, ev) = self.ongoing_out.swap_remove(i);
+                self.events.release(ev);
+                done.push(inflight.op.req);
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    // Perf note (§Perf L3): takes the op by value — the segment vector
+    // (up to blocks×layers entries at vLLM granularity) is moved into the
+    // inflight record instead of cloned.
+    fn run_op(&mut self, op: SwapOp, now: Ns) -> InflightOp {
+        let dir = op.dir;
+        let mut dispatch_done = now;
+        let mut exec_done = now;
+        for seg in &op.segments {
+            let d = self.dispatch.dispatch_one(now);
+            dispatch_done = dispatch_done.max(d);
+            let t = self.link.enqueue(dir, seg.bytes, d);
+            exec_done = exec_done.max(t.end);
+        }
+        self.stats.total_calls += op.n_calls() as u64;
+        self.stats.total_bytes += op.total_bytes();
+        self.stats.total_blocks += op.blocks as u64;
+        self.stats.granularity_sum += op.avg_granularity();
+        self.push_r_info(RecentSwap {
+            bytes: op.total_bytes(),
+            calls: op.n_calls() as u32,
+            duration: exec_done.saturating_sub(now),
+        });
+        InflightOp {
+            op,
+            dispatch_done,
+            exec_done,
+        }
+    }
+
+    fn push_r_info(&mut self, r: RecentSwap) {
+        if self.r_info.len() == self.r_info_cap {
+            self.r_info.pop_front();
+        }
+        self.r_info.push_back(r);
+    }
+
+    /// Step 3 of Algorithm 1: swap-out. Returns the main-thread stall
+    /// this costs the current iteration:
+    /// - GIL dispatch serializes on the main thread (dispatch time);
+    /// - `SwapMode::Sync` additionally waits for execution (vLLM
+    ///   semantics: the swap must finish before the iteration proceeds).
+    pub fn submit_swap_out(&mut self, op: SwapOp, now: Ns) -> Ns {
+        if op.segments.is_empty() {
+            return 0;
+        }
+        let inflight = self.run_op(op, now);
+        self.stats.swap_out_ops += 1;
+        let main_thread = match self.dispatch_mode {
+            DispatchMode::Gil => inflight.dispatch_done.saturating_sub(now),
+            DispatchMode::ThreadPool { .. } => 0,
+        };
+        self.stats.main_thread_dispatch_ns += main_thread;
+        let stall = match self.mode {
+            SwapMode::Sync => inflight.exec_done.saturating_sub(now),
+            _ => main_thread,
+        };
+        if matches!(self.mode, SwapMode::Sync) {
+            self.stats.sync_stall_ns += stall;
+            // Synchronous: nothing left in flight.
+        } else {
+            let ev = self.events.acquire();
+            self.ongoing_out.push((inflight, ev));
+            if stall > 0 {
+                self.stats.sync_stall_ns += stall;
+            }
+        }
+        stall
+    }
+
+    /// Step 4 of Algorithm 1: swap-in with the adaptive strategy.
+    /// `iter_ns_hint` — engine's estimate of the next iteration time;
+    /// `batch` / `avg_ctx_tokens` — running-batch profile.
+    pub fn submit_swap_in(
+        &mut self,
+        op: SwapOp,
+        now: Ns,
+        iter_ns_hint: Ns,
+        batch: usize,
+        avg_ctx_tokens: f64,
+    ) -> SwapInDecision {
+        if op.segments.is_empty() {
+            return SwapInDecision::Sync { done: now };
+        }
+        let inflight = self.run_op(op, now);
+        self.stats.swap_in_ops += 1;
+        let main_thread = match self.dispatch_mode {
+            DispatchMode::Gil => inflight.dispatch_done.saturating_sub(now),
+            DispatchMode::ThreadPool { .. } => 0,
+        };
+        self.stats.main_thread_dispatch_ns += main_thread;
+
+        let go_async = match self.mode {
+            SwapMode::Sync => false,
+            SwapMode::Async => true,
+            SwapMode::Adaptive => {
+                let dur = inflight.exec_done.saturating_sub(now);
+                // Tiny swaps: stalling once is cheaper than holding blocks
+                // idle for dur/iter iterations.
+                let worth_overlapping =
+                    dur as f64 > self.adaptive_overlap_threshold * iter_ns_hint as f64;
+                // Many short requests: token throughput dominates — prefer
+                // the short sync stall (paper §3.2).
+                let many_short = batch >= 24 && avg_ctx_tokens < 512.0;
+                worth_overlapping && !many_short
+            }
+        };
+        if go_async {
+            self.stats.async_swap_ins += 1;
+            let ev = self.events.acquire();
+            self.ongoing_in.push((inflight, ev));
+            SwapInDecision::Async
+        } else {
+            self.stats.sync_swap_ins += 1;
+            let stall = inflight.exec_done.saturating_sub(now);
+            self.stats.sync_stall_ns += stall;
+            SwapInDecision::Sync {
+                done: inflight.exec_done,
+            }
+        }
+    }
+
+    /// Step 3.1 of Algorithm 1: conflict detection. If any freshly
+    /// allocated GPU block is still the source/target of an in-flight op,
+    /// return the synchronization point (latest conflicting event).
+    pub fn detect_conflict(&mut self, new_blocks: &[BlockId], now: Ns) -> Option<Ns> {
+        let mut sync_until: Option<Ns> = None;
+        for (inflight, _) in self.ongoing_out.iter().chain(self.ongoing_in.iter()) {
+            if inflight.exec_done <= now {
+                continue;
+            }
+            if inflight
+                .op
+                .gpu_blocks
+                .iter()
+                .any(|b| new_blocks.contains(b))
+            {
+                sync_until = Some(sync_until.map_or(inflight.exec_done, |s: Ns| {
+                    s.max(inflight.exec_done)
+                }));
+            }
+        }
+        if let Some(s) = sync_until {
+            self.stats.conflicts += 1;
+            self.stats.conflict_wait_ns += s.saturating_sub(now);
+        }
+        sync_until
+    }
+
+    /// Earliest completion among all in-flight operations (both
+    /// directions) — the engine's idle fast-forward target.
+    pub fn next_event(&self) -> Option<Ns> {
+        self.ongoing_in
+            .iter()
+            .chain(self.ongoing_out.iter())
+            .map(|(i, _)| i.exec_done)
+            .min()
+    }
+
+    /// Earliest completion among in-flight swap-outs.
+    pub fn next_out_event(&self) -> Option<Ns> {
+        self.ongoing_out.iter().map(|(i, _)| i.exec_done).min()
+    }
+
+    /// Record a memory-pressure conflict: an allocation had to wait
+    /// `wait_ns` for an in-flight swap-out to release its source blocks
+    /// (paper §3.2 KV-cache conflict resolution).
+    pub fn record_conflict(&mut self, wait_ns: Ns) {
+        self.stats.conflicts += 1;
+        self.stats.conflict_wait_ns += wait_ns;
+    }
+
+    /// `SwapInStreamSynchronize()` — drain every ongoing swap-in.
+    pub fn sync_all_in(&self, now: Ns) -> Ns {
+        self.ongoing_in
+            .iter()
+            .map(|(i, _)| i.exec_done)
+            .fold(now, Ns::max)
+    }
+
+    /// If `req` has a swap-out still executing, when it completes. Used
+    /// by the engine to barrier a swap-in that would read the CPU copy
+    /// before it is fully written.
+    pub fn swap_out_inflight(&self, req: RequestId) -> Option<Ns> {
+        self.ongoing_out
+            .iter()
+            .find(|(i, _)| i.op.req == req)
+            .map(|(i, _)| i.exec_done)
+    }
+
+    pub fn ongoing_in_count(&self) -> usize {
+        self.ongoing_in.len()
+    }
+
+    pub fn ongoing_out_count(&self) -> usize {
+        self.ongoing_out.len()
+    }
+
+    pub fn event_high_water(&self) -> u32 {
+        self.events.high_water
+    }
+
+    pub fn recent(&self) -> impl Iterator<Item = &RecentSwap> {
+        self.r_info.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, Granularity, ModelSpec};
+    use crate::sim::link::Direction;
+    use crate::swap::engine::{BlockMove, SegmentBuilder};
+
+    fn op(dir: Direction, nblocks: u32, coalesced: bool) -> SwapOp {
+        let g = if coalesced {
+            Granularity::BlockGroup { init_group_blocks: 60 }
+        } else {
+            Granularity::FixedBlock
+        };
+        let b = SegmentBuilder::new(ModelSpec::llama8b(), g);
+        let moves: Vec<BlockMove> = (0..nblocks)
+            .map(|i| BlockMove {
+                logical: i,
+                gpu: 10 + i,
+                cpu: 100 + i,
+            })
+            .collect();
+        b.build(1, dir, &moves)
+    }
+
+    fn mgr(mode: SwapMode, dm: DispatchMode) -> SwapManager {
+        SwapManager::new(
+            mode,
+            dm,
+            &SwapCostConfig::default(),
+            PcieLink::new(GpuSpec::a10()),
+        )
+    }
+
+    #[test]
+    fn sync_swap_out_stalls_full_duration() {
+        let mut m = mgr(SwapMode::Sync, DispatchMode::Gil);
+        let stall = m.submit_swap_out(op(Direction::Out, 20, false), 0);
+        assert!(stall > 0);
+        assert_eq!(m.ongoing_out_count(), 0);
+        assert_eq!(m.stats.swap_out_ops, 1);
+    }
+
+    #[test]
+    fn async_swap_out_with_threadpool_is_free_for_main_thread() {
+        let mut m = mgr(
+            SwapMode::Adaptive,
+            DispatchMode::ThreadPool { workers: 4 },
+        );
+        let stall = m.submit_swap_out(op(Direction::Out, 20, true), 0);
+        assert_eq!(stall, 0);
+        assert_eq!(m.ongoing_out_count(), 1);
+        assert_eq!(m.stats.main_thread_dispatch_ns, 0);
+    }
+
+    #[test]
+    fn coalesced_op_finishes_much_earlier() {
+        let mut ma = mgr(SwapMode::Sync, DispatchMode::Gil);
+        let mut mb = mgr(SwapMode::Sync, DispatchMode::Gil);
+        let sa = ma.submit_swap_out(op(Direction::Out, 32, false), 0);
+        let sb = mb.submit_swap_out(op(Direction::Out, 32, true), 0);
+        assert!(
+            (sb as f64) < sa as f64 / 4.0,
+            "coalesced {sb} vs fixed {sa}"
+        );
+    }
+
+    #[test]
+    fn adaptive_small_swap_goes_sync() {
+        let mut m = mgr(
+            SwapMode::Adaptive,
+            DispatchMode::ThreadPool { workers: 4 },
+        );
+        // 1-block swap vs a 30 ms iteration hint: not worth overlapping.
+        let d = m.submit_swap_in(op(Direction::In, 1, true), 0, 30_000_000, 8, 2000.0);
+        assert!(matches!(d, SwapInDecision::Sync { .. }));
+        assert_eq!(m.stats.sync_swap_ins, 1);
+    }
+
+    #[test]
+    fn adaptive_large_swap_goes_async() {
+        let mut m = mgr(
+            SwapMode::Adaptive,
+            DispatchMode::ThreadPool { workers: 4 },
+        );
+        let d = m.submit_swap_in(op(Direction::In, 200, true), 0, 5_000_000, 8, 2000.0);
+        assert_eq!(d, SwapInDecision::Async);
+        assert_eq!(m.ongoing_in_count(), 1);
+    }
+
+    #[test]
+    fn adaptive_many_short_requests_prefers_sync() {
+        let mut m = mgr(
+            SwapMode::Adaptive,
+            DispatchMode::ThreadPool { workers: 4 },
+        );
+        let d = m.submit_swap_in(op(Direction::In, 200, true), 0, 5_000_000, 32, 100.0);
+        assert!(matches!(d, SwapInDecision::Sync { .. }));
+    }
+
+    #[test]
+    fn poll_completed_returns_after_event_fires() {
+        let mut m = mgr(SwapMode::Async, DispatchMode::ThreadPool { workers: 4 });
+        m.submit_swap_in(op(Direction::In, 50, true), 0, 1_000_000, 4, 4000.0);
+        assert!(m.poll_completed(1).is_empty());
+        let done_at = m.sync_all_in(0);
+        let done = m.poll_completed(done_at);
+        assert_eq!(done, vec![1]);
+        assert_eq!(m.ongoing_in_count(), 0);
+    }
+
+    #[test]
+    fn conflict_detected_on_overlapping_blocks() {
+        let mut m = mgr(SwapMode::Adaptive, DispatchMode::ThreadPool { workers: 4 });
+        m.submit_swap_out(op(Direction::Out, 20, true), 0); // blocks 10..30
+        let sync = m.detect_conflict(&[12, 99], 0);
+        assert!(sync.is_some());
+        assert_eq!(m.stats.conflicts, 1);
+        let none = m.detect_conflict(&[99, 200], 0);
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn conflict_ignored_once_drained() {
+        let mut m = mgr(SwapMode::Adaptive, DispatchMode::ThreadPool { workers: 4 });
+        m.submit_swap_out(op(Direction::Out, 20, true), 0);
+        let end = m.ongoing_out[0].0.exec_done;
+        assert!(m.detect_conflict(&[12], end).is_none());
+    }
+
+    #[test]
+    fn event_pool_recycles() {
+        let mut p = EventPool::default();
+        let a = p.acquire();
+        let b = p.acquire();
+        p.release(a);
+        let c = p.acquire();
+        assert_eq!(c, a);
+        assert_ne!(b, c);
+        assert_eq!(p.high_water, 2);
+    }
+
+    #[test]
+    fn in_and_out_directions_overlap() {
+        // Full-duplex: an outgoing op must not delay an incoming one.
+        let mut m = mgr(SwapMode::Async, DispatchMode::ThreadPool { workers: 8 });
+        m.submit_swap_out(op(Direction::Out, 100, true), 0);
+        let before = m.sync_all_in(0);
+        m.submit_swap_in(op(Direction::In, 100, true), 0, 1_000_000, 4, 4000.0);
+        let after = m.sync_all_in(0);
+        let out_done = m.ongoing_out[0].0.exec_done;
+        assert!(after < out_done + (out_done - before) / 4, "directions serialized?");
+    }
+}

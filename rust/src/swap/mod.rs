@@ -1,0 +1,20 @@
+//! Context-switch machinery: swap operations, segment coalescing, and the
+//! Multithreading Swap Manager (paper §3.2).
+//!
+//! - [`op`] — swap operations and their DMA segment decomposition.
+//! - [`engine`] — builds segments from block tables + CPU slot maps,
+//!   honoring the allocator's granularity (the paper's Fig. 3 contrast).
+//! - [`manager`] — Algorithm 1: adaptive async/sync swap-in, event pool,
+//!   conflict detection, ordered dispatch.
+//! - [`pool`] — a real worker thread pool used by the real-execution
+//!   backend for genuinely parallel copy dispatch (the C++-offload
+//!   analogue).
+
+pub mod engine;
+pub mod manager;
+pub mod op;
+pub mod pool;
+
+pub use engine::SegmentBuilder;
+pub use manager::{SwapManager, SwapStats};
+pub use op::{Segment, SwapOp};

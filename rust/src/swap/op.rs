@@ -1,0 +1,107 @@
+//! Swap operations and DMA segments.
+
+use crate::memory::{BlockId, RequestId, SlotId};
+use crate::sim::clock::Ns;
+use crate::sim::link::Direction;
+
+/// One DMA copy call (`cudaMemcpyAsync` equivalent): a physically
+/// contiguous span on both ends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    /// First GPU block of the span.
+    pub gpu_start: BlockId,
+    /// First CPU slot of the span.
+    pub cpu_start: SlotId,
+    /// Blocks covered.
+    pub blocks: u32,
+    /// Layer index (each layer's cache is a separate tensor, so a block
+    /// run yields one segment per layer).
+    pub layer: u32,
+    /// Bytes moved by this call.
+    pub bytes: u64,
+}
+
+/// A request's context switch in one direction.
+#[derive(Clone, Debug)]
+pub struct SwapOp {
+    pub req: RequestId,
+    pub dir: Direction,
+    pub segments: Vec<Segment>,
+    /// Distinct logical blocks moved (all layers counted once).
+    pub blocks: u32,
+    /// GPU blocks touched — used for conflict detection against newly
+    /// allocated blocks (paper §3.2).
+    pub gpu_blocks: Vec<BlockId>,
+}
+
+impl SwapOp {
+    pub fn total_bytes(&self) -> u64 {
+        self.segments.iter().map(|s| s.bytes).sum()
+    }
+
+    pub fn n_calls(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Average granularity in blocks per call (the paper's Fig. 11
+    /// metric; ~1 for vLLM, ~20 for FastSwitch on the A10 testbed).
+    pub fn avg_granularity(&self) -> f64 {
+        if self.segments.is_empty() {
+            return 0.0;
+        }
+        self.segments.iter().map(|s| s.blocks as f64).sum::<f64>()
+            / self.segments.len() as f64
+    }
+}
+
+/// An in-flight asynchronous operation tracked by the swap manager.
+#[derive(Clone, Debug)]
+pub struct InflightOp {
+    pub op: SwapOp,
+    /// When the last segment's dispatch completes.
+    pub dispatch_done: Ns,
+    /// When the last segment's DMA execution completes (the CUDA event
+    /// the manager polls).
+    pub exec_done: Ns,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(blocks: u32, bytes: u64) -> Segment {
+        Segment {
+            gpu_start: 1,
+            cpu_start: 0,
+            blocks,
+            layer: 0,
+            bytes,
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let op = SwapOp {
+            req: 1,
+            dir: Direction::Out,
+            segments: vec![seg(4, 400), seg(2, 200)],
+            blocks: 6,
+            gpu_blocks: vec![1, 2, 3, 4, 7, 8],
+        };
+        assert_eq!(op.total_bytes(), 600);
+        assert_eq!(op.n_calls(), 2);
+        assert!((op.avg_granularity() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_granularity_zero() {
+        let op = SwapOp {
+            req: 1,
+            dir: Direction::In,
+            segments: vec![],
+            blocks: 0,
+            gpu_blocks: vec![],
+        };
+        assert_eq!(op.avg_granularity(), 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained utilities (PRNG, statistics, CLI parsing).
+//!
+//! This repository builds fully offline; only the `xla` crate's dependency
+//! closure is available, so the usual ecosystem crates (rand, serde, clap,
+//! criterion, proptest) are replaced by the minimal implementations here.
+
+pub mod bench;
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Percentiles;

@@ -1,0 +1,57 @@
+//! Property-testing helper (proptest is unavailable offline).
+//!
+//! `for_cases(seed, n, |rng| ...)` runs a closure over `n` independently
+//! seeded PRNGs; on failure it reports the failing case seed so the case
+//! can be replayed deterministically with `replay(seed, ...)`. Shrinking is
+//! replaced by deterministic replay — good enough for allocator/scheduler
+//! invariant testing, where cases are cheap and seeds printable.
+
+use super::rng::Rng;
+
+/// Run `n` randomized cases. Panics (propagating the inner panic) with the
+/// failing case's seed in the message.
+pub fn for_cases<F: Fn(&mut Rng)>(base_seed: u64, n: u64, f: F) {
+    for i in 0..n {
+        let case_seed = base_seed
+            .wrapping_mul(0x0100_0000_01B3)
+            .wrapping_add(i);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property case {i}/{n} FAILED — replay with seed {case_seed:#x}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn replay<F: Fn(&mut Rng)>(case_seed: u64, f: F) {
+    let mut rng = Rng::new(case_seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        for_cases(1, 25, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_failure() {
+        for_cases(2, 50, |rng| {
+            assert!(rng.f64() < 0.9, "intentional failure");
+        });
+    }
+}

@@ -1,0 +1,218 @@
+//! Percentile / summary statistics for latency metrics.
+//!
+//! The paper reports P50/P95/P99/P99.9 TTFT and TBT; this module provides
+//! exact (sort-based) percentiles over collected samples plus simple
+//! histogram utilities for the distribution figures (Fig. 4).
+
+/// Exact percentile summary over a sample set.
+#[derive(Clone, Debug, Default)]
+pub struct Percentiles {
+    sorted: Vec<f64>,
+}
+
+impl Percentiles {
+    pub fn from(mut samples: Vec<f64>) -> Self {
+        samples.retain(|x| x.is_finite());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Percentiles { sorted: samples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Linear-interpolated percentile, `p` in [0, 100].
+    pub fn p(&self, p: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.sorted.len();
+        if n == 1 {
+            return self.sorted[0];
+        }
+        let rank = (p / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.sorted[lo] * (1.0 - frac) + self.sorted[hi.min(n - 1)] * frac
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        *self.sorted.last().unwrap_or(&f64::NAN)
+    }
+
+    pub fn min(&self) -> f64 {
+        *self.sorted.first().unwrap_or(&f64::NAN)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sorted.iter().sum()
+    }
+}
+
+/// Fixed-bin histogram (used for the Fig. 4 workload distributions).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.counts.len();
+            let bin = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.counts[bin.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// (bin center, fraction) pairs.
+    pub fn normalized(&self) -> Vec<(f64, f64)> {
+        let total = self.total().max(1) as f64;
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (self.lo + (i as f64 + 0.5) * w, c as f64 / total))
+            .collect()
+    }
+}
+
+/// Welford online mean/variance — used by the swap manager's profiler.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basic() {
+        let p = Percentiles::from((1..=100).map(|x| x as f64).collect());
+        assert!((p.p(50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(p.p(0.0), 1.0);
+        assert_eq!(p.p(100.0), 100.0);
+        assert!((p.p(99.0) - 99.01).abs() < 0.1);
+    }
+
+    #[test]
+    fn percentile_single() {
+        let p = Percentiles::from(vec![7.0]);
+        assert_eq!(p.p(50.0), 7.0);
+        assert_eq!(p.p(99.9), 7.0);
+    }
+
+    #[test]
+    fn percentile_empty_is_nan() {
+        let p = Percentiles::from(vec![]);
+        assert!(p.p(50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let p = Percentiles::from(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(p.min(), 1.0);
+        assert_eq!(p.max(), 5.0);
+        assert_eq!(p.p(50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_filters_nan() {
+        let p = Percentiles::from(vec![1.0, f64::NAN, 2.0]);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        assert!(h.counts.iter().all(|&c| c == 1));
+        h.add(-1.0);
+        h.add(42.0);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.add(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+}

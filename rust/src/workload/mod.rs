@@ -1,0 +1,8 @@
+//! Workload generation: ShareGPT-like multi-turn conversations with
+//! Poisson arrivals (paper §4 "System and Workload Configuration").
+
+pub mod sharegpt;
+pub mod trace;
+
+pub use sharegpt::{Conversation, ShareGptConfig, Turn};
+pub use trace::{ArrivalTrace, TraceEntry};

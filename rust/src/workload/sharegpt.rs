@@ -1,0 +1,206 @@
+//! Statistical clone of the Multi-Round ShareGPT dataset (paper Fig. 4).
+//!
+//! The paper's workload facts: ~100 K conversations, 78 % multi-turn,
+//! average 5.5 turns per conversation; prompt/response lengths follow the
+//! familiar heavy-tailed ShareGPT distribution (most turns are a few
+//! hundred tokens; responses longer than prompts on average). We model:
+//!
+//! - turns per conversation: shifted geometric calibrated to
+//!   P(multi-turn) ≈ 0.78 and mean ≈ 5.5;
+//! - prompt length: log-normal, median ≈ 70 tokens (first turns longer —
+//!   they carry instructions/context);
+//! - response length: log-normal, median ≈ 200 tokens;
+//! - think time between turns: exponential (user reading/typing).
+//!
+//! All draws are seeded — a given (config, seed) pair reproduces the same
+//! workload on every run.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Turn {
+    pub prompt_tokens: u32,
+    pub response_tokens: u32,
+    /// Gap between the previous turn's completion and this turn's
+    /// arrival, seconds.
+    pub think_time_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Conversation {
+    pub id: u64,
+    pub turns: Vec<Turn>,
+}
+
+impl Conversation {
+    pub fn total_tokens(&self) -> u64 {
+        self.turns
+            .iter()
+            .map(|t| (t.prompt_tokens + t.response_tokens) as u64)
+            .sum()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ShareGptConfig {
+    /// Mean turns per conversation (paper: 5.5).
+    pub mean_turns: f64,
+    /// First-turn prompt log-normal (mu, sigma) in log-tokens.
+    pub first_prompt_mu: f64,
+    pub first_prompt_sigma: f64,
+    /// Follow-up prompt log-normal.
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    /// Response log-normal.
+    pub response_mu: f64,
+    pub response_sigma: f64,
+    /// Mean think time between turns, seconds.
+    pub mean_think_s: f64,
+    /// Hard caps (tokens) to fit the serving context window.
+    pub max_prompt: u32,
+    pub max_response: u32,
+}
+
+impl Default for ShareGptConfig {
+    fn default() -> Self {
+        ShareGptConfig {
+            mean_turns: 5.5,
+            first_prompt_mu: 5.1,      // median ≈ 164 tokens
+            first_prompt_sigma: 0.9,
+            prompt_mu: 4.2,            // median ≈ 67 tokens
+            prompt_sigma: 0.8,
+            response_mu: 5.3,          // median ≈ 200 tokens
+            response_sigma: 0.7,
+            mean_think_s: 20.0,
+            max_prompt: 1536,
+            max_response: 1024,
+        }
+    }
+}
+
+/// Generate `n` conversations.
+pub fn generate(cfg: &ShareGptConfig, n: usize, seed: u64) -> Vec<Conversation> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| {
+            // Shifted geometric: support {1, 2, ...}, mean = 1/p.
+            let p = 1.0 / cfg.mean_turns;
+            let n_turns = rng.geometric(p) as usize;
+            let turns = (0..n_turns)
+                .map(|t| {
+                    let (mu, sigma) = if t == 0 {
+                        (cfg.first_prompt_mu, cfg.first_prompt_sigma)
+                    } else {
+                        (cfg.prompt_mu, cfg.prompt_sigma)
+                    };
+                    let prompt =
+                        (rng.lognormal(mu, sigma).round() as u32).clamp(4, cfg.max_prompt);
+                    let response = (rng.lognormal(cfg.response_mu, cfg.response_sigma)
+                        .round() as u32)
+                        .clamp(4, cfg.max_response);
+                    let think = if t == 0 {
+                        0.0
+                    } else {
+                        rng.exp(1.0 / cfg.mean_think_s)
+                    };
+                    Turn {
+                        prompt_tokens: prompt,
+                        response_tokens: response,
+                        think_time_s: think,
+                    }
+                })
+                .collect();
+            Conversation { id: id as u64, turns }
+        })
+        .collect()
+}
+
+/// Summary statistics (regenerates the paper's Fig. 4 panels).
+#[derive(Debug, Clone)]
+pub struct WorkloadStats {
+    pub n_conversations: usize,
+    pub mean_turns: f64,
+    pub multi_turn_fraction: f64,
+    pub mean_prompt: f64,
+    pub mean_response: f64,
+    pub p95_conv_tokens: f64,
+}
+
+pub fn stats(convs: &[Conversation]) -> WorkloadStats {
+    let n = convs.len();
+    let total_turns: usize = convs.iter().map(|c| c.turns.len()).sum();
+    let multi = convs.iter().filter(|c| c.turns.len() > 1).count();
+    let mut prompts = 0u64;
+    let mut resps = 0u64;
+    for c in convs {
+        for t in &c.turns {
+            prompts += t.prompt_tokens as u64;
+            resps += t.response_tokens as u64;
+        }
+    }
+    let conv_tokens =
+        crate::util::stats::Percentiles::from(convs.iter().map(|c| c.total_tokens() as f64).collect());
+    WorkloadStats {
+        n_conversations: n,
+        mean_turns: total_turns as f64 / n as f64,
+        multi_turn_fraction: multi as f64 / n as f64,
+        mean_prompt: prompts as f64 / total_turns as f64,
+        mean_response: resps as f64 / total_turns as f64,
+        p95_conv_tokens: conv_tokens.p(95.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_fig4_statistics() {
+        let convs = generate(&ShareGptConfig::default(), 4000, 1);
+        let s = stats(&convs);
+        // Paper: avg 5.5 turns, 78 % multi-turn.
+        assert!((s.mean_turns - 5.5).abs() < 0.4, "{}", s.mean_turns);
+        assert!(
+            (s.multi_turn_fraction - 0.78).abs() < 0.06,
+            "{}",
+            s.multi_turn_fraction
+        );
+        assert!(s.mean_response > s.mean_prompt * 0.9);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&ShareGptConfig::default(), 50, 7);
+        let b = generate(&ShareGptConfig::default(), 50, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.turns.len(), y.turns.len());
+            for (t, u) in x.turns.iter().zip(&y.turns) {
+                assert_eq!(t.prompt_tokens, u.prompt_tokens);
+                assert_eq!(t.response_tokens, u.response_tokens);
+            }
+        }
+        let c = generate(&ShareGptConfig::default(), 50, 8);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.turns.len() != y.turns.len()));
+    }
+
+    #[test]
+    fn lengths_respect_caps() {
+        let cfg = ShareGptConfig::default();
+        for c in generate(&cfg, 500, 3) {
+            for t in &c.turns {
+                assert!(t.prompt_tokens >= 4 && t.prompt_tokens <= cfg.max_prompt);
+                assert!(t.response_tokens >= 4 && t.response_tokens <= cfg.max_response);
+            }
+        }
+    }
+
+    #[test]
+    fn first_turn_has_no_think_time() {
+        for c in generate(&ShareGptConfig::default(), 100, 4) {
+            assert_eq!(c.turns[0].think_time_s, 0.0);
+            for t in &c.turns[1..] {
+                assert!(t.think_time_s >= 0.0);
+            }
+        }
+    }
+}

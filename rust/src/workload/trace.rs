@@ -1,0 +1,76 @@
+//! Arrival traces: Poisson request arrivals over a conversation set
+//! (paper §4: 1 000 conversations, Poisson, average 1 req/s).
+
+use super::sharegpt::Conversation;
+use crate::sim::clock::{Ns, SEC};
+use crate::util::rng::Rng;
+
+/// One conversation's first-turn arrival.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEntry {
+    pub conversation: u64,
+    pub arrival: Ns,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArrivalTrace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl ArrivalTrace {
+    /// Poisson arrivals at `rate` conversations/second.
+    pub fn poisson(convs: &[Conversation], rate: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xA221);
+        let mut t = 0.0f64;
+        let entries = convs
+            .iter()
+            .map(|c| {
+                t += rng.exp(rate);
+                TraceEntry {
+                    conversation: c.id,
+                    arrival: (t * SEC as f64) as Ns,
+                }
+            })
+            .collect();
+        ArrivalTrace { entries }
+    }
+
+    pub fn span(&self) -> Ns {
+        self.entries.last().map(|e| e.arrival).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::sharegpt::{generate, ShareGptConfig};
+
+    #[test]
+    fn poisson_rate_approximately_honored() {
+        let convs = generate(&ShareGptConfig::default(), 2000, 1);
+        let tr = ArrivalTrace::poisson(&convs, 1.0, 2);
+        let span_s = tr.span() as f64 / SEC as f64;
+        let rate = 2000.0 / span_s;
+        assert!((rate - 1.0).abs() < 0.1, "rate {rate}");
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        let convs = generate(&ShareGptConfig::default(), 100, 1);
+        let tr = ArrivalTrace::poisson(&convs, 2.0, 3);
+        for w in tr.entries.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let convs = generate(&ShareGptConfig::default(), 100, 1);
+        let a = ArrivalTrace::poisson(&convs, 1.0, 9);
+        let b = ArrivalTrace::poisson(&convs, 1.0, 9);
+        assert_eq!(a.entries.len(), b.entries.len());
+        for (x, y) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+}

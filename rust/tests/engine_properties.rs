@@ -1,0 +1,351 @@
+//! Property-based tests on coordinator invariants: allocator conservation,
+//! routing/admission sanity, reuse-state consistency, and whole-engine
+//! conservation laws under randomized workloads and policies.
+//!
+//! Uses the in-tree property harness (`util::proptest`): each failing case
+//! prints a replayable seed.
+
+use fastswitch::block::{buddy::BlockGroupAllocator, fixed::FixedBlockAllocator};
+use fastswitch::block::{runs_of_table, KvAllocator};
+use fastswitch::config::{EngineConfig, GpuSpec, Preset, SwapMode};
+use fastswitch::coordinator::engine::ServingEngine;
+use fastswitch::coordinator::priority::Pattern;
+use fastswitch::coordinator::request::ReqState;
+use fastswitch::coordinator::scheduler::{schedule, Candidate};
+use fastswitch::memory::CpuSwapSpace;
+use fastswitch::util::proptest::for_cases;
+use fastswitch::util::rng::Rng;
+use fastswitch::workload::sharegpt::{generate, ShareGptConfig};
+use fastswitch::workload::ArrivalTrace;
+
+// ---------------------------------------------------------------------
+// Allocator invariants
+// ---------------------------------------------------------------------
+
+/// Churn both allocators with an identical random trace; after every
+/// operation: no double allocation (checked inside GpuBlockSpace), block
+/// conservation, and table/ownership agreement.
+#[test]
+fn prop_allocators_conserve_blocks_under_churn() {
+    for_cases(0xA110C, 25, |rng| {
+        let n_blocks = rng.usize(32, 512);
+        let init = rng.usize(4, 80);
+        let mut allocs: Vec<Box<dyn KvAllocator>> = vec![
+            Box::new(FixedBlockAllocator::new(n_blocks)),
+            Box::new(BlockGroupAllocator::new(n_blocks, init, rng.next_u64())),
+        ];
+        for a in allocs.iter_mut() {
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            let mut rng2 = Rng::new(rng.next_u64());
+            for _ in 0..300 {
+                if !live.is_empty() && rng2.chance(0.4) {
+                    let idx = rng2.usize(0, live.len());
+                    let id = live.swap_remove(idx);
+                    let table = a.release(id);
+                    // Released tables hold unique blocks.
+                    let mut t = table.clone();
+                    t.sort();
+                    t.dedup();
+                    assert_eq!(t.len(), table.len(), "duplicate block in table");
+                } else {
+                    let want = rng2.usize(1, 24);
+                    if let Some(got) = a.allocate(next_id, want) {
+                        assert_eq!(got.len(), want);
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                a.space().check_invariants();
+            }
+            assert!(a.available_blocks() <= n_blocks);
+        }
+    });
+}
+
+/// Tables of live requests never overlap (no block belongs to two
+/// requests), and runs_of_table() partitions each table exactly.
+#[test]
+fn prop_tables_disjoint_and_runs_partition() {
+    for_cases(0xB10CC, 20, |rng| {
+        let n_blocks = rng.usize(64, 256);
+        let mut a = BlockGroupAllocator::new(n_blocks, rng.usize(8, 64), rng.next_u64());
+        let mut live: Vec<u64> = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..200 {
+            if !live.is_empty() && rng.chance(0.4) {
+                let i = rng.usize(0, live.len());
+                a.release(live.swap_remove(i));
+            } else if a.allocate(next, rng.usize(1, 32)).is_some() {
+                live.push(next);
+                next += 1;
+            }
+        }
+        let mut seen = std::collections::HashSet::new();
+        for &id in &live {
+            let table = a.table(id);
+            for &b in table {
+                assert!(seen.insert(b), "block {b} in two tables");
+            }
+            let runs = runs_of_table(table);
+            let total: u32 = runs.iter().map(|r| r.len).sum();
+            assert_eq!(total as usize, table.len(), "runs must partition");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// CPU swap space invariants
+// ---------------------------------------------------------------------
+
+/// Random add/contaminate/drop cycles never violate slot accounting, and
+/// contamination only ever removes backups of strictly lower priority.
+#[test]
+fn prop_cpu_space_accounting() {
+    for_cases(0xC9A5E, 25, |rng| {
+        let cap = rng.usize(16, 128);
+        let mut s = CpuSwapSpace::new(cap);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..200 {
+            match rng.usize(0, 4) {
+                0 => {
+                    let n = rng.usize(1, 9);
+                    let logicals: Vec<u32> = (0..n as u32).collect();
+                    let prio = rng.range(0, 8) as i64;
+                    if s.add_copies(next, &logicals, prio).is_some() {
+                        if rng.chance(0.5) {
+                            s.set_required(next, true);
+                        }
+                        live.push(next);
+                    }
+                    next += 1;
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = rng.usize(0, live.len());
+                        s.drop_request(live.swap_remove(i));
+                    }
+                }
+                2 => {
+                    let req_prio = rng.range(0, 10) as i64;
+                    let before: Vec<(u64, usize)> = live
+                        .iter()
+                        .map(|&r| (r, s.valid_logical(r).len()))
+                        .collect();
+                    s.contaminate_backups(rng.usize(1, cap), req_prio);
+                    for (r, n_before) in before {
+                        let c = s.copies_of(r).unwrap();
+                        if c.required || c.priority >= req_prio {
+                            assert_eq!(
+                                s.valid_logical(r).len(),
+                                n_before,
+                                "protected copy was contaminated"
+                            );
+                        }
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let r = live[rng.usize(0, live.len())];
+                        s.set_required(r, rng.chance(0.5));
+                    }
+                }
+            }
+            s.check_invariants();
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Scheduler invariants
+// ---------------------------------------------------------------------
+
+/// Admission respects capacity and batch bounds; no request is both
+/// admitted and preempted; preempted requests were on GPU.
+#[test]
+fn prop_scheduler_admission_sound() {
+    for_cases(0x5CED, 120, |rng| {
+        let n = rng.usize(1, 64);
+        let cands: Vec<Candidate> = (0..n as u64)
+            .map(|id| {
+                let state = match rng.usize(0, 4) {
+                    0 => ReqState::Running,
+                    1 => ReqState::Prefilling,
+                    2 => ReqState::SwappedOut,
+                    _ => ReqState::Queued,
+                };
+                let held = if matches!(state, ReqState::Running | ReqState::Prefilling) {
+                    rng.usize(1, 80)
+                } else {
+                    0
+                };
+                Candidate {
+                    id,
+                    priority: rng.range(0, 8) as i64,
+                    turn_arrival: rng.range(0, 1000),
+                    state,
+                    blocks_held: held,
+                    blocks_needed: rng.usize(0, 40),
+                }
+            })
+            .collect();
+        let total = rng.usize(40, 400);
+        let max_batch = rng.usize(1, 32);
+        let s = schedule(&cands, total, max_batch);
+
+        assert!(s.admitted() <= max_batch);
+        let admitted: std::collections::HashSet<u64> = s
+            .keep
+            .iter()
+            .chain(&s.promote)
+            .chain(&s.start)
+            .copied()
+            .collect();
+        for id in &s.preempt {
+            assert!(!admitted.contains(id), "admitted AND preempted");
+            let c = cands.iter().find(|c| c.id == *id).unwrap();
+            assert!(
+                matches!(c.state, ReqState::Running | ReqState::Prefilling),
+                "preempted an off-GPU request"
+            );
+        }
+        // Capacity: sum of held+needed over admitted <= total.
+        let used: usize = cands
+            .iter()
+            .filter(|c| admitted.contains(&c.id))
+            .map(|c| c.blocks_held + c.blocks_needed)
+            .sum();
+        assert!(used <= total, "over-committed: {used} > {total}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Whole-engine conservation under randomized configs
+// ---------------------------------------------------------------------
+
+fn tiny_preset(rng: &mut Rng) -> Preset {
+    let model = fastswitch::config::ModelSpec::llama8b();
+    let blocks = rng.usize(64, 200);
+    let mut gpu = GpuSpec::a10();
+    gpu.hbm_bytes = ((model.weight_bytes()
+        + blocks as u64 * model.block_bytes()) as f64
+        / gpu.mem_util) as u64
+        + (1 << 20);
+    Preset {
+        model,
+        gpu,
+        cpu_swap_bytes: rng.range(64, 4096) * 4 * 1024 * 1024,
+    }
+}
+
+/// Any policy mix on any tiny workload: the engine terminates, serves
+/// every conversation, never loses a token, and passes the exit
+/// occupancy invariants.
+#[test]
+fn prop_engine_conserves_requests_and_memory() {
+    for_cases(0xE96E, 12, |rng| {
+        let mut cfg = match rng.usize(0, 4) {
+            0 => EngineConfig::vllm_baseline(),
+            1 => EngineConfig::with_dbg(),
+            2 => EngineConfig::with_dbg_reuse(),
+            _ => EngineConfig::fastswitch(),
+        };
+        cfg.scheduler.priority_update_freq = [0.01, 0.04, 0.25][rng.usize(0, 3)];
+        cfg.scheduler.max_batch = rng.usize(2, 32);
+        if rng.chance(0.3) {
+            cfg.swap_mode = SwapMode::Async;
+        }
+        let pattern = [Pattern::Markov, Pattern::Random, Pattern::RoundRobin]
+            [rng.usize(0, 3)];
+        let n = rng.usize(4, 14);
+        let mut wl = ShareGptConfig::default();
+        wl.mean_turns = 1.0 + rng.f64() * 3.0;
+        wl.max_prompt = 256;
+        wl.max_response = 128;
+        wl.mean_think_s = 1.0;
+        let convs = generate(&wl, n, rng.next_u64());
+        let preset = tiny_preset(rng);
+        let capacity = preset.gpu_blocks();
+        let block_size = preset.model.block_size;
+
+        // Mirror the engine's admission rule: a conversation is served up
+        // to (excluding) the first turn whose cumulative context + 1
+        // token cannot fit the GPU; such conversations end up rejected.
+        let mut expected_tokens = 0u64;
+        let mut expected_turns = 0u64;
+        let mut expected_finished = 0u64;
+        let mut expected_rejected = 0u64;
+        for c in &convs {
+            let mut total = 0u64;
+            let mut served = 0usize;
+            for t in &c.turns {
+                total += (t.prompt_tokens + t.response_tokens) as u64;
+                if (total + 1).div_ceil(block_size as u64) as usize > capacity {
+                    break;
+                }
+                served += 1;
+                expected_tokens += t.response_tokens as u64;
+            }
+            expected_turns += served as u64;
+            if served == c.turns.len() {
+                expected_finished += 1;
+            } else {
+                expected_rejected += 1;
+            }
+        }
+
+        let arrivals = ArrivalTrace::poisson(&convs, 2.0, rng.next_u64());
+        let mut e = ServingEngine::new(cfg, preset, pattern, convs, arrivals, rng.next_u64());
+        e.charge_sched_overhead = false;
+        let out = e.run(400_000);
+        assert_eq!(
+            out.recorder.finished_conversations, expected_finished,
+            "conversations lost"
+        );
+        assert_eq!(
+            out.recorder.rejected_conversations, expected_rejected,
+            "rejection accounting"
+        );
+        assert_eq!(out.recorder.finished_turns, expected_turns, "turns lost");
+        assert_eq!(
+            out.recorder.total_tokens, expected_tokens,
+            "token conservation violated"
+        );
+        // run() checks GPU/CPU occupancy invariants at exit.
+    });
+}
+
+/// Oversized conversations are rejected cleanly, not starved forever.
+#[test]
+fn prop_oversized_requests_rejected_not_starved() {
+    for_cases(0x0B51, 8, |rng| {
+        let cfg = EngineConfig::fastswitch();
+        let preset = {
+            let mut p = tiny_preset(rng);
+            // Tiny GPU: ~70 blocks -> ~1100 tokens max context.
+            let model = fastswitch::config::ModelSpec::llama8b();
+            p.gpu.hbm_bytes = ((model.weight_bytes() + 70 * model.block_bytes())
+                as f64
+                / p.gpu.mem_util) as u64
+                + (1 << 20);
+            p
+        };
+        let mut wl = ShareGptConfig::default();
+        wl.mean_turns = 6.0;
+        wl.max_prompt = 1536; // big prompts -> some conversations oversize
+        wl.max_response = 512;
+        wl.mean_think_s = 0.5;
+        let convs = generate(&wl, 8, rng.next_u64());
+        let arrivals = ArrivalTrace::poisson(&convs, 4.0, rng.next_u64());
+        let mut e =
+            ServingEngine::new(cfg, preset, Pattern::Random, convs, arrivals, rng.next_u64());
+        e.charge_sched_overhead = false;
+        let out = e.run(400_000);
+        assert_eq!(
+            out.recorder.finished_conversations + out.recorder.rejected_conversations,
+            8,
+            "every conversation must terminate (finished or rejected)"
+        );
+    });
+}

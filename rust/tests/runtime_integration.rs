@@ -1,0 +1,102 @@
+//! End-to-end runtime parity: the Rust PJRT path must reproduce, token
+//! for token, the greedy transcript the Python/JAX path produced at AOT
+//! time (`artifacts/golden.txt`). This is the proof that all three
+//! layers compose: Pallas kernel → JAX model → HLO text → PJRT → Rust.
+//!
+//! Requires `make artifacts`; skips (with a message) otherwise.
+
+use std::path::{Path, PathBuf};
+
+use fastswitch::runtime::PjrtModel;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load_golden(dir: &Path) -> Option<(Vec<i32>, Vec<i32>)> {
+    let text = std::fs::read_to_string(dir.join("golden.txt")).ok()?;
+    let mut prompt = None;
+    let mut cont = None;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("prompt ") {
+            prompt = Some(rest.split(',').map(|t| t.parse().unwrap()).collect());
+        } else if let Some(rest) = line.strip_prefix("continuation ") {
+            cont = Some(rest.split(',').map(|t| t.parse().unwrap()).collect());
+        }
+    }
+    Some((prompt?, cont?))
+}
+
+#[test]
+fn pjrt_runtime_reproduces_python_golden_transcript() {
+    let dir = artifacts_dir();
+    if !dir.join("model_meta.txt").exists() || !dir.join("golden.txt").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let (prompt, expected) = load_golden(&dir).expect("golden.txt parse");
+    let mut model = PjrtModel::load(&dir).expect("load artifacts");
+    assert_eq!(model.platform(), "cpu");
+
+    let maxb = model.meta.max_blocks_per_seq;
+    let block_table: Vec<i32> = (1..=maxb as i32).collect();
+
+    // Chunked prefill of the whole prompt.
+    let t = model.meta.prefill_chunk;
+    let mut pos = 0usize;
+    let mut next = 0i32;
+    while pos < prompt.len() {
+        let chunk = &prompt[pos..(pos + t).min(prompt.len())];
+        next = model
+            .prefill(chunk, pos as i32, chunk.len() as i32, &block_table)
+            .expect("prefill");
+        pos += chunk.len();
+    }
+    assert_eq!(next, expected[0], "first token after prefill");
+
+    // Greedy decode.
+    let mut ctx = prompt.len() + 1;
+    let mut got = vec![next];
+    for _ in 1..expected.len() {
+        let out = model
+            .decode(
+                &[*got.last().unwrap()],
+                &[(ctx - 1) as i32],
+                &[block_table.clone()],
+                &[ctx as i32],
+            )
+            .expect("decode");
+        got.push(out[0]);
+        ctx += 1;
+    }
+    assert_eq!(got, expected, "greedy continuation must match python");
+}
+
+#[test]
+fn decode_batch_padding_is_inert() {
+    let dir = artifacts_dir();
+    if !dir.join("model_meta.txt").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let mut model = PjrtModel::load(&dir).expect("load artifacts");
+    let maxb = model.meta.max_blocks_per_seq;
+    let bt: Vec<i32> = (1..=maxb as i32).collect();
+
+    // Prefill a short prompt, then decode with batch 1 (padded to a
+    // larger compiled variant internally when batch 2 requested).
+    let prompt: Vec<i32> = (1..20).collect();
+    let n1 = model
+        .prefill(&prompt, 0, prompt.len() as i32, &bt)
+        .unwrap();
+    let ctx = prompt.len() + 1;
+
+    // Same state, decode via the b1 variant…
+    let a = model
+        .decode(&[n1], &[(ctx - 1) as i32], &[bt.clone()], &[ctx as i32])
+        .unwrap();
+    // …and the padded path must not have corrupted block 0-backed slots:
+    // active request's next decode still deterministic.
+    assert_eq!(a.len(), 1);
+    assert!(a[0] >= 0 && (a[0] as usize) < model.meta.vocab);
+}
