@@ -1,0 +1,20 @@
+//! Bench: fairness showdown — trace vs VTC vs SLO-aware priorities on a
+//! skewed multi-tenant bursty workload, timed.
+//! `cargo bench --bench fairness_showdown`.
+use fastswitch::exp::{self, runner::Scale};
+use fastswitch::util::bench::{bench, section};
+
+fn main() {
+    let scale = Scale::quick();
+    section(&format!(
+        "fairness showdown ({} tenants, heavy share {}, burst {}x)",
+        exp::fairness_showdown::N_TENANTS,
+        exp::fairness_showdown::HEAVY_SHARE,
+        exp::fairness_showdown::BURST,
+    ));
+    let mut rep = None;
+    bench("3 policies x 1 sim each", 0, 1, || {
+        rep = Some(exp::fairness_showdown::run(&scale));
+    });
+    println!("{}", rep.unwrap().render());
+}

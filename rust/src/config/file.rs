@@ -29,16 +29,42 @@ pub struct ConfigFile {
     sections: HashMap<String, HashMap<String, String>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("parse error at line {0}: {1}")]
+    Io(std::io::Error),
     Parse(usize, String),
-    #[error("unknown preset {0:?}")]
     UnknownPreset(String),
-    #[error("unknown engine policy {0:?}")]
     UnknownPolicy(String),
+    UnknownFairnessPolicy(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+            ConfigError::Parse(line, msg) => write!(f, "parse error at line {line}: {msg}"),
+            ConfigError::UnknownPreset(p) => write!(f, "unknown preset {p:?}"),
+            ConfigError::UnknownPolicy(p) => write!(f, "unknown engine policy {p:?}"),
+            ConfigError::UnknownFairnessPolicy(p) => {
+                write!(f, "unknown fairness policy {p:?} (trace|vtc|slo)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 impl ConfigFile {
@@ -130,6 +156,25 @@ impl ConfigFile {
         if let Some(r) = self.get_bool("engine", "reuse") {
             cfg.reuse = r;
         }
+        if let Some(p) = self.get("fairness", "policy") {
+            cfg.fairness.policy = crate::fairness::PolicyKind::by_name(p)
+                .ok_or_else(|| ConfigError::UnknownFairnessPolicy(p.into()))?;
+        }
+        if let Some(w) = self.get_f64("fairness", "prefill_weight") {
+            cfg.fairness.vtc.prefill_weight = w;
+        }
+        if let Some(w) = self.get_f64("fairness", "decode_weight") {
+            cfg.fairness.vtc.decode_weight = w;
+        }
+        if let Some(g) = self.get_f64("fairness", "max_service_gap") {
+            cfg.fairness.vtc.max_service_gap = g;
+        }
+        if let Some(t) = self.get_f64("fairness", "ttft_target_s") {
+            cfg.fairness.slo.ttft_target_s = t;
+        }
+        if let Some(t) = self.get_f64("fairness", "tbt_target_s") {
+            cfg.fairness.slo.tbt_target_s = t;
+        }
         Ok(cfg)
     }
 }
@@ -203,6 +248,28 @@ pattern = "markov"
     fn bad_policy_rejected() {
         let c = ConfigFile::parse("[engine]\npolicy = \"nope\"").unwrap();
         assert!(matches!(c.engine(), Err(ConfigError::UnknownPolicy(_))));
+    }
+
+    #[test]
+    fn fairness_section_selects_online_policy() {
+        use crate::fairness::PolicyKind;
+        let c = ConfigFile::parse(
+            "[fairness]\npolicy = \"vtc\"\ndecode_weight = 3.5\nmax_service_gap = 500",
+        )
+        .unwrap();
+        let e = c.engine().unwrap();
+        assert_eq!(e.fairness.policy, PolicyKind::Vtc);
+        assert_eq!(e.fairness.vtc.decode_weight, 3.5);
+        assert_eq!(e.fairness.vtc.max_service_gap, 500.0);
+    }
+
+    #[test]
+    fn bad_fairness_policy_rejected() {
+        let c = ConfigFile::parse("[fairness]\npolicy = \"nope\"").unwrap();
+        assert!(matches!(
+            c.engine(),
+            Err(ConfigError::UnknownFairnessPolicy(_))
+        ));
     }
 
     #[test]

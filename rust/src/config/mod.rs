@@ -9,6 +9,8 @@
 
 pub mod file;
 
+use crate::fairness::FairnessConfig;
+
 /// Served-model characteristics that drive KV-cache geometry and the
 /// roofline inference model. Mirrors the paper's LLaMA-8B / Qwen-32B.
 #[derive(Clone, Debug, PartialEq)]
@@ -260,6 +262,9 @@ pub struct EngineConfig {
     pub reuse: bool,
     pub scheduler: SchedulerConfig,
     pub swap_cost: SwapCostConfig,
+    /// Priority source: offline trace (seed behavior) or an online
+    /// per-tenant fairness policy (VTC / SLO-aware).
+    pub fairness: FairnessConfig,
     pub label: String,
 }
 
@@ -274,6 +279,7 @@ impl EngineConfig {
             reuse: false,
             scheduler: SchedulerConfig::default(),
             swap_cost: SwapCostConfig::default(),
+            fairness: FairnessConfig::default(),
             label: "vllm".into(),
         }
     }
@@ -449,6 +455,16 @@ mod tests {
         assert!(!l[1].reuse && l[2].reuse);
         assert!(matches!(l[3].dispatch, DispatchMode::ThreadPool { .. }));
         assert_eq!(l[3].swap_mode, SwapMode::Adaptive);
+    }
+
+    #[test]
+    fn default_priority_source_is_the_offline_trace() {
+        use crate::fairness::PolicyKind;
+        // The seed behavior must be the default: online policies are
+        // opt-in via config/CLI.
+        for cfg in EngineConfig::ablation_ladder() {
+            assert_eq!(cfg.fairness.policy, PolicyKind::Trace);
+        }
     }
 
     #[test]

@@ -16,12 +16,14 @@ use std::time::Instant;
 use crate::block::{buddy::BlockGroupAllocator, fixed::FixedBlockAllocator};
 use crate::block::{reuse::KvCacheReuse, KvAllocator};
 use crate::config::{EngineConfig, Granularity, Preset, SwapMode};
-use crate::coordinator::priority::{Pattern, PriorityTrace};
+use crate::coordinator::priority::Pattern;
 use crate::coordinator::request::{KvLocation, ReqState, Request, RequestTable};
 use crate::coordinator::scheduler::{schedule, Candidate};
+use crate::fairness::policy::{build_policy, PriorityPolicy};
+use crate::fairness::TenantId;
 use crate::memory::{BlockId, CpuSwapSpace, RequestId};
 use crate::metrics::{IterationSample, Recorder};
-use crate::sim::clock::Ns;
+use crate::sim::clock::{to_secs, Ns};
 use crate::sim::link::{Direction, PcieLink};
 use crate::sim::PerfModel;
 use crate::swap::engine::{BlockMove, SegmentBuilder};
@@ -76,7 +78,9 @@ pub struct ServingEngine {
     reuse: KvCacheReuse,
     seg: SegmentBuilder,
     pub mgr: SwapManager,
-    trace: PriorityTrace,
+    /// Source of scheduling priorities: the offline trace or an online
+    /// fairness policy (VTC / SLO-aware), per `cfg.fairness`.
+    policy: Box<dyn PriorityPolicy>,
     reqs: RequestTable,
     /// Conversations not yet arrived: (arrival, conversation), sorted desc
     /// so we pop from the back.
@@ -117,7 +121,12 @@ impl ServingEngine {
         let mgr = SwapManager::new(cfg.swap_mode, cfg.dispatch, &cfg.swap_cost, link);
         let seg = SegmentBuilder::new(preset.model.clone(), cfg.granularity);
         let reuse = KvCacheReuse::new(cfg.reuse, block_size);
-        let trace = PriorityTrace::new(pattern, cfg.scheduler.priority_levels, seed);
+        let policy = build_policy(
+            &cfg.fairness,
+            pattern,
+            cfg.scheduler.priority_levels,
+            seed,
+        );
         let epoch_iters = (1.0 / cfg.scheduler.priority_update_freq).round().max(1.0) as u64;
 
         let mut future: Vec<(Ns, Conversation)> = arrivals
@@ -136,7 +145,7 @@ impl ServingEngine {
             reuse,
             seg,
             mgr,
-            trace,
+            policy,
             reqs: RequestTable::default(),
             future,
             pending_turns: Vec::new(),
@@ -185,8 +194,9 @@ impl ServingEngine {
         while self.future.last().is_some_and(|(t, _)| *t <= self.now) {
             let (t, conv) = self.future.pop().unwrap();
             let id = conv.id;
+            let tenant = conv.tenant;
             let r = Request::new(id, conv, t);
-            self.rec.turn_arrival(id, 0, t);
+            self.rec.turn_arrival(id, 0, t, tenant);
             self.reqs.insert(r);
             self.reject_if_oversized(id);
         }
@@ -208,7 +218,8 @@ impl ServingEngine {
             r.advance_turn(t.max(r.turn_arrival));
             let turn = r.turn as u32;
             let arr = r.turn_arrival;
-            self.rec.turn_arrival(id, turn, arr);
+            let tenant = r.tenant();
+            self.rec.turn_arrival(id, turn, arr, tenant);
             // A later turn may have grown past the servable context.
             self.reject_if_oversized(id);
         }
@@ -273,9 +284,21 @@ impl ServingEngine {
             return;
         }
         self.last_epoch = epoch;
-        let ids: Vec<RequestId> = self.reqs.iter().map(|r| r.id).collect();
-        for id in ids {
-            let p = self.trace.priority_of(id, epoch);
+        // Live (unfinished) requests and the distinct tenants backing
+        // them; finished requests hold no GPU/CPU state, so their stale
+        // priorities are irrelevant.
+        let live: Vec<(RequestId, TenantId)> = self
+            .reqs
+            .iter()
+            .filter(|r| r.state != ReqState::Finished)
+            .map(|r| (r.id, r.tenant()))
+            .collect();
+        let mut active: Vec<TenantId> = live.iter().map(|&(_, t)| t).collect();
+        active.sort_unstable();
+        active.dedup();
+        self.policy.on_schedule(epoch, &active);
+        for (id, tenant) in live {
+            let p = self.policy.priority_of(id, tenant, epoch);
             self.reqs.get_mut(id).priority = p;
             self.cpu.set_priority(id, p);
         }
@@ -692,6 +715,7 @@ impl ServingEngine {
                     break;
                 }
                 let r = self.reqs.get_mut(id);
+                let tenant = r.tenant();
                 let take = r.prefill_remaining().min(budget);
                 r.prefill_done += take;
                 r.tokens_in_cache += take as u64;
@@ -708,6 +732,10 @@ impl ServingEngine {
                     r.tokens_in_cache += 1;
                     emitters.push(id);
                 }
+                // Charge the prefill service to the tenant's virtual-token
+                // account (the emitted token is charged with the emitters
+                // below).
+                self.policy.on_tokens(tenant, take as u64, 0);
             }
             dur = self.perf.prefill_ns(total_new as u64, ctx_sum);
         } else {
@@ -738,10 +766,26 @@ impl ServingEngine {
 
         let mut turn_ends: Vec<RequestId> = Vec::new();
         for id in emitters {
-            let r = self.reqs.get(id);
-            let turn = r.turn as u32;
+            let (turn, tenant, arrival, first, gap) = {
+                let r = self.reqs.get_mut(id);
+                // `generated` was already incremented for this emission,
+                // so 1 marks the turn's first token.
+                let first = r.generated == 1;
+                let gap = r.last_emit.map(|t| iter_end.saturating_sub(t));
+                r.last_emit = Some(iter_end);
+                (r.turn as u32, r.tenant(), r.turn_arrival, first, gap)
+            };
+            // One decode token of service; TTFT/TBT feedback for the
+            // SLO-aware policy.
+            self.policy.on_tokens(tenant, 0, 1);
+            if first {
+                self.policy
+                    .on_ttft(tenant, to_secs(iter_end.saturating_sub(arrival)));
+            } else if let Some(g) = gap {
+                self.policy.on_tbt(tenant, to_secs(g));
+            }
             self.rec.token(id, turn, iter_end);
-            if r.turn_done() {
+            if self.reqs.get(id).turn_done() {
                 turn_ends.push(id);
             }
         }
@@ -911,6 +955,21 @@ mod tests {
     fn completes_all_conversations_vllm_baseline() {
         let out = run_with(EngineConfig::vllm_baseline(), 400, 12, 1);
         assert_eq!(out.recorder.finished_conversations, 12);
+    }
+
+    #[test]
+    fn online_policies_complete_all_conversations() {
+        use crate::fairness::PolicyKind;
+        for kind in [PolicyKind::Vtc, PolicyKind::SloAware] {
+            let mut cfg = EngineConfig::fastswitch();
+            cfg.fairness.policy = kind;
+            let out = run_with(cfg, 400, 12, 1);
+            assert_eq!(
+                out.recorder.finished_conversations, 12,
+                "{kind:?} lost conversations"
+            );
+            assert!(out.recorder.total_tokens > 0);
+        }
     }
 
     #[test]

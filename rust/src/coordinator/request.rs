@@ -56,6 +56,9 @@ pub struct Request {
     pub turn_arrival: Ns,
     /// First arrival of the conversation.
     pub arrival: Ns,
+    /// When this turn last emitted a token (drives the online policies'
+    /// TBT observations); reset each turn.
+    pub last_emit: Option<Ns>,
 }
 
 impl Request {
@@ -74,7 +77,13 @@ impl Request {
             generated: 0,
             turn_arrival: arrival,
             arrival,
+            last_emit: None,
         }
+    }
+
+    /// Owning tenant (the fairness accounting unit).
+    pub fn tenant(&self) -> u32 {
+        self.conv.tenant
     }
 
     pub fn cur_turn(&self) -> &crate::workload::Turn {
@@ -125,6 +134,7 @@ impl Request {
         self.state = ReqState::Queued;
         self.prefill_done = 0;
         self.generated = 0;
+        self.last_emit = None;
         self.prefill_target = if self.kv == KvLocation::None {
             (self.history_tokens() + self.cur_turn().prompt_tokens as u64) as u32
         } else {
@@ -209,6 +219,7 @@ mod tests {
     fn conv(turns: &[(u32, u32)]) -> Conversation {
         Conversation {
             id: 0,
+            tenant: 0,
             turns: turns
                 .iter()
                 .map(|&(p, r)| Turn {

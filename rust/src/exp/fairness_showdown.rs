@@ -1,0 +1,127 @@
+//! Fairness showdown — the experiment the fairness subsystem exists
+//! for: trace vs VTC vs SLO-aware priorities on a skewed multi-tenant
+//! workload (one heavy abuser vs many light tenants) with bursty
+//! arrivals, compared on per-tenant tail TTFT/TBT and token shares.
+//!
+//! Expected shape: under the offline trace, priorities ignore tenants,
+//! so the heavy tenant's demand share (~50 %) becomes its service share
+//! and light tenants eat the queueing tail. VTC pushes shares toward
+//! max-min fairness (heavy throttled while everyone is backlogged);
+//! SLO-aware additionally compresses the light tenants' tail TTFT by
+//! boosting whoever is missing targets.
+//!
+//! `fastswitch exp fairness` or `cargo bench --bench fairness_showdown`.
+
+use super::runner::{run_sim_with, Scale, WorkloadSpec};
+use super::{f2, f3, Report};
+use crate::config::{EngineConfig, Preset};
+use crate::coordinator::engine::ServeOutcome;
+use crate::coordinator::priority::Pattern;
+use crate::fairness::PolicyKind;
+
+/// Tenant mix: one heavy abuser issuing half the traffic, five light
+/// tenants splitting the rest; arrivals in 4× bursts.
+pub const N_TENANTS: usize = 6;
+pub const HEAVY_SHARE: f64 = 0.5;
+pub const BURST: f64 = 4.0;
+
+fn run_policy(kind: PolicyKind, scale: &Scale) -> ServeOutcome {
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.scheduler.priority_update_freq = 0.04;
+    cfg.fairness.policy = kind;
+    cfg.label = kind.label().to_string();
+    let spec = WorkloadSpec {
+        tenants: N_TENANTS,
+        heavy_share: HEAVY_SHARE,
+        burst: Some(BURST),
+    };
+    run_sim_with(cfg, Preset::llama8b_a10(), Pattern::Markov, scale, &spec)
+}
+
+pub fn run(scale: &Scale) -> Report {
+    let mut rep = Report::new(
+        "fairness-showdown",
+        &format!(
+            "trace vs VTC vs SLO-aware, {} tenants (tenant 0 heavy, {}% of traffic), {}x bursts",
+            N_TENANTS,
+            (HEAVY_SHARE * 100.0) as u32,
+            BURST
+        ),
+        &[
+            "policy",
+            "tenant",
+            "P50 TTFT s",
+            "P99 TTFT s",
+            "P99 TBT s",
+            "tok share",
+            "maxmin",
+            "jain",
+        ],
+    );
+    for kind in [PolicyKind::Trace, PolicyKind::Vtc, PolicyKind::SloAware] {
+        let out = run_policy(kind, scale);
+        let ttft = out.recorder.ttft_by_tenant();
+        let tbt = out.recorder.tbt_by_tenant();
+        let shares = out.recorder.token_shares();
+        for &(tenant, share) in &shares {
+            let tt = ttft.iter().find(|&&(t, _)| t == tenant).map(|(_, p)| p);
+            let tb = tbt.iter().find(|&&(t, _)| t == tenant).map(|(_, p)| p);
+            rep.row(vec![
+                out.label.clone(),
+                if tenant == 0 {
+                    "0 (heavy)".into()
+                } else {
+                    tenant.to_string()
+                },
+                tt.map(|p| f3(p.p(50.0))).unwrap_or_else(|| "-".into()),
+                tt.map(|p| f3(p.p(99.0))).unwrap_or_else(|| "-".into()),
+                tb.map(|p| f3(p.p(99.0))).unwrap_or_else(|| "-".into()),
+                f3(share),
+                String::new(),
+                String::new(),
+            ]);
+        }
+        rep.row(vec![
+            out.label.clone(),
+            "all".into(),
+            f3(out.recorder.ttft().p(50.0)),
+            f3(out.recorder.ttft().p(99.0)),
+            f3(out.recorder.tbt().p(99.0)),
+            "1.000".into(),
+            f2(out.recorder.max_min_share_ratio()),
+            f3(out.recorder.jain_fairness()),
+        ]);
+    }
+    rep.note(
+        "trace priorities are tenant-blind; VTC equalizes token shares while tenants are \
+         backlogged; SLO-aware also boosts tenants missing TTFT/TBT targets",
+    );
+    rep.note("maxmin = max/min per-tenant token share; jain = Jain fairness index over token counts");
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn showdown_reports_all_policies_and_tenants() {
+        let rep = run(&Scale {
+            conversations: 40,
+            ..Scale::quick()
+        });
+        // 3 policies × (per-tenant rows + one "all" summary row each).
+        let policies: std::collections::HashSet<&str> = rep
+            .rows
+            .iter()
+            .map(|r| r[0].as_str())
+            .collect();
+        assert_eq!(
+            policies,
+            ["trace", "vtc", "slo-aware"].into_iter().collect()
+        );
+        assert!(rep.rows.iter().any(|r| r[1] == "0 (heavy)"));
+        assert!(rep.rows.iter().any(|r| r[1] == "all"));
+        assert_eq!(rep.rows.len() % 3, 0);
+    }
+}

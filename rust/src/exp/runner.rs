@@ -3,7 +3,8 @@
 use crate::config::{EngineConfig, Preset};
 use crate::coordinator::engine::{ServeOutcome, ServingEngine};
 use crate::coordinator::priority::Pattern;
-use crate::workload::sharegpt::{generate, ShareGptConfig};
+use crate::workload::sharegpt::{generate, Conversation, ShareGptConfig};
+use crate::workload::tenants::{assign_tenants, TenantMix};
 use crate::workload::ArrivalTrace;
 
 /// Experiment scale knobs (defaults keep each figure seconds-scale; the
@@ -47,19 +48,71 @@ impl Scale {
     }
 }
 
-/// Run one simulation.
+/// Workload shape beyond the scale knobs: tenant split and arrival
+/// pattern. The default reproduces the classic single-tenant Poisson
+/// workload bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Number of tenants; 1 = the classic single-tenant workload.
+    pub tenants: usize,
+    /// Fraction of conversations issued by tenant 0 (used when
+    /// `tenants > 1`).
+    pub heavy_share: f64,
+    /// `Some(burst_factor)` switches arrivals from Poisson to the on/off
+    /// bursty pattern at the same long-run rate.
+    pub burst: Option<f64>,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            tenants: 1,
+            heavy_share: 1.0,
+            burst: None,
+        }
+    }
+}
+
+/// Generate the conversation set + arrival trace for a (scale, spec).
+pub fn build_workload(scale: &Scale, spec: &WorkloadSpec) -> (Vec<Conversation>, ArrivalTrace) {
+    let wl = ShareGptConfig::default();
+    let mut convs = generate(&wl, scale.conversations, scale.seed);
+    if spec.tenants > 1 {
+        assign_tenants(
+            &mut convs,
+            &TenantMix::skewed(spec.tenants, spec.heavy_share),
+            scale.seed ^ 0x7E,
+        );
+    }
+    let arrivals = match spec.burst {
+        Some(b) => ArrivalTrace::bursty(&convs, scale.request_rate, b, scale.seed ^ 0x5EED),
+        None => ArrivalTrace::poisson(&convs, scale.request_rate, scale.seed ^ 0x5EED),
+    };
+    (convs, arrivals)
+}
+
+/// Run one simulation over a shaped workload.
+pub fn run_sim_with(
+    cfg: EngineConfig,
+    preset: Preset,
+    pattern: Pattern,
+    scale: &Scale,
+    spec: &WorkloadSpec,
+) -> ServeOutcome {
+    let (convs, arrivals) = build_workload(scale, spec);
+    let mut engine = ServingEngine::new(cfg, preset, pattern, convs, arrivals, scale.seed);
+    engine.charge_sched_overhead = scale.charge_sched_overhead;
+    engine.run(scale.max_iters)
+}
+
+/// Run one simulation (classic single-tenant Poisson workload).
 pub fn run_sim(
     cfg: EngineConfig,
     preset: Preset,
     pattern: Pattern,
     scale: &Scale,
 ) -> ServeOutcome {
-    let wl = ShareGptConfig::default();
-    let convs = generate(&wl, scale.conversations, scale.seed);
-    let arrivals = ArrivalTrace::poisson(&convs, scale.request_rate, scale.seed ^ 0x5EED);
-    let mut engine = ServingEngine::new(cfg, preset, pattern, convs, arrivals, scale.seed);
-    engine.charge_sched_overhead = scale.charge_sched_overhead;
-    engine.run(scale.max_iters)
+    run_sim_with(cfg, preset, pattern, scale, &WorkloadSpec::default())
 }
 
 /// Run the ablation ladder (vllm → +dbg → +reuse → fastswitch) at a

@@ -1,0 +1,213 @@
+//! Per-tenant virtual-token accounting (VTC).
+//!
+//! After "Fairness in Serving Large Language Models" (arXiv 2401.00588):
+//! each tenant accrues *virtual service* as a weighted sum of prefill and
+//! decode tokens served on its behalf; the scheduler then favors the
+//! tenants with the least virtual service, which converges to max-min
+//! fair token shares while everyone is backlogged. Two refinements keep
+//! the counters well-behaved under churn:
+//!
+//! - **newcomer lift** — a tenant that activates (or returns from idle)
+//!   starts from the minimum counter of the currently active tenants, so
+//!   banked idle time cannot be redeemed as an unbounded service burst;
+//! - **bounded service gap** — active laggards are lifted to within
+//!   [`VtcConfig::max_service_gap`] of the most-served active tenant,
+//!   bounding how long any tenant can monopolize the GPU while
+//!   "catching up".
+
+use std::collections::HashMap;
+
+use super::TenantId;
+
+/// Weights and bounds for the virtual-token counters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VtcConfig {
+    /// Virtual cost of one prefill (prompt) token.
+    pub prefill_weight: f64,
+    /// Virtual cost of one decode (output) token. Decode occupies the
+    /// batch for a whole iteration per token, so it is costed higher
+    /// (the VTC paper's recommended asymmetry).
+    pub decode_weight: f64,
+    /// Maximum virtual-service gap allowed between concurrently active
+    /// tenants; laggards are lifted to `leader - max_service_gap`.
+    pub max_service_gap: f64,
+}
+
+impl Default for VtcConfig {
+    fn default() -> Self {
+        VtcConfig {
+            prefill_weight: 1.0,
+            decode_weight: 2.0,
+            max_service_gap: 16_384.0,
+        }
+    }
+}
+
+/// The per-tenant counters plus the active-set bookkeeping.
+#[derive(Clone, Debug)]
+pub struct VtcAccountant {
+    cfg: VtcConfig,
+    counters: HashMap<TenantId, f64>,
+    active: Vec<TenantId>,
+}
+
+impl VtcAccountant {
+    pub fn new(cfg: VtcConfig) -> Self {
+        VtcAccountant {
+            cfg,
+            counters: HashMap::new(),
+            active: Vec::new(),
+        }
+    }
+
+    /// Record service rendered to `tenant`; returns its new counter.
+    pub fn charge(&mut self, tenant: TenantId, prefill_tokens: u64, decode_tokens: u64) -> f64 {
+        let cost = prefill_tokens as f64 * self.cfg.prefill_weight
+            + decode_tokens as f64 * self.cfg.decode_weight;
+        let c = self.counters.entry(tenant).or_insert(0.0);
+        *c += cost;
+        *c
+    }
+
+    /// Refresh the active tenant set: lift newcomers to the active
+    /// minimum, then bound the service gap across the active set.
+    pub fn set_active(&mut self, active: &[TenantId]) {
+        // Newcomer floor: the minimum counter among *continuing* tenants
+        // (active before and now) — a returning idler's own stale counter
+        // must not drag the floor down, or idle time banks credit.
+        let continuing_min = active
+            .iter()
+            .filter(|&t| self.active.contains(t))
+            .filter_map(|t| self.counters.get(t))
+            .fold(f64::INFINITY, |a, &b| a.min(b));
+        let floor = if continuing_min.is_finite() {
+            continuing_min
+        } else {
+            // No continuing tenant: fall back to the minimum existing
+            // counter in the new set (0 when none has history).
+            let m = active
+                .iter()
+                .filter_map(|t| self.counters.get(t))
+                .fold(f64::INFINITY, |a, &b| a.min(b));
+            if m.is_finite() {
+                m
+            } else {
+                0.0
+            }
+        };
+        for &t in active {
+            let was_active = self.active.contains(&t);
+            let c = self.counters.entry(t).or_insert(floor);
+            if !was_active && *c < floor {
+                *c = floor;
+            }
+        }
+        // Bounded gap: no active tenant may lag the active leader by more
+        // than `max_service_gap` virtual tokens.
+        let hi = active
+            .iter()
+            .filter_map(|t| self.counters.get(t))
+            .fold(0.0f64, |a, &b| a.max(b));
+        let lo_bound = hi - self.cfg.max_service_gap;
+        for &t in active {
+            if let Some(c) = self.counters.get_mut(&t) {
+                if *c < lo_bound {
+                    *c = lo_bound;
+                }
+            }
+        }
+        self.active = active.to_vec();
+    }
+
+    /// Virtual service accrued by `tenant` so far (0 if unseen).
+    pub fn virtual_service(&self, tenant: TenantId) -> f64 {
+        self.counters.get(&tenant).copied().unwrap_or(0.0)
+    }
+
+    pub fn active(&self) -> &[TenantId] {
+        &self.active
+    }
+
+    /// The active tenant with the least virtual service (ties → smaller
+    /// id, for determinism).
+    pub fn least_served(&self) -> Option<TenantId> {
+        self.active
+            .iter()
+            .copied()
+            .min_by(|&a, &b| {
+                self.virtual_service(a)
+                    .partial_cmp(&self.virtual_service(b))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(wp: f64, wd: f64, gap: f64) -> VtcConfig {
+        VtcConfig {
+            prefill_weight: wp,
+            decode_weight: wd,
+            max_service_gap: gap,
+        }
+    }
+
+    #[test]
+    fn weighted_costs() {
+        let mut a = VtcAccountant::new(cfg(1.0, 2.0, 1e9));
+        assert_eq!(a.charge(7, 10, 5), 10.0 + 2.0 * 5.0);
+        assert_eq!(a.charge(7, 0, 1), 22.0);
+        assert_eq!(a.virtual_service(7), 22.0);
+        assert_eq!(a.virtual_service(9), 0.0, "unseen tenant has no service");
+    }
+
+    #[test]
+    fn newcomer_lifted_to_active_minimum() {
+        let mut a = VtcAccountant::new(cfg(1.0, 1.0, 1e9));
+        a.set_active(&[0]);
+        a.charge(0, 100, 0);
+        // Tenant 1 shows up after tenant 0 banked 100 virtual tokens: it
+        // must NOT start at 0 and claim 100 tokens of back-service.
+        a.set_active(&[0, 1]);
+        assert_eq!(a.virtual_service(1), 100.0);
+    }
+
+    #[test]
+    fn service_gap_is_bounded() {
+        let mut a = VtcAccountant::new(cfg(1.0, 1.0, 1000.0));
+        a.set_active(&[0, 1]);
+        a.charge(0, 5000, 0);
+        // Both stayed active; the laggard is lifted to leader - gap.
+        a.set_active(&[0, 1]);
+        assert_eq!(a.virtual_service(0), 5000.0);
+        assert_eq!(a.virtual_service(1), 4000.0);
+    }
+
+    #[test]
+    fn least_served_breaks_ties_by_id() {
+        let mut a = VtcAccountant::new(VtcConfig::default());
+        a.set_active(&[3, 1, 2]);
+        assert_eq!(a.least_served(), Some(1));
+        a.charge(1, 50, 0);
+        a.charge(2, 10, 0);
+        assert_eq!(a.least_served(), Some(3));
+    }
+
+    #[test]
+    fn idle_tenant_does_not_bank_credit() {
+        let mut a = VtcAccountant::new(cfg(1.0, 1.0, 1e9));
+        a.set_active(&[0, 1]);
+        a.charge(0, 10, 0);
+        a.charge(1, 10, 0);
+        // Tenant 1 goes idle; tenant 0 keeps getting served.
+        a.set_active(&[0]);
+        a.charge(0, 500, 0);
+        // Tenant 1 returns: lifted to the active minimum (tenant 0's
+        // counter), not resumed from its stale 10.
+        a.set_active(&[0, 1]);
+        assert_eq!(a.virtual_service(1), a.virtual_service(0));
+    }
+}

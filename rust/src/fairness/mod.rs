@@ -1,0 +1,56 @@
+//! Online fairness engine: per-tenant virtual-token accounting driving
+//! live scheduler priorities.
+//!
+//! The paper's premise is that FastSwitch makes context switching cheap
+//! enough that the scheduler can *afford* frequent priority adjustment —
+//! but the offline [`crate::coordinator::priority::PriorityTrace`] only
+//! replays synthetic priority patterns. This module supplies the online
+//! policies that actually *compute* those priorities from observed
+//! service, in the style of "Fairness in Serving Large Language Models"
+//! (VTC, arXiv 2401.00588) and "Locality-aware Fair Scheduling in LLM
+//! Serving" (arXiv 2501.14312):
+//!
+//! - [`accountant`] — per-tenant virtual-token counters: weighted
+//!   prefill/decode costs, newcomer lift, and bounded service gap.
+//! - [`slo`] — per-tenant TTFT/TBT SLO targets with online attainment
+//!   tracking and deficit-based priority boosting.
+//! - [`policy`] — the [`policy::PriorityPolicy`] trait the engine drives
+//!   each epoch, with three implementations: `TracePolicy` (the offline
+//!   traces, unchanged behavior), `VtcPolicy`, and `SloAwarePolicy`.
+//!
+//! Tenants are identified by [`TenantId`]; the workload generator
+//! assigns one to every conversation
+//! ([`crate::workload::tenants::assign_tenants`]) and the engine feeds
+//! per-tenant service/latency observations back into the active policy.
+
+pub mod accountant;
+pub mod policy;
+pub mod slo;
+
+pub use accountant::{VtcAccountant, VtcConfig};
+pub use policy::{build_policy, PolicyKind, PriorityPolicy, SloAwarePolicy, TracePolicy, VtcPolicy};
+pub use slo::{SloConfig, SloTracker};
+
+/// Tenant (client / user account) identifier. Conversations carry one;
+/// fairness is accounted at this granularity.
+pub type TenantId = u32;
+
+/// Which priority policy the engine runs, plus the knobs of the online
+/// ones. Part of [`crate::config::EngineConfig`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FairnessConfig {
+    pub policy: PolicyKind,
+    pub vtc: VtcConfig,
+    pub slo: SloConfig,
+}
+
+impl Default for FairnessConfig {
+    fn default() -> Self {
+        FairnessConfig {
+            // Default preserves the seed behavior: offline priority traces.
+            policy: PolicyKind::Trace,
+            vtc: VtcConfig::default(),
+            slo: SloConfig::default(),
+        }
+    }
+}

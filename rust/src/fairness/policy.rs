@@ -1,0 +1,351 @@
+//! [`PriorityPolicy`] — the engine's pluggable source of scheduling
+//! priorities.
+//!
+//! The serving engine drives the active policy with per-iteration
+//! service events (`on_tokens`), latency observations (`on_ttft` /
+//! `on_tbt`), and a per-epoch `on_schedule` callback before it queries
+//! `priority_of` for every live request. Priorities feed the existing
+//! admission logic ([`crate::coordinator::scheduler`]) unchanged —
+//! higher is better, FCFS within a level.
+//!
+//! Three implementations:
+//! - [`TracePolicy`] — wraps the offline
+//!   [`crate::coordinator::priority::PriorityTrace`] (the seed behavior,
+//!   bit-for-bit).
+//! - [`VtcPolicy`] — online per-tenant virtual-token counters; the
+//!   least-served active tenant gets the top priority level.
+//! - [`SloAwarePolicy`] — VTC base ranking plus a bounded deficit boost
+//!   for tenants missing their TTFT/TBT SLOs.
+
+use crate::coordinator::priority::{Pattern, PriorityTrace};
+
+use super::accountant::{VtcAccountant, VtcConfig};
+use super::slo::{SloConfig, SloTracker};
+use super::{FairnessConfig, TenantId};
+
+/// Which policy to run (CLI/config selectable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Offline priority trace (random / markov / roundrobin pattern).
+    Trace,
+    /// Online virtual-token counters (VTC).
+    Vtc,
+    /// VTC base plus SLO-deficit boosting.
+    SloAware,
+}
+
+impl PolicyKind {
+    pub fn by_name(s: &str) -> Option<PolicyKind> {
+        match s {
+            "trace" => Some(PolicyKind::Trace),
+            "vtc" => Some(PolicyKind::Vtc),
+            "slo" | "slo-aware" | "sloaware" => Some(PolicyKind::SloAware),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PolicyKind::Trace => "trace",
+            PolicyKind::Vtc => "vtc",
+            PolicyKind::SloAware => "slo-aware",
+        }
+    }
+}
+
+/// The engine ↔ policy contract. All hooks default to no-ops so passive
+/// policies (the trace) only implement `priority_of`.
+pub trait PriorityPolicy {
+    fn label(&self) -> &'static str;
+
+    /// Service rendered to `tenant` since the last call (one prefill
+    /// chunk or one decode token).
+    fn on_tokens(&mut self, _tenant: TenantId, _prefill_tokens: u64, _decode_tokens: u64) {}
+
+    /// A turn's first token was emitted for `tenant` after `ttft_s`.
+    fn on_ttft(&mut self, _tenant: TenantId, _ttft_s: f64) {}
+
+    /// An inter-token gap of `tbt_s` was observed for `tenant`.
+    fn on_tbt(&mut self, _tenant: TenantId, _tbt_s: f64) {}
+
+    /// Called once per priority-update epoch with the distinct tenants
+    /// of all live requests, before `priority_of` is queried for that
+    /// epoch.
+    fn on_schedule(&mut self, _epoch: u64, _active: &[TenantId]) {}
+
+    /// Priority of conversation `conv` belonging to `tenant` at update
+    /// epoch `epoch` (higher = better).
+    fn priority_of(&mut self, conv: u64, tenant: TenantId, epoch: u64) -> i64;
+}
+
+/// Build the configured policy. `pattern`, `levels`, and `seed` feed the
+/// trace policy; the online policies map their ranking onto the same
+/// `levels` so the scheduler sees an unchanged priority domain.
+pub fn build_policy(
+    cfg: &FairnessConfig,
+    pattern: Pattern,
+    levels: usize,
+    seed: u64,
+) -> Box<dyn PriorityPolicy> {
+    match cfg.policy {
+        PolicyKind::Trace => Box::new(TracePolicy::new(pattern, levels, seed)),
+        PolicyKind::Vtc => Box::new(VtcPolicy::new(cfg.vtc.clone(), levels)),
+        PolicyKind::SloAware => {
+            Box::new(SloAwarePolicy::new(cfg.vtc.clone(), cfg.slo.clone(), levels))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace
+// ---------------------------------------------------------------------
+
+/// The offline trace as a policy (seed behavior, unchanged).
+pub struct TracePolicy {
+    trace: PriorityTrace,
+}
+
+impl TracePolicy {
+    pub fn new(pattern: Pattern, levels: usize, seed: u64) -> Self {
+        TracePolicy {
+            trace: PriorityTrace::new(pattern, levels, seed),
+        }
+    }
+}
+
+impl PriorityPolicy for TracePolicy {
+    fn label(&self) -> &'static str {
+        "trace"
+    }
+
+    fn priority_of(&mut self, conv: u64, _tenant: TenantId, epoch: u64) -> i64 {
+        self.trace.priority_of(conv, epoch)
+    }
+}
+
+// ---------------------------------------------------------------------
+// VTC
+// ---------------------------------------------------------------------
+
+/// Online VTC: every epoch, active tenants are ranked by accrued virtual
+/// service (ascending) and the rank is mapped onto the priority levels —
+/// least-served tenant → top level.
+pub struct VtcPolicy {
+    acct: VtcAccountant,
+    levels: i64,
+    /// Per-tenant priority level for the current epoch; rebuilt once in
+    /// `on_schedule` so `priority_of` (called per live request) is a
+    /// lookup, not a rescan.
+    level_of: std::collections::HashMap<TenantId, i64>,
+}
+
+impl VtcPolicy {
+    pub fn new(cfg: VtcConfig, levels: usize) -> Self {
+        VtcPolicy {
+            acct: VtcAccountant::new(cfg),
+            levels: levels.max(1) as i64,
+            level_of: std::collections::HashMap::new(),
+        }
+    }
+
+    pub fn accountant(&self) -> &VtcAccountant {
+        &self.acct
+    }
+}
+
+impl PriorityPolicy for VtcPolicy {
+    fn label(&self) -> &'static str {
+        "vtc"
+    }
+
+    fn on_tokens(&mut self, tenant: TenantId, prefill_tokens: u64, decode_tokens: u64) {
+        self.acct.charge(tenant, prefill_tokens, decode_tokens);
+    }
+
+    fn on_schedule(&mut self, _epoch: u64, active: &[TenantId]) {
+        self.acct.set_active(active);
+        let mut ranked: Vec<(f64, TenantId)> = active
+            .iter()
+            .map(|&t| (self.acct.virtual_service(t), t))
+            .collect();
+        ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        self.level_of.clear();
+        let n = ranked.len();
+        if n == 1 {
+            self.level_of.insert(ranked[0].1, self.levels - 1);
+            return;
+        }
+        // Competition ranking: tenants with equal service share a rank
+        // (ties must map to the same priority level, not be split by id);
+        // rank 0 (least served) → levels-1, last rank → 0.
+        let mut rank = 0usize;
+        for (i, &(service, tenant)) in ranked.iter().enumerate() {
+            if i > 0 && service > ranked[i - 1].0 {
+                rank = i;
+            }
+            let q = rank as f64 / (n - 1) as f64;
+            let level = ((1.0 - q) * (self.levels - 1) as f64).round() as i64;
+            self.level_of.insert(tenant, level);
+        }
+    }
+
+    fn priority_of(&mut self, _conv: u64, tenant: TenantId, _epoch: u64) -> i64 {
+        // Unseen tenant (no live requests at the last epoch): treat as
+        // least-served, consistent with the newcomer-lift semantics.
+        self.level_of
+            .get(&tenant)
+            .copied()
+            .unwrap_or(self.levels - 1)
+    }
+}
+
+// ---------------------------------------------------------------------
+// SLO-aware
+// ---------------------------------------------------------------------
+
+/// VTC ranking compressed into the lower levels, plus a bounded
+/// SLO-deficit boost on top — a tenant missing its targets climbs up to
+/// `max_boost` levels above its fair-share rank.
+pub struct SloAwarePolicy {
+    base: VtcPolicy,
+    slo: SloTracker,
+}
+
+impl SloAwarePolicy {
+    pub fn new(vtc: VtcConfig, slo: SloConfig, levels: usize) -> Self {
+        let base_levels = levels.saturating_sub(slo.max_boost.max(0) as usize).max(1);
+        SloAwarePolicy {
+            base: VtcPolicy::new(vtc, base_levels),
+            slo: SloTracker::new(slo),
+        }
+    }
+}
+
+impl PriorityPolicy for SloAwarePolicy {
+    fn label(&self) -> &'static str {
+        "slo-aware"
+    }
+
+    fn on_tokens(&mut self, tenant: TenantId, prefill_tokens: u64, decode_tokens: u64) {
+        self.base.on_tokens(tenant, prefill_tokens, decode_tokens);
+    }
+
+    fn on_ttft(&mut self, tenant: TenantId, ttft_s: f64) {
+        self.slo.observe_ttft(tenant, ttft_s);
+    }
+
+    fn on_tbt(&mut self, tenant: TenantId, tbt_s: f64) {
+        self.slo.observe_tbt(tenant, tbt_s);
+    }
+
+    fn on_schedule(&mut self, epoch: u64, active: &[TenantId]) {
+        self.base.on_schedule(epoch, active);
+    }
+
+    fn priority_of(&mut self, conv: u64, tenant: TenantId, epoch: u64) -> i64 {
+        self.base.priority_of(conv, tenant, epoch) + self.slo.boost(tenant)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names() {
+        assert_eq!(PolicyKind::by_name("trace"), Some(PolicyKind::Trace));
+        assert_eq!(PolicyKind::by_name("vtc"), Some(PolicyKind::Vtc));
+        assert_eq!(PolicyKind::by_name("slo"), Some(PolicyKind::SloAware));
+        assert_eq!(PolicyKind::by_name("slo-aware"), Some(PolicyKind::SloAware));
+        assert_eq!(PolicyKind::by_name("nope"), None);
+    }
+
+    #[test]
+    fn trace_policy_matches_raw_trace() {
+        let mut p = TracePolicy::new(Pattern::Markov, 8, 11);
+        let mut t = PriorityTrace::new(Pattern::Markov, 8, 11);
+        for conv in 0..10 {
+            for e in 0..20 {
+                assert_eq!(p.priority_of(conv, 0, e), t.priority_of(conv, e));
+            }
+        }
+    }
+
+    #[test]
+    fn vtc_ranks_least_served_highest() {
+        let mut p = VtcPolicy::new(VtcConfig::default(), 8);
+        p.on_schedule(0, &[0, 1, 2]);
+        // Tenant 0 hogs service.
+        p.on_tokens(0, 1000, 500);
+        p.on_tokens(1, 100, 50);
+        p.on_schedule(1, &[0, 1, 2]);
+        let p0 = p.priority_of(10, 0, 1);
+        let p1 = p.priority_of(11, 1, 1);
+        let p2 = p.priority_of(12, 2, 1);
+        assert!(p2 > p1, "untouched tenant outranks lightly-served: {p2} !> {p1}");
+        assert!(p1 > p0, "lightly-served outranks the hog: {p1} !> {p0}");
+        assert_eq!(p2, 7, "least served gets the top level");
+        assert_eq!(p0, 0, "most served gets the bottom level");
+    }
+
+    #[test]
+    fn vtc_single_tenant_gets_top_level() {
+        let mut p = VtcPolicy::new(VtcConfig::default(), 8);
+        p.on_schedule(0, &[5]);
+        assert_eq!(p.priority_of(0, 5, 0), 7);
+    }
+
+    #[test]
+    fn vtc_priorities_stay_in_level_range() {
+        let mut p = VtcPolicy::new(VtcConfig::default(), 5);
+        let active: Vec<TenantId> = (0..13).collect();
+        p.on_schedule(0, &active);
+        for &t in &active {
+            p.on_tokens(t, (t as u64 + 1) * 17, t as u64 * 3);
+        }
+        p.on_schedule(1, &active);
+        for &t in &active {
+            let v = p.priority_of(t as u64, t, 1);
+            assert!((0..5).contains(&v), "priority {v} out of range");
+        }
+    }
+
+    #[test]
+    fn slo_boost_promotes_missing_tenant() {
+        let slo = SloConfig {
+            ttft_target_s: 1.0,
+            tbt_target_s: 0.1,
+            window: 8,
+            max_boost: 2,
+        };
+        let mut p = SloAwarePolicy::new(VtcConfig::default(), slo, 8);
+        p.on_schedule(0, &[0, 1]);
+        // Equal service; tenant 1 misses its TTFT target badly.
+        p.on_tokens(0, 100, 100);
+        p.on_tokens(1, 100, 100);
+        for _ in 0..8 {
+            p.on_ttft(0, 0.2); // hits
+            p.on_ttft(1, 6.0); // misses
+        }
+        p.on_schedule(1, &[0, 1]);
+        let a = p.priority_of(0, 0, 1);
+        let b = p.priority_of(1, 1, 1);
+        assert!(b > a, "SLO-missing tenant must be boosted: {b} !> {a}");
+    }
+
+    #[test]
+    fn build_policy_dispatch() {
+        let mut cfg = FairnessConfig::default();
+        assert_eq!(
+            build_policy(&cfg, Pattern::Markov, 8, 1).label(),
+            "trace"
+        );
+        cfg.policy = PolicyKind::Vtc;
+        assert_eq!(build_policy(&cfg, Pattern::Markov, 8, 1).label(), "vtc");
+        cfg.policy = PolicyKind::SloAware;
+        assert_eq!(
+            build_policy(&cfg, Pattern::Markov, 8, 1).label(),
+            "slo-aware"
+        );
+    }
+}

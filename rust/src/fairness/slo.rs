@@ -1,0 +1,184 @@
+//! Per-tenant TTFT/TBT SLO targets with online attainment tracking and
+//! deficit-based priority boosting.
+//!
+//! Each tenant keeps a sliding window of recent latency observations
+//! scored against its targets. The *attainment* is the hit fraction over
+//! that window; the *deficit* (1 − attainment) maps monotonically onto a
+//! bounded priority boost, so tenants missing their SLOs are promoted
+//! and tenants comfortably within them are not (Andes-style
+//! QoE-deficit scheduling, applied per tenant).
+
+use std::collections::{HashMap, VecDeque};
+
+use super::TenantId;
+
+/// SLO targets and boost shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloConfig {
+    /// Time-to-first-token target, seconds.
+    pub ttft_target_s: f64,
+    /// Time-between-tokens target, seconds.
+    pub tbt_target_s: f64,
+    /// Sliding window: number of recent observations kept per tenant.
+    pub window: usize,
+    /// Priority levels added at zero attainment (deficit 1.0).
+    pub max_boost: i64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            ttft_target_s: 2.0,
+            tbt_target_s: 0.2,
+            window: 64,
+            max_boost: 2,
+        }
+    }
+}
+
+/// Online attainment tracker. TTFT and TBT keep *separate* windows: a
+/// turn yields one TTFT observation but hundreds of TBT observations,
+/// so a shared ring would flush TTFT misses out within a single turn
+/// and the policy could never react to them.
+#[derive(Clone, Debug)]
+pub struct SloTracker {
+    cfg: SloConfig,
+    ttft: HashMap<TenantId, VecDeque<bool>>,
+    tbt: HashMap<TenantId, VecDeque<bool>>,
+}
+
+fn push(map: &mut HashMap<TenantId, VecDeque<bool>>, window: usize, tenant: TenantId, hit: bool) {
+    let q = map.entry(tenant).or_default();
+    q.push_back(hit);
+    while q.len() > window {
+        q.pop_front();
+    }
+}
+
+/// Hit fraction of one window; `None` when empty.
+fn frac(map: &HashMap<TenantId, VecDeque<bool>>, tenant: TenantId) -> Option<f64> {
+    match map.get(&tenant) {
+        Some(q) if !q.is_empty() => {
+            Some(q.iter().filter(|&&h| h).count() as f64 / q.len() as f64)
+        }
+        _ => None,
+    }
+}
+
+impl SloTracker {
+    pub fn new(cfg: SloConfig) -> Self {
+        SloTracker {
+            cfg,
+            ttft: HashMap::new(),
+            tbt: HashMap::new(),
+        }
+    }
+
+    pub fn observe_ttft(&mut self, tenant: TenantId, ttft_s: f64) {
+        let hit = ttft_s <= self.cfg.ttft_target_s;
+        push(&mut self.ttft, self.cfg.window.max(1), tenant, hit);
+    }
+
+    pub fn observe_tbt(&mut self, tenant: TenantId, tbt_s: f64) {
+        let hit = tbt_s <= self.cfg.tbt_target_s;
+        push(&mut self.tbt, self.cfg.window.max(1), tenant, hit);
+    }
+
+    /// Worst-dimension hit fraction over the tenant's windows; 1.0 with
+    /// no observations (no evidence of trouble → no boost).
+    pub fn attainment(&self, tenant: TenantId) -> f64 {
+        let t = frac(&self.ttft, tenant).unwrap_or(1.0);
+        let b = frac(&self.tbt, tenant).unwrap_or(1.0);
+        t.min(b)
+    }
+
+    /// 1 − attainment, in [0, 1].
+    pub fn deficit(&self, tenant: TenantId) -> f64 {
+        1.0 - self.attainment(tenant)
+    }
+
+    /// Priority levels to add for `tenant`: 0 at full attainment, up to
+    /// `max_boost` at zero. Monotone non-decreasing in the deficit.
+    pub fn boost(&self, tenant: TenantId) -> i64 {
+        let b = (self.deficit(tenant) * self.cfg.max_boost as f64).ceil() as i64;
+        b.clamp(0, self.cfg.max_boost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracker(max_boost: i64) -> SloTracker {
+        SloTracker::new(SloConfig {
+            ttft_target_s: 1.0,
+            tbt_target_s: 0.1,
+            window: 16,
+            max_boost,
+        })
+    }
+
+    #[test]
+    fn no_observations_means_no_boost() {
+        let t = tracker(3);
+        assert_eq!(t.attainment(0), 1.0);
+        assert_eq!(t.boost(0), 0);
+    }
+
+    #[test]
+    fn full_attainment_no_boost_full_miss_max_boost() {
+        let mut t = tracker(3);
+        for _ in 0..16 {
+            t.observe_ttft(1, 0.5); // hit
+            t.observe_ttft(2, 5.0); // miss
+        }
+        assert_eq!(t.boost(1), 0);
+        assert_eq!(t.boost(2), 3);
+    }
+
+    #[test]
+    fn boost_monotone_in_deficit() {
+        // Feed progressively more misses; the boost must never decrease.
+        let mut t = tracker(4);
+        for _ in 0..16 {
+            t.observe_tbt(0, 0.05); // all hits
+        }
+        let mut last = t.boost(0);
+        assert_eq!(last, 0);
+        for _ in 0..16 {
+            t.observe_tbt(0, 1.0); // misses roll the hits out
+            let b = t.boost(0);
+            assert!(b >= last, "boost decreased: {b} < {last}");
+            last = b;
+        }
+        assert_eq!(last, 4);
+    }
+
+    #[test]
+    fn window_is_sliding() {
+        let mut t = tracker(2);
+        for _ in 0..16 {
+            t.observe_ttft(0, 9.0); // all miss
+        }
+        assert_eq!(t.boost(0), 2);
+        for _ in 0..16 {
+            t.observe_ttft(0, 0.1); // recovery fills the window with hits
+        }
+        assert_eq!(t.boost(0), 0, "old misses must age out");
+    }
+
+    #[test]
+    fn tbt_flood_cannot_mask_ttft_misses() {
+        // One TTFT miss per turn plus hundreds of TBT hits: the TTFT
+        // window must keep registering the misses (separate windows).
+        let mut t = tracker(2);
+        for _ in 0..4 {
+            t.observe_ttft(0, 9.0); // every turn misses TTFT
+            for _ in 0..200 {
+                t.observe_tbt(0, 0.01); // decode tokens all hit TBT
+            }
+        }
+        assert!((t.attainment(0) - 0.0).abs() < 1e-9, "TTFT misses masked");
+        assert_eq!(t.boost(0), 2);
+    }
+}

@@ -18,16 +18,31 @@
 //!    with contamination tracking, cutting multi-turn swap-out volume
 //!    (paper §3.3, Challenge #3).
 //!
+//! On top of the reproduction, the [`fairness`] subsystem supplies the
+//! *online* policies the paper presupposes but replays from offline
+//! traces: per-tenant virtual-token accounting (VTC) and SLO-deficit
+//! boosting compute live scheduler priorities from observed service, so
+//! the cheap-context-switch machinery is exercised by realistic
+//! multi-tenant contention (`exp fairness`).
+//!
 //! ## Architecture (three layers, Python never on the request path)
 //!
 //! - **L3** (this crate): coordinator — scheduler, allocators, swap
-//!   managers, metrics, CLI. Two backends: a virtual-time simulation of
-//!   the paper's A10/A100+PCIe testbed ([`sim`]) and real execution of an
-//!   AOT-compiled paged-KV transformer via PJRT ([`runtime`]).
+//!   managers, the [`fairness`] priority policies, metrics, CLI. Two
+//!   backends: a virtual-time simulation of the paper's A10/A100+PCIe
+//!   testbed ([`sim`]) and real execution of an AOT-compiled paged-KV
+//!   transformer via PJRT ([`runtime`], behind the `xla` feature).
 //! - **L2**: JAX paged transformer (`python/compile/model.py`), lowered
 //!   once to HLO text artifacts.
 //! - **L1**: Pallas kernels (`python/compile/kernels/`): decode paged
 //!   attention + prefill-with-prefix.
+//!
+//! The priority flow: [`workload`] assigns every conversation a tenant;
+//! each iteration the engine reports per-tenant service and latency to
+//! the configured [`fairness::PriorityPolicy`]; each update epoch the
+//! policy maps accrued (weighted) virtual service and SLO deficits onto
+//! priority levels; [`coordinator::scheduler`] consumes those priorities
+//! unchanged.
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper figure/table to a module and bench.
@@ -36,6 +51,7 @@ pub mod block;
 pub mod config;
 pub mod coordinator;
 pub mod exp;
+pub mod fairness;
 pub mod memory;
 pub mod metrics;
 pub mod runtime;
@@ -47,3 +63,4 @@ pub mod workload;
 
 pub use config::{EngineConfig, GpuSpec, ModelSpec, Preset, SchedulerConfig};
 pub use coordinator::engine::{ServeOutcome, ServingEngine};
+pub use fairness::{FairnessConfig, PolicyKind, PriorityPolicy};

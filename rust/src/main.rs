@@ -3,13 +3,17 @@
 //!
 //! ```text
 //! fastswitch exp <id|all> [--conversations N] [--seed S] [--out FILE]
-//!     Regenerate a paper figure/table (fig1..fig13, table1).
+//!     Regenerate a paper figure/table (fig1..fig13, table1), or the
+//!     fairness-policy showdown (`exp fairness`).
 //!
 //! fastswitch simulate [--preset llama8b_a10|qwen32b_a100]
 //!     [--policy vllm|vllm+dbg|vllm+dbg+reuse|fastswitch]
 //!     [--pattern markov|random|roundrobin] [--freq F]
+//!     [--fairness trace|vtc|slo] [--tenants N] [--heavy-share F]
+//!     [--arrivals poisson|bursty] [--burst B]
 //!     [--conversations N] [--rate R] [--seed S] [--config FILE]
-//!     One simulation run; prints the SLO summary.
+//!     One simulation run; prints the SLO summary (and a per-tenant
+//!     breakdown when --tenants > 1).
 //!
 //! fastswitch serve [--artifacts DIR] [--requests N] [--policy ...]
 //!     Serve batched requests on the real AOT-compiled model via PJRT.
@@ -21,7 +25,8 @@
 use fastswitch::config::{file::ConfigFile, EngineConfig, Granularity, Preset};
 use fastswitch::coordinator::priority::Pattern;
 use fastswitch::exp;
-use fastswitch::exp::runner::{run_sim, Scale};
+use fastswitch::exp::runner::{run_sim_with, Scale, WorkloadSpec};
+use fastswitch::fairness::PolicyKind;
 use fastswitch::runtime::PjrtModel;
 use fastswitch::server::{RealEngine, RealEngineConfig, RealRequestSpec};
 use fastswitch::util::cli::Args;
@@ -96,12 +101,13 @@ fn cmd_exp(args: &Args) {
         "fig12" => reports.push(exp::fig12::run(&scale)),
         "fig13" => reports.push(exp::fig13::run(&[2, 8, 20, 40, 60, 80], &scale)),
         "table1" => reports.push(exp::table1::run(&scale)),
+        "fairness" => reports.push(exp::fairness_showdown::run(&scale)),
         other => eprintln!("unknown experiment {other:?}"),
     };
     if id == "all" {
         for e in [
             "fig1", "fig2", "fig3", "fig4", "fig6", "fig8", "fig9", "fig10", "fig11",
-            "fig12", "fig13", "table1",
+            "fig12", "fig13", "table1", "fairness",
         ] {
             eprintln!("[exp] running {e} ...");
             run_one(e, &mut reports);
@@ -123,6 +129,7 @@ fn cmd_exp(args: &Args) {
 fn cmd_simulate(args: &Args) {
     let mut pattern_name = args.get_or("pattern", "markov").to_string();
     let mut scale = scale_from(args);
+    let mut spec = WorkloadSpec::default();
     let (mut cfg, preset) = if let Some(path) = args.get("config") {
         let f = ConfigFile::load(path).expect("config file");
         if let Some(n) = f.get_usize("workload", "conversations") {
@@ -136,6 +143,15 @@ fn cmd_simulate(args: &Args) {
         }
         if let Some(p) = f.get("workload", "pattern") {
             pattern_name = p.to_string();
+        }
+        if let Some(n) = f.get_usize("workload", "tenants") {
+            spec.tenants = n;
+        }
+        if let Some(h) = f.get_f64("workload", "heavy_share") {
+            spec.heavy_share = h;
+        }
+        if f.get("workload", "arrivals") == Some("bursty") {
+            spec.burst = Some(f.get_f64("workload", "burst").unwrap_or(4.0));
         }
         (f.engine().expect("engine config"), f.preset().expect("preset"))
     } else {
@@ -152,14 +168,34 @@ fn cmd_simulate(args: &Args) {
     if let Some(f) = args.get("freq") {
         cfg.scheduler.priority_update_freq = f.parse().expect("freq");
     }
+    if let Some(p) = args.get("fairness") {
+        cfg.fairness.policy = PolicyKind::by_name(p).expect("unknown fairness policy");
+    }
+    if let Some(n) = args.get("tenants") {
+        spec.tenants = n.parse().expect("tenants");
+    }
+    if let Some(h) = args.get("heavy-share") {
+        spec.heavy_share = h.parse().expect("heavy-share");
+    }
+    if let Some(a) = args.get("arrivals") {
+        // Explicit CLI choice overrides the config file in both
+        // directions (bursty → poisson too).
+        spec.burst = (a == "bursty").then(|| args.get_f64("burst", 4.0));
+    }
     let pattern = Pattern::by_name(&pattern_name).expect("unknown pattern");
 
     eprintln!(
-        "[simulate] {} on {}, pattern {:?}, freq {}, {} conversations",
-        cfg.label, preset.model.name, pattern, cfg.scheduler.priority_update_freq,
-        scale.conversations
+        "[simulate] {} on {}, pattern {:?}, freq {}, priorities {}, {} conversations, {} tenant(s)",
+        cfg.label,
+        preset.model.name,
+        pattern,
+        cfg.scheduler.priority_update_freq,
+        cfg.fairness.policy.label(),
+        scale.conversations,
+        spec.tenants
     );
-    let out = run_sim(cfg, preset, pattern, &scale);
+    let multi_tenant = spec.tenants > 1;
+    let out = run_sim_with(cfg, preset, pattern, &scale, &spec);
     let ttft = out.recorder.ttft();
     let tbt = out.recorder.tbt();
     let (inf, swap, sched) = out.recorder.stall_breakdown();
@@ -189,6 +225,28 @@ fn cmd_simulate(args: &Args) {
         out.swap_stats.swap_out_ops,
         out.swap_stats.avg_granularity()
     );
+    if multi_tenant {
+        println!("== per-tenant breakdown ==");
+        let ttft = out.recorder.ttft_by_tenant();
+        let tbt = out.recorder.tbt_by_tenant();
+        for (tenant, share) in out.recorder.token_shares() {
+            let tt = ttft.iter().find(|&&(t, _)| t == tenant).map(|(_, p)| p);
+            let tb = tbt.iter().find(|&&(t, _)| t == tenant).map(|(_, p)| p);
+            println!(
+                "tenant {tenant:>3}{} : share {:.3}  TTFT P50/P99 {:.3}/{:.3} s  TBT P99 {:.3} s",
+                if tenant == 0 { " (heavy)" } else { "        " },
+                share,
+                tt.map(|p| p.p(50.0)).unwrap_or(f64::NAN),
+                tt.map(|p| p.p(99.0)).unwrap_or(f64::NAN),
+                tb.map(|p| p.p(99.0)).unwrap_or(f64::NAN),
+            );
+        }
+        println!(
+            "max/min token share : {:.2}   Jain index : {:.3}",
+            out.recorder.max_min_share_ratio(),
+            out.recorder.jain_fairness()
+        );
+    }
 }
 
 fn cmd_serve(args: &Args) {

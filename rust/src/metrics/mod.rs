@@ -1,9 +1,12 @@
-//! Serving metrics: TTFT / TBT / throughput, stall accounting, and the
-//! token-generation-efficiency windows of Fig. 12.
+//! Serving metrics: TTFT / TBT / throughput, stall accounting, the
+//! token-generation-efficiency windows of Fig. 12, and per-tenant
+//! breakdowns (tail latency and token shares) for the fairness policies.
 //!
 //! TTFT is measured **per turn** (paper §4: "latency experienced ...
 //! before the first token of each turn is generated"); TBT is the gap
-//! between consecutive generated tokens of the same turn.
+//! between consecutive generated tokens of the same turn. Every turn is
+//! tagged with its owning tenant so fairness experiments can split all
+//! of the above by tenant.
 
 use crate::memory::RequestId;
 use crate::sim::clock::{to_secs, Ns};
@@ -34,6 +37,7 @@ pub struct IterationSample {
 #[derive(Clone, Debug, Default)]
 struct TurnRecord {
     arrival: Ns,
+    tenant: u32,
     first_token: Option<Ns>,
     token_times: Vec<Ns>,
 }
@@ -56,10 +60,11 @@ pub struct Recorder {
 
 impl Recorder {
     /// A turn became servable (its request arrived / think time elapsed).
-    pub fn turn_arrival(&mut self, req: RequestId, turn: u32, at: Ns) {
+    pub fn turn_arrival(&mut self, req: RequestId, turn: u32, at: Ns, tenant: u32) {
         let idx = self.turns.len();
         self.turns.push(TurnRecord {
             arrival: at,
+            tenant,
             ..Default::default()
         });
         self.open.insert((req, turn), idx);
@@ -151,6 +156,118 @@ impl Recorder {
         Percentiles::from(samples)
     }
 
+    // ---- per-tenant summaries (fairness policies) -----------------------
+
+    /// Distinct tenants observed, sorted.
+    pub fn tenants(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.turns.iter().map(|t| t.tenant).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Per-tenant TTFT percentiles, sorted by tenant.
+    pub fn ttft_by_tenant(&self) -> Vec<(u32, Percentiles)> {
+        let mut samples: HashMap<u32, Vec<f64>> = HashMap::new();
+        for t in &self.turns {
+            if let Some(f) = t.first_token {
+                samples
+                    .entry(t.tenant)
+                    .or_default()
+                    .push(to_secs(f - t.arrival));
+            }
+        }
+        let mut v: Vec<(u32, Percentiles)> = samples
+            .into_iter()
+            .map(|(t, s)| (t, Percentiles::from(s)))
+            .collect();
+        v.sort_by_key(|&(t, _)| t);
+        v
+    }
+
+    /// Per-tenant TBT percentiles, sorted by tenant.
+    pub fn tbt_by_tenant(&self) -> Vec<(u32, Percentiles)> {
+        let mut samples: HashMap<u32, Vec<f64>> = HashMap::new();
+        for t in &self.turns {
+            let s = samples.entry(t.tenant).or_default();
+            for w in t.token_times.windows(2) {
+                s.push(to_secs(w[1] - w[0]));
+            }
+        }
+        let mut v: Vec<(u32, Percentiles)> = samples
+            .into_iter()
+            .map(|(t, s)| (t, Percentiles::from(s)))
+            .collect();
+        v.sort_by_key(|&(t, _)| t);
+        v
+    }
+
+    /// Tokens generated per tenant (every tenant with a recorded turn
+    /// appears, even at 0 tokens — starvation must be visible).
+    pub fn tokens_by_tenant(&self) -> Vec<(u32, u64)> {
+        self.tokens_by_tenant_until(Ns::MAX)
+    }
+
+    /// Tokens generated per tenant up to virtual time `cutoff`
+    /// (inclusive) — the mid-flight share snapshot fairness bounds are
+    /// asserted on.
+    pub fn tokens_by_tenant_until(&self, cutoff: Ns) -> Vec<(u32, u64)> {
+        let mut counts: HashMap<u32, u64> = HashMap::new();
+        for t in &self.turns {
+            let n = t.token_times.iter().filter(|&&at| at <= cutoff).count() as u64;
+            *counts.entry(t.tenant).or_insert(0) += n;
+        }
+        let mut v: Vec<(u32, u64)> = counts.into_iter().collect();
+        v.sort_by_key(|&(t, _)| t);
+        v
+    }
+
+    /// Per-tenant fraction of all generated tokens, sorted by tenant.
+    pub fn token_shares(&self) -> Vec<(u32, f64)> {
+        let counts = self.tokens_by_tenant();
+        let total: u64 = counts.iter().map(|&(_, n)| n).sum();
+        if total == 0 {
+            return counts.iter().map(|&(t, _)| (t, 0.0)).collect();
+        }
+        counts
+            .iter()
+            .map(|&(t, n)| (t, n as f64 / total as f64))
+            .collect()
+    }
+
+    /// Max-min token-share ratio across tenants (1.0 = perfectly even;
+    /// `INFINITY` when some tenant is fully starved; `NAN` with no data).
+    pub fn max_min_share_ratio(&self) -> f64 {
+        let shares = self.token_shares();
+        if shares.is_empty() {
+            return f64::NAN;
+        }
+        let max = shares.iter().map(|&(_, s)| s).fold(0.0f64, f64::max);
+        let min = shares.iter().map(|&(_, s)| s).fold(f64::INFINITY, f64::min);
+        if min == 0.0 {
+            f64::INFINITY
+        } else {
+            max / min
+        }
+    }
+
+    /// Jain's fairness index over per-tenant token counts:
+    /// `(Σx)² / (n·Σx²)` — 1.0 when perfectly even, → 1/n under full
+    /// capture by one tenant.
+    pub fn jain_fairness(&self) -> f64 {
+        let counts = self.tokens_by_tenant();
+        if counts.is_empty() {
+            return f64::NAN;
+        }
+        let n = counts.len() as f64;
+        let sum: f64 = counts.iter().map(|&(_, c)| c as f64).sum();
+        let sq: f64 = counts.iter().map(|&(_, c)| (c as f64) * (c as f64)).sum();
+        if sq == 0.0 {
+            return f64::NAN;
+        }
+        sum * sum / (n * sq)
+    }
+
     /// Fig. 1 / Fig. 10: total stall vs inference on the critical path.
     pub fn stall_breakdown(&self) -> (Ns, Ns, Ns) {
         let inf = self.iterations.iter().map(|s| s.inference_ns).sum();
@@ -192,11 +309,11 @@ mod tests {
     #[test]
     fn ttft_per_turn() {
         let mut r = Recorder::default();
-        r.turn_arrival(1, 0, 0);
+        r.turn_arrival(1, 0, 0, 0);
         r.token(1, 0, 2 * SEC);
         r.token(1, 0, 2 * SEC + 100 * MS);
         r.turn_finished(1, 0);
-        r.turn_arrival(1, 1, 10 * SEC);
+        r.turn_arrival(1, 1, 10 * SEC, 0);
         r.token(1, 1, 10 * SEC + 500 * MS);
         let ttft = r.ttft();
         assert_eq!(ttft.len(), 2);
@@ -207,7 +324,7 @@ mod tests {
     #[test]
     fn tbt_gaps() {
         let mut r = Recorder::default();
-        r.turn_arrival(1, 0, 0);
+        r.turn_arrival(1, 0, 0, 0);
         r.token(1, 0, 0);
         r.token(1, 0, 100 * MS);
         r.token(1, 0, 400 * MS);
@@ -219,7 +336,7 @@ mod tests {
     #[test]
     fn throughput() {
         let mut r = Recorder::default();
-        r.turn_arrival(1, 0, 0);
+        r.turn_arrival(1, 0, 0, 0);
         for i in 0..100 {
             r.token(1, 0, i * MS);
         }
@@ -251,5 +368,64 @@ mod tests {
         r.token(9, 0, 0);
         assert_eq!(r.total_tokens, 0);
         assert!(r.ttft().is_empty());
+    }
+
+    #[test]
+    fn per_tenant_breakdown() {
+        let mut r = Recorder::default();
+        // Tenant 0: one turn, fast first token, 3 tokens.
+        r.turn_arrival(1, 0, 0, 0);
+        r.token(1, 0, SEC);
+        r.token(1, 0, SEC + 100 * MS);
+        r.token(1, 0, SEC + 200 * MS);
+        // Tenant 5: one turn, slow first token, 1 token.
+        r.turn_arrival(2, 0, 0, 5);
+        r.token(2, 0, 4 * SEC);
+        assert_eq!(r.tenants(), vec![0, 5]);
+        let ttft = r.ttft_by_tenant();
+        assert_eq!(ttft.len(), 2);
+        assert!((ttft[0].1.p(50.0) - 1.0).abs() < 1e-9);
+        assert!((ttft[1].1.p(50.0) - 4.0).abs() < 1e-9);
+        let tbt = r.tbt_by_tenant();
+        assert_eq!(tbt[0].0, 0);
+        assert_eq!(tbt[0].1.len(), 2);
+        assert_eq!(r.tokens_by_tenant(), vec![(0, 3), (5, 1)]);
+        let shares = r.token_shares();
+        assert!((shares[0].1 - 0.75).abs() < 1e-9);
+        assert!((shares[1].1 - 0.25).abs() < 1e-9);
+        assert!((r.max_min_share_ratio() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tokens_until_cutoff() {
+        let mut r = Recorder::default();
+        r.turn_arrival(1, 0, 0, 0);
+        r.token(1, 0, SEC);
+        r.token(1, 0, 2 * SEC);
+        r.token(1, 0, 3 * SEC);
+        assert_eq!(r.tokens_by_tenant_until(2 * SEC), vec![(0, 2)]);
+        assert_eq!(r.tokens_by_tenant(), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        let mut even = Recorder::default();
+        even.turn_arrival(1, 0, 0, 0);
+        even.turn_arrival(2, 0, 0, 1);
+        for i in 0..4 {
+            even.token(1, 0, i * MS);
+            even.token(2, 0, i * MS);
+        }
+        assert!((even.jain_fairness() - 1.0).abs() < 1e-9);
+
+        let mut skew = Recorder::default();
+        skew.turn_arrival(1, 0, 0, 0);
+        skew.turn_arrival(2, 0, 0, 1);
+        for i in 0..8 {
+            skew.token(1, 0, i * MS);
+        }
+        // One tenant captured everything: index → 1/n = 0.5.
+        assert!((skew.jain_fairness() - 0.5).abs() < 1e-9);
+        assert!(skew.max_min_share_ratio().is_infinite());
     }
 }

@@ -4,16 +4,38 @@
 
 use std::collections::HashMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MetaError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad header: {0:?}")]
+    Io(std::io::Error),
     BadHeader(String),
-    #[error("missing key {0}")]
     MissingKey(&'static str),
-    #[error("malformed line {0}: {1:?}")]
     Malformed(usize, String),
+}
+
+impl std::fmt::Display for MetaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetaError::Io(e) => write!(f, "io: {e}"),
+            MetaError::BadHeader(h) => write!(f, "bad header: {h:?}"),
+            MetaError::MissingKey(k) => write!(f, "missing key {k}"),
+            MetaError::Malformed(line, text) => write!(f, "malformed line {line}: {text:?}"),
+        }
+    }
+}
+
+impl std::error::Error for MetaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MetaError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for MetaError {
+    fn from(e: std::io::Error) -> Self {
+        MetaError::Io(e)
+    }
 }
 
 #[derive(Clone, Debug)]

@@ -1,25 +1,82 @@
 //! The compiled model: PJRT executables + weights + Rust-owned KV state.
+//!
+//! Real PJRT execution is gated behind the `xla` cargo feature (the
+//! crate's dependency closure is only available when vendored — see
+//! Cargo.toml). The default build substitutes a stub whose `load`
+//! reports [`RuntimeError::XlaUnavailable`], so every simulation path,
+//! experiment, and test compiles and runs fully offline.
 
 use std::path::Path;
 
+#[cfg(feature = "xla")]
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::meta::ModelMeta;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("meta: {0}")]
-    Meta(#[from] super::meta::MetaError),
-    #[error("params.bin size mismatch: got {got} bytes, want {want}")]
+    #[cfg(feature = "xla")]
+    Xla(xla::Error),
+    Io(std::io::Error),
+    Meta(super::meta::MetaError),
     ParamsSize { got: usize, want: usize },
-    #[error("batch {0} exceeds the largest compiled decode variant")]
     BatchTooLarge(usize),
-    #[error("artifact missing: {0}")]
     ArtifactMissing(String),
+    /// Real execution requested but the crate was built without the
+    /// `xla` feature.
+    XlaUnavailable,
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            #[cfg(feature = "xla")]
+            RuntimeError::Xla(e) => write!(f, "xla: {e}"),
+            RuntimeError::Io(e) => write!(f, "io: {e}"),
+            RuntimeError::Meta(e) => write!(f, "meta: {e}"),
+            RuntimeError::ParamsSize { got, want } => {
+                write!(f, "params.bin size mismatch: got {got} bytes, want {want}")
+            }
+            RuntimeError::BatchTooLarge(n) => {
+                write!(f, "batch {n} exceeds the largest compiled decode variant")
+            }
+            RuntimeError::ArtifactMissing(p) => write!(f, "artifact missing: {p}"),
+            RuntimeError::XlaUnavailable => write!(
+                f,
+                "real PJRT execution requires building with `--features xla` \
+                 (and a vendored xla crate)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Io(e) => Some(e),
+            RuntimeError::Meta(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
+}
+
+impl From<super::meta::MetaError> for RuntimeError {
+    fn from(e: super::meta::MetaError) -> Self {
+        RuntimeError::Meta(e)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e)
+    }
 }
 
 /// Rust-owned paged KV caches (the "GPU memory" of the real backend).
@@ -54,12 +111,13 @@ impl KvState {
 /// Loaded model: executables, weights, caches.
 ///
 /// Perf (§Perf runtime): weights are uploaded to the PJRT device ONCE as
-/// [`xla::PjRtBuffer`]s and every call uses `execute_b`, so the ~22 MB of
+/// `xla::PjRtBuffer`s and every call uses `execute_b`, so the ~22 MB of
 /// parameters are not re-transferred per decode step (they were with the
 /// `execute(&[Literal])` path). KV caches still round-trip per call:
 /// the crate returns multi-output results as a single tuple buffer whose
 /// elements cannot be re-fed as inputs, so device-resident caches are
 /// blocked at the binding layer (documented in EXPERIMENTS.md §Perf).
+#[cfg(feature = "xla")]
 pub struct PjrtModel {
     pub meta: ModelMeta,
     client: PjRtClient,
@@ -71,6 +129,7 @@ pub struct PjrtModel {
     pub kv: KvState,
 }
 
+#[cfg(feature = "xla")]
 fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable, RuntimeError> {
     if !path.exists() {
         return Err(RuntimeError::ArtifactMissing(path.display().to_string()));
@@ -80,6 +139,7 @@ fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable, Run
     Ok(client.compile(&comp)?)
 }
 
+#[cfg(feature = "xla")]
 impl PjrtModel {
     /// Load everything from `artifacts/`.
     pub fn load(dir: &Path) -> Result<Self, RuntimeError> {
@@ -260,5 +320,80 @@ impl PjrtModel {
     /// Largest compiled decode batch.
     pub fn max_batch(&self) -> usize {
         self.decode.last().map(|(b, _)| *b).unwrap_or(0)
+    }
+}
+
+/// Offline stub: same surface as the real model so the server layer and
+/// CLI compile without the `xla` feature; `load` always fails with
+/// [`RuntimeError::XlaUnavailable`], so no instance can exist and the
+/// method bodies are unreachable in practice.
+#[cfg(not(feature = "xla"))]
+pub struct PjrtModel {
+    pub meta: ModelMeta,
+    pub kv: KvState,
+}
+
+#[cfg(not(feature = "xla"))]
+impl PjrtModel {
+    pub fn load(_dir: &Path) -> Result<Self, RuntimeError> {
+        Err(RuntimeError::XlaUnavailable)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn decode(
+        &mut self,
+        _token_ids: &[i32],
+        _positions: &[i32],
+        _block_tables: &[Vec<i32>],
+        _context_lens: &[i32],
+    ) -> Result<Vec<i32>, RuntimeError> {
+        Err(RuntimeError::XlaUnavailable)
+    }
+
+    pub fn prefill(
+        &mut self,
+        _token_ids: &[i32],
+        _prefix_len: i32,
+        _t_actual: i32,
+        _block_table: &[i32],
+    ) -> Result<i32, RuntimeError> {
+        Err(RuntimeError::XlaUnavailable)
+    }
+
+    pub fn max_batch(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_state_offsets() {
+        let meta = ModelMeta::parse(
+            "fastswitch-model-meta v1\n\
+             vocab 64\nd_model 32\nn_layers 2\nn_heads 2\nn_kv_heads 2\n\
+             head_dim 16\nd_ff 64\nmax_seq 32\nnum_blocks 8\nblock_size 8\n\
+             max_blocks_per_seq 4\nprefill_chunk 8\ndecode_batch_sizes 1,2\n",
+        )
+        .unwrap();
+        let kv = KvState::new(&meta);
+        let bl = meta.block_layer_elements();
+        assert_eq!(kv.offset(0, 0), 0);
+        assert_eq!(kv.offset(0, 1), bl);
+        assert_eq!(kv.offset(1, 0), 8 * bl);
+        assert_eq!(kv.k.len(), meta.cache_elements());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_load_reports_unavailable() {
+        let err = PjrtModel::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(matches!(err, RuntimeError::XlaUnavailable));
+        assert!(err.to_string().contains("xla"));
     }
 }

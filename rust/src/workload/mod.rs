@@ -1,8 +1,12 @@
 //! Workload generation: ShareGPT-like multi-turn conversations with
-//! Poisson arrivals (paper §4 "System and Workload Configuration").
+//! Poisson or bursty (on/off MMPP) arrivals, optionally split across
+//! tenants with a skewed request mix (paper §4 "System and Workload
+//! Configuration", extended for the online fairness policies).
 
 pub mod sharegpt;
+pub mod tenants;
 pub mod trace;
 
 pub use sharegpt::{Conversation, ShareGptConfig, Turn};
+pub use tenants::{assign_tenants, conversations_per_tenant, TenantMix};
 pub use trace::{ArrivalTrace, TraceEntry};

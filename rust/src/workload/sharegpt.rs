@@ -29,6 +29,9 @@ pub struct Turn {
 #[derive(Clone, Debug)]
 pub struct Conversation {
     pub id: u64,
+    /// Owning tenant (client account) — the fairness accounting unit.
+    /// 0 by default; see [`crate::workload::tenants::assign_tenants`].
+    pub tenant: u32,
     pub turns: Vec<Turn>,
 }
 
@@ -110,7 +113,11 @@ pub fn generate(cfg: &ShareGptConfig, n: usize, seed: u64) -> Vec<Conversation> 
                     }
                 })
                 .collect();
-            Conversation { id: id as u64, turns }
+            Conversation {
+                id: id as u64,
+                tenant: 0,
+                turns,
+            }
         })
         .collect()
 }

@@ -1,0 +1,113 @@
+//! Multi-tenant workload shaping: assign conversations to N tenants with
+//! a skewed request mix (one "heavy" abuser vs many light users).
+//!
+//! Tenant 0 is by convention the heavy tenant; it issues
+//! [`TenantMix::heavy_share`] of all conversations and the remainder is
+//! spread uniformly across tenants `1..n_tenants`. With
+//! `heavy_share = 1/n_tenants` the mix degenerates to uniform.
+
+use super::sharegpt::Conversation;
+use crate::util::rng::Rng;
+
+/// How conversations are split across tenants.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantMix {
+    pub n_tenants: usize,
+    /// Fraction of conversations issued by tenant 0 (the heavy tenant).
+    pub heavy_share: f64,
+}
+
+impl TenantMix {
+    pub fn uniform(n_tenants: usize) -> Self {
+        let n = n_tenants.max(1);
+        TenantMix {
+            n_tenants: n,
+            heavy_share: 1.0 / n as f64,
+        }
+    }
+
+    /// One heavy tenant issuing `heavy_share` of the traffic.
+    pub fn skewed(n_tenants: usize, heavy_share: f64) -> Self {
+        TenantMix {
+            n_tenants: n_tenants.max(1),
+            heavy_share: heavy_share.clamp(0.0, 1.0),
+        }
+    }
+}
+
+/// Assign a tenant to every conversation (deterministic per seed).
+pub fn assign_tenants(convs: &mut [Conversation], mix: &TenantMix, seed: u64) {
+    let mut rng = Rng::new(seed ^ 0x7E4A_4717);
+    for c in convs.iter_mut() {
+        c.tenant = if mix.n_tenants == 1 || rng.chance(mix.heavy_share) {
+            0
+        } else {
+            rng.usize(1, mix.n_tenants) as u32
+        };
+    }
+}
+
+/// (tenant, conversation count) pairs, sorted by tenant.
+pub fn conversations_per_tenant(convs: &[Conversation]) -> Vec<(u32, usize)> {
+    let mut counts: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+    for c in convs {
+        *counts.entry(c.tenant).or_insert(0) += 1;
+    }
+    let mut v: Vec<(u32, usize)> = counts.into_iter().collect();
+    v.sort_by_key(|&(t, _)| t);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::sharegpt::{generate, ShareGptConfig};
+
+    #[test]
+    fn skewed_mix_concentrates_on_tenant_zero() {
+        let mut convs = generate(&ShareGptConfig::default(), 4000, 1);
+        assign_tenants(&mut convs, &TenantMix::skewed(8, 0.5), 2);
+        let counts = conversations_per_tenant(&convs);
+        assert_eq!(counts.len(), 8, "all tenants appear");
+        let total: usize = counts.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, 4000);
+        let heavy = counts.iter().find(|&&(t, _)| t == 0).unwrap().1;
+        let frac = heavy as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.05, "heavy share {frac}");
+        // Light tenants split the rest roughly evenly.
+        for &(t, n) in &counts {
+            if t != 0 {
+                let f = n as f64 / total as f64;
+                assert!((f - 0.5 / 7.0).abs() < 0.03, "tenant {t} share {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_mix_is_balanced() {
+        let mut convs = generate(&ShareGptConfig::default(), 4000, 3);
+        assign_tenants(&mut convs, &TenantMix::uniform(4), 4);
+        for (t, n) in conversations_per_tenant(&convs) {
+            let f = n as f64 / 4000.0;
+            assert!((f - 0.25).abs() < 0.04, "tenant {t} share {f}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = generate(&ShareGptConfig::default(), 200, 5);
+        let mut b = generate(&ShareGptConfig::default(), 200, 5);
+        assign_tenants(&mut a, &TenantMix::skewed(4, 0.6), 9);
+        assign_tenants(&mut b, &TenantMix::skewed(4, 0.6), 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tenant, y.tenant);
+        }
+    }
+
+    #[test]
+    fn single_tenant_everything_is_tenant_zero() {
+        let mut convs = generate(&ShareGptConfig::default(), 50, 6);
+        assign_tenants(&mut convs, &TenantMix::uniform(1), 7);
+        assert!(convs.iter().all(|c| c.tenant == 0));
+    }
+}

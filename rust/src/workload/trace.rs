@@ -1,5 +1,7 @@
 //! Arrival traces: Poisson request arrivals over a conversation set
-//! (paper §4: 1 000 conversations, Poisson, average 1 req/s).
+//! (paper §4: 1 000 conversations, Poisson, average 1 req/s), plus an
+//! on/off Markov-modulated Poisson pattern ([`ArrivalTrace::mmpp`] /
+//! [`ArrivalTrace::bursty`]) for bursty multi-tenant workloads.
 
 use super::sharegpt::Conversation;
 use crate::sim::clock::{Ns, SEC};
@@ -33,6 +35,65 @@ impl ArrivalTrace {
             })
             .collect();
         ArrivalTrace { entries }
+    }
+
+    /// On/off Markov-modulated Poisson process: while ON, arrivals come
+    /// at `rate_on`/s; while OFF at `rate_off`/s (0 allowed — a silent
+    /// gap). State holding times are exponential with means `mean_on_s`
+    /// / `mean_off_s`. The long-run average rate is
+    /// `(rate_on·mean_on + rate_off·mean_off) / (mean_on + mean_off)`.
+    pub fn mmpp(
+        convs: &[Conversation],
+        rate_on: f64,
+        rate_off: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(rate_on > 0.0 && rate_off >= 0.0);
+        assert!(mean_on_s > 0.0 && mean_off_s > 0.0);
+        let mut rng = Rng::new(seed ^ 0xB0B5);
+        let mut t = 0.0f64;
+        let mut on = true;
+        let mut state_end = rng.exp(1.0 / mean_on_s);
+        let entries = convs
+            .iter()
+            .map(|c| {
+                loop {
+                    let rate = if on { rate_on } else { rate_off };
+                    // In a zero-rate state the next arrival is beyond the
+                    // state's end with probability 1.
+                    let dt = if rate > 0.0 { rng.exp(rate) } else { f64::INFINITY };
+                    if t + dt <= state_end {
+                        t += dt;
+                        break;
+                    }
+                    // The exponential's memorylessness lets us discard the
+                    // partial draw and restart the clock in the new state.
+                    t = state_end;
+                    on = !on;
+                    let mean = if on { mean_on_s } else { mean_off_s };
+                    state_end = t + rng.exp(1.0 / mean);
+                }
+                TraceEntry {
+                    conversation: c.id,
+                    arrival: (t * SEC as f64) as Ns,
+                }
+            })
+            .collect();
+        ArrivalTrace { entries }
+    }
+
+    /// Convenience bursty pattern averaging ≈ `mean_rate` req/s: ON
+    /// bursts at `burst × mean_rate` (mean 5 s long) separated by silent
+    /// OFF gaps sized so the long-run rate stays `mean_rate`. `burst`
+    /// must exceed 1.
+    pub fn bursty(convs: &[Conversation], mean_rate: f64, burst: f64, seed: u64) -> Self {
+        assert!(burst > 1.0, "burst factor must exceed 1");
+        let mean_on_s = 5.0;
+        // duty cycle 1/burst → average = rate_on / burst = mean_rate.
+        let mean_off_s = mean_on_s * (burst - 1.0);
+        Self::mmpp(convs, mean_rate * burst, 0.0, mean_on_s, mean_off_s, seed)
     }
 
     pub fn span(&self) -> Ns {
@@ -71,6 +132,62 @@ mod tests {
         assert_eq!(a.entries.len(), b.entries.len());
         for (x, y) in a.entries.iter().zip(&b.entries) {
             assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn bursty_rate_approximately_honored() {
+        let convs = generate(&ShareGptConfig::default(), 4000, 1);
+        let tr = ArrivalTrace::bursty(&convs, 1.0, 4.0, 2);
+        let span_s = tr.span() as f64 / SEC as f64;
+        let rate = 4000.0 / span_s;
+        assert!((rate - 1.0).abs() < 0.2, "long-run rate {rate}");
+    }
+
+    #[test]
+    fn bursty_arrivals_monotone_and_deterministic() {
+        let convs = generate(&ShareGptConfig::default(), 300, 1);
+        let a = ArrivalTrace::bursty(&convs, 2.0, 5.0, 11);
+        let b = ArrivalTrace::bursty(&convs, 2.0, 5.0, 11);
+        for w in a.entries.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for (x, y) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        // Squared coefficient of variation of inter-arrival times:
+        // exactly 1 for Poisson, well above 1 for an on/off MMPP with
+        // silent gaps.
+        fn cv2(tr: &ArrivalTrace) -> f64 {
+            let gaps: Vec<f64> = tr
+                .entries
+                .windows(2)
+                .map(|w| (w[1].arrival - w[0].arrival) as f64 / SEC as f64)
+                .collect();
+            let n = gaps.len() as f64;
+            let mean = gaps.iter().sum::<f64>() / n;
+            let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / n;
+            var / (mean * mean)
+        }
+        let convs = generate(&ShareGptConfig::default(), 3000, 1);
+        let poisson = ArrivalTrace::poisson(&convs, 1.0, 3);
+        let bursty = ArrivalTrace::bursty(&convs, 1.0, 6.0, 3);
+        let (cp, cb) = (cv2(&poisson), cv2(&bursty));
+        assert!((cp - 1.0).abs() < 0.25, "poisson cv² {cp}");
+        assert!(cb > 1.5 * cp, "bursty cv² {cb} !>> poisson {cp}");
+    }
+
+    #[test]
+    fn mmpp_with_nonzero_off_rate_still_arrives_everywhere() {
+        let convs = generate(&ShareGptConfig::default(), 500, 1);
+        let tr = ArrivalTrace::mmpp(&convs, 3.0, 0.5, 4.0, 8.0, 7);
+        assert_eq!(tr.entries.len(), 500);
+        for w in tr.entries.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
         }
     }
 }
