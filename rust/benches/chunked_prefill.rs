@@ -1,0 +1,20 @@
+//! Bench: chunked-prefill showdown — monolithic vs token-budget chunked
+//! admission across chunk sizes on a long-prompt multi-tenant workload,
+//! timed. `cargo bench --bench chunked_prefill`.
+use fastswitch::exp::{self, runner::Scale};
+use fastswitch::util::bench::{bench, section};
+
+fn main() {
+    let scale = Scale::quick();
+    section(&format!(
+        "chunked prefill showdown (chunks {:?}, {} tenants, heavy share {})",
+        exp::chunked_prefill::CHUNKS,
+        exp::chunked_prefill::N_TENANTS,
+        exp::chunked_prefill::HEAVY_SHARE,
+    ));
+    let mut rep = None;
+    bench("monolithic + 3 chunk sizes x 1 sim each", 0, 1, || {
+        rep = Some(exp::chunked_prefill::run(&scale));
+    });
+    println!("{}", rep.unwrap().render());
+}

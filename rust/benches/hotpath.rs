@@ -8,7 +8,7 @@ use fastswitch::config::{
     DispatchMode, GpuSpec, Granularity, ModelSpec, SwapCostConfig, SwapMode,
 };
 use fastswitch::coordinator::request::ReqState;
-use fastswitch::coordinator::scheduler::{schedule, Candidate};
+use fastswitch::coordinator::scheduler::{schedule, Candidate, IterBudget};
 use fastswitch::sim::link::{Direction, PcieLink};
 use fastswitch::swap::engine::{BlockMove, SegmentBuilder};
 use fastswitch::swap::manager::SwapManager;
@@ -110,10 +110,11 @@ fn bench_scheduler() {
             },
             blocks_held: if i % 3 == 0 { 60 } else { 0 },
             blocks_needed: 30,
+            prefill_remaining: if i % 3 == 2 { 512 } else { 0 },
         })
         .collect();
     bench("schedule() 256 candidates", 10, 5000, || {
-        black_box(schedule(&cands, 1556, 32));
+        black_box(schedule(&cands, 1556, 32, IterBudget::chunked(544, 512)));
     });
 }
 

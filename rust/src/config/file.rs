@@ -36,6 +36,7 @@ pub enum ConfigError {
     UnknownPreset(String),
     UnknownPolicy(String),
     UnknownFairnessPolicy(String),
+    UnknownPrefillMode(String),
 }
 
 impl std::fmt::Display for ConfigError {
@@ -47,6 +48,9 @@ impl std::fmt::Display for ConfigError {
             ConfigError::UnknownPolicy(p) => write!(f, "unknown engine policy {p:?}"),
             ConfigError::UnknownFairnessPolicy(p) => {
                 write!(f, "unknown fairness policy {p:?} (trace|vtc|slo)")
+            }
+            ConfigError::UnknownPrefillMode(p) => {
+                write!(f, "unknown prefill mode {p:?} (chunked|monolithic)")
             }
         }
     }
@@ -156,6 +160,17 @@ impl ConfigFile {
         if let Some(r) = self.get_bool("engine", "reuse") {
             cfg.reuse = r;
         }
+        // `[scheduler]` — the chunked-prefill token-budget knobs.
+        if let Some(c) = self.get_usize("scheduler", "chunk_tokens") {
+            cfg.scheduler.prefill_chunk = c;
+        }
+        if let Some(b) = self.get_usize("scheduler", "max_tokens_per_iter") {
+            cfg.scheduler.max_tokens_per_iter = b;
+        }
+        if let Some(m) = self.get("scheduler", "prefill_mode") {
+            cfg.scheduler.prefill_mode = crate::config::PrefillMode::by_name(m)
+                .ok_or_else(|| ConfigError::UnknownPrefillMode(m.into()))?;
+        }
         if let Some(p) = self.get("fairness", "policy") {
             cfg.fairness.policy = crate::fairness::PolicyKind::by_name(p)
                 .ok_or_else(|| ConfigError::UnknownFairnessPolicy(p.into()))?;
@@ -261,6 +276,26 @@ pattern = "markov"
         assert_eq!(e.fairness.policy, PolicyKind::Vtc);
         assert_eq!(e.fairness.vtc.decode_weight, 3.5);
         assert_eq!(e.fairness.vtc.max_service_gap, 500.0);
+    }
+
+    #[test]
+    fn scheduler_section_sets_chunking_knobs() {
+        use crate::config::PrefillMode;
+        let c = ConfigFile::parse(
+            "[scheduler]\nchunk_tokens = 128\nmax_tokens_per_iter = 256\n\
+             prefill_mode = \"monolithic\"",
+        )
+        .unwrap();
+        let e = c.engine().unwrap();
+        assert_eq!(e.scheduler.prefill_chunk, 128);
+        assert_eq!(e.scheduler.max_tokens_per_iter, 256);
+        assert_eq!(e.scheduler.prefill_mode, PrefillMode::Monolithic);
+    }
+
+    #[test]
+    fn bad_prefill_mode_rejected() {
+        let c = ConfigFile::parse("[scheduler]\nprefill_mode = \"nope\"").unwrap();
+        assert!(matches!(c.engine(), Err(ConfigError::UnknownPrefillMode(_))));
     }
 
     #[test]

@@ -190,6 +190,38 @@ pub enum SwapMode {
     Adaptive,
 }
 
+/// How prompt prefills are admitted and executed each iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefillMode {
+    /// Whole-prefill admission: blocks for the entire remaining prompt
+    /// are claimed up front and the prompt runs in exclusive iterations
+    /// that stall every co-resident decode — the pre-chunking baseline
+    /// the `chunked` experiment measures against.
+    Monolithic,
+    /// Chunked prefill under the per-iteration token budget: decodes
+    /// claim the budget first, prefill chunks fill the remainder, held
+    /// blocks grow chunk-by-chunk, and partial prefill progress survives
+    /// preemption.
+    Chunked,
+}
+
+impl PrefillMode {
+    pub fn by_name(s: &str) -> Option<PrefillMode> {
+        match s {
+            "monolithic" | "mono" => Some(PrefillMode::Monolithic),
+            "chunked" | "chunk" => Some(PrefillMode::Chunked),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PrefillMode::Monolithic => "monolithic",
+            PrefillMode::Chunked => "chunked",
+        }
+    }
+}
+
 /// Scheduler parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchedulerConfig {
@@ -200,8 +232,18 @@ pub struct SchedulerConfig {
     /// Priority-update frequency: updates per iteration (paper: 0.01 =
     /// every 100 iterations).
     pub priority_update_freq: f64,
-    /// Prefill chunk size in tokens (chunked prefill).
+    /// Prefill chunk size in tokens: the most prompt tokens one request
+    /// may prefill per iteration in [`PrefillMode::Chunked`] (CLI
+    /// `--chunk-tokens`, config `[scheduler] chunk_tokens`).
     pub prefill_chunk: usize,
+    /// Per-iteration token budget shared by decode steps and prefill
+    /// chunks. `0` = auto-size from the roofline model at engine init
+    /// ([`crate::sim::PerfModel::suggest_token_budget`]): the batch's
+    /// decode claims plus the chunk tokens whose compute time matches
+    /// one weight read.
+    pub max_tokens_per_iter: usize,
+    /// Prefill admission/execution mode.
+    pub prefill_mode: PrefillMode,
     /// Number of distinct priority levels in the traces.
     pub priority_levels: usize,
 }
@@ -213,6 +255,8 @@ impl Default for SchedulerConfig {
             max_seq_len: 4096,
             priority_update_freq: 0.02,
             prefill_chunk: 512,
+            max_tokens_per_iter: 0, // auto (roofline-sized)
+            prefill_mode: PrefillMode::Chunked,
             priority_levels: 8,
         }
     }
@@ -465,6 +509,25 @@ mod tests {
         for cfg in EngineConfig::ablation_ladder() {
             assert_eq!(cfg.fairness.policy, PolicyKind::Trace);
         }
+    }
+
+    #[test]
+    fn chunked_prefill_is_the_default_with_auto_budget() {
+        let s = SchedulerConfig::default();
+        assert_eq!(s.prefill_mode, PrefillMode::Chunked);
+        assert_eq!(s.max_tokens_per_iter, 0, "0 = roofline auto-sizing");
+        assert!(s.prefill_chunk > 0);
+    }
+
+    #[test]
+    fn prefill_mode_names() {
+        assert_eq!(PrefillMode::by_name("chunked"), Some(PrefillMode::Chunked));
+        assert_eq!(
+            PrefillMode::by_name("monolithic"),
+            Some(PrefillMode::Monolithic)
+        );
+        assert_eq!(PrefillMode::by_name("nope"), None);
+        assert_eq!(PrefillMode::Chunked.label(), "chunked");
     }
 
     #[test]

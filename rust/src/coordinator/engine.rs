@@ -15,10 +15,10 @@ use std::time::Instant;
 
 use crate::block::{buddy::BlockGroupAllocator, fixed::FixedBlockAllocator};
 use crate::block::{reuse::KvCacheReuse, KvAllocator};
-use crate::config::{EngineConfig, Granularity, Preset, SwapMode};
+use crate::config::{EngineConfig, Granularity, PrefillMode, Preset, SwapMode};
 use crate::coordinator::priority::Pattern;
 use crate::coordinator::request::{KvLocation, ReqState, Request, RequestTable};
-use crate::coordinator::scheduler::{schedule, Candidate};
+use crate::coordinator::scheduler::{schedule, Candidate, IterBudget};
 use crate::fairness::policy::{build_policy, PriorityPolicy};
 use crate::fairness::TenantId;
 use crate::memory::{BlockId, CpuSwapSpace, RequestId};
@@ -94,6 +94,9 @@ pub struct ServingEngine {
     last_epoch: u64,
     gpu_blocks: usize,
     block_size: usize,
+    /// Per-iteration token budget (decode claims + prefill chunks);
+    /// roofline-sized at init when the config says 0.
+    iter_budget: u32,
     /// Wall-clock → virtual charging of scheduler overhead (Fig. 9).
     pub charge_sched_overhead: bool,
 }
@@ -128,6 +131,11 @@ impl ServingEngine {
             seed,
         );
         let epoch_iters = (1.0 / cfg.scheduler.priority_update_freq).round().max(1.0) as u64;
+        let iter_budget = if cfg.scheduler.max_tokens_per_iter == 0 {
+            perf.suggest_token_budget(cfg.scheduler.max_batch)
+        } else {
+            cfg.scheduler.max_tokens_per_iter as u32
+        };
 
         let mut future: Vec<(Ns, Conversation)> = arrivals
             .entries
@@ -156,12 +164,29 @@ impl ServingEngine {
             last_epoch: u64::MAX,
             gpu_blocks,
             block_size,
+            iter_budget,
             charge_sched_overhead: true,
         }
     }
 
     pub fn now(&self) -> Ns {
         self.now
+    }
+
+    /// The resolved per-iteration token budget (after roofline
+    /// auto-sizing).
+    pub fn token_budget(&self) -> u32 {
+        self.iter_budget
+    }
+
+    fn budget(&self) -> IterBudget {
+        match self.cfg.scheduler.prefill_mode {
+            PrefillMode::Monolithic => IterBudget::monolithic(),
+            PrefillMode::Chunked => IterBudget::chunked(
+                self.iter_budget,
+                self.cfg.scheduler.prefill_chunk as u32,
+            ),
+        }
     }
 
     pub fn iterations(&self) -> u64 {
@@ -304,15 +329,32 @@ impl ServingEngine {
         }
     }
 
-    fn chunk_blocks(&self, r: &Request) -> usize {
+    /// Blocks to grow `r` by a prefill grant of `take` tokens. The grant
+    /// that completes the prompt also emits the turn's first output
+    /// token, whose KV occupies a slot too; with `take == rem == 0`
+    /// (a decode-ready request) that degenerates to the next decode
+    /// slot — exactly what re-admission must reserve.
+    fn prefill_blocks(&self, r: &Request, take: u32) -> usize {
         let rem = r.prefill_remaining();
-        let chunk = (self.cfg.scheduler.prefill_chunk as u32).min(rem);
-        // The chunk that completes the prompt also emits the turn's first
-        // output token, whose KV occupies a slot too.
-        let extra = u64::from(chunk == rem);
-        let after = r.tokens_in_cache + chunk as u64 + extra;
+        let extra = u64::from(take == rem);
+        let after = r.tokens_in_cache + take as u64 + extra;
         Request::blocks_for(after, self.block_size)
             .saturating_sub(Request::blocks_for(r.tokens_in_cache, self.block_size))
+    }
+
+    /// The largest prefill grant admission must budget blocks for: one
+    /// chunk (chunked mode) or the whole remaining prompt (monolithic
+    /// all-or-nothing admission).
+    fn admit_take(&self, r: &Request) -> u32 {
+        let rem = r.prefill_remaining();
+        match self.cfg.scheduler.prefill_mode {
+            PrefillMode::Monolithic => rem,
+            PrefillMode::Chunked => (self.cfg.scheduler.prefill_chunk as u32).min(rem),
+        }
+    }
+
+    fn chunk_blocks(&self, r: &Request) -> usize {
+        self.prefill_blocks(r, self.admit_take(r))
     }
 
     fn candidates(&self) -> Vec<Candidate> {
@@ -364,6 +406,7 @@ impl ServingEngine {
                     },
                     blocks_held: held,
                     blocks_needed: needed,
+                    prefill_remaining: r.prefill_remaining(),
                 }
             })
             .collect()
@@ -582,6 +625,7 @@ impl ServingEngine {
             &cands,
             self.gpu_blocks,
             self.cfg.scheduler.max_batch,
+            self.budget(),
         );
 
         let mut stall: Ns = 0;
@@ -625,27 +669,50 @@ impl ServingEngine {
             self.reqs.get_mut(id).state = ReqState::Prefilling;
         }
 
-        // Growth allocation for the admitted set; preempt lowest-priority
-        // victims on failure.
-        let mut grow: Vec<RequestId> = self
-            .reqs
+        // Resolve the token grants against post-admission reality: a
+        // grant is void if its request is mid swap-in (async promote) or
+        // failed to promote; allocator pressure below can still preempt
+        // a granted request, so the sets are re-filtered afterwards.
+        let mut decode_set: Vec<RequestId> = Vec::new();
+        let mut prefill_take: Vec<(RequestId, u32)> = Vec::new();
+        for g in &sched.grants {
+            let r = self.reqs.get(g.id);
+            match r.state {
+                ReqState::Running if g.decode > 0 => decode_set.push(g.id),
+                ReqState::Prefilling if g.prefill > 0 => {
+                    let take = g.prefill.min(r.prefill_remaining());
+                    if take > 0 {
+                        prefill_take.push((g.id, take));
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // Growth allocation for this iteration's grants (a decode slot
+        // or a chunk's blocks each); preempt lowest-priority victims on
+        // failure.
+        let mut grow: Vec<(RequestId, usize)> = decode_set
             .iter()
-            .filter(|r| matches!(r.state, ReqState::Running | ReqState::Prefilling))
-            .map(|r| r.id)
+            .map(|&id| {
+                let r = self.reqs.get(id);
+                let need = Request::blocks_for(r.tokens_in_cache + 1, self.block_size)
+                    .saturating_sub(self.alloc.as_dyn_ref().table(id).len());
+                (id, need)
+            })
+            .chain(prefill_take.iter().map(|&(id, take)| {
+                let r = self.reqs.get(id);
+                (id, self.prefill_blocks(r, take))
+            }))
             .collect();
-        grow.sort_by_key(|&id| std::cmp::Reverse(self.reqs.get(id).priority));
-        for id in grow {
-            let r = self.reqs.get(id);
-            let need = match r.state {
-                ReqState::Running => Request::blocks_for(
-                    r.tokens_in_cache + 1,
-                    self.block_size,
-                )
-                .saturating_sub(self.alloc.as_dyn_ref().table(id).len()),
-                ReqState::Prefilling => self.chunk_blocks(r),
-                _ => 0,
-            };
-            if need == 0 {
+        grow.sort_by_key(|&(id, _)| std::cmp::Reverse(self.reqs.get(id).priority));
+        for (id, need) in grow {
+            // A victim preempted earlier in this very loop grows no more.
+            let resident = matches!(
+                self.reqs.get(id).state,
+                ReqState::Running | ReqState::Prefilling
+            );
+            if need == 0 || !resident {
                 continue;
             }
             loop {
@@ -681,84 +748,76 @@ impl ServingEngine {
         }
         let _ = &new_blocks; // retained for tests/metrics hooks
 
-        // ---- execute ----
+        // Drop grants whose request lost residency to pressure
+        // preemption (their partial prefill progress is preserved for
+        // re-admission).
+        decode_set.retain(|&id| self.reqs.get(id).state == ReqState::Running);
+        prefill_take.retain(|&(id, _)| self.reqs.get(id).state == ReqState::Prefilling);
+
+        // ---- execute: one mixed decode + chunked-prefill iteration ----
         let sched_ns = if self.charge_sched_overhead {
             wall0.elapsed().as_nanos() as Ns
         } else {
             0
         };
 
-        let prefilling: Vec<RequestId> = {
-            let mut v: Vec<RequestId> = self
-                .reqs
-                .iter()
-                .filter(|r| r.state == ReqState::Prefilling && r.prefill_remaining() > 0)
-                .map(|r| r.id)
-                .collect();
-            v.sort_by_key(|&id| std::cmp::Reverse(self.reqs.get(id).priority));
-            v
-        };
+        let decode_batch = decode_set.len();
+        let decode_ctx: u64 = decode_set
+            .iter()
+            .map(|&id| self.reqs.get(id).tokens_in_cache)
+            .sum();
+        // Decode-ready requests the budget (or a monolithic prefill)
+        // held back this iteration — the decode-interference population.
+        let blocked_decodes = self
+            .reqs
+            .iter()
+            .filter(|r| r.state == ReqState::Running)
+            .count()
+            .saturating_sub(decode_batch);
 
         // Requests that emit a token at the end of this iteration.
-        let mut emitters: Vec<RequestId> = Vec::new();
-        let was_prefill = !prefilling.is_empty();
-        let dur;
-        if was_prefill {
-            // Prefill-priority iteration (vLLM 0.3.3): consume up to one
-            // chunk budget of prompt tokens, highest priority first. The
-            // chunk that finishes a prompt emits the turn's first token.
-            let mut budget = self.cfg.scheduler.prefill_chunk as u32;
-            let mut total_new = 0u32;
-            let mut ctx_sum = 0u64;
-            for id in prefilling {
-                if budget == 0 {
-                    break;
-                }
-                let r = self.reqs.get_mut(id);
-                let tenant = r.tenant();
-                let take = r.prefill_remaining().min(budget);
-                r.prefill_done += take;
-                r.tokens_in_cache += take as u64;
-                ctx_sum += r.tokens_in_cache;
-                budget -= take;
-                total_new += take;
-                if r.prefill_remaining() == 0 {
-                    r.state = ReqState::Running;
-                    // Emits the next output token. For a fresh turn that's
-                    // the first token (TTFT); after a recompute-preemption
-                    // the prefill target included the already-generated
-                    // text, so generation simply continues.
-                    r.generated += 1;
-                    r.tokens_in_cache += 1;
-                    emitters.push(id);
-                }
-                // Charge the prefill service to the tenant's virtual-token
-                // account (the emitted token is charged with the emitters
-                // below).
-                self.policy.on_tokens(tenant, take as u64, 0);
+        let mut emitters: Vec<RequestId> = decode_set.clone();
+        let mut prefill_new = 0u64;
+        let mut prefill_ctx = 0u64;
+        for &(id, take) in &prefill_take {
+            let r = self.reqs.get_mut(id);
+            let tenant = r.tenant();
+            prefill_ctx += r.tokens_in_cache;
+            prefill_new += take as u64;
+            if r.apply_prefill(take) {
+                // The completing chunk emits the turn's next output token
+                // (first token on a fresh turn; generation simply
+                // continues after a recompute-preemption).
+                emitters.push(id);
             }
-            dur = self.perf.prefill_ns(total_new as u64, ctx_sum);
-        } else {
-            // Decode iteration over every Running request (includes any
-            // synchronously swapped-in this iteration).
-            let decode_set: Vec<RequestId> = self
-                .reqs
-                .iter()
-                .filter(|r| r.state == ReqState::Running)
-                .map(|r| r.id)
-                .collect();
-            let ctx: u64 = decode_set
-                .iter()
-                .map(|&id| self.reqs.get(id).tokens_in_cache)
-                .sum();
-            dur = self.perf.decode_iter_ns(decode_set.len(), ctx);
-            for &id in &decode_set {
-                let r = self.reqs.get_mut(id);
-                r.generated += 1;
-                r.tokens_in_cache += 1;
-            }
-            emitters = decode_set;
+            // Charge the prefill service to the tenant's virtual-token
+            // account chunk-by-chunk: a long prompt accrues virtual
+            // tokens as it progresses and cannot dodge the fairness
+            // accounting by prefilling atomically. (The emitted token is
+            // charged with the emitters below.)
+            self.policy.on_tokens(tenant, take as u64, 0);
         }
+        for &id in &decode_set {
+            let r = self.reqs.get_mut(id);
+            r.generated += 1;
+            r.tokens_in_cache += 1;
+        }
+        let dur = self
+            .perf
+            .mixed_iter_ns(decode_batch, decode_ctx, prefill_new, prefill_ctx);
+        // Decode-interference stall: the extra latency decodes suffer
+        // from co-running chunks, or the full iteration when prefill
+        // work ran while decode-ready requests sat idle.
+        let decode_block_ns: Ns = if prefill_new == 0 {
+            0
+        } else if decode_batch > 0 {
+            dur.saturating_sub(self.perf.decode_iter_ns(decode_batch, decode_ctx))
+        } else if blocked_decodes > 0 {
+            dur
+        } else {
+            0
+        };
+        let pure_prefill = prefill_new > 0 && decode_batch == 0;
 
         let tokens_made = emitters.len() as u32;
         let iter_end = self.now + stall + sched_ns + dur;
@@ -810,13 +869,15 @@ impl ServingEngine {
             swap_stall_ns: stall,
             sched_overhead_ns: sched_ns,
             tokens: tokens_made,
-            is_prefill: was_prefill,
-            // Decode iterations: the actual decode set; prefill: the
-            // scheduled running batch.
-            batch: if was_prefill {
+            is_prefill: pure_prefill,
+            prefill_tokens: prefill_new as u32,
+            decode_block_ns,
+            // Mixed/decode iterations: the actual decode set; pure
+            // prefill: the scheduled running batch.
+            batch: if pure_prefill {
                 batch_now as u32
             } else {
-                tokens_made
+                decode_batch as u32
             },
             waiting_on_swap,
         });
@@ -1042,6 +1103,67 @@ mod tests {
         assert_eq!(a.span, b.span);
         assert_eq!(a.recorder.total_tokens, b.recorder.total_tokens);
         assert_eq!(a.swap_stats.total_calls, b.swap_stats.total_calls);
+    }
+
+    #[test]
+    fn chunked_mode_mixes_decodes_with_prefill_chunks() {
+        // Under the default chunked scheduler, prompt chunks co-run with
+        // decode steps: some iterations must carry both prefill tokens
+        // and a non-empty decode batch, and the decode-interference
+        // bucket must be charged for them.
+        let out = run_with(EngineConfig::fastswitch(), 400, 12, 1);
+        let mixed = out
+            .recorder
+            .iterations
+            .iter()
+            .any(|s| s.prefill_tokens > 0 && !s.is_prefill && s.batch > 0);
+        assert!(mixed, "no mixed decode+prefill iteration observed");
+        assert!(out.recorder.decode_interference_ns() > 0);
+        assert!(out.recorder.prefill_tokens() > 0);
+    }
+
+    #[test]
+    fn monolithic_mode_completes_and_stalls_decodes() {
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.scheduler.prefill_mode = PrefillMode::Monolithic;
+        let out = run_with(cfg, 400, 12, 1);
+        assert_eq!(out.recorder.finished_conversations, 12);
+        // Whole prompts run in exclusive iterations: no mixed ones.
+        assert!(out
+            .recorder
+            .iterations
+            .iter()
+            .all(|s| s.prefill_tokens == 0 || s.batch == 0 || s.is_prefill));
+    }
+
+    #[test]
+    fn chunked_caps_prefill_per_iteration() {
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.scheduler.prefill_chunk = 64;
+        cfg.scheduler.max_tokens_per_iter = 96;
+        let out = run_with(cfg, 400, 12, 1);
+        assert_eq!(out.recorder.finished_conversations, 12);
+        assert!(out
+            .recorder
+            .iterations
+            .iter()
+            .all(|s| s.prefill_tokens <= 96));
+    }
+
+    #[test]
+    fn token_budget_auto_sizes_from_roofline() {
+        let (convs, tr) = small_workload(4, 1);
+        let e = ServingEngine::new(
+            EngineConfig::fastswitch(),
+            test_preset(400),
+            Pattern::Markov,
+            convs,
+            tr,
+            1,
+        );
+        let b = e.token_budget();
+        // max_batch (32) decode claims plus a roofline-sized chunk term.
+        assert!(b > 32 && b < 4096, "budget = {b}");
     }
 
     #[test]

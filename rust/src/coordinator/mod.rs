@@ -5,8 +5,10 @@
 //!   and KV residency (GPU / CPU / dropped).
 //! - [`priority`] — the paper's offline priority traces (Random, Markov,
 //!   plus round-robin).
-//! - [`scheduler`] — priority admission: who runs, who is preempted, who
-//!   swaps in (pure, unit-testable).
+//! - [`scheduler`] — priority admission under a per-iteration token
+//!   budget: who runs, who is preempted, who swaps in, and how many
+//!   decode/prefill-chunk tokens each admitted request processes (pure,
+//!   unit-testable).
 //! - [`engine`] — the per-iteration serving loop tying scheduler,
 //!   allocators, reuse and the swap manager together over virtual time.
 

@@ -111,6 +111,28 @@ impl Request {
         self.prefill_target.saturating_sub(self.prefill_done)
     }
 
+    /// Apply one granted prefill chunk of `take` tokens (the resumable
+    /// prefill state machine: `prefill_done` advances toward
+    /// `prefill_target`, and the partial progress survives swap-out —
+    /// only `drop_context` resets it). The chunk that completes the
+    /// prompt also emits the turn's next output token (first token on a
+    /// fresh turn; generation simply continues after a
+    /// recompute-preemption) and moves the request to [`ReqState::Running`].
+    /// Returns `true` on that completing chunk.
+    pub fn apply_prefill(&mut self, take: u32) -> bool {
+        debug_assert!(self.state == ReqState::Prefilling);
+        debug_assert!(take > 0 && take <= self.prefill_remaining());
+        self.prefill_done += take;
+        self.tokens_in_cache += take as u64;
+        if self.prefill_remaining() > 0 {
+            return false;
+        }
+        self.state = ReqState::Running;
+        self.generated += 1;
+        self.tokens_in_cache += 1;
+        true
+    }
+
     /// Is the current turn's generation complete?
     pub fn turn_done(&self) -> bool {
         self.generated >= self.cur_turn().response_tokens
@@ -286,6 +308,21 @@ mod tests {
         // history 150 + prompt 30 + generated 10
         assert_eq!(r.prefill_target, 190);
         assert_eq!(r.prefill_done, 0);
+    }
+
+    #[test]
+    fn apply_prefill_resumes_across_chunks() {
+        let mut r = Request::new(1, conv(&[(100, 50)]), 0);
+        r.state = ReqState::Prefilling;
+        assert!(!r.apply_prefill(64), "partial chunk does not complete");
+        assert_eq!(r.prefill_remaining(), 36);
+        assert_eq!(r.tokens_in_cache, 64);
+        assert_eq!(r.state, ReqState::Prefilling);
+        // The completing chunk emits the first token (+1 KV slot).
+        assert!(r.apply_prefill(36));
+        assert_eq!(r.state, ReqState::Running);
+        assert_eq!(r.generated, 1);
+        assert_eq!(r.tokens_in_cache, 101);
     }
 
     #[test]

@@ -1,16 +1,39 @@
-//! Priority scheduler: pure admission logic (who runs, who swaps).
+//! Priority scheduler: token-budget admission (who runs, who swaps, and
+//! how many tokens each admitted request may process this iteration).
 //!
 //! Each iteration the engine rebuilds the admitted set from the latest
 //! priorities (paper: "the scheduler then reorders requests across
 //! waiting, running, and swapped queues to meet the updated priority
-//! requirements"). The scheduler itself is a pure function — it only
-//! decides; the engine executes (swap-outs, swap-ins, prefills).
+//! requirements"). On top of membership, [`schedule`] hands out
+//! per-request [`TokenGrant`]s under a per-iteration [`IterBudget`]:
+//! decodes claim the budget first (one token each), and the remaining
+//! capacity is filled with prefill *chunks*, so a long prompt advances
+//! incrementally instead of stalling every co-resident decode — the
+//! chunked-prefill discipline of arXiv 2401.00588 / 2606.09061 grafted
+//! onto the paper's priority admission. The scheduler itself stays a
+//! pure function — it only decides; the engine executes (swap-outs,
+//! swap-ins, prefill chunks, decode steps).
 
 use crate::coordinator::request::ReqState;
 use crate::memory::RequestId;
 use crate::sim::clock::Ns;
 
 /// Scheduler's view of one schedulable request.
+///
+/// # Invariants
+///
+/// - `blocks_held` is the GPU blocks currently allocated to the request
+///   (non-zero only for on-GPU states and draining swap-outs).
+/// - `blocks_needed` is the *additional* blocks required to admit the
+///   request and execute its largest possible grant this iteration; for
+///   off-GPU candidates it includes re-materializing the whole context.
+/// - `blocks_needed` must not exceed the GPU capacity passed to
+///   [`schedule`]: such a candidate could never be admitted even with
+///   every block free and would silently starve, so [`schedule`] panics
+///   on it (the engine's max-model-len admission check rejects oversized
+///   turns before they become candidates).
+/// - `prefill_remaining == 0` means the request decodes when granted;
+///   otherwise it still owes that many prompt tokens this turn.
 #[derive(Clone, Copy, Debug)]
 pub struct Candidate {
     pub id: RequestId,
@@ -21,9 +44,67 @@ pub struct Candidate {
     pub blocks_held: usize,
     /// Additional GPU blocks needed to (re-)admit and run one iteration.
     pub blocks_needed: usize,
+    /// Prompt tokens still to prefill this turn (0 = pure decode).
+    pub prefill_remaining: u32,
 }
 
-/// Admission outcome.
+/// Per-iteration token budget driving the grant pass of [`schedule`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IterBudget {
+    /// Total new tokens (decode steps + prefill chunk tokens) one
+    /// iteration may process. Clamped up to the admitted decode claim
+    /// count during the grant pass: every decode-ready request always
+    /// gets its one token, so an undersized budget throttles prefill
+    /// fill, never decode progress.
+    pub max_tokens: u32,
+    /// Prompt tokens a single prefill may be granted per iteration.
+    pub chunk: u32,
+    /// Whole-prefill mode ([`crate::config::PrefillMode::Monolithic`]):
+    /// an admitted prefill is granted its entire remaining prompt in one
+    /// exclusive iteration and co-resident decodes receive no grant —
+    /// the pre-chunking baseline the chunked experiments compare
+    /// against. `max_tokens` is ignored for such grants (that is the
+    /// all-or-nothing contract).
+    pub monolithic: bool,
+}
+
+impl IterBudget {
+    /// Budget for a chunked-prefill iteration.
+    pub fn chunked(max_tokens: u32, chunk: u32) -> Self {
+        IterBudget {
+            max_tokens: max_tokens.max(1),
+            chunk: chunk.max(1),
+            monolithic: false,
+        }
+    }
+
+    /// Whole-prefill (monolithic) admission.
+    pub fn monolithic() -> Self {
+        IterBudget {
+            max_tokens: u32::MAX,
+            chunk: u32::MAX,
+            monolithic: true,
+        }
+    }
+}
+
+/// Tokens granted to one admitted request for this iteration.
+///
+/// At most one of `decode` / `prefill` is non-zero: a request either
+/// decodes one token or advances its prefill by a chunk. Admitted
+/// requests can legitimately carry *no* grant (mid swap-in, or the
+/// budget ran dry) — they keep their residency and wait.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TokenGrant {
+    pub id: RequestId,
+    /// Decode tokens granted (0 or 1): one KV slot, one emitted token.
+    pub decode: u32,
+    /// Prompt tokens to prefill this iteration.
+    pub prefill: u32,
+}
+
+/// Admission outcome: membership (who is on GPU) plus this iteration's
+/// token grants (who makes progress, and by how much).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Schedule {
     /// On GPU and staying (Running / Prefilling / SwappingIn).
@@ -34,11 +115,29 @@ pub struct Schedule {
     pub start: Vec<RequestId>,
     /// On GPU, not admitted: preempt (swap out or drop).
     pub preempt: Vec<RequestId>,
+    /// Token grants for the admitted set, in grant order (decode claims
+    /// first, then prefill chunks, each by descending priority). The
+    /// engine voids a grant whose request is still mid swap-in or lost
+    /// residency to allocator pressure after admission.
+    pub grants: Vec<TokenGrant>,
 }
 
 impl Schedule {
     pub fn admitted(&self) -> usize {
         self.keep.len() + self.promote.len() + self.start.len()
+    }
+
+    /// This iteration's grant for `id`, if any.
+    pub fn grant_for(&self, id: RequestId) -> Option<TokenGrant> {
+        self.grants.iter().find(|g| g.id == id).copied()
+    }
+
+    /// Total tokens granted this iteration (decode + prefill).
+    pub fn granted_tokens(&self) -> u64 {
+        self.grants
+            .iter()
+            .map(|g| (g.decode + g.prefill) as u64)
+            .sum()
     }
 }
 
@@ -53,7 +152,38 @@ fn on_gpu(state: ReqState) -> bool {
 ///
 /// `total_blocks` — GPU KV capacity in blocks; admission keeps the sum of
 /// held+needed blocks within it. `max_batch` — max admitted requests.
-pub fn schedule(cands: &[Candidate], total_blocks: usize, max_batch: usize) -> Schedule {
+/// `budget` — the per-iteration token budget for the grant pass.
+///
+/// # Panics
+///
+/// Panics if any candidate's `blocks_needed` exceeds `total_blocks`:
+/// such a request can never be admitted and would starve in the queue
+/// forever, so a capacity misconfiguration fails fast instead of
+/// looping silently.
+pub fn schedule(
+    cands: &[Candidate],
+    total_blocks: usize,
+    max_batch: usize,
+    budget: IterBudget,
+) -> Schedule {
+    // Fail fast on impossible candidates. `blocks_held` can transiently
+    // inflate past capacity-minus-needed while an async swap-out drains
+    // (the source blocks stay allocated until the DMA completes), so
+    // only `blocks_needed` — the ask with every block free — decides
+    // impossibility.
+    for c in cands {
+        assert!(
+            c.blocks_needed <= total_blocks,
+            "capacity misconfiguration: request {} needs {} fresh GPU \
+             blocks but the KV space has only {} in total — it could \
+             never be admitted and would starve in the queue forever; \
+             reject it at arrival (max-model-len) or provision more blocks",
+            c.id,
+            c.blocks_needed,
+            total_blocks
+        );
+    }
+
     let mut order: Vec<&Candidate> = cands.iter().collect();
     // Priority desc, then earlier turn arrival (FCFS within a level),
     // then id for determinism.
@@ -67,6 +197,7 @@ pub fn schedule(cands: &[Candidate], total_blocks: usize, max_batch: usize) -> S
     let mut out = Schedule::default();
     let mut blocks = 0usize;
     let mut admitted = 0usize;
+    let mut in_set: std::collections::HashSet<RequestId> = std::collections::HashSet::new();
 
     // Pass 1: in-flight swap-ins are pinned — un-admitting a request whose
     // KV transfer is mid-flight would require synchronizing the stream
@@ -76,6 +207,7 @@ pub fn schedule(cands: &[Candidate], total_blocks: usize, max_batch: usize) -> S
             blocks += c.blocks_held + c.blocks_needed;
             admitted += 1;
             out.keep.push(c.id);
+            in_set.insert(c.id);
         }
     }
 
@@ -89,6 +221,7 @@ pub fn schedule(cands: &[Candidate], total_blocks: usize, max_batch: usize) -> S
         if fits {
             blocks += need;
             admitted += 1;
+            in_set.insert(c.id);
             match c.state {
                 ReqState::Running | ReqState::Prefilling => out.keep.push(c.id),
                 ReqState::SwappedOut => out.promote.push(c.id),
@@ -103,6 +236,78 @@ pub fn schedule(cands: &[Candidate], total_blocks: usize, max_batch: usize) -> S
             }
         } else if on_gpu(c.state) {
             out.preempt.push(c.id);
+        }
+    }
+
+    // Pass 3: token grants over the admitted set. In-flight swap-ins get
+    // none (their KV is still on the wire).
+    let grantable = |c: &&Candidate| in_set.contains(&c.id) && c.state != ReqState::SwappingIn;
+    if budget.monolithic {
+        // Whole-prefill admission: any pending prefill claims the whole
+        // iteration; decodes run only in prefill-free iterations.
+        let any_prefill = order
+            .iter()
+            .copied()
+            .filter(grantable)
+            .any(|c| c.prefill_remaining > 0);
+        for c in order.iter().copied().filter(grantable) {
+            if any_prefill {
+                if c.prefill_remaining > 0 {
+                    out.grants.push(TokenGrant {
+                        id: c.id,
+                        decode: 0,
+                        prefill: c.prefill_remaining,
+                    });
+                }
+            } else {
+                out.grants.push(TokenGrant {
+                    id: c.id,
+                    decode: 1,
+                    prefill: 0,
+                });
+            }
+        }
+    } else {
+        // Decodes claim first: one token each, highest priority first.
+        // The budget never splits the decode population — an undersized
+        // `max_tokens` must not pin the same low-ranked decodes at zero
+        // progress while they hold GPU blocks (decode claims are cheap;
+        // the budget chiefly bounds the prefill fill), so the effective
+        // budget is clamped to at least the decode claim count.
+        let decode_claims = order
+            .iter()
+            .copied()
+            .filter(grantable)
+            .filter(|c| c.prefill_remaining == 0)
+            .count() as u32;
+        let mut left = budget.max_tokens.max(decode_claims);
+        for c in order.iter().copied().filter(grantable) {
+            if left == 0 {
+                break;
+            }
+            if c.prefill_remaining == 0 {
+                out.grants.push(TokenGrant {
+                    id: c.id,
+                    decode: 1,
+                    prefill: 0,
+                });
+                left -= 1;
+            }
+        }
+        // Remaining capacity is filled with prefill chunks.
+        for c in order.iter().copied().filter(grantable) {
+            if left == 0 {
+                break;
+            }
+            if c.prefill_remaining > 0 {
+                let take = c.prefill_remaining.min(budget.chunk).min(left);
+                out.grants.push(TokenGrant {
+                    id: c.id,
+                    decode: 0,
+                    prefill: take,
+                });
+                left -= take;
+            }
         }
     }
     out
@@ -126,7 +331,15 @@ mod tests {
             state,
             blocks_held: held,
             blocks_needed: needed,
+            prefill_remaining: match state {
+                ReqState::Prefilling | ReqState::Queued => 64,
+                _ => 0,
+            },
         }
+    }
+
+    fn wide() -> IterBudget {
+        IterBudget::chunked(4096, 512)
     }
 
     #[test]
@@ -138,7 +351,7 @@ mod tests {
         ];
         // Capacity 22: request 2 (prio 9, 10) + request 3 (prio 5, 11) fit;
         // request 1 (prio 1) does not → preempt.
-        let s = schedule(&cands, 22, 8);
+        let s = schedule(&cands, 22, 8, wide());
         assert_eq!(s.promote, vec![2]);
         assert_eq!(s.keep, vec![3]);
         assert_eq!(s.preempt, vec![1]);
@@ -149,7 +362,7 @@ mod tests {
         let cands: Vec<Candidate> = (0..6)
             .map(|i| cand(i, 5, ReqState::Running, 1, 0))
             .collect();
-        let s = schedule(&cands, 1000, 4);
+        let s = schedule(&cands, 1000, 4, wide());
         assert_eq!(s.keep.len(), 4);
         assert_eq!(s.preempt.len(), 2);
     }
@@ -161,9 +374,11 @@ mod tests {
             cand(2, 9, ReqState::SwappedOut, 0, 10),
         ];
         // Capacity only 10: the pinned swap-in wins even at priority 0.
-        let s = schedule(&cands, 10, 8);
+        let s = schedule(&cands, 10, 8, wide());
         assert_eq!(s.keep, vec![1]);
         assert!(s.promote.is_empty());
+        // ... but carries no token grant while its KV is on the wire.
+        assert!(s.grant_for(1).is_none());
     }
 
     #[test]
@@ -172,8 +387,22 @@ mod tests {
         let mut b = cand(2, 5, ReqState::Queued, 0, 5);
         a.turn_arrival = 100;
         b.turn_arrival = 50;
-        let s = schedule(&[a, b], 5, 8);
+        let s = schedule(&[a, b], 5, 8, wide());
         assert_eq!(s.start, vec![2], "earlier arrival wins the tie");
+    }
+
+    #[test]
+    fn fcfs_breaks_grant_ties_at_equal_priority() {
+        // Two prefills at the same priority competing for one chunk of
+        // budget: the earlier arrival is granted, the later waits.
+        let mut a = cand(1, 5, ReqState::Prefilling, 2, 2);
+        let mut b = cand(2, 5, ReqState::Prefilling, 2, 2);
+        a.turn_arrival = 200;
+        b.turn_arrival = 100;
+        let s = schedule(&[a, b], 100, 8, IterBudget::chunked(64, 64));
+        assert_eq!(s.keep, vec![2, 1]);
+        assert_eq!(s.grant_for(2), Some(TokenGrant { id: 2, decode: 0, prefill: 64 }));
+        assert!(s.grant_for(1).is_none(), "budget exhausted for the later arrival");
     }
 
     #[test]
@@ -182,7 +411,7 @@ mod tests {
             cand(1, 1, ReqState::SwappedOut, 0, 10),
             cand(2, 2, ReqState::Queued, 0, 10),
         ];
-        let s = schedule(&cands, 10, 8);
+        let s = schedule(&cands, 10, 8, wide());
         // Capacity admits only request 2; request 1 is already off GPU →
         // NOT in preempt.
         assert_eq!(s.start, vec![2]);
@@ -192,8 +421,9 @@ mod tests {
 
     #[test]
     fn empty_input() {
-        let s = schedule(&[], 100, 8);
+        let s = schedule(&[], 100, 8, wide());
         assert_eq!(s.admitted(), 0);
+        assert!(s.grants.is_empty());
     }
 
     #[test]
@@ -202,7 +432,122 @@ mod tests {
             cand(1, 5, ReqState::Prefilling, 4, 4),
             cand(2, 4, ReqState::Running, 4, 1),
         ];
-        let s = schedule(&cands, 13, 2);
+        let s = schedule(&cands, 13, 2, wide());
         assert_eq!(s.keep, vec![1, 2]);
+    }
+
+    // ---- token-budget grants ---------------------------------------
+
+    #[test]
+    fn decodes_claim_budget_before_prefill_chunks() {
+        let mut p = cand(1, 9, ReqState::Prefilling, 0, 4);
+        p.prefill_remaining = 100;
+        let cands = vec![
+            p,
+            cand(2, 1, ReqState::Running, 4, 1),
+            cand(3, 2, ReqState::Running, 4, 1),
+        ];
+        // Budget 10: both decodes take 1 each even though the prefill
+        // outranks them; the prefill gets the remaining 8.
+        let s = schedule(&cands, 100, 8, IterBudget::chunked(10, 64));
+        assert_eq!(s.grant_for(2), Some(TokenGrant { id: 2, decode: 1, prefill: 0 }));
+        assert_eq!(s.grant_for(3), Some(TokenGrant { id: 3, decode: 1, prefill: 0 }));
+        assert_eq!(s.grant_for(1), Some(TokenGrant { id: 1, decode: 0, prefill: 8 }));
+        assert_eq!(s.granted_tokens(), 10);
+    }
+
+    #[test]
+    fn chunk_caps_a_single_prefill_grant() {
+        let mut p = cand(1, 5, ReqState::Prefilling, 0, 8);
+        p.prefill_remaining = 1000;
+        let s = schedule(&[p], 100, 8, IterBudget::chunked(4096, 256));
+        assert_eq!(s.grant_for(1), Some(TokenGrant { id: 1, decode: 0, prefill: 256 }));
+    }
+
+    #[test]
+    fn budget_spreads_across_multiple_prefills() {
+        let mut a = cand(1, 5, ReqState::Prefilling, 0, 8);
+        let mut b = cand(2, 4, ReqState::Prefilling, 0, 8);
+        a.prefill_remaining = 100;
+        b.prefill_remaining = 100;
+        let s = schedule(&[a, b], 100, 8, IterBudget::chunked(150, 100));
+        assert_eq!(s.grant_for(1).unwrap().prefill, 100);
+        assert_eq!(s.grant_for(2).unwrap().prefill, 50, "tail of the budget");
+    }
+
+    #[test]
+    fn preempted_prefill_resumes_with_its_remainder() {
+        // A request that was preempted mid-prefill comes back as
+        // SwappedOut with a partial remainder smaller than the chunk: it
+        // is promoted (KV on CPU — not restarted) and granted exactly
+        // what it still owes.
+        let mut c = cand(1, 5, ReqState::SwappedOut, 0, 10);
+        c.prefill_remaining = 40;
+        let s = schedule(&[c], 100, 8, IterBudget::chunked(512, 64));
+        assert_eq!(s.promote, vec![1], "partial prefill promotes, never restarts");
+        assert!(s.start.is_empty());
+        assert_eq!(s.grant_for(1), Some(TokenGrant { id: 1, decode: 0, prefill: 40 }));
+    }
+
+    #[test]
+    fn admitted_without_grant_keeps_residency() {
+        // Budget of 1 over two prefills: the lower-priority one stays
+        // resident (keep) but makes no progress this iteration.
+        let mut a = cand(1, 9, ReqState::Prefilling, 4, 1);
+        let mut b = cand(2, 1, ReqState::Prefilling, 4, 1);
+        a.prefill_remaining = 100;
+        b.prefill_remaining = 100;
+        let s = schedule(&[a, b], 100, 8, IterBudget::chunked(1, 64));
+        assert_eq!(s.keep, vec![1, 2]);
+        assert!(s.preempt.is_empty());
+        assert_eq!(s.grant_for(1), Some(TokenGrant { id: 1, decode: 0, prefill: 1 }));
+        assert!(s.grant_for(2).is_none());
+    }
+
+    #[test]
+    fn undersized_budget_never_starves_decodes() {
+        // An explicit budget below the decode population is clamped:
+        // every decode-ready request still gets its token; only the
+        // prefill fill is throttled (to zero here).
+        let mut cands: Vec<Candidate> =
+            (0..4).map(|i| cand(i, 5, ReqState::Running, 4, 1)).collect();
+        let mut p = cand(9, 9, ReqState::Prefilling, 0, 4);
+        p.prefill_remaining = 100;
+        cands.push(p);
+        let s = schedule(&cands, 100, 8, IterBudget::chunked(2, 64));
+        for i in 0..4 {
+            assert_eq!(s.grant_for(i).unwrap().decode, 1, "decode {i} starved");
+        }
+        assert!(s.grant_for(9).is_none(), "no budget left for prefill");
+    }
+
+    #[test]
+    fn monolithic_grants_whole_prompt_and_stalls_decodes() {
+        let mut p = cand(1, 1, ReqState::Prefilling, 0, 40);
+        p.prefill_remaining = 600;
+        let cands = vec![p, cand(2, 9, ReqState::Running, 4, 1)];
+        let s = schedule(&cands, 100, 8, IterBudget::monolithic());
+        assert_eq!(s.grant_for(1), Some(TokenGrant { id: 1, decode: 0, prefill: 600 }));
+        assert!(
+            s.grant_for(2).is_none(),
+            "decodes stall behind a monolithic prefill"
+        );
+        // With no prefill pending, decodes run normally.
+        let s = schedule(
+            &[cand(2, 9, ReqState::Running, 4, 1)],
+            100,
+            8,
+            IterBudget::monolithic(),
+        );
+        assert_eq!(s.grant_for(2).unwrap().decode, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity misconfiguration")]
+    fn impossible_candidate_fails_fast_instead_of_starving() {
+        // A queued request needing more blocks than the GPU has could
+        // never be admitted: schedule() must fail fast, not loop.
+        let c = cand(7, 5, ReqState::Queued, 0, 101);
+        schedule(&[c], 100, 8, wide());
     }
 }

@@ -34,6 +34,7 @@ fn run_policy(kind: PolicyKind, scale: &Scale) -> ServeOutcome {
         tenants: N_TENANTS,
         heavy_share: HEAVY_SHARE,
         burst: Some(BURST),
+        ..WorkloadSpec::default()
     };
     run_sim_with(cfg, Preset::llama8b_a10(), Pattern::Markov, scale, &spec)
 }

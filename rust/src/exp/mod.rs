@@ -7,6 +7,7 @@
 //! simulation testbed; the *shape* (who wins, by what factor, where the
 //! knees are) is what reproduces the paper.
 
+pub mod chunked_prefill;
 pub mod fairness_showdown;
 pub mod fig1;
 pub mod fig2;

@@ -61,6 +61,9 @@ pub struct WorkloadSpec {
     /// `Some(burst_factor)` switches arrivals from Poisson to the on/off
     /// bursty pattern at the same long-run rate.
     pub burst: Option<f64>,
+    /// Override the ShareGPT generator shape (`None` = paper defaults) —
+    /// e.g. the long-prompt mixes of the chunked-prefill experiments.
+    pub sharegpt: Option<ShareGptConfig>,
 }
 
 impl Default for WorkloadSpec {
@@ -69,13 +72,14 @@ impl Default for WorkloadSpec {
             tenants: 1,
             heavy_share: 1.0,
             burst: None,
+            sharegpt: None,
         }
     }
 }
 
 /// Generate the conversation set + arrival trace for a (scale, spec).
 pub fn build_workload(scale: &Scale, spec: &WorkloadSpec) -> (Vec<Conversation>, ArrivalTrace) {
-    let wl = ShareGptConfig::default();
+    let wl = spec.sharegpt.clone().unwrap_or_default();
     let mut convs = generate(&wl, scale.conversations, scale.seed);
     if spec.tenants > 1 {
         assign_tenants(

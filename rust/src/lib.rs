@@ -18,12 +18,22 @@
 //!    with contamination tracking, cutting multi-turn swap-out volume
 //!    (paper §3.3, Challenge #3).
 //!
-//! On top of the reproduction, the [`fairness`] subsystem supplies the
-//! *online* policies the paper presupposes but replays from offline
-//! traces: per-tenant virtual-token accounting (VTC) and SLO-deficit
-//! boosting compute live scheduler priorities from observed service, so
-//! the cheap-context-switch machinery is exercised by realistic
-//! multi-tenant contention (`exp fairness`).
+//! On top of the reproduction, two extensions push toward a production
+//! serving system:
+//!
+//! - the [`fairness`] subsystem supplies the *online* policies the paper
+//!   presupposes but replays from offline traces: per-tenant
+//!   virtual-token accounting (VTC) and SLO-deficit boosting compute
+//!   live scheduler priorities from observed service, so the
+//!   cheap-context-switch machinery is exercised by realistic
+//!   multi-tenant contention (`exp fairness`);
+//! - the [`coordinator::scheduler`] admits work under a per-iteration
+//!   **token budget**: decodes claim the budget first and prefill
+//!   *chunks* fill the remainder ([`coordinator::scheduler::IterBudget`]
+//!   / [`coordinator::scheduler::TokenGrant`]), so a long prompt no
+//!   longer stalls co-resident decodes the way whole-prefill admission
+//!   does (`exp chunked` measures the tail-TBT / TTFT trade-off;
+//!   [`config::PrefillMode`] selects the mode).
 //!
 //! ## Architecture (three layers, Python never on the request path)
 //!
@@ -44,8 +54,9 @@
 //! priority levels; [`coordinator::scheduler`] consumes those priorities
 //! unchanged.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index
-//! mapping every paper figure/table to a module and bench.
+//! See `README.md` for the quickstart and `DESIGN.md` for the full
+//! system inventory and the experiment index mapping every paper
+//! figure/table to a module and bench.
 
 pub mod block;
 pub mod config;

@@ -3,14 +3,17 @@
 //!
 //! ```text
 //! fastswitch exp <id|all> [--conversations N] [--seed S] [--out FILE]
-//!     Regenerate a paper figure/table (fig1..fig13, table1), or the
-//!     fairness-policy showdown (`exp fairness`).
+//!     Regenerate a paper figure/table (fig1..fig13, table1), the
+//!     fairness-policy showdown (`exp fairness`), or the chunked-prefill
+//!     showdown (`exp chunked`).
 //!
 //! fastswitch simulate [--preset llama8b_a10|qwen32b_a100]
 //!     [--policy vllm|vllm+dbg|vllm+dbg+reuse|fastswitch]
 //!     [--pattern markov|random|roundrobin] [--freq F]
 //!     [--fairness trace|vtc|slo] [--tenants N] [--heavy-share F]
 //!     [--arrivals poisson|bursty] [--burst B]
+//!     [--prefill-mode chunked|monolithic] [--chunk-tokens N]
+//!     [--iter-budget N (0 = roofline auto)]
 //!     [--conversations N] [--rate R] [--seed S] [--config FILE]
 //!     One simulation run; prints the SLO summary (and a per-tenant
 //!     breakdown when --tenants > 1).
@@ -22,7 +25,7 @@
 //!     Print workload statistics (Fig. 4).
 //! ```
 
-use fastswitch::config::{file::ConfigFile, EngineConfig, Granularity, Preset};
+use fastswitch::config::{file::ConfigFile, EngineConfig, Granularity, PrefillMode, Preset};
 use fastswitch::coordinator::priority::Pattern;
 use fastswitch::exp;
 use fastswitch::exp::runner::{run_sim_with, Scale, WorkloadSpec};
@@ -102,12 +105,13 @@ fn cmd_exp(args: &Args) {
         "fig13" => reports.push(exp::fig13::run(&[2, 8, 20, 40, 60, 80], &scale)),
         "table1" => reports.push(exp::table1::run(&scale)),
         "fairness" => reports.push(exp::fairness_showdown::run(&scale)),
+        "chunked" => reports.push(exp::chunked_prefill::run(&scale)),
         other => eprintln!("unknown experiment {other:?}"),
     };
     if id == "all" {
         for e in [
             "fig1", "fig2", "fig3", "fig4", "fig6", "fig8", "fig9", "fig10", "fig11",
-            "fig12", "fig13", "table1", "fairness",
+            "fig12", "fig13", "table1", "fairness", "chunked",
         ] {
             eprintln!("[exp] running {e} ...");
             run_one(e, &mut reports);
@@ -171,6 +175,16 @@ fn cmd_simulate(args: &Args) {
     if let Some(p) = args.get("fairness") {
         cfg.fairness.policy = PolicyKind::by_name(p).expect("unknown fairness policy");
     }
+    if let Some(m) = args.get("prefill-mode") {
+        cfg.scheduler.prefill_mode =
+            PrefillMode::by_name(m).expect("unknown prefill mode (chunked|monolithic)");
+    }
+    if let Some(c) = args.get("chunk-tokens") {
+        cfg.scheduler.prefill_chunk = c.parse().expect("chunk-tokens");
+    }
+    if let Some(b) = args.get("iter-budget") {
+        cfg.scheduler.max_tokens_per_iter = b.parse().expect("iter-budget");
+    }
     if let Some(n) = args.get("tenants") {
         spec.tenants = n.parse().expect("tenants");
     }
@@ -185,12 +199,20 @@ fn cmd_simulate(args: &Args) {
     let pattern = Pattern::by_name(&pattern_name).expect("unknown pattern");
 
     eprintln!(
-        "[simulate] {} on {}, pattern {:?}, freq {}, priorities {}, {} conversations, {} tenant(s)",
+        "[simulate] {} on {}, pattern {:?}, freq {}, priorities {}, prefill {} \
+         (chunk {}, budget {}), {} conversations, {} tenant(s)",
         cfg.label,
         preset.model.name,
         pattern,
         cfg.scheduler.priority_update_freq,
         cfg.fairness.policy.label(),
+        cfg.scheduler.prefill_mode.label(),
+        cfg.scheduler.prefill_chunk,
+        if cfg.scheduler.max_tokens_per_iter == 0 {
+            "auto".to_string()
+        } else {
+            cfg.scheduler.max_tokens_per_iter.to_string()
+        },
         scale.conversations,
         spec.tenants
     );

@@ -24,10 +24,19 @@ pub struct IterationSample {
     /// Scheduler/bookkeeping time on the critical path (call-stack
     /// overhead, Fig. 9).
     pub sched_overhead_ns: Ns,
-    /// Decode tokens produced this iteration.
+    /// Tokens emitted this iteration (decode steps + prompt-completing
+    /// chunks).
     pub tokens: u32,
-    /// Prefill iteration (prompt chunks) rather than a decode step.
+    /// Pure prefill iteration: prompt chunks ran with no co-scheduled
+    /// decode (monolithic prefill, or nothing was decodable). Mixed
+    /// chunked iterations count as decode iterations.
     pub is_prefill: bool,
+    /// Prompt tokens prefilled this iteration (0 = pure decode).
+    pub prefill_tokens: u32,
+    /// Decode-interference stall: virtual time decode-ready requests
+    /// spent blocked behind (monolithic) or inflated by (co-run chunks)
+    /// prefill work this iteration.
+    pub decode_block_ns: Ns,
     /// Requests in the running batch.
     pub batch: u32,
     /// Requests currently waiting on a KV transfer (Fig. 2).
@@ -141,9 +150,12 @@ impl Recorder {
                 break;
             }
             // Per-request tokens (≡ iterations completed) over wall time.
+            // Mixed chunked iterations also emit prompt-completing tokens
+            // from requests outside the decode batch; clamp so the ratio
+            // stays "iterations completed per running request" (≤ 1).
             let per_req_tokens: f64 = chunk
                 .iter()
-                .map(|s| s.tokens as f64 / s.batch as f64)
+                .map(|s| s.tokens.min(s.batch) as f64 / s.batch as f64)
                 .sum();
             let dur: Ns = chunk
                 .iter()
@@ -268,6 +280,19 @@ impl Recorder {
         sum * sum / (n * sq)
     }
 
+    /// Total decode-interference stall: virtual time decode-ready
+    /// requests spent held back by prefill work — the tail-TBT tax the
+    /// chunked-prefill scheduler exists to shrink (compare monolithic vs
+    /// chunked in `exp chunked`).
+    pub fn decode_interference_ns(&self) -> Ns {
+        self.iterations.iter().map(|s| s.decode_block_ns).sum()
+    }
+
+    /// Total prompt tokens prefilled across all iterations.
+    pub fn prefill_tokens(&self) -> u64 {
+        self.iterations.iter().map(|s| s.prefill_tokens as u64).sum()
+    }
+
     /// Fig. 1 / Fig. 10: total stall vs inference on the critical path.
     pub fn stall_breakdown(&self) -> (Ns, Ns, Ns) {
         let inf = self.iterations.iter().map(|s| s.inference_ns).sum();
@@ -360,6 +385,34 @@ mod tests {
         assert_eq!(eff.len(), 2);
         // Second window has stalls → half the efficiency.
         assert!((eff.max() / eff.min() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_interference_and_prefill_totals() {
+        let mut r = Recorder::default();
+        r.iteration(IterationSample {
+            inference_ns: 10 * MS,
+            prefill_tokens: 256,
+            decode_block_ns: 10 * MS, // monolithic: decodes fully blocked
+            is_prefill: true,
+            ..Default::default()
+        });
+        r.iteration(IterationSample {
+            inference_ns: 12 * MS,
+            prefill_tokens: 64,
+            decode_block_ns: 2 * MS, // mixed: chunk inflated the decode
+            tokens: 8,
+            batch: 8,
+            ..Default::default()
+        });
+        r.iteration(IterationSample {
+            inference_ns: 10 * MS,
+            tokens: 8,
+            batch: 8,
+            ..Default::default()
+        });
+        assert_eq!(r.decode_interference_ns(), 12 * MS);
+        assert_eq!(r.prefill_tokens(), 320);
     }
 
     #[test]

@@ -65,6 +65,61 @@ impl PerfModel {
         self.iter_overhead_ns + (t * 1e9) as Ns
     }
 
+    /// One *mixed* iteration (chunked prefill): `decode_batch` decoding
+    /// requests over `decode_kv` resident context tokens, co-run with
+    /// `prefill_new` prompt tokens chunk-prefilled on top of
+    /// `prefill_ctx` context tokens. Roofline max of the memory stream
+    /// (weights once, plus all KV touched) and the compute stream (dense
+    /// GEMMs over every new token, plus prefill attention): the two
+    /// overlap on real hardware, so the iteration costs whichever bound
+    /// binds. Reduces to [`Self::decode_iter_ns`] with no prefill work
+    /// (decode is memory-bound) and to ≈[`Self::prefill_ns`] with no
+    /// decodes (prefill is compute-bound) — which is exactly why chunking
+    /// is nearly free: a chunk rides the memory-bound decode iteration
+    /// until its compute time exceeds the weight-read floor.
+    pub fn mixed_iter_ns(
+        &self,
+        decode_batch: usize,
+        decode_kv: u64,
+        prefill_new: u64,
+        prefill_ctx: u64,
+    ) -> Ns {
+        if decode_batch == 0 && prefill_new == 0 {
+            return 0;
+        }
+        let kv_token_bytes = (2
+            * self.model.n_kv_heads
+            * self.model.head_dim
+            * self.model.dtype_bytes) as u64
+            * self.model.n_layers as u64;
+        let touched = decode_kv + prefill_ctx + prefill_new;
+        let mem_s = (self.model.weight_bytes() + touched * kv_token_bytes) as f64
+            / self.gpu.hbm_bw;
+        let new_tokens = prefill_new + decode_batch as u64;
+        let dense_flops = 2.0 * self.model.n_params as f64 * new_tokens as f64;
+        let attn_flops = 4.0
+            * self.model.n_layers as f64
+            * (self.model.n_kv_heads * self.model.head_dim) as f64
+            * prefill_new as f64
+            * (prefill_ctx as f64 + prefill_new as f64 / 2.0);
+        let comp_s = (dense_flops + attn_flops) / (self.gpu.peak_flops * self.prefill_mfu);
+        self.iter_overhead_ns + (mem_s.max(comp_s) * 1e9) as Ns
+    }
+
+    /// Roofline-sized per-iteration token budget: the decode batch (one
+    /// claim each) plus the chunk tokens whose dense compute time equals
+    /// one weight read from HBM (the pure-decode iteration floor). A
+    /// budget-full mixed iteration then costs at most ≈2× a decode
+    /// iteration, bounding the TBT inflation chunking can inflict on
+    /// co-resident decodes. Used when
+    /// [`crate::config::SchedulerConfig::max_tokens_per_iter`] is 0.
+    pub fn suggest_token_budget(&self, max_batch: usize) -> u32 {
+        let weight_read_s = self.model.weight_bytes() as f64 / self.gpu.hbm_bw;
+        let chunk_tokens = weight_read_s * self.gpu.peak_flops * self.prefill_mfu
+            / (2.0 * self.model.n_params as f64);
+        (max_batch as u32).saturating_add((chunk_tokens as u32).max(16))
+    }
+
     pub fn model(&self) -> &ModelSpec {
         &self.model
     }
@@ -112,6 +167,62 @@ mod tests {
     fn empty_batch_is_free() {
         assert_eq!(m8b().decode_iter_ns(0, 0), 0);
         assert_eq!(m8b().prefill_ns(0, 100), 0);
+    }
+
+    #[test]
+    fn mixed_reduces_to_decode_when_no_prefill() {
+        // Decode-only mixed iterations are memory-bound: identical to
+        // the dedicated decode model.
+        let pm = m8b();
+        for (batch, kv) in [(1, 100u64), (8, 8 * 1024), (32, 100_000)] {
+            let m = pm.mixed_iter_ns(batch, kv, 0, 0) as i64;
+            let d = pm.decode_iter_ns(batch, kv) as i64;
+            // Same bytes over the same bandwidth; only float summation
+            // order differs.
+            assert!((m - d).abs() <= 1, "mixed {m} vs decode {d}");
+        }
+    }
+
+    #[test]
+    fn mixed_chunk_rides_the_decode_iteration_cheaply() {
+        // A small chunk alongside a decode batch costs far less than
+        // running the same chunk in its own exclusive iteration — the
+        // whole point of chunked prefill.
+        let pm = m8b();
+        let decode = pm.mixed_iter_ns(8, 8 * 1024, 0, 0);
+        let mixed = pm.mixed_iter_ns(8, 8 * 1024, 64, 512);
+        let exclusive = decode + pm.mixed_iter_ns(0, 0, 64, 512);
+        assert!(mixed < exclusive, "mixed {mixed} !< exclusive {exclusive}");
+        // ... and a budget-full mixed iteration stays within ~2.5x the
+        // pure decode iteration (the suggest_token_budget contract).
+        let budget = pm.suggest_token_budget(8) as u64 - 8;
+        let full = pm.mixed_iter_ns(8, 8 * 1024, budget, 2048);
+        assert!(full < decode * 5 / 2, "full {full} vs decode {decode}");
+    }
+
+    #[test]
+    fn mixed_prefill_only_is_compute_bound() {
+        let pm = m8b();
+        // 1024 new tokens: ≈290 ms of dense compute dominates the 27 ms
+        // weight read, matching the dedicated prefill model's magnitude.
+        let t = pm.mixed_iter_ns(0, 0, 1024, 0);
+        let p = pm.prefill_ns(1024, 0);
+        let ratio = t as f64 / p as f64;
+        assert!((0.8..1.3).contains(&ratio), "t={t} p={p}");
+    }
+
+    #[test]
+    fn suggested_budget_magnitude() {
+        // LLaMA-8B on A10: ~27 ms weight read buys ~95 chunk tokens of
+        // compute; the budget adds the decode batch on top.
+        let b = m8b().suggest_token_budget(32);
+        assert!(b > 64 && b < 512, "budget = {b}");
+        assert!(m8b().suggest_token_budget(0) >= 16, "floor");
+    }
+
+    #[test]
+    fn empty_mixed_iteration_is_free() {
+        assert_eq!(m8b().mixed_iter_ns(0, 0, 0, 0), 0);
     }
 
     #[test]

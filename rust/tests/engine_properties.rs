@@ -11,7 +11,7 @@ use fastswitch::config::{EngineConfig, GpuSpec, Preset, SwapMode};
 use fastswitch::coordinator::engine::ServingEngine;
 use fastswitch::coordinator::priority::Pattern;
 use fastswitch::coordinator::request::ReqState;
-use fastswitch::coordinator::scheduler::{schedule, Candidate};
+use fastswitch::coordinator::scheduler::{schedule, Candidate, IterBudget};
 use fastswitch::memory::CpuSwapSpace;
 use fastswitch::util::proptest::for_cases;
 use fastswitch::util::rng::Rng;
@@ -162,11 +162,16 @@ fn prop_cpu_space_accounting() {
 // ---------------------------------------------------------------------
 
 /// Admission respects capacity and batch bounds; no request is both
-/// admitted and preempted; preempted requests were on GPU.
+/// admitted and preempted; preempted requests were on GPU; token grants
+/// stay within the iteration budget and go only to admitted requests.
 #[test]
 fn prop_scheduler_admission_sound() {
     for_cases(0x5CED, 120, |rng| {
         let n = rng.usize(1, 64);
+        // Candidates ask for at most 40 fresh blocks; total stays above
+        // that so no candidate is impossible (schedule fails fast on
+        // capacity misconfiguration by contract).
+        let total = rng.usize(45, 400);
         let cands: Vec<Candidate> = (0..n as u64)
             .map(|id| {
                 let state = match rng.usize(0, 4) {
@@ -187,12 +192,21 @@ fn prop_scheduler_admission_sound() {
                     state,
                     blocks_held: held,
                     blocks_needed: rng.usize(0, 40),
+                    prefill_remaining: if matches!(
+                        state,
+                        ReqState::Prefilling | ReqState::Queued
+                    ) || rng.chance(0.3)
+                    {
+                        rng.range(1, 2000) as u32
+                    } else {
+                        0
+                    },
                 }
             })
             .collect();
-        let total = rng.usize(40, 400);
         let max_batch = rng.usize(1, 32);
-        let s = schedule(&cands, total, max_batch);
+        let budget = IterBudget::chunked(rng.range(1, 2048) as u32, rng.range(1, 512) as u32);
+        let s = schedule(&cands, total, max_batch, budget);
 
         assert!(s.admitted() <= max_batch);
         let admitted: std::collections::HashSet<u64> = s
@@ -217,6 +231,50 @@ fn prop_scheduler_admission_sound() {
             .map(|c| c.blocks_held + c.blocks_needed)
             .sum();
         assert!(used <= total, "over-committed: {used} > {total}");
+        // Token grants: within budget (clamped up to the decode claim
+        // count — decodes are never split by an undersized budget), only
+        // to admitted non-swapping candidates, decode XOR prefill, never
+        // more than owed.
+        let decode_claims = cands
+            .iter()
+            .filter(|c| {
+                admitted.contains(&c.id)
+                    && c.state != ReqState::SwappingIn
+                    && c.prefill_remaining == 0
+            })
+            .count() as u64;
+        let effective = (budget.max_tokens as u64).max(decode_claims);
+        assert!(
+            s.granted_tokens() <= effective,
+            "granted {} > effective budget {}",
+            s.granted_tokens(),
+            effective
+        );
+        // Every admitted decode-ready request makes progress.
+        for c in &cands {
+            if admitted.contains(&c.id)
+                && c.state != ReqState::SwappingIn
+                && c.prefill_remaining == 0
+            {
+                assert_eq!(
+                    s.grant_for(c.id).map(|g| g.decode),
+                    Some(1),
+                    "admitted decode {} got no grant",
+                    c.id
+                );
+            }
+        }
+        for g in &s.grants {
+            assert!(admitted.contains(&g.id), "grant to unadmitted request");
+            let c = cands.iter().find(|c| c.id == g.id).unwrap();
+            assert!(c.state != ReqState::SwappingIn, "grant to in-flight swap-in");
+            assert!(g.decode == 0 || g.prefill == 0, "mixed grant");
+            assert!(g.decode <= 1);
+            assert!(g.prefill <= budget.chunk.min(c.prefill_remaining));
+            if g.decode > 0 {
+                assert_eq!(c.prefill_remaining, 0, "decode grant while owing prefill");
+            }
+        }
     });
 }
 
