@@ -1,0 +1,78 @@
+//! Cluster scaling bench: router + replica cost as the fleet grows.
+//!
+//! Measures (a) wall time per cluster run as replica count scales with a
+//! proportionally scaled arrival rate (weak scaling — the router's own
+//! overhead must stay negligible next to the engines), and (b) the
+//! placement policies head-to-head at a fixed fleet size.
+use fastswitch::cluster::{ClusterConfig, PlacementKind, DEFAULT_SPILL_THRESHOLD};
+use fastswitch::config::{EngineConfig, Preset};
+use fastswitch::coordinator::priority::Pattern;
+use fastswitch::exp::runner::{run_cluster_with, Scale, WorkloadSpec};
+use fastswitch::util::bench::{bench, black_box, section};
+
+fn run_once(replicas: usize, placement: PlacementKind, conversations: usize) -> (u64, f64, f64) {
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.scheduler.priority_update_freq = 0.04;
+    let scale = Scale {
+        conversations,
+        request_rate: replicas as f64, // weak scaling: ~1 conv/s per replica
+        seed: 42,
+        max_iters: 2_000_000,
+        charge_sched_overhead: false,
+    };
+    let spec = WorkloadSpec {
+        tenants: 4,
+        heavy_share: 0.4,
+        ..WorkloadSpec::default()
+    };
+    let out = run_cluster_with(
+        cfg,
+        Preset::llama8b_a10(),
+        Pattern::Markov,
+        ClusterConfig { replicas, placement },
+        &scale,
+        &spec,
+    );
+    (out.total_tokens(), out.throughput(), out.affinity_hit_rate())
+}
+
+fn main() {
+    section("cluster weak scaling (kv_affinity, 30 convs/replica)");
+    for replicas in [1usize, 2, 4] {
+        let label = format!("cluster {replicas} replicas, {} convs", 30 * replicas);
+        let mut tokens = 0u64;
+        let mut tput = 0.0;
+        bench(&label, 0, 3, || {
+            let (t, p, _) = run_once(
+                replicas,
+                PlacementKind::KvAffinity {
+                    spill_threshold: DEFAULT_SPILL_THRESHOLD,
+                },
+                30 * replicas,
+            );
+            tokens = t;
+            tput = p;
+            black_box(t);
+        });
+        println!("  -> {tokens} tokens, {tput:.1} tok/s aggregate virtual throughput");
+    }
+
+    section("placement policies head-to-head (3 replicas, 90 convs)");
+    for placement in [
+        PlacementKind::RoundRobin,
+        PlacementKind::LeastLoaded,
+        PlacementKind::KvAffinity {
+            spill_threshold: DEFAULT_SPILL_THRESHOLD,
+        },
+    ] {
+        let mut stats = (0u64, 0.0, 0.0);
+        bench(&format!("placement {}", placement.label()), 0, 3, || {
+            stats = run_once(3, placement, 90);
+            black_box(stats.0);
+        });
+        println!(
+            "  -> {:.1} tok/s, affinity hit rate {:.3}",
+            stats.1, stats.2
+        );
+    }
+}

@@ -94,6 +94,47 @@ fn bench_swap_manager() {
     });
 }
 
+fn bench_conflict_detection() {
+    // Per-iteration admission cost: detect_conflict(new_blocks) against a
+    // pile of in-flight swap-outs. The linear-scan version was
+    // O(inflight × blocks × new_blocks); the hashed version must stay
+    // well under the 300 µs scheduler budget even with hundreds of fresh
+    // blocks.
+    section("conflict detection (8 in-flight 63-block ops)");
+    let model = ModelSpec::llama8b();
+    let group = SegmentBuilder::new(
+        model,
+        Granularity::BlockGroup { init_group_blocks: 60 },
+    );
+    let mut m = SwapManager::new(
+        SwapMode::Async,
+        DispatchMode::ThreadPool { workers: 4 },
+        &SwapCostConfig::default(),
+        PcieLink::new(GpuSpec::a10()),
+    );
+    for r in 0..8u64 {
+        let moves: Vec<BlockMove> = (0..63)
+            .map(|i| BlockMove {
+                logical: i,
+                gpu: 1000 * r as u32 + i,
+                cpu: 100 + i,
+            })
+            .collect();
+        m.submit_swap_out(group.build(r, Direction::Out, &moves), 0);
+    }
+    // Fresh allocations that never conflict (worst case: full scan).
+    let clean: Vec<u32> = (50_000..50_256).collect();
+    bench("detect_conflict: 256 clean new blocks", 10, 5000, || {
+        black_box(m.detect_conflict(&clean, 0));
+    });
+    // One conflicting block buried at the end.
+    let mut dirty = clean.clone();
+    dirty.push(1000 * 7 + 31);
+    bench("detect_conflict: 257 blocks, 1 conflict", 10, 5000, || {
+        black_box(m.detect_conflict(&dirty, 0));
+    });
+}
+
 fn bench_scheduler() {
     section("scheduler admission (256 candidates)");
     let cands: Vec<Candidate> = (0..256)
@@ -147,6 +188,7 @@ fn main() {
     bench_allocators();
     bench_segments();
     bench_swap_manager();
+    bench_conflict_detection();
     bench_scheduler();
     bench_engine_iteration();
 }

@@ -1,0 +1,60 @@
+//! Multi-replica cluster serving: a front-end router dispatching
+//! multi-turn conversations across N independent engine replicas.
+//!
+//! The paper's §3.3 insight — multi-turn KV reuse only pays off when a
+//! conversation's later turns land where its CPU-side KV copy lives —
+//! acquires a *scale* dimension the moment serving spans more than one
+//! engine. Each replica is a full [`crate::coordinator::engine::ServingEngine`]
+//! (own scheduler, block pool, swap manager, CPU swap space, and fairness
+//! policy); the router owns placement:
+//!
+//! - [`placement::PlacementKind::RoundRobin`] — rotate every placement,
+//!   turn-blind. On ≥ 2 replicas a conversation's later turns land on a
+//!   different replica, so the whole accumulated context is re-prefilled
+//!   from scratch — the §3.3 reuse win is destroyed (cf. Locality-aware
+//!   Fair Scheduling, arXiv 2501.14312).
+//! - [`placement::PlacementKind::LeastLoaded`] — lowest load score (held
+//!   GPU blocks + admission backlog), locality-blind.
+//! - [`placement::PlacementKind::KvAffinity`] — pin later turns to the
+//!   replica holding the conversation's CPU KV copy, spilling to the
+//!   least-loaded replica only when the home replica's load exceeds the
+//!   spill threshold — the tunable reuse-vs-balance trade-off.
+//!
+//! The router measures exactly that trade-off: `affinity_hit_rate`
+//! (later-turn placements that kept their KV locality) and
+//! `retransferred_blocks_on_migration` (context blocks a migration forces
+//! the target replica to rebuild), next to cross-replica aggregates of
+//! the per-tenant TTFT/TBT percentiles, token shares, Jain fairness
+//! index, and swap volume ([`router::ClusterOutcome`]).
+//!
+//! `fastswitch exp cluster` runs the placement showdown;
+//! `cargo bench --bench cluster_scaling` measures router cost as the
+//! replica count grows; `rust/tests/cluster_e2e.rs` pins the reuse
+//! semantics deterministically.
+
+pub mod placement;
+pub mod router;
+
+pub use placement::{PlacementKind, Placer, ReplicaLoad, DEFAULT_SPILL_THRESHOLD};
+pub use router::{ClusterOutcome, ClusterRouter};
+
+/// Front-end configuration: replica fan-out + placement policy
+/// (`[cluster]` config section / `--replicas` / `--placement`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of independent engine replicas (1 = classic single-engine
+    /// serving; the router is bypassed).
+    pub replicas: usize,
+    pub placement: PlacementKind,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 1,
+            placement: PlacementKind::KvAffinity {
+                spill_threshold: DEFAULT_SPILL_THRESHOLD,
+            },
+        }
+    }
+}

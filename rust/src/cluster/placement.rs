@@ -1,0 +1,213 @@
+//! Placement policies: which replica serves the next unit of work.
+//!
+//! A unit of work is either a fresh conversation (no KV anywhere) or a
+//! live conversation's next turn (its CPU KV copy lives on the *home*
+//! replica). Policies are pure over a per-replica load snapshot, so they
+//! are unit-testable without engines and deterministic across runs.
+
+/// Which placement policy the router runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PlacementKind {
+    /// Rotate every placement across replicas, ignoring both load and KV
+    /// locality (the baseline that destroys multi-turn reuse on ≥ 2
+    /// replicas).
+    RoundRobin,
+    /// Lowest load score (KV occupancy + normalized admission backlog),
+    /// ignoring KV locality.
+    LeastLoaded,
+    /// Pin a conversation's later turns to the replica holding its CPU
+    /// KV copy; spill to the least-loaded replica only when the home
+    /// replica's load score exceeds the least-loaded score by more than
+    /// `spill_threshold` (0 = spill on any imbalance ≈ least-loaded with
+    /// an affinity tiebreak; `f64::INFINITY` = never spill).
+    KvAffinity { spill_threshold: f64 },
+}
+
+/// Default affinity/balance trade-off: tolerate the home replica being
+/// up to half a load unit (≈ half its KV space, or half a batch of
+/// backlog) busier than the least-loaded one before giving up locality.
+pub const DEFAULT_SPILL_THRESHOLD: f64 = 0.5;
+
+impl PlacementKind {
+    pub fn by_name(s: &str) -> Option<PlacementKind> {
+        match s {
+            "round_robin" | "round-robin" | "rr" => Some(PlacementKind::RoundRobin),
+            "least_loaded" | "least-loaded" | "ll" => Some(PlacementKind::LeastLoaded),
+            "kv_affinity" | "kv-affinity" | "affinity" => Some(PlacementKind::KvAffinity {
+                spill_threshold: DEFAULT_SPILL_THRESHOLD,
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PlacementKind::RoundRobin => "round_robin",
+            PlacementKind::LeastLoaded => "least_loaded",
+            PlacementKind::KvAffinity { .. } => "kv_affinity",
+        }
+    }
+}
+
+/// One replica's load snapshot at placement time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplicaLoad {
+    /// GPU KV blocks currently allocated.
+    pub blocks_in_use: usize,
+    /// GPU KV capacity in blocks.
+    pub gpu_blocks: usize,
+    /// Admission backlog: dispatched-but-unserved arrivals, pending
+    /// turns, and requests waiting for GPU residency.
+    pub backlog: usize,
+    /// Max decode batch (normalizes the backlog).
+    pub max_batch: usize,
+}
+
+impl ReplicaLoad {
+    /// Scalar load score: KV occupancy plus batch-normalized backlog.
+    /// Both terms are ~1.0 at saturation, so a score difference of 0.5
+    /// means "half a GPU's worth busier".
+    pub fn score(&self) -> f64 {
+        self.blocks_in_use as f64 / self.gpu_blocks.max(1) as f64
+            + self.backlog as f64 / self.max_batch.max(1) as f64
+    }
+}
+
+/// Lowest-score replica; ties break to the lowest index (deterministic).
+fn least_loaded(loads: &[ReplicaLoad]) -> usize {
+    let mut best = 0usize;
+    for (i, l) in loads.iter().enumerate().skip(1) {
+        if l.score() < loads[best].score() {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Stateful placement driver (round-robin needs a rotation cursor).
+#[derive(Clone, Debug)]
+pub struct Placer {
+    kind: PlacementKind,
+    rr_next: usize,
+}
+
+impl Placer {
+    pub fn new(kind: PlacementKind) -> Self {
+        Placer { kind, rr_next: 0 }
+    }
+
+    pub fn kind(&self) -> PlacementKind {
+        self.kind
+    }
+
+    /// Choose a replica for one unit of work. `home` is the replica
+    /// holding the conversation's CPU KV copy (`None` for fresh
+    /// conversations).
+    pub fn place(&mut self, loads: &[ReplicaLoad], home: Option<usize>) -> usize {
+        assert!(!loads.is_empty(), "placement over an empty cluster");
+        match self.kind {
+            PlacementKind::RoundRobin => {
+                let r = self.rr_next % loads.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                r
+            }
+            PlacementKind::LeastLoaded => least_loaded(loads),
+            PlacementKind::KvAffinity { spill_threshold } => {
+                let best = least_loaded(loads);
+                match home {
+                    Some(h) if loads[h].score() <= loads[best].score() + spill_threshold => h,
+                    _ => best,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(blocks: usize, backlog: usize) -> ReplicaLoad {
+        ReplicaLoad {
+            blocks_in_use: blocks,
+            gpu_blocks: 100,
+            backlog,
+            max_batch: 10,
+        }
+    }
+
+    #[test]
+    fn names_and_labels() {
+        assert_eq!(
+            PlacementKind::by_name("round_robin"),
+            Some(PlacementKind::RoundRobin)
+        );
+        assert_eq!(
+            PlacementKind::by_name("least_loaded"),
+            Some(PlacementKind::LeastLoaded)
+        );
+        assert!(matches!(
+            PlacementKind::by_name("kv_affinity"),
+            Some(PlacementKind::KvAffinity { .. })
+        ));
+        assert_eq!(PlacementKind::by_name("nope"), None);
+        assert_eq!(PlacementKind::RoundRobin.label(), "round_robin");
+        assert_eq!(
+            PlacementKind::KvAffinity { spill_threshold: 1.0 }.label(),
+            "kv_affinity"
+        );
+    }
+
+    #[test]
+    fn round_robin_cycles_regardless_of_load() {
+        let mut p = Placer::new(PlacementKind::RoundRobin);
+        let loads = vec![load(90, 9), load(0, 0), load(50, 5)];
+        let seq: Vec<usize> = (0..6).map(|_| p.place(&loads, Some(0))).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_minimum_score_ties_to_lowest_index() {
+        let mut p = Placer::new(PlacementKind::LeastLoaded);
+        assert_eq!(p.place(&[load(90, 0), load(10, 0), load(10, 8)], None), 1);
+        // Exact tie: lowest index wins (determinism).
+        assert_eq!(p.place(&[load(10, 2), load(10, 2)], None), 0);
+        // Backlog counts too: fewer blocks but a deep queue loses.
+        assert_eq!(p.place(&[load(0, 9), load(30, 0)], None), 1);
+    }
+
+    #[test]
+    fn affinity_sticks_to_home_within_threshold() {
+        let mut p = Placer::new(PlacementKind::KvAffinity { spill_threshold: 0.5 });
+        // Home is busier, but within half a load unit: stay.
+        assert_eq!(p.place(&[load(40, 0), load(10, 0)], Some(0)), 0);
+        // Home exceeds the threshold: spill to the least loaded.
+        assert_eq!(p.place(&[load(80, 5), load(10, 0)], Some(0)), 1);
+        // No home (fresh conversation): least loaded.
+        assert_eq!(p.place(&[load(40, 0), load(10, 0)], None), 1);
+    }
+
+    #[test]
+    fn affinity_never_spills_at_infinite_threshold() {
+        let mut p = Placer::new(PlacementKind::KvAffinity {
+            spill_threshold: f64::INFINITY,
+        });
+        assert_eq!(p.place(&[load(100, 10), load(0, 0)], Some(0)), 0);
+    }
+
+    #[test]
+    fn affinity_at_zero_threshold_still_prefers_home_on_ties() {
+        let mut p = Placer::new(PlacementKind::KvAffinity { spill_threshold: 0.0 });
+        // Equal scores: home wins (free locality).
+        assert_eq!(p.place(&[load(10, 0), load(10, 0)], Some(1)), 1);
+        // Any imbalance: spill.
+        assert_eq!(p.place(&[load(10, 0), load(11, 0)], Some(1)), 0);
+    }
+
+    #[test]
+    fn load_score_saturates_at_about_one_per_axis() {
+        let l = load(100, 10);
+        assert!((l.score() - 2.0).abs() < 1e-12);
+        assert_eq!(ReplicaLoad::default().score(), 0.0);
+    }
+}

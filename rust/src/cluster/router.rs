@@ -1,0 +1,542 @@
+//! The cluster front-end: replica lifecycle, per-turn dispatch, KV
+//! migration, and cross-replica metric aggregation.
+//!
+//! Each replica is a full [`ServingEngine`] in `hold_turns` mode: at
+//! every turn end the engine swaps the conversation's KV out to its own
+//! CPU space and reports the next turn to the router instead of
+//! self-scheduling it. The router then makes one placement decision per
+//! turn:
+//!
+//! - **keep** — [`ServingEngine::fire_turn`] on the home replica: the
+//!   turn re-enters through the normal pending-turn path and the §3.3
+//!   reuse machinery sees the preserved CPU copy (an *affinity hit*);
+//! - **migrate** — [`ServingEngine::evict_for_migration`] on the home
+//!   replica, then the unserved remainder is re-dispatched to the target
+//!   as a fresh conversation whose first turn re-prefills the whole
+//!   accumulated context (`retransferred_blocks_on_migration` counts the
+//!   cost).
+//!
+//! Virtual time: replicas advance their own clocks independently (they
+//! share no simulated hardware), but every placement decision is made
+//! only once all replicas with runnable work have reached the decision
+//! time, so load snapshots are causal and runs are deterministic.
+
+use std::collections::HashMap;
+
+use crate::config::{EngineConfig, Preset};
+use crate::coordinator::engine::{ServeOutcome, ServingEngine};
+use crate::coordinator::priority::Pattern;
+use crate::memory::RequestId;
+use crate::sim::clock::Ns;
+use crate::util::stats::Percentiles;
+use crate::workload::{ArrivalTrace, Conversation};
+
+use super::placement::{Placer, PlacementKind, ReplicaLoad};
+use super::ClusterConfig;
+
+/// One placeable unit of work.
+#[derive(Clone, Debug)]
+enum Work {
+    /// A conversation's first dispatch (no KV anywhere yet).
+    Fresh(Conversation),
+    /// A live conversation's next turn; `home` holds its CPU KV copy.
+    Turn { id: RequestId, home: usize },
+}
+
+#[derive(Clone, Debug)]
+struct QueuedWork {
+    due: Ns,
+    /// Tie-breaker: queue insertion order (determinism).
+    seq: u64,
+    work: Work,
+}
+
+/// The multi-replica front end. Construct with the full workload, then
+/// [`ClusterRouter::run`] to completion.
+pub struct ClusterRouter {
+    replicas: Vec<ServingEngine>,
+    placer: Placer,
+    queue: Vec<QueuedWork>,
+    seq: u64,
+    label: String,
+    // ---- placement counters ----
+    placements: u64,
+    affinity_decisions: u64,
+    affinity_hits: u64,
+    migrations: u64,
+    retransferred_blocks: u64,
+}
+
+impl ClusterRouter {
+    pub fn new(
+        cfg: EngineConfig,
+        preset: Preset,
+        pattern: Pattern,
+        cluster: ClusterConfig,
+        convs: Vec<Conversation>,
+        arrivals: ArrivalTrace,
+        seed: u64,
+    ) -> Self {
+        assert!(cluster.replicas >= 1, "cluster needs at least one replica");
+        let label = format!(
+            "{}/{}x{}",
+            cfg.label,
+            cluster.placement.label(),
+            cluster.replicas
+        );
+        let replicas: Vec<ServingEngine> = (0..cluster.replicas)
+            .map(|i| {
+                let mut e = ServingEngine::new(
+                    cfg.clone(),
+                    preset.clone(),
+                    pattern,
+                    Vec::new(),
+                    ArrivalTrace { entries: Vec::new() },
+                    seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
+                e.hold_turns = true;
+                e
+            })
+            .collect();
+        let mut router = ClusterRouter {
+            replicas,
+            placer: Placer::new(cluster.placement),
+            queue: Vec::new(),
+            seq: 0,
+            label,
+            placements: 0,
+            affinity_decisions: 0,
+            affinity_hits: 0,
+            migrations: 0,
+            retransferred_blocks: 0,
+        };
+        for e in &arrivals.entries {
+            let conv = convs[e.conversation as usize].clone();
+            router.push_work(e.arrival, Work::Fresh(conv));
+        }
+        router
+    }
+
+    /// Propagate the Fig-9 wall-clock charging flag to every replica
+    /// (off for deterministic experiments, like the single-engine path).
+    pub fn set_charge_sched_overhead(&mut self, on: bool) {
+        for r in &mut self.replicas {
+            r.charge_sched_overhead = on;
+        }
+    }
+
+    fn push_work(&mut self, due: Ns, work: Work) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(QueuedWork { due, seq, work });
+    }
+
+    fn drain_turn_events(&mut self) {
+        for i in 0..self.replicas.len() {
+            for (id, due) in self.replicas[i].take_released_turns() {
+                self.push_work(due, Work::Turn { id, home: i });
+            }
+        }
+    }
+
+    fn loads(&self) -> Vec<ReplicaLoad> {
+        self.replicas
+            .iter()
+            .map(|e| ReplicaLoad {
+                blocks_in_use: e.gpu_blocks_in_use(),
+                gpu_blocks: e.gpu_capacity_blocks(),
+                backlog: e.backlog(),
+                max_batch: e.max_batch(),
+            })
+            .collect()
+    }
+
+    fn place(&mut self, qw: QueuedWork) {
+        let loads = self.loads();
+        match qw.work {
+            Work::Fresh(conv) => {
+                let target = self.placer.place(&loads, None);
+                self.placements += 1;
+                self.replicas[target].push_arrival(conv, qw.due);
+            }
+            Work::Turn { id, home } => {
+                let target = self.placer.place(&loads, Some(home));
+                self.placements += 1;
+                self.affinity_decisions += 1;
+                if target == home {
+                    self.affinity_hits += 1;
+                    self.replicas[home].fire_turn(id, qw.due);
+                    return;
+                }
+                let Some(m) = self.replicas[home].evict_for_migration(id) else {
+                    // The conversation terminated on the home replica in
+                    // the meantime (oversize rejection): nothing to move.
+                    return;
+                };
+                self.migrations += 1;
+                // Charge the migration by what locality actually lost:
+                // the CPU-resident context blocks the home replica held
+                // (a recompute-preempted conversation with no copy would
+                // re-prefill everything even if kept home — cost 0).
+                self.retransferred_blocks += m.cpu_copy_blocks as u64;
+                let mut turns = m.remaining;
+                // The target holds no context: fold the whole history
+                // into the first prompt (saturating — an oversized rebase
+                // must trip the target's max-model-len check, not wrap).
+                turns[0].prompt_tokens =
+                    u32::try_from(m.history_tokens + turns[0].prompt_tokens as u64)
+                        .unwrap_or(u32::MAX);
+                turns[0].think_time_s = 0.0;
+                self.replicas[target].push_arrival(
+                    Conversation {
+                        id: m.conv_id,
+                        tenant: m.tenant,
+                        turns,
+                    },
+                    qw.due,
+                );
+            }
+        }
+    }
+
+    /// Run the cluster to completion (or `max_iters` engine iterations
+    /// per replica, pro-rated as a global step budget). Consumes the
+    /// router and returns the aggregated outcome.
+    pub fn run(mut self, max_iters: u64) -> ClusterOutcome {
+        let max_steps = max_iters.saturating_mul(self.replicas.len() as u64);
+        let mut steps = 0u64;
+        loop {
+            self.drain_turn_events();
+            let next = self
+                .queue
+                .iter()
+                .map(|w| (w.due, w.seq))
+                .min();
+            if let Some((due, seq)) = next {
+                // Bring every replica's clock up to the decision point so
+                // the placement's load snapshot is causal.
+                if let Some(r) = self
+                    .replicas
+                    .iter_mut()
+                    .find(|r| r.has_pending_work() && r.now() < due)
+                {
+                    r.step();
+                    steps += 1;
+                    if steps >= max_steps {
+                        break;
+                    }
+                    continue;
+                }
+                let idx = self
+                    .queue
+                    .iter()
+                    .position(|w| (w.due, w.seq) == (due, seq))
+                    .expect("queued work vanished");
+                let qw = self.queue.swap_remove(idx);
+                self.place(qw);
+                continue;
+            }
+            // No routable work pending: advance the laggard replica.
+            let Some(r) = self
+                .replicas
+                .iter_mut()
+                .filter(|r| r.has_pending_work())
+                .min_by_key(|r| r.now())
+            else {
+                break;
+            };
+            r.step();
+            steps += 1;
+            if steps >= max_steps {
+                break;
+            }
+        }
+        ClusterOutcome {
+            placement: self.placer.kind(),
+            label: self.label,
+            placements: self.placements,
+            affinity_decisions: self.affinity_decisions,
+            affinity_hits: self.affinity_hits,
+            migrations: self.migrations,
+            retransferred_blocks_on_migration: self.retransferred_blocks,
+            replicas: self
+                .replicas
+                .into_iter()
+                .map(|e| e.into_outcome())
+                .collect(),
+        }
+    }
+}
+
+/// Everything a finished cluster run reports: per-replica outcomes plus
+/// router-level placement counters and cross-replica aggregations.
+#[derive(Debug)]
+pub struct ClusterOutcome {
+    pub replicas: Vec<ServeOutcome>,
+    pub placement: PlacementKind,
+    pub label: String,
+    /// Total placement decisions (fresh dispatches + turn placements).
+    pub placements: u64,
+    /// Later-turn placements (the decisions where KV locality matters).
+    pub affinity_decisions: u64,
+    /// Later-turn placements routed to the replica holding the KV copy.
+    pub affinity_hits: u64,
+    /// Later-turn placements that moved the conversation.
+    pub migrations: u64,
+    /// CPU-resident context blocks thrown away by migrations — the §3.3
+    /// reuse the target replicas must rebuild from scratch (a migration
+    /// of a conversation whose home held no copy costs 0).
+    pub retransferred_blocks_on_migration: u64,
+}
+
+impl ClusterOutcome {
+    /// Fraction of later-turn placements that kept KV locality
+    /// (`NaN` when the workload had no multi-turn conversations).
+    pub fn affinity_hit_rate(&self) -> f64 {
+        if self.affinity_decisions == 0 {
+            return f64::NAN;
+        }
+        self.affinity_hits as f64 / self.affinity_decisions as f64
+    }
+
+    pub fn finished_conversations(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|o| o.recorder.finished_conversations)
+            .sum()
+    }
+
+    pub fn rejected_conversations(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|o| o.recorder.rejected_conversations)
+            .sum()
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.replicas.iter().map(|o| o.recorder.total_tokens).sum()
+    }
+
+    /// Cluster makespan: the slowest replica's span.
+    pub fn span(&self) -> Ns {
+        self.replicas.iter().map(|o| o.span).max().unwrap_or(0)
+    }
+
+    /// Aggregate token throughput over the cluster makespan.
+    pub fn throughput(&self) -> f64 {
+        let span = self.span();
+        if span == 0 {
+            return 0.0;
+        }
+        self.total_tokens() as f64 / crate::sim::clock::to_secs(span)
+    }
+
+    /// Cross-replica TTFT percentiles (exact: raw samples re-merged).
+    pub fn ttft(&self) -> Percentiles {
+        Percentiles::merged(self.replicas.iter().map(|o| o.recorder.ttft()))
+    }
+
+    /// Cross-replica TBT percentiles.
+    pub fn tbt(&self) -> Percentiles {
+        Percentiles::merged(self.replicas.iter().map(|o| o.recorder.tbt()))
+    }
+
+    /// Per-tenant TTFT percentiles over all replicas, sorted by tenant.
+    pub fn ttft_by_tenant(&self) -> Vec<(u32, Percentiles)> {
+        merge_by_tenant(self.replicas.iter().map(|o| o.recorder.ttft_by_tenant()))
+    }
+
+    /// Per-tenant TBT percentiles over all replicas, sorted by tenant.
+    pub fn tbt_by_tenant(&self) -> Vec<(u32, Percentiles)> {
+        merge_by_tenant(self.replicas.iter().map(|o| o.recorder.tbt_by_tenant()))
+    }
+
+    /// Per-tenant token counts summed over all replicas.
+    pub fn tokens_by_tenant(&self) -> Vec<(u32, u64)> {
+        let mut counts: HashMap<u32, u64> = HashMap::new();
+        for o in &self.replicas {
+            for (t, n) in o.recorder.tokens_by_tenant() {
+                *counts.entry(t).or_insert(0) += n;
+            }
+        }
+        let mut v: Vec<(u32, u64)> = counts.into_iter().collect();
+        v.sort_by_key(|&(t, _)| t);
+        v
+    }
+
+    /// Per-tenant share of all cluster tokens, sorted by tenant.
+    pub fn token_shares(&self) -> Vec<(u32, f64)> {
+        let counts = self.tokens_by_tenant();
+        let total: u64 = counts.iter().map(|&(_, n)| n).sum();
+        if total == 0 {
+            return counts.iter().map(|&(t, _)| (t, 0.0)).collect();
+        }
+        counts
+            .iter()
+            .map(|&(t, n)| (t, n as f64 / total as f64))
+            .collect()
+    }
+
+    /// Jain's fairness index over the *cluster-wide* per-tenant token
+    /// counts — per-replica indices are meaningless when tenants span
+    /// replicas.
+    pub fn jain_fairness(&self) -> f64 {
+        let counts = self.tokens_by_tenant();
+        if counts.is_empty() {
+            return f64::NAN;
+        }
+        let n = counts.len() as f64;
+        let sum: f64 = counts.iter().map(|&(_, c)| c as f64).sum();
+        let sq: f64 = counts.iter().map(|&(_, c)| (c as f64) * (c as f64)).sum();
+        if sq == 0.0 {
+            return f64::NAN;
+        }
+        sum * sum / (n * sq)
+    }
+
+    /// Total KV blocks moved over PCIe, all replicas (swap volume).
+    pub fn swap_blocks_total(&self) -> u64 {
+        self.replicas.iter().map(|o| o.swap_stats.total_blocks).sum()
+    }
+
+    /// Total bytes moved over PCIe, all replicas.
+    pub fn swap_bytes_total(&self) -> u64 {
+        self.replicas.iter().map(|o| o.swap_stats.total_bytes).sum()
+    }
+
+    /// Blocks the §3.3 reuse mechanism skipped, all replicas.
+    pub fn blocks_reused_total(&self) -> u64 {
+        self.replicas.iter().map(|o| o.reuse_blocks_reused).sum()
+    }
+}
+
+fn merge_by_tenant(
+    parts: impl Iterator<Item = Vec<(u32, Percentiles)>>,
+) -> Vec<(u32, Percentiles)> {
+    let mut samples: HashMap<u32, Vec<f64>> = HashMap::new();
+    for part in parts {
+        for (tenant, p) in part {
+            samples
+                .entry(tenant)
+                .or_default()
+                .extend_from_slice(p.samples());
+        }
+    }
+    let mut v: Vec<(u32, Percentiles)> = samples
+        .into_iter()
+        .map(|(t, s)| (t, Percentiles::from(s)))
+        .collect();
+    v.sort_by_key(|&(t, _)| t);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DEFAULT_SPILL_THRESHOLD;
+    use crate::exp::runner::{build_workload, run_sim_with, Scale, WorkloadSpec};
+
+    fn quick_scale() -> Scale {
+        Scale {
+            conversations: 16,
+            request_rate: 2.0,
+            seed: 11,
+            max_iters: 400_000,
+            charge_sched_overhead: false,
+        }
+    }
+
+    fn run_cluster(replicas: usize, placement: PlacementKind) -> ClusterOutcome {
+        let scale = quick_scale();
+        let spec = WorkloadSpec {
+            tenants: 3,
+            heavy_share: 0.5,
+            ..WorkloadSpec::default()
+        };
+        let (convs, arrivals) = build_workload(&scale, &spec);
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.scheduler.priority_update_freq = 0.04;
+        let mut router = ClusterRouter::new(
+            cfg,
+            Preset::llama8b_a10(),
+            Pattern::Markov,
+            ClusterConfig { replicas, placement },
+            convs,
+            arrivals,
+            scale.seed,
+        );
+        router.set_charge_sched_overhead(false);
+        router.run(scale.max_iters)
+    }
+
+    #[test]
+    fn single_replica_cluster_matches_single_engine_totals() {
+        // With one replica every placement is trivially "home": the
+        // router must be a pass-through — same conversations served to
+        // completion, same token totals as the direct engine path.
+        let scale = quick_scale();
+        let spec = WorkloadSpec {
+            tenants: 3,
+            heavy_share: 0.5,
+            ..WorkloadSpec::default()
+        };
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.scheduler.priority_update_freq = 0.04;
+        let direct = run_sim_with(
+            cfg,
+            Preset::llama8b_a10(),
+            Pattern::Markov,
+            &scale,
+            &spec,
+        );
+        let clustered = run_cluster(
+            1,
+            PlacementKind::KvAffinity {
+                spill_threshold: DEFAULT_SPILL_THRESHOLD,
+            },
+        );
+        assert_eq!(
+            clustered.finished_conversations(),
+            direct.recorder.finished_conversations
+        );
+        assert_eq!(clustered.total_tokens(), direct.recorder.total_tokens);
+        assert!((clustered.affinity_hit_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(clustered.migrations, 0);
+    }
+
+    #[test]
+    fn two_replicas_complete_everything_under_all_policies() {
+        for placement in [
+            PlacementKind::RoundRobin,
+            PlacementKind::LeastLoaded,
+            PlacementKind::KvAffinity {
+                spill_threshold: DEFAULT_SPILL_THRESHOLD,
+            },
+        ] {
+            let out = run_cluster(2, placement);
+            assert_eq!(
+                out.finished_conversations() + out.rejected_conversations(),
+                16,
+                "{placement:?} lost conversations"
+            );
+            assert!(out.total_tokens() > 0);
+            assert!(out.placements >= 16, "every conversation is placed");
+            let jain = out.jain_fairness();
+            assert!(jain > 0.0 && jain <= 1.0 + 1e-12, "jain = {jain}");
+        }
+    }
+
+    #[test]
+    fn cluster_run_is_deterministic() {
+        let a = run_cluster(2, PlacementKind::RoundRobin);
+        let b = run_cluster(2, PlacementKind::RoundRobin);
+        assert_eq!(a.total_tokens(), b.total_tokens());
+        assert_eq!(a.span(), b.span());
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(
+            a.retransferred_blocks_on_migration,
+            b.retransferred_blocks_on_migration
+        );
+        assert_eq!(a.tokens_by_tenant(), b.tokens_by_tenant());
+    }
+}

@@ -37,6 +37,7 @@ pub enum ConfigError {
     UnknownPolicy(String),
     UnknownFairnessPolicy(String),
     UnknownPrefillMode(String),
+    UnknownPlacement(String),
 }
 
 impl std::fmt::Display for ConfigError {
@@ -51,6 +52,12 @@ impl std::fmt::Display for ConfigError {
             }
             ConfigError::UnknownPrefillMode(p) => {
                 write!(f, "unknown prefill mode {p:?} (chunked|monolithic)")
+            }
+            ConfigError::UnknownPlacement(p) => {
+                write!(
+                    f,
+                    "unknown placement policy {p:?} (round_robin|least_loaded|kv_affinity)"
+                )
             }
         }
     }
@@ -192,6 +199,26 @@ impl ConfigFile {
         }
         Ok(cfg)
     }
+
+    /// Build the cluster front-end config from `[cluster]` (defaults:
+    /// one replica, `kv_affinity` placement).
+    pub fn cluster(&self) -> Result<crate::cluster::ClusterConfig, ConfigError> {
+        use crate::cluster::{ClusterConfig, PlacementKind};
+        let mut c = ClusterConfig::default();
+        if let Some(n) = self.get_usize("cluster", "replicas") {
+            c.replicas = n.max(1);
+        }
+        if let Some(p) = self.get("cluster", "placement") {
+            c.placement = PlacementKind::by_name(p)
+                .ok_or_else(|| ConfigError::UnknownPlacement(p.into()))?;
+        }
+        if let Some(s) = self.get_f64("cluster", "spill_threshold") {
+            if let PlacementKind::KvAffinity { .. } = c.placement {
+                c.placement = PlacementKind::KvAffinity { spill_threshold: s };
+            }
+        }
+        Ok(c)
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -305,6 +332,30 @@ pattern = "markov"
             c.engine(),
             Err(ConfigError::UnknownFairnessPolicy(_))
         ));
+    }
+
+    #[test]
+    fn cluster_section_configures_the_front_end() {
+        use crate::cluster::PlacementKind;
+        let c = ConfigFile::parse(
+            "[cluster]\nreplicas = 4\nplacement = \"kv_affinity\"\nspill_threshold = 1.25",
+        )
+        .unwrap();
+        let cl = c.cluster().unwrap();
+        assert_eq!(cl.replicas, 4);
+        assert_eq!(
+            cl.placement,
+            PlacementKind::KvAffinity { spill_threshold: 1.25 }
+        );
+        // Absent section → single-replica default.
+        let d = ConfigFile::parse("").unwrap().cluster().unwrap();
+        assert_eq!(d.replicas, 1);
+    }
+
+    #[test]
+    fn bad_placement_rejected() {
+        let c = ConfigFile::parse("[cluster]\nplacement = \"nope\"").unwrap();
+        assert!(matches!(c.cluster(), Err(ConfigError::UnknownPlacement(_))));
     }
 
     #[test]

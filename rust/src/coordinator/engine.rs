@@ -28,7 +28,7 @@ use crate::sim::link::{Direction, PcieLink};
 use crate::sim::PerfModel;
 use crate::swap::engine::{BlockMove, SegmentBuilder};
 use crate::swap::manager::{SwapInDecision, SwapManager};
-use crate::workload::{ArrivalTrace, Conversation};
+use crate::workload::{ArrivalTrace, Conversation, Turn};
 
 /// Everything a finished simulation reports.
 #[derive(Debug)]
@@ -47,6 +47,24 @@ impl ServeOutcome {
     pub fn throughput(&self) -> f64 {
         self.recorder.throughput(self.span)
     }
+}
+
+/// What [`ServingEngine::evict_for_migration`] hands the cluster router
+/// when a conversation's next turn is placed on a different replica: the
+/// unserved remainder plus the context the target replica must rebuild.
+#[derive(Clone, Debug)]
+pub struct MigratedConv {
+    pub conv_id: RequestId,
+    pub tenant: u32,
+    /// Turns not yet served (the next turn first).
+    pub remaining: Vec<Turn>,
+    /// Context tokens accumulated on the source replica — the target must
+    /// re-prefill all of them (its CPU holds no copy).
+    pub history_tokens: u64,
+    /// Valid CPU-copy blocks dropped on the source replica — the reuse
+    /// the migration destroys (the router's
+    /// `retransferred_blocks_on_migration` counter).
+    pub cpu_copy_blocks: usize,
 }
 
 enum Alloc {
@@ -99,6 +117,14 @@ pub struct ServingEngine {
     iter_budget: u32,
     /// Wall-clock → virtual charging of scheduler overhead (Fig. 9).
     pub charge_sched_overhead: bool,
+    /// Cluster mode: turn transitions are *held* for the front-end router
+    /// instead of self-scheduled — `end_turn` reports the next turn via
+    /// [`ServingEngine::take_released_turns`] and the router decides
+    /// placement ([`ServingEngine::fire_turn`] to keep it here,
+    /// [`ServingEngine::evict_for_migration`] to move it).
+    pub hold_turns: bool,
+    /// Next turns awaiting a router placement decision: (request, due).
+    released_turns: Vec<(RequestId, Ns)>,
 }
 
 impl ServingEngine {
@@ -166,6 +192,8 @@ impl ServingEngine {
             block_size,
             iter_budget,
             charge_sched_overhead: true,
+            hold_turns: false,
+            released_turns: Vec::new(),
         }
     }
 
@@ -283,6 +311,11 @@ impl ServingEngine {
     fn release_reaped(&mut self, ids: Vec<RequestId>) {
         for id in ids {
             self.alloc.as_dyn().release(id);
+            if !self.reqs.contains(id) {
+                // Evicted mid-drain (cluster migration): the record is
+                // gone; only the source blocks needed freeing.
+                continue;
+            }
             let r = self.reqs.get_mut(id);
             if r.state == ReqState::SwappingOutTurnEnd {
                 r.state = ReqState::WaitingTurn;
@@ -598,10 +631,15 @@ impl ServingEngine {
         }
         // Schedule the next turn after think time, and move the KV cache
         // out of precious HBM (multi-turn context preservation — the
-        // §3.3 workload).
+        // §3.3 workload). In cluster mode the next turn is instead held
+        // for the router's placement decision.
         let think = r.conv.turns[r.turn + 1].think_time_s;
         let due = self.now + (think * 1e9) as Ns;
-        self.pending_turns.push((id, due));
+        if self.hold_turns {
+            self.released_turns.push((id, due));
+        } else {
+            self.pending_turns.push((id, due));
+        }
         self.preempt(id, true)
     }
 
@@ -612,7 +650,14 @@ impl ServingEngine {
     /// Advance one scheduler iteration. Returns false when all work is
     /// done.
     pub fn step(&mut self) -> bool {
-        if self.reqs.all_finished() && self.future.is_empty() {
+        // In-flight ops gate the exit too: an evicted conversation's
+        // draining swap-out (cluster migration) still holds GPU blocks
+        // after its record is gone; a step must reap it. Single-engine
+        // serving never hits this — live ops imply a live request.
+        if self.reqs.all_finished()
+            && self.future.is_empty()
+            && self.mgr.next_event().is_none()
+        {
             return false;
         }
         let wall0 = Instant::now();
@@ -923,6 +968,12 @@ impl ServingEngine {
                 break;
             }
         }
+        self.into_outcome()
+    }
+
+    /// Finalize a router-driven engine: invariant checks + outcome
+    /// summary (the tail of [`ServingEngine::run`]).
+    pub fn into_outcome(self) -> ServeOutcome {
         let alloc = self.alloc.as_dyn_ref();
         alloc.space().check_invariants();
         self.cpu.check_invariants();
@@ -936,6 +987,122 @@ impl ServingEngine {
             label: self.cfg.label.clone(),
             recorder: self.rec,
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Cluster front-end hooks (see crate::cluster)
+    // ------------------------------------------------------------------
+
+    /// Enqueue a conversation arriving at virtual time `at` (the cluster
+    /// router's dispatch path; `future` stays sorted descending so
+    /// `pop()` still yields the earliest arrival).
+    pub fn push_arrival(&mut self, conv: Conversation, at: Ns) {
+        let idx = self.future.partition_point(|&(t, _)| t > at);
+        self.future.insert(idx, (at, conv));
+    }
+
+    /// Drain the next-turn events held back by `hold_turns`: (request,
+    /// due time after think time). The router must answer each with
+    /// [`ServingEngine::fire_turn`] or
+    /// [`ServingEngine::evict_for_migration`].
+    pub fn take_released_turns(&mut self) -> Vec<(RequestId, Ns)> {
+        std::mem::take(&mut self.released_turns)
+    }
+
+    /// Router kept the conversation on this replica: schedule its held
+    /// next turn at `due` through the normal pending-turn path (the
+    /// turn's KV context is still on this replica's CPU).
+    pub fn fire_turn(&mut self, id: RequestId, due: Ns) {
+        debug_assert!(self.reqs.contains(id));
+        self.pending_turns.push((id, due));
+    }
+
+    /// Router moved the conversation to another replica: drop every local
+    /// trace of it (GPU blocks, CPU copies, reuse state) and hand back
+    /// the unserved remainder. Only valid for a conversation whose held
+    /// turn has not been fired — i.e. it is waiting out think time with
+    /// more turns to go. Returns `None` if the conversation meanwhile
+    /// terminated here (e.g. oversize rejection).
+    pub fn evict_for_migration(&mut self, id: RequestId) -> Option<MigratedConv> {
+        if !self.reqs.contains(id) {
+            return None;
+        }
+        let r = self.reqs.get(id);
+        // A turn-end swap-out may still be on the wire
+        // (SwappingOutTurnEnd): its content was fixed at submit, so the
+        // remainder can migrate now, but the op itself keeps draining —
+        // the source blocks stay allocated and visible to the conflict /
+        // pressure paths until its completion event, exactly like any
+        // other in-flight swap-out ([`Self::release_reaped`] tolerates
+        // the record being gone by then).
+        if !matches!(
+            r.state,
+            ReqState::WaitingTurn | ReqState::SwappingOutTurnEnd
+        ) || r.is_last_turn()
+        {
+            return None;
+        }
+        let history_tokens = r.turn_total_tokens();
+        let remaining: Vec<Turn> = r.conv.turns[r.turn + 1..].to_vec();
+        let tenant = r.tenant();
+        let cpu_copy_blocks = self.cpu.valid_logical(id).len();
+        let draining = self.mgr.swap_out_inflight(id).is_some();
+        if !draining {
+            self.alloc.as_dyn().release(id);
+        }
+        self.cpu.drop_request(id);
+        self.reuse.forget(id);
+        // Remove the record entirely: the conversation may return to this
+        // replica later and re-insert under the same id; a stale Finished
+        // entry would leak and be rescanned every iteration.
+        let _ = self.reqs.remove(id);
+        Some(MigratedConv {
+            conv_id: id,
+            tenant,
+            remaining,
+            history_tokens,
+            cpu_copy_blocks,
+        })
+    }
+
+    /// Does this replica still have internally schedulable work? A
+    /// request parked in `WaitingTurn` whose next turn the router holds
+    /// does NOT count — only the router can make it progress. In-flight
+    /// swap operations DO count: an evicted conversation's draining
+    /// swap-out still holds GPU source blocks that only a step can reap.
+    pub fn has_pending_work(&self) -> bool {
+        if !self.future.is_empty() || !self.pending_turns.is_empty() {
+            return true;
+        }
+        if self.mgr.ongoing_in_count() > 0 || self.mgr.ongoing_out_count() > 0 {
+            return true;
+        }
+        self.reqs
+            .iter()
+            .any(|r| !matches!(r.state, ReqState::Finished | ReqState::WaitingTurn))
+    }
+
+    /// GPU KV blocks currently allocated (placement load signal).
+    pub fn gpu_blocks_in_use(&self) -> usize {
+        self.alloc.as_dyn_ref().space().used_blocks()
+    }
+
+    /// Admission backlog: dispatched-but-unserved arrivals, scheduled
+    /// pending turns, and requests waiting for GPU residency (placement
+    /// load signal).
+    pub fn backlog(&self) -> usize {
+        self.future.len()
+            + self.pending_turns.len()
+            + self
+                .reqs
+                .iter()
+                .filter(|r| matches!(r.state, ReqState::Queued | ReqState::SwappedOut))
+                .count()
+    }
+
+    /// Max decode batch (normalizes the backlog in load scores).
+    pub fn max_batch(&self) -> usize {
+        self.cfg.scheduler.max_batch
     }
 
     /// Testing/experiment access.

@@ -147,6 +147,16 @@ impl Request {
         tokens.div_ceil(block_size as u64) as usize
     }
 
+    /// Clamp a u64 token count into the u32 `prefill_target` domain
+    /// without wrapping. A context anywhere near `u32::MAX` tokens is far
+    /// beyond any servable max-model-len, so the saturated target keeps
+    /// the request oversized and guarantees the engine's admission check
+    /// rejects it — a wrapped value would instead look like a small,
+    /// perfectly servable prompt and silently truncate the conversation.
+    fn prefill_target_from(tokens: u64) -> u32 {
+        u32::try_from(tokens).unwrap_or(u32::MAX)
+    }
+
     /// Begin the next turn (state → Queued). Must not be on the last turn.
     /// If the context was dropped (recompute-preemption at turn end), the
     /// new turn must re-prefill the whole history as well.
@@ -158,7 +168,9 @@ impl Request {
         self.generated = 0;
         self.last_emit = None;
         self.prefill_target = if self.kv == KvLocation::None {
-            (self.history_tokens() + self.cur_turn().prompt_tokens as u64) as u32
+            Self::prefill_target_from(
+                self.history_tokens() + self.cur_turn().prompt_tokens as u64,
+            )
         } else {
             self.cur_turn().prompt_tokens
         };
@@ -172,9 +184,11 @@ impl Request {
         self.tokens_in_cache = 0;
         // Everything materialized so far must be recomputed: history +
         // this turn's prompt + already-generated output.
-        self.prefill_target = (self.history_tokens()
-            + self.cur_turn().prompt_tokens as u64
-            + self.generated as u64) as u32;
+        self.prefill_target = Self::prefill_target_from(
+            self.history_tokens()
+                + self.cur_turn().prompt_tokens as u64
+                + self.generated as u64,
+        );
         self.prefill_done = 0;
     }
 }
@@ -202,6 +216,19 @@ impl RequestTable {
 
     pub fn contains(&self, id: RequestId) -> bool {
         self.index.contains_key(&id)
+    }
+
+    /// Remove a request entirely (cluster migration: the conversation
+    /// leaves this replica and may later return under the same id, so a
+    /// stale record must not linger). Swap-remove keeps the index dense.
+    pub fn remove(&mut self, id: RequestId) -> Option<Request> {
+        let idx = self.index.remove(&id)?;
+        let r = self.reqs.swap_remove(idx);
+        if idx < self.reqs.len() {
+            let moved = self.reqs[idx].id;
+            self.index.insert(moved, idx);
+        }
+        Some(r)
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &Request> {
@@ -311,6 +338,32 @@ mod tests {
     }
 
     #[test]
+    fn huge_history_saturates_prefill_target_instead_of_wrapping() {
+        // Regression: `history_tokens()` (u64) used to be cast to u32
+        // with `as`, so a conversation whose history exceeded u32::MAX
+        // tokens wrapped to a small, plausible-looking prefill target and
+        // would have been silently served truncated. The conversion must
+        // saturate so the engine's max-model-len admission check fires.
+        let mut r = Request::new(1, conv(&[(3_000_000_000, 3_000_000_000), (30, 40)]), 0);
+        r.kv = KvLocation::None; // context lost: next turn recomputes history
+        r.advance_turn(0);
+        // history 6e9 + prompt 30 wraps to ~1.7e9 under `as u32`.
+        assert_eq!(r.prefill_target, u32::MAX, "must saturate, not wrap");
+    }
+
+    #[test]
+    fn drop_context_saturates_on_huge_history() {
+        let mut r = Request::new(1, conv(&[(3_000_000_000, 3_000_000_000), (30, 40)]), 0);
+        r.kv = KvLocation::Cpu; // context preserved across the turn switch
+        r.advance_turn(0);
+        assert_eq!(r.prefill_target, 30, "preserved context needs only the prompt");
+        r.generated = 10;
+        r.drop_context();
+        // history 6e9 + prompt 30 + generated 10: saturates.
+        assert_eq!(r.prefill_target, u32::MAX, "must saturate, not wrap");
+    }
+
+    #[test]
     fn apply_prefill_resumes_across_chunks() {
         let mut r = Request::new(1, conv(&[(100, 50)]), 0);
         r.state = ReqState::Prefilling;
@@ -342,5 +395,26 @@ mod tests {
         assert_eq!(t.ids_in_state(ReqState::Queued), vec![1]);
         assert_eq!(t.ids_in_state(ReqState::Running), vec![2]);
         assert!(!t.all_finished());
+    }
+
+    #[test]
+    fn table_remove_keeps_index_dense_and_allows_reinsert() {
+        let mut t = RequestTable::default();
+        t.insert(Request::new(1, conv(&[(10, 10)]), 0));
+        t.insert(Request::new(2, conv(&[(20, 10)]), 0));
+        t.insert(Request::new(3, conv(&[(30, 10)]), 0));
+        let r = t.remove(2).expect("present");
+        assert_eq!(r.id, 2);
+        assert_eq!(t.len(), 2);
+        assert!(!t.contains(2));
+        // Swap-remove moved request 3 into the vacated slot: lookups
+        // must still resolve.
+        assert_eq!(t.get(3).conv.turns[0].prompt_tokens, 30);
+        assert_eq!(t.get(1).conv.turns[0].prompt_tokens, 10);
+        assert!(t.remove(2).is_none(), "double remove");
+        // The migrated conversation can come back under the same id.
+        t.insert(Request::new(2, conv(&[(40, 10)]), 5));
+        assert_eq!(t.get(2).conv.turns[0].prompt_tokens, 40);
+        assert_eq!(t.len(), 3);
     }
 }

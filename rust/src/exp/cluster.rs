@@ -1,0 +1,199 @@
+//! Cluster placement showdown — the experiment the cluster front-end
+//! exists for: round-robin vs least-loaded vs KV-affinity placement of a
+//! skewed multi-tenant ShareGPT workload with bursty MMPP arrivals on a
+//! multi-replica cluster, compared on aggregate per-tenant tail
+//! TTFT/TBT, cluster-wide Jain fairness, KV-locality preservation
+//! (`affinity hit rate`, re-transferred context blocks), and swap
+//! volume.
+//!
+//! Expected shape: round-robin scatters a conversation's turns across
+//! replicas, so nearly every later turn re-prefills its whole history on
+//! a cold replica — the §3.3 reuse win is destroyed and swap/prefill
+//! volume balloons. Least-loaded balances better but is equally
+//! locality-blind. KV-affinity keeps later turns where the CPU KV copy
+//! lives (spilling only under load imbalance), so re-transferred blocks
+//! collapse while tail latency stays competitive.
+//!
+//! `fastswitch exp cluster` or `cargo bench --bench cluster_scaling`.
+
+use super::runner::{run_cluster_with, Scale, WorkloadSpec};
+use super::{f2, f3, Report};
+use crate::cluster::{ClusterConfig, ClusterOutcome, PlacementKind, DEFAULT_SPILL_THRESHOLD};
+use crate::config::{EngineConfig, Preset};
+use crate::coordinator::priority::Pattern;
+use crate::fairness::PolicyKind;
+
+/// ≥ 2 replicas so placement is a real decision.
+pub const REPLICAS: usize = 3;
+/// Tenant mix: one heavy abuser issuing half the traffic, five light
+/// tenants splitting the rest; arrivals in 4× bursts (MMPP).
+pub const N_TENANTS: usize = 6;
+pub const HEAVY_SHARE: f64 = 0.5;
+pub const BURST: f64 = 4.0;
+
+/// The three placement policies under comparison.
+pub fn policies() -> [PlacementKind; 3] {
+    [
+        PlacementKind::RoundRobin,
+        PlacementKind::LeastLoaded,
+        PlacementKind::KvAffinity {
+            spill_threshold: DEFAULT_SPILL_THRESHOLD,
+        },
+    ]
+}
+
+pub fn run_policy(placement: PlacementKind, scale: &Scale) -> ClusterOutcome {
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.scheduler.priority_update_freq = 0.04;
+    // Each replica runs its own online fairness policy; the report
+    // checks the *aggregate* Jain index across all of them.
+    cfg.fairness.policy = PolicyKind::Vtc;
+    let spec = WorkloadSpec {
+        tenants: N_TENANTS,
+        heavy_share: HEAVY_SHARE,
+        burst: Some(BURST),
+        ..WorkloadSpec::default()
+    };
+    // Scale the arrival rate with the fleet so each replica sees
+    // single-engine-like pressure.
+    let scale = Scale {
+        request_rate: scale.request_rate * REPLICAS as f64,
+        ..scale.clone()
+    };
+    run_cluster_with(
+        cfg,
+        Preset::llama8b_a10(),
+        Pattern::Markov,
+        ClusterConfig {
+            replicas: REPLICAS,
+            placement,
+        },
+        &scale,
+        &spec,
+    )
+}
+
+pub fn run(scale: &Scale) -> Report {
+    let mut rep = Report::new(
+        "cluster",
+        &format!(
+            "placement showdown on {REPLICAS} replicas: round_robin vs least_loaded vs \
+             kv_affinity, {N_TENANTS} tenants (tenant 0 heavy, {}% of traffic), {BURST}x bursts",
+            (HEAVY_SHARE * 100.0) as u32,
+        ),
+        &[
+            "placement",
+            "tenant",
+            "P50 TTFT s",
+            "P99 TTFT s",
+            "P99 TBT s",
+            "tok share",
+            "jain",
+            "affinity",
+            "migr blocks",
+            "swap blocks",
+        ],
+    );
+    for placement in policies() {
+        let out = run_policy(placement, scale);
+        let ttft = out.ttft_by_tenant();
+        let tbt = out.tbt_by_tenant();
+        for &(tenant, share) in &out.token_shares() {
+            let tt = ttft.iter().find(|&&(t, _)| t == tenant).map(|(_, p)| p);
+            let tb = tbt.iter().find(|&&(t, _)| t == tenant).map(|(_, p)| p);
+            rep.row(vec![
+                placement.label().into(),
+                if tenant == 0 {
+                    "0 (heavy)".into()
+                } else {
+                    tenant.to_string()
+                },
+                tt.map(|p| f3(p.p(50.0))).unwrap_or_else(|| "-".into()),
+                tt.map(|p| f3(p.p(99.0))).unwrap_or_else(|| "-".into()),
+                tb.map(|p| f3(p.p(99.0))).unwrap_or_else(|| "-".into()),
+                f3(share),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+            ]);
+        }
+        let all_ttft = out.ttft();
+        let all_tbt = out.tbt();
+        rep.row(vec![
+            placement.label().into(),
+            "all".into(),
+            f3(all_ttft.p(50.0)),
+            f3(all_ttft.p(99.0)),
+            f3(all_tbt.p(99.0)),
+            "1.000".into(),
+            f3(out.jain_fairness()),
+            f2(out.affinity_hit_rate()),
+            out.retransferred_blocks_on_migration.to_string(),
+            out.swap_blocks_total().to_string(),
+        ]);
+    }
+    rep.note(
+        "affinity = fraction of later-turn placements kept on the replica holding the \
+         conversation's CPU KV copy; migr blocks = CPU-resident context blocks thrown \
+         away by migrations (reuse the target replica must rebuild)",
+    );
+    rep.note(
+        "jain = Jain fairness index over cluster-wide per-tenant token counts \
+         (aggregated across all replicas); swap blocks = PCIe KV traffic summed over replicas",
+    );
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> Scale {
+        Scale {
+            conversations: 36,
+            ..Scale::quick()
+        }
+    }
+
+    #[test]
+    fn showdown_reports_all_policies_and_aggregates() {
+        let rep = run(&quick());
+        let placements: std::collections::HashSet<&str> =
+            rep.rows.iter().map(|r| r[0].as_str()).collect();
+        assert_eq!(
+            placements,
+            ["round_robin", "least_loaded", "kv_affinity"]
+                .into_iter()
+                .collect()
+        );
+        assert!(rep.rows.iter().any(|r| r[1] == "0 (heavy)"));
+        assert!(rep.rows.iter().any(|r| r[1] == "all"));
+    }
+
+    #[test]
+    fn kv_affinity_retransfers_strictly_less_than_round_robin() {
+        // The acceptance bar: on a multi-turn workload, locality-blind
+        // rotation must pay for its migrations in re-prefilled context
+        // blocks, and KV-affinity must strictly undercut it.
+        let scale = quick();
+        let rr = run_policy(PlacementKind::RoundRobin, &scale);
+        let aff = run_policy(
+            PlacementKind::KvAffinity {
+                spill_threshold: DEFAULT_SPILL_THRESHOLD,
+            },
+            &scale,
+        );
+        assert!(
+            rr.retransferred_blocks_on_migration > 0,
+            "round_robin on {REPLICAS} replicas must force re-prefills"
+        );
+        assert!(
+            aff.retransferred_blocks_on_migration < rr.retransferred_blocks_on_migration,
+            "kv_affinity {} !< round_robin {}",
+            aff.retransferred_blocks_on_migration,
+            rr.retransferred_blocks_on_migration
+        );
+        assert!(aff.affinity_hit_rate() > rr.affinity_hit_rate());
+    }
+}

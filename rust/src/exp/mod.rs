@@ -8,6 +8,7 @@
 //! knees are) is what reproduces the paper.
 
 pub mod chunked_prefill;
+pub mod cluster;
 pub mod fairness_showdown;
 pub mod fig1;
 pub mod fig2;

@@ -1,5 +1,6 @@
 //! Shared simulation runner for all experiments.
 
+use crate::cluster::{ClusterConfig, ClusterOutcome, ClusterRouter};
 use crate::config::{EngineConfig, Preset};
 use crate::coordinator::engine::{ServeOutcome, ServingEngine};
 use crate::coordinator::priority::Pattern;
@@ -107,6 +108,31 @@ pub fn run_sim_with(
     let mut engine = ServingEngine::new(cfg, preset, pattern, convs, arrivals, scale.seed);
     engine.charge_sched_overhead = scale.charge_sched_overhead;
     engine.run(scale.max_iters)
+}
+
+/// Run one cluster simulation: the shaped workload dispatched across
+/// `cluster.replicas` independent engine replicas by the configured
+/// placement policy.
+pub fn run_cluster_with(
+    cfg: EngineConfig,
+    preset: Preset,
+    pattern: Pattern,
+    cluster: ClusterConfig,
+    scale: &Scale,
+    spec: &WorkloadSpec,
+) -> ClusterOutcome {
+    let (convs, arrivals) = build_workload(scale, spec);
+    let mut router = ClusterRouter::new(
+        cfg,
+        preset,
+        pattern,
+        cluster,
+        convs,
+        arrivals,
+        scale.seed,
+    );
+    router.set_charge_sched_overhead(scale.charge_sched_overhead);
+    router.run(scale.max_iters)
 }
 
 /// Run one simulation (classic single-tenant Poisson workload).

@@ -33,7 +33,14 @@
 //!   / [`coordinator::scheduler::TokenGrant`]), so a long prompt no
 //!   longer stalls co-resident decodes the way whole-prefill admission
 //!   does (`exp chunked` measures the tail-TBT / TTFT trade-off;
-//!   [`config::PrefillMode`] selects the mode).
+//!   [`config::PrefillMode`] selects the mode);
+//! - the [`cluster`] front-end dispatches conversations across N
+//!   independent engine replicas with pluggable placement —
+//!   round-robin, least-loaded, or KV-affinity (pin a conversation's
+//!   later turns to the replica holding its CPU KV copy, with a spill
+//!   threshold trading locality for balance) — and aggregates per-tenant
+//!   latency, fairness, and swap-volume metrics across replicas
+//!   (`exp cluster` runs the placement showdown).
 //!
 //! ## Architecture (three layers, Python never on the request path)
 //!
@@ -59,6 +66,7 @@
 //! figure/table to a module and bench.
 
 pub mod block;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod exp;
@@ -72,6 +80,7 @@ pub mod swap;
 pub mod util;
 pub mod workload;
 
+pub use cluster::{ClusterConfig, ClusterOutcome, ClusterRouter, PlacementKind};
 pub use config::{EngineConfig, GpuSpec, ModelSpec, Preset, SchedulerConfig};
 pub use coordinator::engine::{ServeOutcome, ServingEngine};
 pub use fairness::{FairnessConfig, PolicyKind, PriorityPolicy};

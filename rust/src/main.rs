@@ -4,8 +4,9 @@
 //! ```text
 //! fastswitch exp <id|all> [--conversations N] [--seed S] [--out FILE]
 //!     Regenerate a paper figure/table (fig1..fig13, table1), the
-//!     fairness-policy showdown (`exp fairness`), or the chunked-prefill
-//!     showdown (`exp chunked`).
+//!     fairness-policy showdown (`exp fairness`), the chunked-prefill
+//!     showdown (`exp chunked`), or the multi-replica placement
+//!     showdown (`exp cluster`).
 //!
 //! fastswitch simulate [--preset llama8b_a10|qwen32b_a100]
 //!     [--policy vllm|vllm+dbg|vllm+dbg+reuse|fastswitch]
@@ -14,9 +15,12 @@
 //!     [--arrivals poisson|bursty] [--burst B]
 //!     [--prefill-mode chunked|monolithic] [--chunk-tokens N]
 //!     [--iter-budget N (0 = roofline auto)]
+//!     [--replicas N] [--placement round_robin|least_loaded|kv_affinity]
+//!     [--spill-threshold F]
 //!     [--conversations N] [--rate R] [--seed S] [--config FILE]
-//!     One simulation run; prints the SLO summary (and a per-tenant
-//!     breakdown when --tenants > 1).
+//!     One simulation run; prints the SLO summary (a per-tenant
+//!     breakdown when --tenants > 1, and cluster aggregates when
+//!     --replicas > 1).
 //!
 //! fastswitch serve [--artifacts DIR] [--requests N] [--policy ...]
 //!     Serve batched requests on the real AOT-compiled model via PJRT.
@@ -25,15 +29,17 @@
 //!     Print workload statistics (Fig. 4).
 //! ```
 
+use fastswitch::cluster::{ClusterConfig, ClusterOutcome, PlacementKind};
 use fastswitch::config::{file::ConfigFile, EngineConfig, Granularity, PrefillMode, Preset};
 use fastswitch::coordinator::priority::Pattern;
 use fastswitch::exp;
-use fastswitch::exp::runner::{run_sim_with, Scale, WorkloadSpec};
+use fastswitch::exp::runner::{run_cluster_with, run_sim_with, Scale, WorkloadSpec};
 use fastswitch::fairness::PolicyKind;
 use fastswitch::runtime::PjrtModel;
 use fastswitch::server::{RealEngine, RealEngineConfig, RealRequestSpec};
 use fastswitch::util::cli::Args;
 use fastswitch::util::rng::Rng;
+use fastswitch::util::stats::Percentiles;
 
 fn main() {
     let args = Args::from_env();
@@ -106,12 +112,13 @@ fn cmd_exp(args: &Args) {
         "table1" => reports.push(exp::table1::run(&scale)),
         "fairness" => reports.push(exp::fairness_showdown::run(&scale)),
         "chunked" => reports.push(exp::chunked_prefill::run(&scale)),
+        "cluster" => reports.push(exp::cluster::run(&scale)),
         other => eprintln!("unknown experiment {other:?}"),
     };
     if id == "all" {
         for e in [
             "fig1", "fig2", "fig3", "fig4", "fig6", "fig8", "fig9", "fig10", "fig11",
-            "fig12", "fig13", "table1", "fairness", "chunked",
+            "fig12", "fig13", "table1", "fairness", "chunked", "cluster",
         ] {
             eprintln!("[exp] running {e} ...");
             run_one(e, &mut reports);
@@ -134,8 +141,10 @@ fn cmd_simulate(args: &Args) {
     let mut pattern_name = args.get_or("pattern", "markov").to_string();
     let mut scale = scale_from(args);
     let mut spec = WorkloadSpec::default();
+    let mut ccfg = ClusterConfig::default();
     let (mut cfg, preset) = if let Some(path) = args.get("config") {
         let f = ConfigFile::load(path).expect("config file");
+        ccfg = f.cluster().expect("cluster config");
         if let Some(n) = f.get_usize("workload", "conversations") {
             scale.conversations = n;
         }
@@ -196,7 +205,38 @@ fn cmd_simulate(args: &Args) {
         // directions (bursty → poisson too).
         spec.burst = (a == "bursty").then(|| args.get_f64("burst", 4.0));
     }
+    if let Some(n) = args.get("replicas") {
+        ccfg.replicas = n.parse::<usize>().expect("replicas").max(1);
+    }
+    if let Some(p) = args.get("placement") {
+        ccfg.placement = PlacementKind::by_name(p)
+            .expect("unknown placement (round_robin|least_loaded|kv_affinity)");
+    }
+    if let Some(s) = args.get("spill-threshold") {
+        if let PlacementKind::KvAffinity { .. } = ccfg.placement {
+            ccfg.placement = PlacementKind::KvAffinity {
+                spill_threshold: s.parse().expect("spill-threshold"),
+            };
+        }
+    }
     let pattern = Pattern::by_name(&pattern_name).expect("unknown pattern");
+
+    if ccfg.replicas > 1 {
+        eprintln!(
+            "[simulate] cluster: {} on {}, {} replicas, {} placement, {} conversations, \
+             {} tenant(s)",
+            cfg.label,
+            preset.model.name,
+            ccfg.replicas,
+            ccfg.placement.label(),
+            scale.conversations,
+            spec.tenants
+        );
+        let multi_tenant = spec.tenants > 1;
+        let out = run_cluster_with(cfg, preset, pattern, ccfg, &scale, &spec);
+        print_cluster_summary(&out, multi_tenant);
+        return;
+    }
 
     eprintln!(
         "[simulate] {} on {}, pattern {:?}, freq {}, priorities {}, prefill {} \
@@ -249,24 +289,93 @@ fn cmd_simulate(args: &Args) {
     );
     if multi_tenant {
         println!("== per-tenant breakdown ==");
-        let ttft = out.recorder.ttft_by_tenant();
-        let tbt = out.recorder.tbt_by_tenant();
-        for (tenant, share) in out.recorder.token_shares() {
-            let tt = ttft.iter().find(|&&(t, _)| t == tenant).map(|(_, p)| p);
-            let tb = tbt.iter().find(|&&(t, _)| t == tenant).map(|(_, p)| p);
-            println!(
-                "tenant {tenant:>3}{} : share {:.3}  TTFT P50/P99 {:.3}/{:.3} s  TBT P99 {:.3} s",
-                if tenant == 0 { " (heavy)" } else { "        " },
-                share,
-                tt.map(|p| p.p(50.0)).unwrap_or(f64::NAN),
-                tt.map(|p| p.p(99.0)).unwrap_or(f64::NAN),
-                tb.map(|p| p.p(99.0)).unwrap_or(f64::NAN),
-            );
-        }
+        print_tenant_rows(
+            &out.recorder.ttft_by_tenant(),
+            &out.recorder.tbt_by_tenant(),
+            &out.recorder.token_shares(),
+        );
         println!(
             "max/min token share : {:.2}   Jain index : {:.3}",
             out.recorder.max_min_share_ratio(),
             out.recorder.jain_fairness()
+        );
+    }
+}
+
+/// Shared per-tenant breakdown rows (single-engine and cluster
+/// summaries must not drift apart).
+fn print_tenant_rows(
+    ttft: &[(u32, Percentiles)],
+    tbt: &[(u32, Percentiles)],
+    shares: &[(u32, f64)],
+) {
+    for &(tenant, share) in shares {
+        let tt = ttft.iter().find(|&&(t, _)| t == tenant).map(|(_, p)| p);
+        let tb = tbt.iter().find(|&&(t, _)| t == tenant).map(|(_, p)| p);
+        println!(
+            "tenant {tenant:>3}{} : share {:.3}  TTFT P50/P99 {:.3}/{:.3} s  TBT P99 {:.3} s",
+            if tenant == 0 { " (heavy)" } else { "        " },
+            share,
+            tt.map(|p| p.p(50.0)).unwrap_or(f64::NAN),
+            tt.map(|p| p.p(99.0)).unwrap_or(f64::NAN),
+            tb.map(|p| p.p(99.0)).unwrap_or(f64::NAN),
+        );
+    }
+}
+
+fn print_cluster_summary(out: &ClusterOutcome, multi_tenant: bool) {
+    let ttft = out.ttft();
+    let tbt = out.tbt();
+    println!("== cluster summary ({}) ==", out.label);
+    println!("replicas               : {}", out.replicas.len());
+    println!("conversations finished : {}", out.finished_conversations());
+    println!("tokens generated       : {}", out.total_tokens());
+    println!("span (makespan)        : {:.1}s", out.span() as f64 / 1e9);
+    println!("throughput             : {:.1} tok/s", out.throughput());
+    println!(
+        "TTFT   P50/P95/P99/P99.9 : {:.3}/{:.3}/{:.3}/{:.3} s",
+        ttft.p(50.0), ttft.p(95.0), ttft.p(99.0), ttft.p(99.9)
+    );
+    println!(
+        "TBT    P50/P95/P99/P99.9 : {:.3}/{:.3}/{:.3}/{:.3} s",
+        tbt.p(50.0), tbt.p(95.0), tbt.p(99.0), tbt.p(99.9)
+    );
+    println!(
+        "placements {} (turn decisions {}), affinity hit rate {:.3}, migrations {} \
+         ({} context blocks re-prefilled)",
+        out.placements,
+        out.affinity_decisions,
+        out.affinity_hit_rate(),
+        out.migrations,
+        out.retransferred_blocks_on_migration
+    );
+    println!(
+        "swap volume            : {} blocks / {:.2} GB across replicas",
+        out.swap_blocks_total(),
+        out.swap_bytes_total() as f64 / 1e9
+    );
+    println!("== per-replica breakdown ==");
+    for (i, o) in out.replicas.iter().enumerate() {
+        println!(
+            "replica {i} : finished {:>4}  tokens {:>8}  preemptions {:>5}  \
+             swap blocks {:>8}  span {:.1}s",
+            o.recorder.finished_conversations,
+            o.recorder.total_tokens,
+            o.recorder.preemptions,
+            o.swap_stats.total_blocks,
+            o.span as f64 / 1e9
+        );
+    }
+    if multi_tenant {
+        println!("== per-tenant breakdown (aggregated over replicas) ==");
+        print_tenant_rows(
+            &out.ttft_by_tenant(),
+            &out.tbt_by_tenant(),
+            &out.token_shares(),
+        );
+        println!(
+            "cluster Jain index     : {:.3}",
+            out.jain_fairness()
         );
     }
 }

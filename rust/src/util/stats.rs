@@ -59,6 +59,21 @@ impl Percentiles {
     pub fn sum(&self) -> f64 {
         self.sorted.iter().sum()
     }
+
+    /// The raw (sorted) samples — cross-replica aggregation re-merges
+    /// these so cluster percentiles stay exact.
+    pub fn samples(&self) -> &[f64] {
+        &self.sorted
+    }
+
+    /// Exact union of several percentile sets.
+    pub fn merged(parts: impl IntoIterator<Item = Percentiles>) -> Percentiles {
+        let mut all = Vec::new();
+        for p in parts {
+            all.extend_from_slice(&p.sorted);
+        }
+        Percentiles::from(all)
+    }
 }
 
 /// Fixed-bin histogram (used for the Fig. 4 workload distributions).
@@ -186,6 +201,16 @@ mod tests {
     fn percentile_filters_nan() {
         let p = Percentiles::from(vec![1.0, f64::NAN, 2.0]);
         assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn merged_is_exact_union() {
+        let a = Percentiles::from(vec![1.0, 3.0]);
+        let b = Percentiles::from(vec![2.0, 4.0]);
+        let m = Percentiles::merged([a, b]);
+        assert_eq!(m.samples(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.p(50.0), 2.5);
+        assert!(Percentiles::merged([]).is_empty());
     }
 
     #[test]

@@ -1,0 +1,243 @@
+//! Deterministic end-to-end cluster placement: `kv_affinity` keeps a
+//! conversation's later turns on the replica holding its CPU KV copy, so
+//! the §3.3 reuse mechanism still skips already-copied blocks
+//! (Table-1-style multi-turn reuse), while `round_robin` on 2 replicas
+//! bounces every turn to a cold replica and re-prefills the whole
+//! accumulated context; aggregate fairness metrics span all replicas.
+
+use fastswitch::cluster::{ClusterConfig, ClusterOutcome, ClusterRouter, PlacementKind};
+use fastswitch::config::{EngineConfig, GpuSpec, ModelSpec, Preset};
+use fastswitch::coordinator::priority::Pattern;
+use fastswitch::sim::clock::MS;
+use fastswitch::workload::{ArrivalTrace, Conversation, TraceEntry, Turn};
+
+/// LLaMA-8B timing constants on a testbed shrunk to `gpu_blocks_target`
+/// KV blocks (uncontended at 400: placement effects, not preemption
+/// noise, drive every number below).
+fn preset(gpu_blocks_target: usize) -> Preset {
+    let model = ModelSpec::llama8b();
+    let mut gpu = GpuSpec::a10();
+    gpu.hbm_bytes = ((model.weight_bytes()
+        + gpu_blocks_target as u64 * model.block_bytes()) as f64
+        / gpu.mem_util) as u64
+        + (1 << 20);
+    Preset {
+        model,
+        gpu,
+        cpu_swap_bytes: 4096 * 4 * 1024 * 1024,
+    }
+}
+
+fn turn(prompt: u32, response: u32, think: f64) -> Turn {
+    Turn {
+        prompt_tokens: prompt,
+        response_tokens: response,
+        think_time_s: think,
+    }
+}
+
+fn run_cluster(
+    placement: PlacementKind,
+    convs: Vec<Conversation>,
+    arrivals: ArrivalTrace,
+) -> ClusterOutcome {
+    let cfg = EngineConfig::fastswitch(); // reuse mechanism on
+    let mut router = ClusterRouter::new(
+        cfg,
+        preset(400),
+        Pattern::Markov,
+        ClusterConfig {
+            replicas: 2,
+            placement,
+        },
+        convs,
+        arrivals,
+        7,
+    );
+    router.set_charge_sched_overhead(false); // determinism
+    router.run(400_000)
+}
+
+/// One three-turn conversation: the sharpest possible lens on per-turn
+/// placement (round-robin provably alternates replicas every turn).
+fn one_conversation() -> (Vec<Conversation>, ArrivalTrace) {
+    let convs = vec![Conversation {
+        id: 0,
+        tenant: 0,
+        turns: vec![turn(64, 32, 0.0), turn(64, 32, 1.0), turn(64, 32, 1.0)],
+    }];
+    let arrivals = ArrivalTrace {
+        entries: vec![TraceEntry {
+            conversation: 0,
+            arrival: 0,
+        }],
+    };
+    (convs, arrivals)
+}
+
+#[test]
+fn kv_affinity_preserves_multiturn_reuse() {
+    let (convs, arrivals) = one_conversation();
+    let out = run_cluster(
+        PlacementKind::KvAffinity {
+            spill_threshold: f64::INFINITY, // hard pin: never spill
+        },
+        convs,
+        arrivals,
+    );
+    assert_eq!(out.finished_conversations(), 1);
+    assert_eq!(out.affinity_decisions, 2, "two later-turn placements");
+    assert!((out.affinity_hit_rate() - 1.0).abs() < 1e-12);
+    assert_eq!(out.migrations, 0);
+    assert_eq!(out.retransferred_blocks_on_migration, 0);
+    // Table-1-style reuse across turns: the turn-2 swap-out skips the
+    // blocks whose CPU copies survived from the turn-1 swap-out.
+    assert!(
+        out.blocks_reused_total() > 0,
+        "multi-turn KV reuse must survive affinity placement"
+    );
+}
+
+#[test]
+fn round_robin_on_two_replicas_forces_full_reprefill() {
+    let (convs, arrivals) = one_conversation();
+    let rr = run_cluster(PlacementKind::RoundRobin, convs.clone(), arrivals.clone());
+    assert_eq!(rr.finished_conversations(), 1);
+    // Placement counter: turn 0 → replica 0, turn 1 → replica 1,
+    // turn 2 → replica 0 — every later turn leaves its KV behind.
+    assert_eq!(rr.migrations, 2);
+    assert_eq!(rr.affinity_hits, 0);
+    // CPU copies thrown away: 96 tokens (6 valid copy blocks) after
+    // turn 1, 192 tokens (12 blocks) after turn 2.
+    assert_eq!(rr.retransferred_blocks_on_migration, 18);
+
+    let aff = run_cluster(
+        PlacementKind::KvAffinity {
+            spill_threshold: f64::INFINITY,
+        },
+        convs,
+        arrivals,
+    );
+    assert!(
+        aff.retransferred_blocks_on_migration < rr.retransferred_blocks_on_migration,
+        "kv_affinity {} !< round_robin {}",
+        aff.retransferred_blocks_on_migration,
+        rr.retransferred_blocks_on_migration
+    );
+}
+
+#[test]
+fn aggregate_fairness_spans_all_replicas() {
+    // Tenant 0 issues two conversations, tenant 1 one; round-robin lands
+    // them on different replicas, so only the *cluster-wide* aggregation
+    // sees the true shares (each replica alone sees a different mix).
+    let convs = vec![
+        Conversation {
+            id: 0,
+            tenant: 0,
+            turns: vec![turn(64, 32, 0.0)],
+        },
+        Conversation {
+            id: 1,
+            tenant: 0,
+            turns: vec![turn(64, 32, 0.0)],
+        },
+        Conversation {
+            id: 2,
+            tenant: 1,
+            turns: vec![turn(64, 32, 0.0)],
+        },
+    ];
+    let arrivals = ArrivalTrace {
+        entries: (0..3)
+            .map(|i| TraceEntry {
+                conversation: i,
+                arrival: i * MS,
+            })
+            .collect(),
+    };
+    let out = run_cluster(PlacementKind::RoundRobin, convs, arrivals);
+    assert_eq!(out.finished_conversations(), 3);
+    // Both replicas served work (conv 0, 2 → replica 0; conv 1 → replica 1).
+    for (i, o) in out.replicas.iter().enumerate() {
+        assert!(o.recorder.total_tokens > 0, "replica {i} idle");
+    }
+    // Aggregated per-tenant counts sum the per-replica recorders exactly.
+    let agg = out.tokens_by_tenant();
+    assert_eq!(agg, vec![(0, 64), (1, 32)]);
+    let sum: u64 = out
+        .replicas
+        .iter()
+        .map(|o| o.recorder.total_tokens)
+        .sum();
+    assert_eq!(sum, 96);
+    // Jain over the aggregated counts: (64+32)² / (2·(64²+32²)) = 0.9.
+    assert!((out.jain_fairness() - 0.9).abs() < 1e-9);
+    // Aggregated latency percentiles carry every replica's samples.
+    assert_eq!(out.ttft().len(), 3);
+}
+
+#[test]
+fn least_loaded_spreads_simultaneous_demand() {
+    let convs: Vec<Conversation> = (0..8)
+        .map(|i| Conversation {
+            id: i,
+            tenant: (i % 2) as u32,
+            turns: vec![turn(128, 64, 0.0)],
+        })
+        .collect();
+    let arrivals = ArrivalTrace {
+        entries: (0..8)
+            .map(|i| TraceEntry {
+                conversation: i,
+                arrival: i * MS,
+            })
+            .collect(),
+    };
+    let out = run_cluster(PlacementKind::LeastLoaded, convs, arrivals);
+    assert_eq!(out.finished_conversations(), 8);
+    for (i, o) in out.replicas.iter().enumerate() {
+        assert!(
+            o.recorder.finished_conversations >= 2,
+            "replica {i} starved: load balancing failed \
+             ({} conversations)",
+            o.recorder.finished_conversations
+        );
+    }
+}
+
+#[test]
+fn cluster_run_is_deterministic() {
+    let make = || {
+        let convs: Vec<Conversation> = (0..6)
+            .map(|i| Conversation {
+                id: i,
+                tenant: (i % 2) as u32,
+                turns: vec![turn(64, 32, 0.0), turn(32, 32, 1.0), turn(32, 32, 1.0)],
+            })
+            .collect();
+        let arrivals = ArrivalTrace {
+            entries: (0..6)
+                .map(|i| TraceEntry {
+                    conversation: i,
+                    arrival: i * 500 * MS,
+                })
+                .collect(),
+        };
+        run_cluster(
+            PlacementKind::KvAffinity {
+                spill_threshold: 0.5,
+            },
+            convs,
+            arrivals,
+        )
+    };
+    let a = make();
+    let b = make();
+    assert_eq!(a.finished_conversations(), 6);
+    assert_eq!(a.total_tokens(), b.total_tokens());
+    assert_eq!(a.span(), b.span());
+    assert_eq!(a.affinity_hits, b.affinity_hits);
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.tokens_by_tenant(), b.tokens_by_tenant());
+}
