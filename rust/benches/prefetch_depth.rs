@@ -1,0 +1,21 @@
+//! Bench: lookahead prefetch ladder — demand-only (depth 0) vs depths
+//! 1/2/4 on the bursty multi-tenant mix, timed.
+//! `cargo bench --bench prefetch_depth`.
+use fastswitch::exp::{self, runner::Scale};
+use fastswitch::util::bench::{bench, section};
+
+fn main() {
+    let scale = Scale::quick();
+    section(&format!(
+        "prefetch depth ladder (depths {:?}, {} tenants, heavy share {}, {}x bursts)",
+        exp::prefetch::DEPTHS,
+        exp::prefetch::N_TENANTS,
+        exp::prefetch::HEAVY_SHARE,
+        exp::prefetch::BURST,
+    ));
+    let mut rep = None;
+    bench("4 depths x 1 sim each", 0, 1, || {
+        rep = Some(exp::prefetch::run(&scale));
+    });
+    println!("{}", rep.unwrap().render());
+}

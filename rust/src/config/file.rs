@@ -178,6 +178,13 @@ impl ConfigFile {
             cfg.scheduler.prefill_mode = crate::config::PrefillMode::by_name(m)
                 .ok_or_else(|| ConfigError::UnknownPrefillMode(m.into()))?;
         }
+        // `[prefetch]` — the lookahead swap-in prefetcher.
+        if let Some(d) = self.get_u64("prefetch", "depth") {
+            cfg.prefetch.depth = d;
+        }
+        if let Some(b) = self.get_f64("prefetch", "io_budget") {
+            cfg.prefetch.io_budget = b.clamp(0.0, 1.0);
+        }
         if let Some(p) = self.get("fairness", "policy") {
             cfg.fairness.policy = crate::fairness::PolicyKind::by_name(p)
                 .ok_or_else(|| ConfigError::UnknownFairnessPolicy(p.into()))?;
@@ -317,6 +324,20 @@ pattern = "markov"
         assert_eq!(e.scheduler.prefill_chunk, 128);
         assert_eq!(e.scheduler.max_tokens_per_iter, 256);
         assert_eq!(e.scheduler.prefill_mode, PrefillMode::Monolithic);
+    }
+
+    #[test]
+    fn prefetch_section_sets_depth_and_budget() {
+        let c = ConfigFile::parse("[prefetch]\ndepth = 2\nio_budget = 0.4").unwrap();
+        let e = c.engine().unwrap();
+        assert_eq!(e.prefetch.depth, 2);
+        assert_eq!(e.prefetch.io_budget, 0.4);
+        // Out-of-range budgets are clamped, absent section keeps the
+        // demand-only default.
+        let c = ConfigFile::parse("[prefetch]\nio_budget = 7.5").unwrap();
+        assert_eq!(c.engine().unwrap().prefetch.io_budget, 1.0);
+        let d = ConfigFile::parse("").unwrap().engine().unwrap();
+        assert_eq!(d.prefetch.depth, 0);
     }
 
     #[test]

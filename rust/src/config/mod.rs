@@ -262,6 +262,33 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Lookahead swap-in prefetcher (the speculative context-switch
+/// pipeline): the scheduler projects which swapped-out requests the next
+/// few priority-update epochs will re-admit, and the engine issues their
+/// swap-ins early — strictly below demand traffic — so a predicted
+/// re-admission lands with zero synchronous swap-in stall.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefetchConfig {
+    /// Lookahead depth in priority-update epochs. `0` disables
+    /// prefetching entirely (the demand-only baseline — seed behavior,
+    /// bit-for-bit).
+    pub depth: u64,
+    /// Fraction of per-direction PCIe capacity the prefetcher may
+    /// consume: a token bucket refilled at `io_budget × pcie_bw` bytes/s
+    /// caps speculative traffic, and prefetches are only issued onto an
+    /// idle inbound DMA engine.
+    pub io_budget: f64,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        PrefetchConfig {
+            depth: 0,
+            io_budget: 0.25,
+        }
+    }
+}
+
 /// Dispatch-cost constants (per `cudaMemcpyAsync`-equivalent call).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SwapCostConfig {
@@ -309,6 +336,8 @@ pub struct EngineConfig {
     /// Priority source: offline trace (seed behavior) or an online
     /// per-tenant fairness policy (VTC / SLO-aware).
     pub fairness: FairnessConfig,
+    /// Lookahead swap-in prefetcher (off by default).
+    pub prefetch: PrefetchConfig,
     pub label: String,
 }
 
@@ -324,6 +353,7 @@ impl EngineConfig {
             scheduler: SchedulerConfig::default(),
             swap_cost: SwapCostConfig::default(),
             fairness: FairnessConfig::default(),
+            prefetch: PrefetchConfig::default(),
             label: "vllm".into(),
         }
     }
@@ -528,6 +558,16 @@ mod tests {
         );
         assert_eq!(PrefillMode::by_name("nope"), None);
         assert_eq!(PrefillMode::Chunked.label(), "chunked");
+    }
+
+    #[test]
+    fn prefetch_defaults_off_everywhere() {
+        // Depth 0 must be the default on every ladder rung: the
+        // prefetcher is opt-in and the seed behavior stays bit-for-bit.
+        for cfg in EngineConfig::ablation_ladder() {
+            assert_eq!(cfg.prefetch.depth, 0, "{} prefetches by default", cfg.label);
+            assert!(cfg.prefetch.io_budget > 0.0 && cfg.prefetch.io_budget <= 1.0);
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::block::{reuse::KvCacheReuse, KvAllocator};
 use crate::config::{EngineConfig, Granularity, PrefillMode, Preset, SwapMode};
 use crate::coordinator::priority::Pattern;
 use crate::coordinator::request::{KvLocation, ReqState, Request, RequestTable};
-use crate::coordinator::scheduler::{schedule, Candidate, IterBudget};
+use crate::coordinator::scheduler::{predict_admission, schedule, Candidate, IterBudget};
 use crate::fairness::policy::{build_policy, PriorityPolicy};
 use crate::fairness::TenantId;
 use crate::memory::{BlockId, CpuSwapSpace, RequestId};
@@ -27,7 +27,10 @@ use crate::sim::clock::{to_secs, Ns};
 use crate::sim::link::{Direction, PcieLink};
 use crate::sim::PerfModel;
 use crate::swap::engine::{BlockMove, SegmentBuilder};
-use crate::swap::manager::{SwapInDecision, SwapManager};
+use crate::swap::manager::{
+    PrefetchCancel, PrefetchClaim, PrefetchSubmit, SwapInDecision, SwapManager,
+};
+use crate::swap::op::SwapOp;
 use crate::workload::{ArrivalTrace, Conversation, Turn};
 
 /// Everything a finished simulation reports.
@@ -125,6 +128,21 @@ pub struct ServingEngine {
     pub hold_turns: bool,
     /// Next turns awaiting a router placement decision: (request, due).
     released_turns: Vec<(RequestId, Ns)>,
+    /// Lookahead prefetcher: predicted re-admissions not yet submitted
+    /// (drained across iterations as budget and free blocks allow).
+    prefetch_queue: Vec<RequestId>,
+    /// Epoch the policy projection was last rebuilt at.
+    prefetch_epoch: u64,
+    /// When a budget-rejected prefetch becomes submittable again — an
+    /// idle engine wakes for the refill instead of sleeping past it.
+    prefetch_retry_at: Option<Ns>,
+    /// Requests whose context can never fit the prefetch burst budget
+    /// (contexts only grow): permanently excluded, so the per-iteration
+    /// due-turn scan cannot churn them through allocate/reject cycles.
+    prefetch_never_fits: std::collections::HashSet<RequestId>,
+    /// EMA of recent working-iteration spans (ns) — converts the epoch
+    /// lookahead depth into the wall-clock horizon for pending turns.
+    iter_span_ema: f64,
 }
 
 impl ServingEngine {
@@ -147,7 +165,8 @@ impl ServingEngine {
         };
         let perf = PerfModel::new(preset.model.clone(), preset.gpu.clone());
         let link = PcieLink::new(preset.gpu.clone());
-        let mgr = SwapManager::new(cfg.swap_mode, cfg.dispatch, &cfg.swap_cost, link);
+        let mut mgr = SwapManager::new(cfg.swap_mode, cfg.dispatch, &cfg.swap_cost, link);
+        mgr.configure_prefetch(cfg.prefetch.io_budget * preset.gpu.pcie_bw);
         let seg = SegmentBuilder::new(preset.model.clone(), cfg.granularity);
         let reuse = KvCacheReuse::new(cfg.reuse, block_size);
         let policy = build_policy(
@@ -163,6 +182,9 @@ impl ServingEngine {
             cfg.scheduler.max_tokens_per_iter as u32
         };
 
+        // Seeded with a one-request decode iteration; converges onto the
+        // real cadence within a few working iterations.
+        let iter_span_seed = perf.decode_iter_ns(1, 0) as f64;
         let mut future: Vec<(Ns, Conversation)> = arrivals
             .entries
             .iter()
@@ -194,6 +216,11 @@ impl ServingEngine {
             charge_sched_overhead: true,
             hold_turns: false,
             released_turns: Vec::new(),
+            prefetch_queue: Vec::new(),
+            prefetch_epoch: u64::MAX,
+            prefetch_retry_at: None,
+            prefetch_never_fits: std::collections::HashSet::new(),
+            iter_span_ema: iter_span_seed,
         }
     }
 
@@ -233,6 +260,15 @@ impl ServingEngine {
         let worst = r.turn_total_tokens() + 1;
         if Request::blocks_for(worst, self.block_size) <= self.gpu_blocks {
             return false;
+        }
+        // A rejected conversation may hold speculatively prefetched GPU
+        // blocks: free them now (or let an in-flight transfer drain —
+        // `reap_prefetch_drains` frees the blocks then).
+        match self.mgr.cancel_prefetch(id, self.now) {
+            Some(PrefetchCancel::Draining { .. }) => {}
+            _ => {
+                self.alloc.as_dyn().release(id);
+            }
         }
         self.cpu.drop_request(id);
         self.reuse.forget(id);
@@ -303,6 +339,8 @@ impl ServingEngine {
         }
         let reaped = self.mgr.reap_swap_outs(self.now);
         self.release_reaped(reaped);
+        let drained = self.mgr.reap_prefetch_drains(self.now);
+        self.release_reaped(drained);
     }
 
     /// A swap-out drained: free its GPU source blocks and finish the
@@ -362,6 +400,189 @@ impl ServingEngine {
         }
     }
 
+    // ------------------------------------------------------------------
+    // Lookahead swap-in prefetch (speculative context switching)
+    // ------------------------------------------------------------------
+
+    /// Rebuild the prediction of upcoming re-admissions, once per
+    /// policy epoch: (a) currently swapped-out requests the live
+    /// priority policy is projected to promote within `depth` epochs
+    /// ([`predict_admission`] — side-effect-free), and (b) stale landed
+    /// prefetches the new projection no longer wants are canceled, their
+    /// blocks returned (the CPU copy stays the valid version under the
+    /// contamination rules).
+    fn rebuild_prefetch_predictions(&mut self, epoch: u64, depth: u64) {
+        let cands = self.candidates();
+        // One projection per candidate via `project_priorities`, which
+        // leaves the policy's sequential state (the trace memo) parked
+        // at the live epoch — querying `priority_of(epoch + k)` directly
+        // would force every later live refresh to replay the walk from
+        // epoch 0.
+        let projections: std::collections::HashMap<RequestId, Vec<i64>> = cands
+            .iter()
+            .map(|c| {
+                let tenant = self.reqs.get(c.id).tenant();
+                (
+                    c.id,
+                    self.policy.project_priorities(c.id, tenant, epoch, depth),
+                )
+            })
+            .collect();
+        let predicted = predict_admission(
+            &cands,
+            self.gpu_blocks,
+            self.cfg.scheduler.max_batch,
+            depth,
+            |id, offset| projections[&id][(offset - 1) as usize],
+        );
+        self.prefetch_queue = predicted;
+        // Misprediction cleanup: a landed prefetch for a request that is
+        // still parked off-GPU and no longer projected (priority flip,
+        // pending turn migrated away) is canceled.
+        for id in self.mgr.prefetched_ids() {
+            if self.prefetch_queue.contains(&id) || !self.reqs.contains(id) {
+                continue;
+            }
+            let r = self.reqs.get(id);
+            let parked = matches!(r.state, ReqState::SwappedOut | ReqState::WaitingTurn);
+            let due_soon = self
+                .pending_turns
+                .iter()
+                .any(|&(p, t)| p == id && t <= self.now.saturating_add(self.horizon_ns(depth)));
+            if !parked || due_soon {
+                continue;
+            }
+            if self.mgr.prefetch_ready(id, self.now) {
+                if let Some(PrefetchCancel::Freed { .. }) =
+                    self.mgr.cancel_prefetch(id, self.now)
+                {
+                    self.alloc.as_dyn().release(id);
+                }
+            }
+        }
+    }
+
+    /// The epoch lookahead depth expressed in wall-clock nanoseconds
+    /// (drives the pending-turn horizon).
+    fn horizon_ns(&self, depth: u64) -> Ns {
+        (depth as f64 * self.epoch_iters as f64 * self.iter_span_ema) as Ns
+    }
+
+    /// The per-iteration prefetch pass: refresh the I/O budget, fold
+    /// pending turns whose think time expires within the lookahead
+    /// horizon into the prediction (their re-admission is a
+    /// near-certainty — the §3.3 multi-turn workload), and submit as
+    /// many speculative swap-ins as free blocks, link idleness, and the
+    /// byte budget allow. Speculation never preempts and never waits:
+    /// anything it cannot do right now is retried next iteration.
+    fn prefetch_pass(&mut self) {
+        let depth = self.cfg.prefetch.depth;
+        if depth == 0 {
+            return;
+        }
+        self.prefetch_retry_at = None; // recomputed below if still starved
+        self.mgr.refill_prefetch_budget(self.now);
+        let epoch = self.iter / self.epoch_iters;
+        if epoch != self.prefetch_epoch {
+            self.prefetch_epoch = epoch;
+            self.rebuild_prefetch_predictions(epoch, depth);
+        }
+        // Pending turns are re-scanned every iteration (they appear
+        // mid-epoch at turn ends). The submission order is rebuilt so
+        // every within-horizon due turn runs first, earliest due time
+        // first, with the policy projection behind them.
+        let horizon = self.horizon_ns(depth);
+        let mut due: Vec<(Ns, RequestId)> = self
+            .pending_turns
+            .iter()
+            .filter(|&&(_, t)| t <= self.now.saturating_add(horizon))
+            .map(|&(id, t)| (t, id))
+            .collect();
+        due.sort_unstable();
+        let mut ordered: Vec<RequestId> = due.into_iter().map(|(_, id)| id).collect();
+        for &id in &self.prefetch_queue {
+            if !ordered.contains(&id) {
+                ordered.push(id);
+            }
+        }
+        self.prefetch_queue = ordered;
+        // Headroom: leave at least one growth block per admitted
+        // request, so speculation never forces the grow pass into
+        // preempting a real victim next iteration.
+        let headroom = self
+            .reqs
+            .iter()
+            .filter(|q| matches!(q.state, ReqState::Running | ReqState::Prefilling))
+            .count();
+        let mut i = 0;
+        while i < self.prefetch_queue.len() {
+            let id = self.prefetch_queue[i];
+            if !self.reqs.contains(id)
+                || self.mgr.prefetch_pending(id)
+                || self.prefetch_never_fits.contains(&id)
+            {
+                self.prefetch_queue.remove(i);
+                continue;
+            }
+            let r = self.reqs.get(id);
+            let eligible = r.kv == KvLocation::Cpu
+                && r.tokens_in_cache > 0
+                && matches!(r.state, ReqState::SwappedOut | ReqState::WaitingTurn);
+            if !eligible {
+                self.prefetch_queue.remove(i);
+                continue;
+            }
+            if self.mgr.swap_out_inflight(id).is_some() {
+                // The CPU copy is still being written: retry after drain.
+                i += 1;
+                continue;
+            }
+            // Cheap pre-flight before touching the allocator: the op
+            // moves every context block, so its bytes are exactly
+            // n × block_bytes.
+            let n = Request::blocks_for(r.tokens_in_cache, self.block_size);
+            let bytes = n as u64 * self.preset.model.block_bytes();
+            match self.mgr.prefetch_admissible(bytes, self.now) {
+                PrefetchSubmit::Started => {}
+                PrefetchSubmit::RejectedTooLarge => {
+                    // Can never fit the burst budget (contexts only
+                    // grow): exclude the request permanently so the
+                    // due-turn scan cannot churn it back in.
+                    self.prefetch_never_fits.insert(id);
+                    self.prefetch_queue.remove(i);
+                    continue;
+                }
+                PrefetchSubmit::RejectedBudget => {
+                    // Bucket dry: wake exactly when the refill covers it.
+                    self.prefetch_retry_at =
+                        self.mgr.prefetch_budget_eta(bytes, self.now);
+                    break;
+                }
+                PrefetchSubmit::RejectedBusy => {
+                    break; // demand traffic owns the link: back off
+                }
+            }
+            if self.alloc.as_dyn_ref().available_blocks() < n + headroom {
+                break; // no free blocks — prefetch never preempts for space
+            }
+            let Some(blocks) = self.alloc.as_dyn().allocate(id, n) else {
+                break;
+            };
+            let op = self.build_swap_in_op(id, &blocks);
+            match self.mgr.submit_prefetch(op, self.now) {
+                PrefetchSubmit::Started => {
+                    self.prefetch_queue.remove(i);
+                }
+                _ => {
+                    // Pre-flight said yes, submit said no — can only be
+                    // a racing state change; give the blocks back.
+                    self.alloc.as_dyn().release(id);
+                    break;
+                }
+            }
+        }
+    }
+
     /// Blocks to grow `r` by a prefill grant of `take` tokens. The grant
     /// that completes the prompt also emits the turn's first output
     /// token, whose KV occupies a slot too; with `take == rem == 0`
@@ -405,6 +626,21 @@ impl ServingEngine {
             })
             .map(|r| {
                 let held = self.alloc.as_dyn_ref().table(r.id).len();
+                // Off-GPU candidates normally hold no blocks (a draining
+                // async swap-out's source blocks are counted conservatively
+                // on top of the full re-admission ask — see `schedule`'s
+                // transient-inflation note). A *prefetched* candidate is
+                // the exception: its context blocks are already resident,
+                // so only the remainder of the ask is fresh demand.
+                let full_swap_in = |r: &Request| {
+                    let full = Request::blocks_for(r.tokens_in_cache, self.block_size)
+                        + self.chunk_blocks(r);
+                    if self.mgr.prefetch_pending(r.id) {
+                        full.saturating_sub(held)
+                    } else {
+                        full
+                    }
+                };
                 let needed = match r.state {
                     ReqState::Running => {
                         Request::blocks_for(r.tokens_in_cache + 1, self.block_size)
@@ -412,14 +648,10 @@ impl ServingEngine {
                     }
                     ReqState::Prefilling => self.chunk_blocks(r),
                     ReqState::SwappingIn => 0,
-                    ReqState::SwappedOut => {
-                        Request::blocks_for(r.tokens_in_cache, self.block_size)
-                            + self.chunk_blocks(r)
-                    }
+                    ReqState::SwappedOut => full_swap_in(r),
                     ReqState::Queued => {
                         if r.kv == KvLocation::Cpu {
-                            Request::blocks_for(r.tokens_in_cache, self.block_size)
-                                + self.chunk_blocks(r)
+                            full_swap_in(r)
                         } else {
                             self.chunk_blocks(r)
                         }
@@ -538,11 +770,109 @@ impl ServingEngine {
         stall
     }
 
+    /// Build the CPU→GPU op materializing `id`'s whole context onto the
+    /// freshly allocated `blocks` (shared by demand promotion and the
+    /// speculative prefetch path).
+    fn build_swap_in_op(&self, id: RequestId, blocks: &[BlockId]) -> SwapOp {
+        let tokens = self.reqs.get(id).tokens_in_cache;
+        let logicals = self.reuse.plan_swap_in(tokens);
+        let slot_of: std::collections::HashMap<u32, u32> = self
+            .cpu
+            .copies_of(id)
+            .map(|c| c.entries.iter().map(|e| (e.logical, e.slot)).collect())
+            .unwrap_or_default();
+        let moves: Vec<BlockMove> = logicals
+            .iter()
+            .map(|&l| BlockMove {
+                logical: l,
+                gpu: blocks[l as usize],
+                cpu: *slot_of.get(&l).expect("required CPU copy present"),
+            })
+            .collect();
+        self.seg.build(id, Direction::In, &moves)
+    }
+
+    /// Pressure valve: reclaim the GPU blocks of one unclaimed prefetch
+    /// — demand allocation always outranks speculation, so a
+    /// (mis)predicted prefetch is evicted before any real victim is
+    /// preempted. Landed prefetches free immediately; an in-flight one
+    /// is canceled and its short drain is waited out (still far cheaper
+    /// than a preemption round-trip). Victims are picked landed-first,
+    /// then lowest priority. The victim's CPU copy stays its valid KV
+    /// version. Returns the time the blocks are free (≥ `now` when a
+    /// drain was waited on), or `None` if there was nothing to reclaim.
+    fn cancel_one_prefetch_for_pressure(&mut self, keep: RequestId) -> Option<Ns> {
+        let mut victims: Vec<(bool, i64, RequestId)> = self
+            .mgr
+            .prefetched_ids()
+            .into_iter()
+            .filter(|&v| v != keep && self.reqs.contains(v))
+            .map(|v| {
+                (
+                    // false sorts first: landed (freeable now) preferred.
+                    !self.mgr.prefetch_ready(v, self.now),
+                    self.reqs.get(v).priority,
+                    v,
+                )
+            })
+            .collect();
+        victims.sort_unstable();
+        let &(_, _, victim) = victims.first()?;
+        match self.mgr.cancel_prefetch(victim, self.now)? {
+            PrefetchCancel::Freed { .. } => {
+                self.alloc.as_dyn().release(victim);
+                Some(self.now)
+            }
+            PrefetchCancel::Draining { done } => {
+                // Account the wait like any other pressure drain so the
+                // conflict bucket still explains all recorded swap stall.
+                self.mgr.record_conflict(done.saturating_sub(self.now));
+                let drained = self.mgr.reap_prefetch_drains(done);
+                self.release_reaped(drained);
+                Some(done)
+            }
+        }
+    }
+
     /// Swap a request back in. Returns (stall, newly allocated blocks);
     /// `None` if allocation failed (stays swapped out this iteration).
-    fn promote(&mut self, id: RequestId, iter_hint: Ns, batch: usize, avg_ctx: f64)
-        -> Option<(Ns, Vec<BlockId>)>
-    {
+    fn promote(
+        &mut self,
+        id: RequestId,
+        iter_hint: Ns,
+        batch: usize,
+        avg_ctx: f64,
+    ) -> Option<(Ns, Vec<BlockId>)> {
+        // A prefetched request re-admits off its speculative transfer:
+        // zero demand swap-in stall when it has landed, an asynchronous
+        // remainder-wait when still on the wire. Either way the critical
+        // path pays nothing synchronously — the point of the pipeline.
+        match self.mgr.claim_prefetch(id, self.now) {
+            Some(PrefetchClaim::Ready) => {
+                debug_assert_eq!(
+                    self.alloc.as_dyn_ref().table(id).len(),
+                    Request::blocks_for(
+                        self.reqs.get(id).tokens_in_cache,
+                        self.block_size
+                    ),
+                    "prefetched residency must cover the whole context"
+                );
+                let r = self.reqs.get_mut(id);
+                r.state = if r.prefill_remaining() > 0 {
+                    ReqState::Prefilling
+                } else {
+                    ReqState::Running
+                };
+                r.kv = KvLocation::Gpu;
+                self.release_cpu_copy_after_swap_in(id);
+                return Some((0, Vec::new()));
+            }
+            Some(PrefetchClaim::Pending { .. }) => {
+                self.reqs.get_mut(id).state = ReqState::SwappingIn;
+                return Some((0, Vec::new()));
+            }
+            None => {}
+        }
         // If this request's own swap-out is still writing the CPU copy,
         // synchronize on it first (its GPU blocks are also still held).
         let mut pre_stall: Ns = 0;
@@ -558,8 +888,13 @@ impl ServingEngine {
             match self.alloc.as_dyn().allocate(id, n) {
                 Some(b) => break b,
                 None => {
-                    // Pressure: drain an in-flight swap-out (conflict) if
-                    // one exists; otherwise give up this iteration.
+                    // Pressure: (0) reclaim a speculative prefetch, (1)
+                    // drain an in-flight swap-out (conflict) if one
+                    // exists; otherwise give up this iteration.
+                    if let Some(t) = self.cancel_one_prefetch_for_pressure(id) {
+                        pre_stall = pre_stall.max(t.saturating_sub(self.now));
+                        continue;
+                    }
                     let at = self.now + pre_stall;
                     match self.drain_one_swap_out(at) {
                         Some(t) => pre_stall = t.saturating_sub(self.now),
@@ -568,21 +903,7 @@ impl ServingEngine {
                 }
             }
         };
-        let logicals = self.reuse.plan_swap_in(tokens);
-        let slot_of: std::collections::HashMap<u32, u32> = self
-            .cpu
-            .copies_of(id)
-            .map(|c| c.entries.iter().map(|e| (e.logical, e.slot)).collect())
-            .unwrap_or_default();
-        let moves: Vec<BlockMove> = logicals
-            .iter()
-            .map(|&l| BlockMove {
-                logical: l,
-                gpu: blocks[l as usize],
-                cpu: *slot_of.get(&l).expect("required CPU copy present"),
-            })
-            .collect();
-        let op = self.seg.build(id, Direction::In, &moves);
+        let op = self.build_swap_in_op(id, &blocks);
         let mut stall = pre_stall;
         let start_at = self.now + pre_stall;
         match self.mgr.submit_swap_in(op, start_at, iter_hint, batch, avg_ctx) {
@@ -765,10 +1086,16 @@ impl ServingEngine {
                     new_blocks.extend(b);
                     break;
                 }
-                // Pressure order: (1) KV-cache conflict resolution — wait
-                // for an in-flight swap-out to release its source blocks
-                // (Algorithm 1, step 3.1); (2) preempt the lowest-priority
-                // admitted victim; (3) preempt `id` itself.
+                // Pressure order: (0) reclaim a speculative prefetch —
+                // demand growth outranks speculation; (1) KV-cache
+                // conflict resolution — wait for an in-flight swap-out
+                // to release its source blocks (Algorithm 1, step 3.1);
+                // (2) preempt the lowest-priority admitted victim; (3)
+                // preempt `id` itself.
+                if let Some(t) = self.cancel_one_prefetch_for_pressure(id) {
+                    stall = stall.max(t.saturating_sub(self.now));
+                    continue;
+                }
                 if let Some(t) = self.drain_one_swap_out(self.now) {
                     stall = stall.max(t.saturating_sub(self.now));
                     continue;
@@ -902,6 +1229,15 @@ impl ServingEngine {
         self.now += post_stall;
         let stall = stall + post_stall;
 
+        // Track the working-iteration cadence (idle ticks excluded) —
+        // the prefetcher's epoch-to-wall-clock conversion — then give
+        // speculation its turn on whatever the iteration left idle.
+        if dur > 0 {
+            self.iter_span_ema =
+                0.9 * self.iter_span_ema + 0.1 * (dur + stall + sched_ns) as f64;
+        }
+        self.prefetch_pass();
+
         let waiting_on_swap = self
             .reqs
             .iter()
@@ -925,6 +1261,7 @@ impl ServingEngine {
                 decode_batch as u32
             },
             waiting_on_swap,
+            prefetch_inflight: self.mgr.prefetch_count() as u32,
         });
         self.iter += 1;
 
@@ -946,10 +1283,45 @@ impl ServingEngine {
                 })
                 .min();
             let next_swap = self.mgr.next_event();
-            let nxt = [next_arrival, next_turn, next_swap]
-                .into_iter()
-                .flatten()
-                .min();
+            // Prefetch lead time: an otherwise idle engine must wake
+            // `horizon` *before* a pending turn is due (not at it), or
+            // the speculative swap-in would never get to run during the
+            // think time. Turns already prefetched or already inside the
+            // horizon are excluded — no 1-ns spin.
+            let depth = self.cfg.prefetch.depth;
+            let prefetch_wake = if depth > 0 {
+                let horizon = self.horizon_ns(depth);
+                self.pending_turns
+                    .iter()
+                    .filter(|&&(id, _)| !self.mgr.prefetch_pending(id))
+                    .map(|&(_, t)| t.saturating_sub(horizon))
+                    .filter(|&w| w > self.now)
+                    .min()
+            } else {
+                None
+            };
+            // A budget-starved prefetch wakes the engine at the refill
+            // instant instead of sleeping until the turn is due.
+            let budget_wake = self.prefetch_retry_at.filter(|&t| t > self.now);
+            // More speculative work queued behind the prefetch that owns
+            // the link right now (RejectedBusy): wake when it completes,
+            // or turn 2's lead time is silently lost.
+            let link_wake = if depth > 0 && !self.prefetch_queue.is_empty() {
+                self.mgr.next_prefetch_completion(self.now)
+            } else {
+                None
+            };
+            let nxt = [
+                next_arrival,
+                next_turn,
+                next_swap,
+                prefetch_wake,
+                budget_wake,
+                link_wake,
+            ]
+            .into_iter()
+            .flatten()
+            .min();
             if let Some(t) = nxt {
                 self.now = self.now.max(t);
             } else if self.reqs.all_finished() && self.future.is_empty() {
@@ -1047,7 +1419,15 @@ impl ServingEngine {
         let tenant = r.tenant();
         let cpu_copy_blocks = self.cpu.valid_logical(id).len();
         let draining = self.mgr.swap_out_inflight(id).is_some();
-        if !draining {
+        // A speculative prefetch may hold GPU blocks for this
+        // conversation: cancel it. A landed one frees with the release
+        // below; an in-flight one keeps draining and frees at reap
+        // (same tolerance as the draining swap-out).
+        let prefetch_draining = matches!(
+            self.mgr.cancel_prefetch(id, self.now),
+            Some(PrefetchCancel::Draining { .. })
+        );
+        if !draining && !prefetch_draining {
             self.alloc.as_dyn().release(id);
         }
         self.cpu.drop_request(id);
@@ -1075,6 +1455,12 @@ impl ServingEngine {
             return true;
         }
         if self.mgr.ongoing_in_count() > 0 || self.mgr.ongoing_out_count() > 0 {
+            return true;
+        }
+        // A canceled prefetch still draining holds GPU blocks only a
+        // step can reap. (Live unclaimed prefetches belong to requests
+        // already counted below.)
+        if self.mgr.prefetch_draining_count() > 0 {
             return true;
         }
         self.reqs
@@ -1331,6 +1717,62 @@ mod tests {
         let b = e.token_budget();
         // max_batch (32) decode claims plus a roofline-sized chunk term.
         assert!(b > 32 && b < 4096, "budget = {b}");
+    }
+
+    #[test]
+    fn prefetch_enabled_run_completes_and_lands_hits() {
+        // Multi-turn think times make pending-turn re-admissions the
+        // prefetcher's bread and butter: with lookahead on, speculative
+        // swap-ins must land and be claimed, and the workload must drain
+        // to exactly the same token totals as the demand-only run.
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.prefetch.depth = 2;
+        let out = run_with(cfg, 400, 12, 1);
+        assert_eq!(out.recorder.finished_conversations, 12);
+        assert!(out.swap_stats.prefetch_ops > 0, "no speculation issued");
+        assert!(out.swap_stats.prefetch_hits > 0, "no prefetch ever claimed");
+        assert!(out.swap_stats.prefetch_hit_rate() > 0.0);
+        assert!(out
+            .recorder
+            .iterations
+            .iter()
+            .any(|s| s.prefetch_inflight > 0));
+        let base = run_with(EngineConfig::fastswitch(), 400, 12, 1);
+        assert_eq!(base.swap_stats.prefetch_ops, 0, "default stays demand-only");
+        assert_eq!(out.recorder.total_tokens, base.recorder.total_tokens);
+    }
+
+    #[test]
+    fn prefetch_under_contention_completes_and_cancels_safely() {
+        // Hard priority churn on a tiny pool: predictions flip, landed
+        // prefetches get canceled for pressure/staleness, and the final
+        // allocator/CPU-space invariant checks (run by `into_outcome`)
+        // must still hold with every conversation served.
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.scheduler.priority_update_freq = 0.25;
+        cfg.prefetch.depth = 2;
+        let out = run_with(cfg, 96, 16, 2);
+        assert_eq!(out.recorder.finished_conversations, 16);
+        assert!(out.swap_stats.prefetch_ops > 0);
+    }
+
+    #[test]
+    fn prefetch_runs_are_deterministic() {
+        let mk = || {
+            let mut cfg = EngineConfig::fastswitch();
+            cfg.prefetch.depth = 2;
+            run_with(cfg, 128, 8, 7)
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.span, b.span);
+        assert_eq!(a.recorder.total_tokens, b.recorder.total_tokens);
+        assert_eq!(a.swap_stats.prefetch_ops, b.swap_stats.prefetch_ops);
+        assert_eq!(a.swap_stats.prefetch_hits, b.swap_stats.prefetch_hits);
+        assert_eq!(
+            a.swap_stats.prefetch_wasted_bytes,
+            b.swap_stats.prefetch_wasted_bytes
+        );
     }
 
     #[test]

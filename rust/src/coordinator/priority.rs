@@ -75,6 +75,28 @@ impl PriorityTrace {
         r.range(0, self.levels as u64) as i64
     }
 
+    /// One seeded step of the Markov walk: the value at epoch `e` given
+    /// the value `v` at epoch `e - 1`.
+    fn markov_step(&self, conv: u64, e: u64, v: i64) -> i64 {
+        let mut r = Rng::new(
+            self.seed
+                ^ 0xDEAD_BEEF
+                ^ conv.wrapping_mul(0x0100_0000_01B3)
+                ^ e.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let u = r.f64();
+        if u > self.sticky {
+            // Split the remainder between up and down moves.
+            if u < self.sticky + (1.0 - self.sticky) / 2.0 {
+                (v + 1).min(self.levels - 1)
+            } else {
+                (v - 1).max(0)
+            }
+        } else {
+            v
+        }
+    }
+
     /// Priority of `conv` at update epoch `epoch` (higher = better).
     pub fn priority_of(&mut self, conv: u64, epoch: u64) -> i64 {
         match self.pattern {
@@ -90,24 +112,35 @@ impl PriorityTrace {
                 };
                 while e < epoch {
                     e += 1;
-                    let mut r = Rng::new(
-                        self.seed
-                            ^ 0xDEAD_BEEF
-                            ^ conv.wrapping_mul(0x0100_0000_01B3)
-                            ^ e.wrapping_mul(0x9E37_79B9_7F4A_7C15),
-                    );
-                    let u = r.f64();
-                    if u > self.sticky {
-                        // Split the remainder between up and down moves.
-                        if u < self.sticky + (1.0 - self.sticky) / 2.0 {
-                            v = (v + 1).min(self.levels - 1);
-                        } else {
-                            v = (v - 1).max(0);
-                        }
-                    }
+                    v = self.markov_step(conv, e, v);
                 }
                 self.memo.insert(conv, (epoch, v));
                 v
+            }
+        }
+    }
+
+    /// Priorities of `conv` for the `depth` epochs after `epoch`
+    /// (index 0 = `epoch + 1`), computed by walking forward **without
+    /// advancing the memo** past `epoch`. The lookahead prefetcher calls
+    /// this instead of `priority_of(epoch + k)` — a memo parked in the
+    /// future would force every later sequential query to replay the
+    /// seeded walk from epoch 0 (O(epochs²) over a run).
+    pub fn project(&mut self, conv: u64, epoch: u64, depth: u64) -> Vec<i64> {
+        match self.pattern {
+            Pattern::Random => (1..=depth).map(|j| self.draw(conv, epoch + j)).collect(),
+            Pattern::RoundRobin => (1..=depth)
+                .map(|j| ((conv + epoch + j) % self.levels as u64) as i64)
+                .collect(),
+            Pattern::Markov => {
+                // Anchor the memo at `epoch`, then walk a local copy.
+                let mut v = self.priority_of(conv, epoch);
+                (1..=depth)
+                    .map(|j| {
+                        v = self.markov_step(conv, epoch + j, v);
+                        v
+                    })
+                    .collect()
             }
         }
     }
@@ -172,6 +205,27 @@ mod tests {
         let vals: Vec<i64> = (0..30).map(|e| seq.priority_of(7, e)).collect();
         let mut jump = PriorityTrace::new(Pattern::Markov, 8, 3);
         assert_eq!(jump.priority_of(7, 29), vals[29]);
+    }
+
+    #[test]
+    fn projection_matches_sequential_future_and_preserves_the_memo() {
+        // `project` must return exactly the values sequential access
+        // will later produce, for every pattern — and leave the memo
+        // anchored at the base epoch, so the subsequent live queries
+        // stay O(1) forward steps (no O(epoch) replays from 0).
+        for pat in [Pattern::Random, Pattern::Markov, Pattern::RoundRobin] {
+            let mut t = PriorityTrace::new(pat, 8, 3);
+            let mut seq = PriorityTrace::new(pat, 8, 3);
+            let _ = t.priority_of(7, 10);
+            let proj = t.project(7, 10, 5);
+            let expect: Vec<i64> = (11..=15).map(|e| seq.priority_of(7, e)).collect();
+            assert_eq!(proj, expect, "{pat:?} projection diverged");
+            // Repeated projection is idempotent (memo undisturbed) ...
+            assert_eq!(t.project(7, 10, 5), expect);
+            // ... and the live walk continues exactly where it was.
+            assert_eq!(t.priority_of(7, 11), expect[0]);
+            assert_eq!(t.priority_of(7, 12), expect[1]);
+        }
     }
 
     #[test]

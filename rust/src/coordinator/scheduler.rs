@@ -313,6 +313,56 @@ pub fn schedule(
     out
 }
 
+/// Side-effect-free lookahead pass for the prefetch pipeline: project
+/// which currently swapped-out candidates the admission logic will
+/// *promote* within the next `depth` priority-update epochs, assuming
+/// residency and block demands stay as they are now and only priorities
+/// move.
+///
+/// `future_priority(id, offset)` supplies the live policy's priority of
+/// `id` at `offset` epochs ahead (`1..=depth`) — the offline traces are
+/// exact here, and the VTC/SLO policies return their current ranking
+/// (mispredictions are the prefetcher's cancellation path, not ours).
+/// For each offset the same membership passes as [`schedule`] run over
+/// the re-prioritized candidates; the union of their `promote` sets, in
+/// first-projected-admission order, is returned. Requests the *current*
+/// schedule already admits will typically appear at offset 1 too — the
+/// engine filters out anything already on GPU before acting.
+///
+/// Pure function: no engine, allocator, or policy state is touched
+/// beyond what the caller's closure does.
+pub fn predict_admission(
+    cands: &[Candidate],
+    total_blocks: usize,
+    max_batch: usize,
+    depth: u64,
+    mut future_priority: impl FnMut(RequestId, u64) -> i64,
+) -> Vec<RequestId> {
+    let mut out: Vec<RequestId> = Vec::new();
+    for offset in 1..=depth {
+        let projected: Vec<Candidate> = cands
+            .iter()
+            .map(|c| Candidate {
+                priority: future_priority(c.id, offset),
+                ..*c
+            })
+            .collect();
+        // Membership only — the grant pass is irrelevant to prefetch.
+        let s = schedule(
+            &projected,
+            total_blocks,
+            max_batch,
+            IterBudget::chunked(1, 1),
+        );
+        for id in s.promote {
+            if !out.contains(&id) {
+                out.push(id);
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -540,6 +590,72 @@ mod tests {
             IterBudget::monolithic(),
         );
         assert_eq!(s.grant_for(2).unwrap().decode, 1);
+    }
+
+    // ---- lookahead projection (prefetch pipeline) ------------------
+
+    #[test]
+    fn predicts_swapped_out_request_whose_priority_will_rise() {
+        // Capacity for one: the running request owns the GPU now, but at
+        // epoch offset 2 the trace flips the ranking — the swapped-out
+        // request is projected for promotion exactly once.
+        let cands = vec![
+            cand(1, 9, ReqState::Running, 10, 0),
+            cand(2, 1, ReqState::SwappedOut, 0, 10),
+        ];
+        let future = |id: RequestId, offset: u64| match (id, offset) {
+            (1, 2) => 1,
+            (2, 2) => 9,
+            (1, _) => 9,
+            (2, _) => 1,
+            _ => unreachable!(),
+        };
+        assert!(predict_admission(&cands, 10, 8, 1, future).is_empty());
+        assert_eq!(predict_admission(&cands, 10, 8, 2, future), vec![2]);
+        // Depth 3 repeats the offset-2 ranking: still deduplicated.
+        let future3 = |id: RequestId, offset: u64| match (id, offset >= 2) {
+            (1, true) => 1,
+            (2, true) => 9,
+            (1, false) => 9,
+            _ => 1,
+        };
+        assert_eq!(predict_admission(&cands, 10, 8, 3, future3), vec![2]);
+    }
+
+    #[test]
+    fn depth_zero_predicts_nothing() {
+        let cands = vec![cand(2, 5, ReqState::SwappedOut, 0, 4)];
+        assert!(predict_admission(&cands, 100, 8, 0, |_, _| 5).is_empty());
+    }
+
+    #[test]
+    fn prediction_respects_capacity_and_batch_limits() {
+        // Three swapped-out requests, room for only the best two under
+        // the projected priorities.
+        let cands = vec![
+            cand(1, 0, ReqState::SwappedOut, 0, 5),
+            cand(2, 0, ReqState::SwappedOut, 0, 5),
+            cand(3, 0, ReqState::SwappedOut, 0, 5),
+        ];
+        let future = |id: RequestId, _| 10 - id as i64; // 1 > 2 > 3
+        assert_eq!(predict_admission(&cands, 10, 8, 1, future), vec![1, 2]);
+        assert_eq!(predict_admission(&cands, 100, 2, 1, future), vec![1, 2]);
+    }
+
+    #[test]
+    fn prediction_orders_by_first_projected_admission() {
+        // Request 3 wins at offset 1, request 2 only at offset 2: the
+        // returned order is the projected admission order, not id order.
+        let cands = vec![
+            cand(2, 0, ReqState::SwappedOut, 0, 10),
+            cand(3, 0, ReqState::SwappedOut, 0, 10),
+        ];
+        let future = |id: RequestId, offset: u64| match (id, offset) {
+            (3, 1) => 9,
+            (2, 1) => 1,
+            _ => 5,
+        };
+        assert_eq!(predict_admission(&cands, 10, 8, 2, future), vec![3, 2]);
     }
 
     #[test]

@@ -102,7 +102,10 @@ pub fn run(scale: &Scale) -> Report {
          decodes inherit the full prefill latency as tail TBT; chunking bounds the gap \
          at the token-budget iteration cost, paying a TTFT premium on long prompts",
     );
-    rep.note("interference = total virtual time decode-ready requests were blocked/inflated by prefill work");
+    rep.note(
+        "interference = total virtual time decode-ready requests were \
+         blocked/inflated by prefill work",
+    );
     rep
 }
 

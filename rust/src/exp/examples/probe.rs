@@ -11,11 +11,17 @@ fn main() {
         let (inf, swap, sched) = out.recorder.stall_breakdown();
         let eff = out.recorder.token_gen_efficiency(5);
         println!(
-            "{:<16} inf={:.1}s swap={:.3}s sched={:.3}s tput={:.1} p1eff={:.1} p50eff={:.1} sync_in={} async_in={} swapouts={}",
+            "{:<16} inf={:.1}s swap={:.3}s sched={:.3}s tput={:.1} p1eff={:.1} \
+             p50eff={:.1} sync_in={} async_in={} swapouts={}",
             out.label,
-            inf as f64 / 1e9, swap as f64 / 1e9, sched as f64 / 1e9,
-            out.throughput(), eff.p(1.0), eff.p(50.0),
-            out.swap_stats.sync_swap_ins, out.swap_stats.async_swap_ins,
+            inf as f64 / 1e9,
+            swap as f64 / 1e9,
+            sched as f64 / 1e9,
+            out.throughput(),
+            eff.p(1.0),
+            eff.p(50.0),
+            out.swap_stats.sync_swap_ins,
+            out.swap_stats.async_swap_ins,
             out.swap_stats.swap_out_ops,
         );
     }

@@ -97,7 +97,10 @@ pub fn run(scale: &Scale) -> Report {
         "trace priorities are tenant-blind; VTC equalizes token shares while tenants are \
          backlogged; SLO-aware also boosts tenants missing TTFT/TBT targets",
     );
-    rep.note("maxmin = max/min per-tenant token share; jain = Jain fairness index over token counts");
+    rep.note(
+        "maxmin = max/min per-tenant token share; jain = Jain fairness index \
+         over token counts",
+    );
     rep
 }
 

@@ -40,7 +40,10 @@ pub fn run(scale: &Scale) -> Report {
             pct(f / b - 1.0),
         ]);
     }
-    rep.note("paper: +21.8% @P99 / +12.6% @P99.9 of their (inverted) percentile axis — i.e. the stall-dominated windows improve most");
+    rep.note(
+        "paper: +21.8% @P99 / +12.6% @P99.9 of their (inverted) percentile axis — \
+         i.e. the stall-dominated windows improve most",
+    );
     rep
 }
 

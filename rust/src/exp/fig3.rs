@@ -62,7 +62,10 @@ pub fn run_with_blocks(n_blocks: u32) -> Report {
             pct(dispatch_ns as f64 / total.max(1) as f64),
         ]);
     }
-    rep.note("paper: dispatch is 90–95% of transmission at vLLM granularity; block groups coalesce it away");
+    rep.note(
+        "paper: dispatch is 90–95% of transmission at vLLM granularity; \
+         block groups coalesce it away",
+    );
     rep
 }
 

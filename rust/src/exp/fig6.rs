@@ -74,7 +74,10 @@ pub fn run() -> Report {
             f2((iter_ns + stall) as f64 / 1e6),
         ]);
     }
-    rep.note("paper: (a) serializes everything; (b) still pays the dispatch stage; (c) overlaps both stages");
+    rep.note(
+        "paper: (a) serializes everything; (b) still pays the dispatch stage; \
+         (c) overlaps both stages",
+    );
     rep
 }
 

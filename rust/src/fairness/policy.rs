@@ -76,6 +76,23 @@ pub trait PriorityPolicy {
     /// Priority of conversation `conv` belonging to `tenant` at update
     /// epoch `epoch` (higher = better).
     fn priority_of(&mut self, conv: u64, tenant: TenantId, epoch: u64) -> i64;
+
+    /// Projected priorities of `conv` for the `depth` epochs after
+    /// `epoch` (index 0 = `epoch + 1`) — the lookahead prefetcher's
+    /// view of the future. Implementations must not disturb their
+    /// sequential state (see [`crate::coordinator::priority::PriorityTrace::project`]).
+    /// Default: the current priority repeated — online policies cannot
+    /// see the future, so their projection is "the ranking holds".
+    fn project_priorities(
+        &mut self,
+        conv: u64,
+        tenant: TenantId,
+        epoch: u64,
+        depth: u64,
+    ) -> Vec<i64> {
+        let p = self.priority_of(conv, tenant, epoch);
+        vec![p; depth as usize]
+    }
 }
 
 /// Build the configured policy. `pattern`, `levels`, and `seed` feed the
@@ -120,6 +137,18 @@ impl PriorityPolicy for TracePolicy {
 
     fn priority_of(&mut self, conv: u64, _tenant: TenantId, epoch: u64) -> i64 {
         self.trace.priority_of(conv, epoch)
+    }
+
+    fn project_priorities(
+        &mut self,
+        conv: u64,
+        _tenant: TenantId,
+        epoch: u64,
+        depth: u64,
+    ) -> Vec<i64> {
+        // The offline trace knows its future exactly; `project` walks it
+        // without parking the memo ahead of the live queries.
+        self.trace.project(conv, epoch, depth)
     }
 }
 
@@ -331,6 +360,27 @@ mod tests {
         let a = p.priority_of(0, 0, 1);
         let b = p.priority_of(1, 1, 1);
         assert!(b > a, "SLO-missing tenant must be boosted: {b} !> {a}");
+    }
+
+    #[test]
+    fn trace_projection_is_exact_and_vtc_projection_holds_current_ranking() {
+        use crate::coordinator::priority::PriorityTrace;
+        // Trace: projected values equal the raw trace's future, and the
+        // live sequential walk is undisturbed afterwards.
+        let mut p = TracePolicy::new(Pattern::Markov, 8, 11);
+        let mut t = PriorityTrace::new(Pattern::Markov, 8, 11);
+        let _ = p.priority_of(3, 0, 5);
+        let proj = p.project_priorities(3, 0, 5, 4);
+        let expect: Vec<i64> = (6..=9).map(|e| t.priority_of(3, e)).collect();
+        assert_eq!(proj, expect);
+        assert_eq!(p.priority_of(3, 0, 6), expect[0], "memo must stay live");
+        // VTC (default impl): the projection is the current ranking.
+        let mut v = VtcPolicy::new(VtcConfig::default(), 8);
+        v.on_schedule(0, &[0, 1]);
+        v.on_tokens(0, 500, 100);
+        v.on_schedule(1, &[0, 1]);
+        let now = v.priority_of(9, 1, 1);
+        assert_eq!(v.project_priorities(9, 1, 1, 3), vec![now; 3]);
     }
 
     #[test]

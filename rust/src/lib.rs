@@ -40,7 +40,15 @@
 //!   later turns to the replica holding its CPU KV copy, with a spill
 //!   threshold trading locality for balance) — and aggregates per-tenant
 //!   latency, fairness, and swap-volume metrics across replicas
-//!   (`exp cluster` runs the placement showdown).
+//!   (`exp cluster` runs the placement showdown);
+//! - the **lookahead swap-in prefetcher**
+//!   ([`coordinator::scheduler::predict_admission`] +
+//!   [`swap::manager::SwapManager::submit_prefetch`], configured by
+//!   [`config::PrefetchConfig`]) projects which swapped-out requests
+//!   the next priority epochs will re-admit and issues their swap-ins
+//!   early as background PCIe traffic under an I/O budget, so a
+//!   predicted re-admission lands with zero synchronous swap-in stall
+//!   (`exp prefetch` sweeps the lookahead depth).
 //!
 //! ## Architecture (three layers, Python never on the request path)
 //!

@@ -5,8 +5,9 @@
 //! fastswitch exp <id|all> [--conversations N] [--seed S] [--out FILE]
 //!     Regenerate a paper figure/table (fig1..fig13, table1), the
 //!     fairness-policy showdown (`exp fairness`), the chunked-prefill
-//!     showdown (`exp chunked`), or the multi-replica placement
-//!     showdown (`exp cluster`).
+//!     showdown (`exp chunked`), the multi-replica placement showdown
+//!     (`exp cluster`), or the lookahead swap-in prefetch showdown
+//!     (`exp prefetch`).
 //!
 //! fastswitch simulate [--preset llama8b_a10|qwen32b_a100]
 //!     [--policy vllm|vllm+dbg|vllm+dbg+reuse|fastswitch]
@@ -15,6 +16,7 @@
 //!     [--arrivals poisson|bursty] [--burst B]
 //!     [--prefill-mode chunked|monolithic] [--chunk-tokens N]
 //!     [--iter-budget N (0 = roofline auto)]
+//!     [--prefetch-depth K (0 = off)] [--prefetch-io-budget F]
 //!     [--replicas N] [--placement round_robin|least_loaded|kv_affinity]
 //!     [--spill-threshold F]
 //!     [--conversations N] [--rate R] [--seed S] [--config FILE]
@@ -113,12 +115,13 @@ fn cmd_exp(args: &Args) {
         "fairness" => reports.push(exp::fairness_showdown::run(&scale)),
         "chunked" => reports.push(exp::chunked_prefill::run(&scale)),
         "cluster" => reports.push(exp::cluster::run(&scale)),
+        "prefetch" => reports.push(exp::prefetch::run(&scale)),
         other => eprintln!("unknown experiment {other:?}"),
     };
     if id == "all" {
         for e in [
             "fig1", "fig2", "fig3", "fig4", "fig6", "fig8", "fig9", "fig10", "fig11",
-            "fig12", "fig13", "table1", "fairness", "chunked", "cluster",
+            "fig12", "fig13", "table1", "fairness", "chunked", "cluster", "prefetch",
         ] {
             eprintln!("[exp] running {e} ...");
             run_one(e, &mut reports);
@@ -194,6 +197,12 @@ fn cmd_simulate(args: &Args) {
     if let Some(b) = args.get("iter-budget") {
         cfg.scheduler.max_tokens_per_iter = b.parse().expect("iter-budget");
     }
+    if let Some(d) = args.get("prefetch-depth") {
+        cfg.prefetch.depth = d.parse().expect("prefetch-depth");
+    }
+    if let Some(b) = args.get("prefetch-io-budget") {
+        cfg.prefetch.io_budget = b.parse::<f64>().expect("prefetch-io-budget").clamp(0.0, 1.0);
+    }
     if let Some(n) = args.get("tenants") {
         spec.tenants = n.parse().expect("tenants");
     }
@@ -257,6 +266,7 @@ fn cmd_simulate(args: &Args) {
         spec.tenants
     );
     let multi_tenant = spec.tenants > 1;
+    let prefetch_depth = cfg.prefetch.depth;
     let out = run_sim_with(cfg, preset, pattern, &scale, &spec);
     let ttft = out.recorder.ttft();
     let tbt = out.recorder.tbt();
@@ -287,6 +297,20 @@ fn cmd_simulate(args: &Args) {
         out.swap_stats.swap_out_ops,
         out.swap_stats.avg_granularity()
     );
+    if prefetch_depth > 0 {
+        println!(
+            "prefetch (depth {}): {} issued, hit rate {:.2} ({} hits / {} partial), \
+             {:.1} ms stall recovered, {:.1} MB wasted, {} canceled",
+            prefetch_depth,
+            out.swap_stats.prefetch_ops,
+            out.swap_stats.prefetch_hit_rate(),
+            out.swap_stats.prefetch_hits,
+            out.swap_stats.prefetch_partial_hits,
+            out.swap_stats.prefetch_recovered_ns as f64 / 1e6,
+            out.swap_stats.prefetch_wasted_bytes as f64 / 1e6,
+            out.swap_stats.prefetch_canceled
+        );
+    }
     if multi_tenant {
         println!("== per-tenant breakdown ==");
         print_tenant_rows(

@@ -41,6 +41,10 @@ pub struct IterationSample {
     pub batch: u32,
     /// Requests currently waiting on a KV transfer (Fig. 2).
     pub waiting_on_swap: u32,
+    /// Speculative swap-ins outstanding at iteration end (in flight or
+    /// landed-but-unclaimed) — the lookahead prefetcher's pipeline depth
+    /// as actually achieved.
+    pub prefetch_inflight: u32,
 }
 
 #[derive(Clone, Debug, Default)]

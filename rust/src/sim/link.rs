@@ -38,6 +38,10 @@ pub struct PcieLink {
     pub bytes_moved: [u64; 2],
     pub transfers: [u64; 2],
     pub busy_time: [Ns; 2],
+    /// Bytes moved by background (prefetch) traffic — a subset of
+    /// `bytes_moved`, kept separate so demand-vs-speculative link use
+    /// can be reported.
+    pub background_bytes: [u64; 2],
 }
 
 impl PcieLink {
@@ -48,6 +52,7 @@ impl PcieLink {
             bytes_moved: [0; 2],
             transfers: [0; 2],
             busy_time: [0; 2],
+            background_bytes: [0; 2],
         }
     }
 
@@ -75,6 +80,17 @@ impl PcieLink {
         self.transfers[i] += 1;
         self.busy_time[i] += dur;
         Transfer { start, end, bytes }
+    }
+
+    /// Enqueue a *background* (prefetch) transfer: identical link
+    /// semantics to [`PcieLink::enqueue`], but the bytes are additionally
+    /// tallied in `background_bytes`. The prefetcher only calls this when
+    /// the direction is idle and its I/O budget covers the bytes, which
+    /// is how speculative traffic stays below demand traffic.
+    pub fn enqueue_background(&mut self, dir: Direction, bytes: u64, ready_at: Ns) -> Transfer {
+        let t = self.enqueue(dir, bytes, ready_at);
+        self.background_bytes[Self::dir_idx(dir)] += bytes;
+        t
     }
 
     /// When the given direction becomes idle.
@@ -144,6 +160,17 @@ mod tests {
             small as f64 > 1.3 * big as f64,
             "small={small} big={big}"
         );
+    }
+
+    #[test]
+    fn background_traffic_tallied_separately() {
+        let mut l = link();
+        l.enqueue(Direction::In, 1000, 0);
+        let t = l.enqueue_background(Direction::In, 2000, 0);
+        assert_eq!(l.bytes_moved[1], 3000, "background bytes are link bytes");
+        assert_eq!(l.background_bytes[1], 2000);
+        assert_eq!(l.background_bytes[0], 0);
+        assert!(t.start > 0, "background transfer queues behind demand");
     }
 
     #[test]

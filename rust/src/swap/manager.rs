@@ -23,7 +23,7 @@ use crate::config::{DispatchMode, SwapCostConfig, SwapMode};
 use crate::memory::{BlockId, RequestId};
 use crate::sim::clock::Ns;
 use crate::sim::dispatch::DispatchLanes;
-use crate::sim::link::PcieLink;
+use crate::sim::link::{Direction, PcieLink};
 
 /// CUDA-event pool analogue: recycled completion-tracking handles.
 #[derive(Clone, Debug, Default)]
@@ -81,6 +81,29 @@ pub struct SwapStats {
     /// Sum over ops of avg blocks/call (divide by op count for the
     /// Fig. 11 granularity metric).
     pub granularity_sum: f64,
+    // ---- lookahead prefetcher (speculative swap-ins) ----
+    /// Speculative swap-ins issued. Kept out of `swap_in_ops` /
+    /// `total_*` so demand swap volume and the stall-breakdown buckets
+    /// stay exactly what they were without prefetching.
+    pub prefetch_ops: u64,
+    /// Bytes moved by speculative swap-ins (background PCIe traffic).
+    pub prefetch_bytes: u64,
+    /// Distinct logical blocks moved speculatively.
+    pub prefetch_blocks: u64,
+    /// Re-admissions whose prefetch had fully landed: zero swap-in stall.
+    pub prefetch_hits: u64,
+    /// Re-admissions that found their prefetch still on the wire and
+    /// continued it asynchronously (only the remainder is waited on).
+    pub prefetch_partial_hits: u64,
+    /// Prefetches canceled on misprediction (priority flip, block-pool
+    /// pressure, migration/rejection).
+    pub prefetch_canceled: u64,
+    /// PCIe bytes spent on canceled prefetches — pure speculation waste.
+    pub prefetch_wasted_bytes: u64,
+    /// Demand-stall nanoseconds the prefetcher recovered: for a hit, the
+    /// whole transfer ran off the critical path; for a partial hit, the
+    /// already-elapsed share did.
+    pub prefetch_recovered_ns: Ns,
 }
 
 impl SwapStats {
@@ -90,6 +113,19 @@ impl SwapStats {
             0.0
         } else {
             self.granularity_sum / ops
+        }
+    }
+
+    /// Fraction of KV re-materializations served (at least partly) by a
+    /// prefetch instead of a demand swap-in. `0.0` when nothing swapped
+    /// in at all.
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        let served = self.prefetch_hits + self.prefetch_partial_hits;
+        let total = served + self.swap_in_ops;
+        if total == 0 {
+            0.0
+        } else {
+            served as f64 / total as f64
         }
     }
 }
@@ -103,6 +139,57 @@ pub enum SwapInDecision {
     Async,
 }
 
+/// Outcome of [`SwapManager::submit_prefetch`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefetchSubmit {
+    /// Issued onto the idle inbound DMA engine under the I/O budget.
+    Started,
+    /// The token bucket cannot cover the op right now — retry after a
+    /// refill ([`SwapManager::prefetch_budget_eta`] says when).
+    RejectedBudget,
+    /// The inbound direction is busy (demand traffic or an earlier
+    /// prefetch): speculation never queues ahead of anything.
+    RejectedBusy,
+    /// The op exceeds the bucket's burst capacity (or is empty): it can
+    /// *never* be issued under this budget — drop it, don't retry.
+    RejectedTooLarge,
+}
+
+/// Outcome of [`SwapManager::claim_prefetch`] at re-admission time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefetchClaim {
+    /// The KV fully landed: re-admit with zero swap-in stall.
+    Ready,
+    /// Still on the wire: the op continues as an ordinary asynchronous
+    /// swap-in (harvested via `poll_completed` at `done`).
+    Pending { done: Ns },
+}
+
+/// Outcome of [`SwapManager::cancel_prefetch`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefetchCancel {
+    /// The transfer had completed: the caller may free the GPU blocks
+    /// immediately.
+    Freed { wasted_bytes: u64 },
+    /// Still on the wire: the op keeps draining (its GPU blocks stay
+    /// allocated and conflict-visible); `reap_prefetch_drains` returns
+    /// the request id once it is safe to free them.
+    Draining { done: Ns },
+}
+
+/// One speculative swap-in: in flight until `inflight.exec_done`, then
+/// parked (still holding its event) until claimed or canceled.
+#[derive(Clone, Debug)]
+struct PrefetchEntry {
+    inflight: InflightOp,
+    ev: u32,
+    submitted: Ns,
+}
+
+/// Token-bucket window for the prefetch I/O budget: the bucket holds at
+/// most this many seconds of budgeted bandwidth, bounding burst size.
+const PREFETCH_BUDGET_WINDOW_S: f64 = 0.25;
+
 #[derive(Clone, Debug)]
 pub struct SwapManager {
     pub dispatch: DispatchLanes,
@@ -111,6 +198,16 @@ pub struct SwapManager {
     dispatch_mode: DispatchMode,
     ongoing_in: Vec<(InflightOp, u32)>,
     ongoing_out: Vec<(InflightOp, u32)>,
+    /// Speculative swap-ins: in flight or landed-but-unclaimed.
+    prefetches: Vec<PrefetchEntry>,
+    /// Canceled-while-in-flight prefetches still draining on the link.
+    prefetch_drains: Vec<PrefetchEntry>,
+    /// Prefetch I/O token bucket: refill rate (bytes/s), burst cap, and
+    /// current level. Rate 0 (unconfigured) rejects every prefetch.
+    prefetch_rate: f64,
+    prefetch_cap: f64,
+    prefetch_budget: f64,
+    prefetch_last_refill: Ns,
     events: EventPool,
     r_info: VecDeque<RecentSwap>,
     r_info_cap: usize,
@@ -132,6 +229,12 @@ impl SwapManager {
             dispatch_mode,
             ongoing_in: Vec::new(),
             ongoing_out: Vec::new(),
+            prefetches: Vec::new(),
+            prefetch_drains: Vec::new(),
+            prefetch_rate: 0.0,
+            prefetch_cap: 0.0,
+            prefetch_budget: 0.0,
+            prefetch_last_refill: 0,
             events: EventPool::default(),
             r_info: VecDeque::new(),
             r_info_cap: 32,
@@ -302,12 +405,217 @@ impl SwapManager {
         }
     }
 
+    // ------------------------------------------------------------------
+    // Lookahead prefetch (speculative swap-ins below demand traffic)
+    // ------------------------------------------------------------------
+
+    /// Arm the prefetch I/O token bucket at `rate_bytes_per_s` (the
+    /// engine passes `io_budget × pcie_bw`). The bucket starts full so a
+    /// freshly idle link can prefetch immediately.
+    pub fn configure_prefetch(&mut self, rate_bytes_per_s: f64) {
+        self.prefetch_rate = rate_bytes_per_s.max(0.0);
+        self.prefetch_cap = self.prefetch_rate * PREFETCH_BUDGET_WINDOW_S;
+        self.prefetch_budget = self.prefetch_cap;
+    }
+
+    /// Refill the token bucket for the virtual time elapsed since the
+    /// last refill (capped at the burst window).
+    pub fn refill_prefetch_budget(&mut self, now: Ns) {
+        let dt = now.saturating_sub(self.prefetch_last_refill);
+        self.prefetch_last_refill = now;
+        self.prefetch_budget = (self.prefetch_budget
+            + self.prefetch_rate * dt as f64 / 1e9)
+            .min(self.prefetch_cap);
+    }
+
+    /// When the token bucket will have refilled enough to cover `bytes`
+    /// (assuming no spending in between): the engine's idle-wake target
+    /// after a [`PrefetchSubmit::RejectedBudget`]. `None` if the budget
+    /// can never cover it (rate 0 or beyond the burst cap).
+    pub fn prefetch_budget_eta(&self, bytes: u64, now: Ns) -> Option<Ns> {
+        let bytes = bytes as f64;
+        if self.prefetch_rate <= 0.0 || bytes > self.prefetch_cap {
+            return None;
+        }
+        if bytes <= self.prefetch_budget {
+            return Some(now);
+        }
+        let wait_s = (bytes - self.prefetch_budget) / self.prefetch_rate;
+        Some(now + (wait_s * 1e9).ceil() as Ns)
+    }
+
+    /// Would a speculative op of `bytes` be accepted right now? The same
+    /// checks as [`SwapManager::submit_prefetch`] without building or
+    /// issuing anything — the engine's cheap pre-flight before spending
+    /// an allocation + op build on a doomed submission.
+    pub fn prefetch_admissible(&self, bytes: u64, now: Ns) -> PrefetchSubmit {
+        if bytes == 0 || bytes as f64 > self.prefetch_cap {
+            PrefetchSubmit::RejectedTooLarge
+        } else if self.link.idle_at(Direction::In) > now {
+            PrefetchSubmit::RejectedBusy
+        } else if bytes as f64 > self.prefetch_budget {
+            PrefetchSubmit::RejectedBudget
+        } else {
+            PrefetchSubmit::Started
+        }
+    }
+
+    /// Issue a speculative swap-in. Unlike demand ops it bypasses the
+    /// dispatch lanes (the paper's §3.2 thread pool absorbs background
+    /// dispatch off the main thread), only runs when the inbound DMA
+    /// engine is idle, and must fit the I/O token bucket — so it can
+    /// never push demand traffic off the critical path's schedule by
+    /// more than the configured link fraction.
+    pub fn submit_prefetch(&mut self, op: SwapOp, now: Ns) -> PrefetchSubmit {
+        let bytes = op.total_bytes();
+        // Single source of truth for admission — an empty op has 0 bytes
+        // and lands in RejectedTooLarge (drop, don't retry).
+        match self.prefetch_admissible(bytes, now) {
+            PrefetchSubmit::Started => {}
+            reject => return reject,
+        }
+        self.prefetch_budget -= bytes as f64;
+        let mut exec_done = now;
+        for seg in &op.segments {
+            let t = self.link.enqueue_background(Direction::In, seg.bytes, now);
+            exec_done = exec_done.max(t.end);
+        }
+        self.stats.prefetch_ops += 1;
+        self.stats.prefetch_bytes += bytes;
+        self.stats.prefetch_blocks += op.blocks as u64;
+        let ev = self.events.acquire();
+        self.prefetches.push(PrefetchEntry {
+            inflight: InflightOp {
+                op,
+                dispatch_done: now,
+                exec_done,
+            },
+            ev,
+            submitted: now,
+        });
+        PrefetchSubmit::Started
+    }
+
+    /// Consume `req`'s prefetch at re-admission time. `Ready` means the
+    /// KV is resident (zero swap-in stall); `Pending` converts the op
+    /// into an ordinary asynchronous swap-in the engine harvests via
+    /// [`SwapManager::poll_completed`].
+    pub fn claim_prefetch(&mut self, req: RequestId, now: Ns) -> Option<PrefetchClaim> {
+        let i = self
+            .prefetches
+            .iter()
+            .position(|e| e.inflight.op.req == req)?;
+        let e = self.prefetches.swap_remove(i);
+        if e.inflight.exec_done <= now {
+            self.events.release(e.ev);
+            self.stats.prefetch_hits += 1;
+            self.stats.prefetch_recovered_ns +=
+                e.inflight.exec_done.saturating_sub(e.submitted);
+            Some(PrefetchClaim::Ready)
+        } else {
+            self.stats.prefetch_partial_hits += 1;
+            self.stats.prefetch_recovered_ns += now.saturating_sub(e.submitted);
+            let done = e.inflight.exec_done;
+            self.ongoing_in.push((e.inflight, e.ev));
+            Some(PrefetchClaim::Pending { done })
+        }
+    }
+
+    /// Abort `req`'s prefetch (misprediction / pressure / migration).
+    /// A completed transfer frees immediately; an in-flight one keeps
+    /// draining (blocks stay allocated and conflict-visible) and its id
+    /// is returned by [`SwapManager::reap_prefetch_drains`] once done.
+    /// Either way the bytes already spent are charged as waste; the CPU
+    /// copy is untouched and stays the valid version.
+    pub fn cancel_prefetch(&mut self, req: RequestId, now: Ns) -> Option<PrefetchCancel> {
+        let i = self
+            .prefetches
+            .iter()
+            .position(|e| e.inflight.op.req == req)?;
+        let e = self.prefetches.swap_remove(i);
+        self.stats.prefetch_canceled += 1;
+        self.stats.prefetch_wasted_bytes += e.inflight.op.total_bytes();
+        if e.inflight.exec_done <= now {
+            self.events.release(e.ev);
+            Some(PrefetchCancel::Freed {
+                wasted_bytes: e.inflight.op.total_bytes(),
+            })
+        } else {
+            let done = e.inflight.exec_done;
+            self.prefetch_drains.push(e);
+            Some(PrefetchCancel::Draining { done })
+        }
+    }
+
+    /// Drained canceled prefetches: their GPU blocks may now be freed by
+    /// the engine (mirrors `reap_swap_outs`).
+    pub fn reap_prefetch_drains(&mut self, now: Ns) -> Vec<RequestId> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.prefetch_drains.len() {
+            if self.prefetch_drains[i].inflight.exec_done <= now {
+                let e = self.prefetch_drains.swap_remove(i);
+                self.events.release(e.ev);
+                done.push(e.inflight.op.req);
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    /// Does `req` have an unclaimed prefetch (in flight or landed)?
+    pub fn prefetch_pending(&self, req: RequestId) -> bool {
+        self.prefetches.iter().any(|e| e.inflight.op.req == req)
+    }
+
+    /// Has `req`'s prefetch fully landed (cancelable without a drain)?
+    pub fn prefetch_ready(&self, req: RequestId, now: Ns) -> bool {
+        self.prefetches
+            .iter()
+            .any(|e| e.inflight.op.req == req && e.inflight.exec_done <= now)
+    }
+
+    /// Requests with an unclaimed prefetch, sorted for determinism.
+    pub fn prefetched_ids(&self) -> Vec<RequestId> {
+        let mut ids: Vec<RequestId> =
+            self.prefetches.iter().map(|e| e.inflight.op.req).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Unclaimed prefetches (in flight + landed); drains excluded.
+    pub fn prefetch_count(&self) -> usize {
+        self.prefetches.len()
+    }
+
+    /// Earliest completion among live (unclaimed) prefetches strictly
+    /// after `now` — the engine's idle-wake target when further
+    /// speculative work is queued behind the one occupying the link.
+    pub fn next_prefetch_completion(&self, now: Ns) -> Option<Ns> {
+        self.prefetches
+            .iter()
+            .map(|e| e.inflight.exec_done)
+            .filter(|&t| t > now)
+            .min()
+    }
+
+    /// Canceled prefetches still draining on the link.
+    pub fn prefetch_draining_count(&self) -> usize {
+        self.prefetch_drains.len()
+    }
+
     /// Step 3.1 of Algorithm 1: conflict detection. If any freshly
     /// allocated GPU block is still the source/target of an in-flight op,
     /// return the synchronization point (latest conflicting event).
+    /// Speculative swap-ins (and their canceled drains) are writers too:
+    /// their destination blocks conflict exactly like demand traffic.
     pub fn detect_conflict(&mut self, new_blocks: &[BlockId], now: Ns) -> Option<Ns> {
         if new_blocks.is_empty()
-            || (self.ongoing_out.is_empty() && self.ongoing_in.is_empty())
+            || (self.ongoing_out.is_empty()
+                && self.ongoing_in.is_empty()
+                && self.prefetches.is_empty()
+                && self.prefetch_drains.is_empty())
         {
             return None;
         }
@@ -318,7 +626,17 @@ impl SwapManager {
         let fresh: std::collections::HashSet<BlockId> =
             new_blocks.iter().copied().collect();
         let mut sync_until: Option<Ns> = None;
-        for (inflight, _) in self.ongoing_out.iter().chain(self.ongoing_in.iter()) {
+        let demand = self
+            .ongoing_out
+            .iter()
+            .chain(self.ongoing_in.iter())
+            .map(|(i, _)| i);
+        let speculative = self
+            .prefetches
+            .iter()
+            .chain(self.prefetch_drains.iter())
+            .map(|e| &e.inflight);
+        for inflight in demand.chain(speculative) {
             if inflight.exec_done <= now {
                 continue;
             }
@@ -336,12 +654,16 @@ impl SwapManager {
     }
 
     /// Earliest completion among all in-flight operations (both
-    /// directions) — the engine's idle fast-forward target.
+    /// directions) — the engine's idle fast-forward target. Canceled
+    /// prefetch drains count (their blocks free at that instant); live
+    /// unclaimed prefetches do NOT — they park until claimed, and must
+    /// not keep an otherwise finished engine spinning.
     pub fn next_event(&self) -> Option<Ns> {
         self.ongoing_in
             .iter()
             .chain(self.ongoing_out.iter())
             .map(|(i, _)| i.exec_done)
+            .chain(self.prefetch_drains.iter().map(|e| e.inflight.exec_done))
             .min()
     }
 
@@ -578,6 +900,247 @@ mod tests {
         assert_eq!(c, a);
         assert_ne!(b, c);
         assert_eq!(p.high_water, 2);
+    }
+
+    // ---- lookahead prefetch ----------------------------------------
+
+    /// Build an op for an arbitrary request id (the shared `op` helper
+    /// pins req 1).
+    fn op_req(req: u64, dir: Direction, nblocks: u32) -> SwapOp {
+        let b = SegmentBuilder::new(
+            ModelSpec::llama8b(),
+            Granularity::BlockGroup { init_group_blocks: 60 },
+        );
+        let moves: Vec<BlockMove> = (0..nblocks)
+            .map(|i| BlockMove {
+                logical: i,
+                gpu: 500 + i,
+                cpu: 700 + i,
+            })
+            .collect();
+        b.build(req, dir, &moves)
+    }
+
+    fn prefetch_mgr() -> SwapManager {
+        let mut m = mgr(SwapMode::Adaptive, DispatchMode::ThreadPool { workers: 4 });
+        m.configure_prefetch(8e9); // 25% of a 32 GB/s link
+        m
+    }
+
+    #[test]
+    fn prefetch_claim_after_landing_is_a_zero_stall_hit() {
+        let mut m = prefetch_mgr();
+        assert_eq!(
+            m.submit_prefetch(op(Direction::In, 6, true), 0),
+            PrefetchSubmit::Started
+        );
+        assert!(m.prefetch_pending(1));
+        assert_eq!(m.prefetch_count(), 1);
+        let landed = m.link.idle_at(Direction::In);
+        assert!(m.prefetch_ready(1, landed));
+        assert_eq!(m.claim_prefetch(1, landed), Some(PrefetchClaim::Ready));
+        assert_eq!(m.stats.prefetch_hits, 1);
+        assert_eq!(m.stats.prefetch_recovered_ns, landed, "whole transfer off-path");
+        // Demand counters untouched: hit rate is 1.0 with zero swap-ins.
+        assert_eq!(m.stats.swap_in_ops, 0);
+        assert!((m.stats.prefetch_hit_rate() - 1.0).abs() < 1e-12);
+        assert!(m.claim_prefetch(1, landed).is_none(), "claimed once");
+    }
+
+    #[test]
+    fn prefetch_claimed_early_continues_as_async_swap_in() {
+        let mut m = prefetch_mgr();
+        m.submit_prefetch(op(Direction::In, 50, true), 0);
+        let claim = m.claim_prefetch(1, 1).expect("pending prefetch");
+        let done = match claim {
+            PrefetchClaim::Pending { done } => done,
+            PrefetchClaim::Ready => panic!("cannot be ready at t=1"),
+        };
+        assert_eq!(m.stats.prefetch_partial_hits, 1);
+        assert_eq!(m.ongoing_in_count(), 1, "continues as a demand async op");
+        assert_eq!(m.poll_completed(done), vec![1]);
+        assert!(m.poll_completed(done).is_empty(), "returned exactly once");
+    }
+
+    #[test]
+    fn prefetch_rejected_while_link_busy() {
+        let mut m = mgr(SwapMode::Async, DispatchMode::ThreadPool { workers: 4 });
+        m.configure_prefetch(8e9);
+        m.submit_swap_in(op(Direction::In, 50, true), 0, 1_000_000, 4, 4000.0);
+        assert_eq!(
+            m.submit_prefetch(op_req(2, Direction::In, 4), 0),
+            PrefetchSubmit::RejectedBusy,
+            "speculation must not queue behind (or ahead of) demand"
+        );
+        let idle = m.link.idle_at(Direction::In);
+        assert_eq!(
+            m.submit_prefetch(op_req(2, Direction::In, 4), idle),
+            PrefetchSubmit::Started
+        );
+    }
+
+    #[test]
+    fn prefetch_budget_throttles_and_refills() {
+        let mut m = mgr(SwapMode::Adaptive, DispatchMode::ThreadPool { workers: 4 });
+        // 20 MB/s budget: bucket caps at 5 MB — one 4 MB block fits.
+        m.configure_prefetch(20e6);
+        assert_eq!(
+            m.submit_prefetch(op(Direction::In, 1, true), 0),
+            PrefetchSubmit::Started
+        );
+        let idle = m.link.idle_at(Direction::In);
+        assert_eq!(
+            m.submit_prefetch(op_req(2, Direction::In, 1), idle),
+            PrefetchSubmit::RejectedBudget,
+            "bucket spent"
+        );
+        // The ETA names the exact refill instant; by then the submit
+        // succeeds.
+        let bytes = op_req(2, Direction::In, 1).total_bytes();
+        let eta = m.prefetch_budget_eta(bytes, idle).expect("refillable");
+        assert!(eta > idle, "bucket was dry: the ETA must be in the future");
+        m.refill_prefetch_budget(eta);
+        assert_eq!(
+            m.submit_prefetch(op_req(2, Direction::In, 1), eta),
+            PrefetchSubmit::Started
+        );
+    }
+
+    #[test]
+    fn prefetch_larger_than_burst_cap_is_rejected_permanently() {
+        let mut m = mgr(SwapMode::Adaptive, DispatchMode::ThreadPool { workers: 4 });
+        // 1 MB/s budget: bucket caps at 250 KB — a 4 MB block can never
+        // fit, no matter how long the refill runs.
+        m.configure_prefetch(1e6);
+        assert_eq!(
+            m.submit_prefetch(op(Direction::In, 1, true), 0),
+            PrefetchSubmit::RejectedTooLarge
+        );
+        let bytes = op(Direction::In, 1, true).total_bytes();
+        assert_eq!(m.prefetch_budget_eta(bytes, 0), None, "no ETA for the unfittable");
+        assert_eq!(m.prefetch_count(), 0, "nothing tracked, nothing charged");
+        assert_eq!(m.stats.prefetch_ops, 0);
+    }
+
+    #[test]
+    fn prefetch_cancel_frees_or_drains_and_counts_waste() {
+        let mut m = prefetch_mgr();
+        let bytes = op(Direction::In, 6, true).total_bytes();
+        m.submit_prefetch(op(Direction::In, 6, true), 0);
+        // Canceled mid-flight: drains, blocks not freeable yet.
+        let c = m.cancel_prefetch(1, 1).expect("in flight");
+        let done = match c {
+            PrefetchCancel::Draining { done } => done,
+            PrefetchCancel::Freed { .. } => panic!("cannot be done at t=1"),
+        };
+        assert_eq!(m.prefetch_draining_count(), 1);
+        assert_eq!(m.reap_prefetch_drains(done), vec![1]);
+        assert_eq!(m.prefetch_draining_count(), 0);
+        // Canceled after landing: freeable immediately.
+        let t0 = done;
+        m.submit_prefetch(op_req(2, Direction::In, 6), t0);
+        let landed = m.link.idle_at(Direction::In);
+        assert_eq!(
+            m.cancel_prefetch(2, landed),
+            Some(PrefetchCancel::Freed { wasted_bytes: bytes })
+        );
+        assert_eq!(m.stats.prefetch_canceled, 2);
+        assert_eq!(m.stats.prefetch_wasted_bytes, 2 * bytes);
+    }
+
+    #[test]
+    fn prefetch_destination_blocks_are_conflict_visible() {
+        let mut m = prefetch_mgr();
+        m.submit_prefetch(op(Direction::In, 20, true), 0); // gpu 10..30
+        assert!(m.detect_conflict(&[12], 0).is_some());
+        assert!(m.detect_conflict(&[99], 0).is_none());
+        // Once landed, the write is complete: no conflict.
+        let landed = m.link.idle_at(Direction::In);
+        assert!(m.detect_conflict(&[12], landed).is_none());
+    }
+
+    #[test]
+    fn stall_partition_holds_with_prefetch_traffic_in_flight() {
+        // Regression guard on the PR-3 invariant: with speculative
+        // traffic on the wire, `main_thread_dispatch_ns` + `sync_stall_ns`
+        // still exactly partition a demand op's stall, and prefetch
+        // traffic lands in neither bucket (nor in demand volume).
+        let mut m = mgr(SwapMode::Sync, DispatchMode::Gil);
+        m.configure_prefetch(8e9);
+        m.submit_prefetch(op_req(9, Direction::In, 8), 0);
+        let spec_bytes = m.stats.prefetch_bytes;
+        assert!(spec_bytes > 0);
+        assert_eq!(m.stats.main_thread_dispatch_ns, 0);
+        assert_eq!(m.stats.sync_stall_ns, 0);
+        let d = m.submit_swap_in(op(Direction::In, 20, false), 0, 1_000_000, 4, 4000.0);
+        let done = match d {
+            SwapInDecision::Sync { done } => done,
+            SwapInDecision::Async => panic!("sync mode must not go async"),
+        };
+        assert_eq!(
+            m.stats.main_thread_dispatch_ns + m.stats.sync_stall_ns,
+            done,
+            "breakdown buckets must partition the demand stall"
+        );
+        assert_eq!(m.stats.prefetch_bytes, spec_bytes, "no double count");
+        assert_eq!(
+            m.stats.total_bytes,
+            op(Direction::In, 20, false).total_bytes(),
+            "demand volume excludes speculative bytes"
+        );
+    }
+
+    #[test]
+    fn event_pool_high_water_stays_bounded_under_pinned_churn() {
+        // Satellite regression: 50 rounds of out + in + prefetch churn
+        // recycle events instead of growing the pool.
+        let mut m = mgr(SwapMode::Async, DispatchMode::ThreadPool { workers: 4 });
+        m.configure_prefetch(32e9);
+        let mut t: Ns = 0;
+        for round in 0..50u64 {
+            // Prefetch first (the link is idle at the top of each round),
+            // then demand traffic queues behind it.
+            let started = m.submit_prefetch(op_req(2, Direction::In, 4), t);
+            assert_eq!(started, PrefetchSubmit::Started, "round {round}");
+            m.submit_swap_out(op(Direction::Out, 8, true), t);
+            m.submit_swap_in(op(Direction::In, 8, true), t, 1_000_000, 4, 4000.0);
+            // Fast-forward past every in-flight op, then drain all three
+            // tracking lists.
+            t = t.max(m.sync_all_in(t)).max(m.next_out_event().unwrap_or(t)) + 1;
+            m.refill_prefetch_budget(t);
+            let polled = m.poll_completed(t);
+            assert!(polled.len() <= 1);
+            let reaped = m.reap_swap_outs(t);
+            assert!(reaped.len() <= 1);
+            // The demand swap-in queued behind the prefetch, so by `t`
+            // the prefetch has certainly landed.
+            assert_eq!(m.claim_prefetch(2, t), Some(PrefetchClaim::Ready));
+        }
+        assert_eq!(m.ongoing_in_count(), 0);
+        assert_eq!(m.ongoing_out_count(), 0);
+        assert!(
+            m.event_high_water() <= 4,
+            "event pool leaked: high water {}",
+            m.event_high_water()
+        );
+    }
+
+    #[test]
+    fn poll_and_reap_never_return_a_request_twice() {
+        let mut m = mgr(SwapMode::Async, DispatchMode::ThreadPool { workers: 8 });
+        m.submit_swap_in(op(Direction::In, 30, true), 0, 1_000_000, 4, 4000.0);
+        m.submit_swap_out(op_req(2, Direction::Out, 30), 0);
+        let done = m.sync_all_in(0).max(m.next_out_event().unwrap());
+        // Harvest incrementally across time: each id appears exactly once
+        // over the whole sequence of polls/reaps.
+        let mut seen_in = Vec::new();
+        let mut seen_out = Vec::new();
+        for t in [0, 1, done / 2, done, done, done + 1_000_000] {
+            seen_in.extend(m.poll_completed(t));
+            seen_out.extend(m.reap_swap_outs(t));
+        }
+        assert_eq!(seen_in, vec![1]);
+        assert_eq!(seen_out, vec![2]);
     }
 
     #[test]

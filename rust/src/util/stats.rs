@@ -5,6 +5,14 @@
 //! histogram utilities for the distribution figures (Fig. 4).
 
 /// Exact percentile summary over a sample set.
+///
+/// An **empty** sample set is well-defined: every summary statistic
+/// (`p`, `mean`, `min`, `max`, `sum`) returns the `0.0` sentinel instead
+/// of `NaN` or panicking. Cluster aggregation relies on this — a
+/// zero-traffic replica contributes empty percentile sets, and a `NaN`
+/// would silently poison every downstream comparison and report cell.
+/// Use [`Percentiles::is_empty`] when "no data" must be distinguished
+/// from "all samples are zero".
 #[derive(Clone, Debug, Default)]
 pub struct Percentiles {
     sorted: Vec<f64>,
@@ -25,10 +33,10 @@ impl Percentiles {
         self.sorted.is_empty()
     }
 
-    /// Linear-interpolated percentile, `p` in [0, 100].
+    /// Linear-interpolated percentile, `p` in [0, 100]. Empty set → 0.0.
     pub fn p(&self, p: f64) -> f64 {
         if self.sorted.is_empty() {
-            return f64::NAN;
+            return 0.0;
         }
         let n = self.sorted.len();
         if n == 1 {
@@ -41,19 +49,22 @@ impl Percentiles {
         self.sorted[lo] * (1.0 - frac) + self.sorted[hi.min(n - 1)] * frac
     }
 
+    /// Arithmetic mean. Empty set → 0.0.
     pub fn mean(&self) -> f64 {
         if self.sorted.is_empty() {
-            return f64::NAN;
+            return 0.0;
         }
         self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
     }
 
+    /// Largest sample. Empty set → 0.0.
     pub fn max(&self) -> f64 {
-        *self.sorted.last().unwrap_or(&f64::NAN)
+        *self.sorted.last().unwrap_or(&0.0)
     }
 
+    /// Smallest sample. Empty set → 0.0.
     pub fn min(&self) -> f64 {
-        *self.sorted.first().unwrap_or(&f64::NAN)
+        *self.sorted.first().unwrap_or(&0.0)
     }
 
     pub fn sum(&self) -> f64 {
@@ -184,9 +195,27 @@ mod tests {
     }
 
     #[test]
-    fn percentile_empty_is_nan() {
+    fn empty_sample_set_returns_the_zero_sentinel() {
+        // Regression: empty sets used to return NaN, which a zero-traffic
+        // replica in cluster aggregation propagated into every comparison
+        // and report cell. All summaries must be well-defined (0.0) and
+        // emptiness must stay queryable.
         let p = Percentiles::from(vec![]);
-        assert!(p.p(50.0).is_nan());
+        assert_eq!(p.p(50.0), 0.0);
+        assert_eq!(p.p(99.9), 0.0);
+        assert_eq!(p.mean(), 0.0);
+        assert_eq!(p.min(), 0.0);
+        assert_eq!(p.max(), 0.0);
+        assert_eq!(p.sum(), 0.0);
+        assert!(p.is_empty(), "emptiness still distinguishable from zeros");
+        // The merged-empty path of cluster aggregation is equally safe.
+        let m = Percentiles::merged([Percentiles::from(vec![]), Percentiles::from(vec![])]);
+        assert_eq!(m.p(99.0), 0.0);
+        assert!(m.is_empty());
+        // NaN *samples* are still filtered out, never returned.
+        let f = Percentiles::from(vec![f64::NAN]);
+        assert!(f.is_empty());
+        assert_eq!(f.p(50.0), 0.0);
     }
 
     #[test]

@@ -145,8 +145,9 @@ pub fn stats(convs: &[Conversation]) -> WorkloadStats {
             resps += t.response_tokens as u64;
         }
     }
-    let conv_tokens =
-        crate::util::stats::Percentiles::from(convs.iter().map(|c| c.total_tokens() as f64).collect());
+    let conv_tokens = crate::util::stats::Percentiles::from(
+        convs.iter().map(|c| c.total_tokens() as f64).collect(),
+    );
     WorkloadStats {
         n_conversations: n,
         mean_turns: total_turns as f64 / n as f64,

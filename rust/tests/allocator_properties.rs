@@ -1,0 +1,148 @@
+//! Seeded property tests over both KV allocators (via
+//! `util::proptest::for_cases` — failures print the case seed for exact
+//! replay): random alloc/grow/free sequences, with group splits and
+//! tail steals arising naturally under pressure, must
+//!
+//! - conserve total capacity (free + reclaimable + held == n_blocks),
+//! - never hand the same physical block to two owners,
+//! - (buddy) coalesce back to one maximally contiguous range after a
+//!   full free.
+
+use fastswitch::block::{
+    buddy::BlockGroupAllocator, fixed::FixedBlockAllocator, runs_of_table, KvAllocator,
+};
+use fastswitch::memory::RequestId;
+use fastswitch::util::proptest::for_cases;
+use fastswitch::util::rng::Rng;
+use std::collections::{HashMap, HashSet};
+
+const N_BLOCKS: usize = 256;
+const OPS: usize = 300;
+
+/// Every invariant that must hold between any two operations.
+fn check_invariants(a: &dyn KvAllocator, tables: &HashMap<RequestId, usize>) {
+    a.space().check_invariants();
+    let mut seen: HashSet<u32> = HashSet::new();
+    let mut held = 0usize;
+    for (&req, &len) in tables {
+        let table = a.table(req);
+        assert_eq!(table.len(), len, "table length drifted for request {req}");
+        held += table.len();
+        for &b in table {
+            assert!(
+                (1..=N_BLOCKS as u32).contains(&b),
+                "block {b} outside 1..={N_BLOCKS}"
+            );
+            assert!(seen.insert(b), "block {b} handed to two owners");
+            assert_eq!(
+                a.space().owner_of(b),
+                Some(req),
+                "ownership map disagrees with table for block {b}"
+            );
+        }
+    }
+    // Capacity conservation: everything is either held by a table,
+    // immediately allocatable, or a reclaimable reserved tail — and the
+    // three add up to the whole space.
+    assert_eq!(
+        a.available_blocks() + held,
+        N_BLOCKS,
+        "capacity leaked or double-counted"
+    );
+}
+
+/// Random alloc/grow/free churn; grows force group splits (buddy) and
+/// scatter (fixed), frees force merges, and oversized asks force tail
+/// steals. Returns the surviving live set.
+fn churn(
+    a: &mut dyn KvAllocator,
+    rng: &mut Rng,
+    ops: usize,
+) -> HashMap<RequestId, usize> {
+    let mut tables: HashMap<RequestId, usize> = HashMap::new();
+    let mut live: Vec<RequestId> = Vec::new();
+    let mut next: RequestId = 0;
+    for _ in 0..ops {
+        let roll = rng.f64();
+        if roll < 0.35 && !live.is_empty() {
+            let idx = rng.usize(0, live.len());
+            let req = live.swap_remove(idx);
+            let freed = a.release(req);
+            assert_eq!(freed.len(), tables.remove(&req).unwrap());
+        } else if roll < 0.65 && !live.is_empty() {
+            // Grow an existing request (splits a new group off once the
+            // reserved tail is spent).
+            let req = live[rng.usize(0, live.len())];
+            let n = rng.usize(1, 9);
+            if a.allocate(req, n).is_some() {
+                *tables.get_mut(&req).unwrap() += n;
+            }
+        } else {
+            // Fresh request; occasionally an oversized ask that must
+            // either steal reserved tails or atomically refuse.
+            let n = if rng.chance(0.1) {
+                rng.usize(32, 128)
+            } else {
+                rng.usize(1, 24)
+            };
+            if a.allocate(next, n).is_some() {
+                tables.insert(next, n);
+                live.push(next);
+            } else {
+                assert!(
+                    a.table(next).is_empty(),
+                    "failed allocation must not leave partial state"
+                );
+            }
+            next += 1;
+        }
+        check_invariants(a, &tables);
+    }
+    tables
+}
+
+#[test]
+fn buddy_conserves_capacity_and_never_double_allocates() {
+    for_cases(0xB10C_6009, 25, |rng| {
+        let mut a = BlockGroupAllocator::new(N_BLOCKS, 60, rng.next_u64());
+        churn(&mut a, rng, OPS);
+    });
+}
+
+#[test]
+fn fixed_conserves_capacity_and_never_double_allocates() {
+    for_cases(0xF15E_D000, 25, |rng| {
+        let mut a = FixedBlockAllocator::new(N_BLOCKS);
+        churn(&mut a, rng, OPS);
+    });
+}
+
+#[test]
+fn buddy_full_free_restores_max_contiguity() {
+    // After arbitrary churn and a full free, the free manager must have
+    // coalesced back to one range: a capacity-sized allocation succeeds
+    // and is physically one contiguous run.
+    for_cases(0xC0A1_E5CE, 25, |rng| {
+        let mut a = BlockGroupAllocator::new(N_BLOCKS, rng.usize(4, 80), rng.next_u64());
+        let tables = churn(&mut a, rng, OPS);
+        // Sorted release order keeps the whole case replayable by seed.
+        let mut reqs: Vec<RequestId> = tables.keys().copied().collect();
+        reqs.sort_unstable();
+        for req in reqs {
+            a.release(req);
+        }
+        assert_eq!(a.available_blocks(), N_BLOCKS, "full free must free all");
+        let probe: RequestId = u64::MAX;
+        let got = a
+            .allocate(probe, N_BLOCKS)
+            .expect("whole space allocatable after full free");
+        assert_eq!(got.len(), N_BLOCKS);
+        assert_eq!(
+            runs_of_table(&got).len(),
+            1,
+            "coalescing must restore one maximally contiguous range"
+        );
+        a.release(probe);
+        a.space().check_invariants();
+    });
+}

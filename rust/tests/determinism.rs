@@ -1,0 +1,191 @@
+//! Determinism e2e: the whole stack — workload generation, VTC fairness
+//! accounting, chunked-prefill scheduling, swap management, the
+//! lookahead prefetcher, and 3-replica cluster routing — must be a pure
+//! function of the seed. Two back-to-back runs with the same seed
+//! produce **byte-identical** metrics summaries; a changed seed produces
+//! a different arrival schedule. Guards against accidental wall-clock
+//! reads and HashMap-iteration-order leaks anywhere on the serving path.
+
+use fastswitch::cluster::{ClusterConfig, ClusterOutcome, PlacementKind};
+use fastswitch::config::{EngineConfig, Preset};
+use fastswitch::coordinator::engine::ServeOutcome;
+use fastswitch::coordinator::priority::Pattern;
+use fastswitch::exp::runner::{
+    build_workload, run_cluster_with, run_sim_with, Scale, WorkloadSpec,
+};
+use fastswitch::fairness::PolicyKind;
+use std::fmt::Write as _;
+
+fn scale(seed: u64) -> Scale {
+    Scale {
+        conversations: 24,
+        request_rate: 2.0,
+        seed,
+        max_iters: 400_000,
+        charge_sched_overhead: false,
+    }
+}
+
+fn spec() -> WorkloadSpec {
+    WorkloadSpec {
+        tenants: 4,
+        heavy_share: 0.5,
+        burst: Some(4.0),
+        ..WorkloadSpec::default()
+    }
+}
+
+/// Every HashMap-adjacent path of the engine: VTC priorities, bursty
+/// multi-tenant arrivals, and the speculative prefetcher.
+fn engine_cfg() -> EngineConfig {
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.scheduler.priority_update_freq = 0.04;
+    cfg.fairness.policy = PolicyKind::Vtc;
+    cfg.prefetch.depth = 2;
+    cfg
+}
+
+/// A byte-comparable digest of everything a run reports. Floats are
+/// printed at full precision so any drift — however small — flips bytes.
+fn engine_summary(out: &ServeOutcome) -> String {
+    let mut s = String::new();
+    let ttft = out.recorder.ttft();
+    let tbt = out.recorder.tbt();
+    let _ = write!(
+        s,
+        "label={} span={} iters={} tokens={} turns={} convs={} rejected={} \
+         preempt={} recompute={} ",
+        out.label,
+        out.span,
+        out.iterations,
+        out.recorder.total_tokens,
+        out.recorder.finished_turns,
+        out.recorder.finished_conversations,
+        out.recorder.rejected_conversations,
+        out.recorder.preemptions,
+        out.recorder.recompute_preemptions,
+    );
+    let _ = write!(
+        s,
+        "ttft=({:e},{:e},{:e}) tbt=({:e},{:e}) ",
+        ttft.p(50.0),
+        ttft.p(99.0),
+        ttft.p(99.9),
+        tbt.p(50.0),
+        tbt.p(99.0),
+    );
+    let st = &out.swap_stats;
+    let _ = write!(
+        s,
+        "swap=({},{},{},{},{},{},{},{}) stall=({},{},{}) ",
+        st.swap_out_ops,
+        st.swap_in_ops,
+        st.async_swap_ins,
+        st.sync_swap_ins,
+        st.total_calls,
+        st.total_bytes,
+        st.total_blocks,
+        st.conflicts,
+        st.main_thread_dispatch_ns,
+        st.sync_stall_ns,
+        st.conflict_wait_ns,
+    );
+    let _ = write!(
+        s,
+        "prefetch=({},{},{},{},{},{},{},{}) reuse=({},{}) contaminated={} ",
+        st.prefetch_ops,
+        st.prefetch_bytes,
+        st.prefetch_hits,
+        st.prefetch_partial_hits,
+        st.prefetch_canceled,
+        st.prefetch_wasted_bytes,
+        st.prefetch_recovered_ns,
+        st.prefetch_blocks,
+        out.reuse_blocks_transferred,
+        out.reuse_blocks_reused,
+        out.contaminated,
+    );
+    for (tenant, n) in out.recorder.tokens_by_tenant() {
+        let _ = write!(s, "t{tenant}={n} ");
+    }
+    s
+}
+
+fn cluster_summary(out: &ClusterOutcome) -> String {
+    let mut s = format!(
+        "label={} placements={} affinity=({},{}) migrations={} retransferred={} \
+         jain={:e} | ",
+        out.label,
+        out.placements,
+        out.affinity_decisions,
+        out.affinity_hits,
+        out.migrations,
+        out.retransferred_blocks_on_migration,
+        out.jain_fairness(),
+    );
+    for o in &out.replicas {
+        let _ = write!(s, "[{}] ", engine_summary(o));
+    }
+    s
+}
+
+#[test]
+fn same_seed_engine_runs_are_byte_identical() {
+    let run = || {
+        run_sim_with(
+            engine_cfg(),
+            Preset::llama8b_a10(),
+            Pattern::Markov,
+            &scale(123),
+            &spec(),
+        )
+    };
+    let a = engine_summary(&run());
+    let b = engine_summary(&run());
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "same seed must reproduce the metrics summary byte-for-byte");
+}
+
+#[test]
+fn same_seed_cluster_runs_are_byte_identical() {
+    let run = || {
+        run_cluster_with(
+            engine_cfg(),
+            Preset::llama8b_a10(),
+            Pattern::Markov,
+            ClusterConfig {
+                replicas: 3,
+                placement: PlacementKind::KvAffinity {
+                    spill_threshold: 0.5,
+                },
+            },
+            &scale(123),
+            &spec(),
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.replicas.len(), 3);
+    assert!(a.total_tokens() > 0, "cluster run served nothing");
+    assert_eq!(
+        cluster_summary(&a),
+        cluster_summary(&b),
+        "same seed must reproduce the 3-replica cluster summary byte-for-byte"
+    );
+}
+
+#[test]
+fn changed_seed_changes_the_arrival_schedule() {
+    let (_, a1) = build_workload(&scale(1), &spec());
+    let (_, a2) = build_workload(&scale(1), &spec());
+    let (_, b) = build_workload(&scale(2), &spec());
+    let times = |t: &fastswitch::workload::ArrivalTrace| -> Vec<u64> {
+        t.entries.iter().map(|e| e.arrival).collect()
+    };
+    assert_eq!(times(&a1), times(&a2), "same seed, same schedule");
+    assert_ne!(
+        times(&a1),
+        times(&b),
+        "a changed seed must change the arrival schedule"
+    );
+}
