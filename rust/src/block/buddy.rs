@@ -251,6 +251,51 @@ impl KvAllocator for BlockGroupAllocator {
         table
     }
 
+    fn release_tail(&mut self, req: RequestId, n: usize) -> Vec<BlockId> {
+        let held = self.table(req).len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if n >= held {
+            return self.release(req);
+        }
+        let table = self.tables.get_mut(&req).expect("held > 0");
+        let freed = table.split_off(held - n);
+        let mut left = n as u32;
+        while left > 0 {
+            let g = *self
+                .groups
+                .get(&req)
+                .and_then(|gs| gs.last())
+                .expect("groups cover the table");
+            if g.used <= left {
+                // The whole group goes (its reserved tail with it).
+                self.groups.get_mut(&req).unwrap().pop();
+                left -= g.used;
+                for b in g.start..g.start + g.len {
+                    self.space.reclaim(b, req);
+                }
+                self.release_range(g.start, g.len);
+            } else {
+                // Shrink in place: free the used suffix plus the
+                // reserved tail beyond it as one contiguous range, which
+                // `release_range` re-coalesces with any free neighbor.
+                let keep = g.used - left;
+                let free_start = g.start + keep;
+                let free_len = g.len - keep;
+                let gm = self.groups.get_mut(&req).unwrap().last_mut().unwrap();
+                gm.used = keep;
+                gm.len = keep;
+                for b in free_start..free_start + free_len {
+                    self.space.reclaim(b, req);
+                }
+                self.release_range(free_start, free_len);
+                left = 0;
+            }
+        }
+        freed
+    }
+
     fn table(&self, req: RequestId) -> &[BlockId] {
         self.tables.get(&req).map(|t| t.as_slice()).unwrap_or(&[])
     }
@@ -386,6 +431,59 @@ mod tests {
             }
             a.space().check_invariants();
         }
+    }
+
+    #[test]
+    fn release_tail_shrinks_in_place_and_recoalesces() {
+        let mut a = alloc(64, 60);
+        a.allocate(1, 40).unwrap();
+        let freed = a.release_tail(1, 10);
+        assert_eq!(freed.len(), 10);
+        assert_eq!(a.table(1).len(), 30);
+        // The freed suffix (and the group's reserved tail) went back to
+        // the free manager as allocatable space...
+        assert_eq!(a.available_blocks(), 34);
+        let gs = a.groups_of(1);
+        assert_eq!(gs.len(), 1);
+        assert_eq!((gs[0].used, gs[0].len), (30, 30), "shrunk in place");
+        // ... coalesced into ONE range, so a contiguous 34-block
+        // allocation succeeds.
+        let got = a.allocate(2, 34).unwrap();
+        assert_eq!(runs_of_table(&got).len(), 1, "freed tail must coalesce");
+        a.space().check_invariants();
+        a.release(1);
+        a.release(2);
+        assert_eq!(a.free_total(), 64);
+        assert_eq!(a.free.len(), 1, "full free restores one range");
+    }
+
+    #[test]
+    fn release_tail_spans_groups() {
+        let mut a = alloc(64, 8);
+        a.allocate(1, 20).unwrap();
+        a.allocate(2, 20).unwrap();
+        a.release(1); // hole at the front
+        a.allocate(3, 30).unwrap(); // spans the hole + tail space
+        assert!(a.groups_of(3).len() >= 2);
+        // Drop a tail crossing the last group boundary.
+        let freed = a.release_tail(3, 25);
+        assert_eq!(freed.len(), 25);
+        assert_eq!(a.table(3).len(), 5);
+        let used: u32 = a.groups_of(3).iter().map(|g| g.used).sum();
+        assert_eq!(used, 5, "groups must cover exactly the table");
+        a.space().check_invariants();
+    }
+
+    #[test]
+    fn release_tail_of_everything_is_a_full_release() {
+        let mut a = alloc(64, 8);
+        a.allocate(1, 12).unwrap();
+        let freed = a.release_tail(1, 12);
+        assert_eq!(freed.len(), 12);
+        assert!(a.table(1).is_empty());
+        assert!(a.groups_of(1).is_empty());
+        assert_eq!(a.free_total(), 64);
+        a.space().check_invariants();
     }
 
     #[test]

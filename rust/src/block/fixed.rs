@@ -58,6 +58,23 @@ impl KvAllocator for FixedBlockAllocator {
         table
     }
 
+    fn release_tail(&mut self, req: RequestId, n: usize) -> Vec<BlockId> {
+        let held = self.table(req).len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if n >= held {
+            return self.release(req);
+        }
+        let table = self.tables.get_mut(&req).expect("held > 0");
+        let freed = table.split_off(held - n);
+        for &b in &freed {
+            self.space.reclaim(b, req);
+            self.free_list.push(b);
+        }
+        freed
+    }
+
     fn table(&self, req: RequestId) -> &[BlockId] {
         self.tables.get(&req).map(|t| t.as_slice()).unwrap_or(&[])
     }
@@ -132,6 +149,22 @@ mod tests {
         let runs = runs_of_table(a.table(next_id));
         let avg = n as f64 / runs.len() as f64;
         assert!(avg < 3.0, "baseline should fragment, avg run = {avg}");
+        a.space().check_invariants();
+    }
+
+    #[test]
+    fn release_tail_keeps_the_head_resident() {
+        let mut a = FixedBlockAllocator::new(16);
+        let got = a.allocate(1, 6).unwrap();
+        let freed = a.release_tail(1, 2);
+        assert_eq!(freed, got[4..].to_vec(), "logical tail, in order");
+        assert_eq!(a.table(1), &got[..4]);
+        assert_eq!(a.available_blocks(), 12);
+        // Edge cases: zero is a no-op, >= held is a full release.
+        assert!(a.release_tail(1, 0).is_empty());
+        assert_eq!(a.release_tail(1, 99).len(), 4);
+        assert!(a.table(1).is_empty());
+        assert_eq!(a.available_blocks(), 16);
         a.space().check_invariants();
     }
 

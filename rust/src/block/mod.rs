@@ -39,6 +39,15 @@ pub trait KvAllocator {
     /// block table (logical order).
     fn release(&mut self, req: RequestId) -> Vec<BlockId>;
 
+    /// Release only the last `n` blocks of `req`'s table (the logical
+    /// tail), keeping the head resident — the partial-eviction primitive
+    /// of the `partial_tail` preemption policy. Returns the freed blocks
+    /// in logical order. `n >= held` degenerates to a full
+    /// [`KvAllocator::release`]. The buddy allocator shrinks the
+    /// affected groups in place and re-coalesces the freed ranges (and
+    /// any reserved tail beyond them) into the free manager.
+    fn release_tail(&mut self, req: RequestId, n: usize) -> Vec<BlockId>;
+
     /// The request's block table (logical order).
     fn table(&self, req: RequestId) -> &[BlockId];
 

@@ -73,10 +73,28 @@ impl KvCacheReuse {
         cpu: &CpuSwapSpace,
     ) -> SwapOutPlan {
         let total = self.n_blocks(tokens);
+        self.plan_swap_out_range(req, tokens, 0, total, cpu)
+    }
+
+    /// Plan a swap-out restricted to logical blocks `lo..hi` of a
+    /// request holding `tokens` tokens — the partial-eviction planner:
+    /// a `partial_tail` preemption moves only the evicted suffix, and a
+    /// later full eviction of a partially-resident request moves only
+    /// its resident head (`0..held`). Blocks outside the range are
+    /// neither transferred nor counted as reused.
+    pub fn plan_swap_out_range(
+        &mut self,
+        req: RequestId,
+        tokens: u64,
+        lo: u32,
+        hi: u32,
+        cpu: &CpuSwapSpace,
+    ) -> SwapOutPlan {
+        debug_assert!(hi <= self.n_blocks(tokens) && lo <= hi);
         if !self.enabled {
-            self.blocks_transferred_out += total as u64;
+            self.blocks_transferred_out += (hi - lo) as u64;
             return SwapOutPlan {
-                transfer: (0..total).collect(),
+                transfer: (lo..hi).collect(),
                 reused: 0,
             };
         }
@@ -94,7 +112,7 @@ impl KvCacheReuse {
         let valid = cpu.valid_logical(req);
         let mut valid_iter = valid.iter().peekable();
         let mut transfer = Vec::new();
-        for i in 0..total {
+        for i in lo..hi {
             while valid_iter.peek().is_some_and(|&&v| v < i) {
                 valid_iter.next();
             }
@@ -107,7 +125,7 @@ impl KvCacheReuse {
         }
         self.blocks_transferred_out += transfer.len() as u64;
         SwapOutPlan {
-            reused: total - transfer.len() as u32,
+            reused: (hi - lo) - transfer.len() as u32,
             transfer,
         }
     }
@@ -234,6 +252,37 @@ mod tests {
         assert!(reuse_moved * 2 < base_moved, "{reuse_moved} vs {base_moved}");
         assert_eq!(r.blocks_transferred_out as usize, reuse_moved);
         assert!(r.blocks_reused > 0);
+    }
+
+    #[test]
+    fn range_plan_covers_only_the_tail() {
+        let (mut r, mut cpu) = setup(true, 64);
+        // 100 tokens = 7 blocks; evict only the last 2 (logical 5..7):
+        // nothing is copied yet, so both must move.
+        let p = r.plan_swap_out_range(1, 100, 5, 7, &cpu);
+        assert_eq!(p.transfer, vec![5, 6]);
+        assert_eq!(p.reused, 0);
+        cpu.add_copies(1, &p.transfer, 5).unwrap();
+        r.commit_swap_out(1, 100);
+        // A later full-context plan re-uses the tail copies (durable —
+        // no growth since the commit) and moves only the head.
+        let full = r.plan_swap_out(1, 100, &cpu);
+        assert_eq!(full.transfer, vec![0, 1, 2, 3, 4]);
+        assert_eq!(full.reused, 2);
+        // A head-restricted plan (partially-resident eviction) never
+        // touches the tail logicals.
+        let head = r.plan_swap_out_range(1, 100, 0, 5, &cpu);
+        assert_eq!(head.transfer, vec![0, 1, 2, 3, 4]);
+        assert_eq!(head.reused, 0);
+    }
+
+    #[test]
+    fn range_plan_disabled_transfers_whole_range() {
+        let (mut r, cpu) = setup(false, 64);
+        let p = r.plan_swap_out_range(1, 100, 3, 7, &cpu);
+        assert_eq!(p.transfer, vec![3, 4, 5, 6]);
+        assert_eq!(p.reused, 0);
+        assert_eq!(r.blocks_transferred_out, 4);
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub enum ConfigError {
     UnknownFairnessPolicy(String),
     UnknownPrefillMode(String),
     UnknownPlacement(String),
+    UnknownPreemptionPolicy(String),
 }
 
 impl std::fmt::Display for ConfigError {
@@ -57,6 +58,12 @@ impl std::fmt::Display for ConfigError {
                 write!(
                     f,
                     "unknown placement policy {p:?} (round_robin|least_loaded|kv_affinity)"
+                )
+            }
+            ConfigError::UnknownPreemptionPolicy(p) => {
+                write!(
+                    f,
+                    "unknown preemption policy {p:?} (swap_all|cost_aware|partial_tail)"
                 )
             }
         }
@@ -177,6 +184,11 @@ impl ConfigFile {
         if let Some(m) = self.get("scheduler", "prefill_mode") {
             cfg.scheduler.prefill_mode = crate::config::PrefillMode::by_name(m)
                 .ok_or_else(|| ConfigError::UnknownPrefillMode(m.into()))?;
+        }
+        // `[preemption]` — the pluggable context-switch eviction policy.
+        if let Some(p) = self.get("preemption", "policy") {
+            cfg.preemption.policy = crate::config::PreemptionPolicyKind::by_name(p)
+                .ok_or_else(|| ConfigError::UnknownPreemptionPolicy(p.into()))?;
         }
         // `[prefetch]` — the lookahead swap-in prefetcher.
         if let Some(d) = self.get_u64("prefetch", "depth") {
@@ -338,6 +350,24 @@ pattern = "markov"
         assert_eq!(c.engine().unwrap().prefetch.io_budget, 1.0);
         let d = ConfigFile::parse("").unwrap().engine().unwrap();
         assert_eq!(d.prefetch.depth, 0);
+    }
+
+    #[test]
+    fn preemption_section_selects_the_eviction_policy() {
+        use crate::config::PreemptionPolicyKind;
+        let c = ConfigFile::parse("[preemption]\npolicy = \"partial_tail\"").unwrap();
+        assert_eq!(
+            c.engine().unwrap().preemption.policy,
+            PreemptionPolicyKind::PartialTail
+        );
+        // Absent section keeps the pinned swap_all default.
+        let d = ConfigFile::parse("").unwrap().engine().unwrap();
+        assert_eq!(d.preemption.policy, PreemptionPolicyKind::SwapAll);
+        let bad = ConfigFile::parse("[preemption]\npolicy = \"nope\"").unwrap();
+        assert!(matches!(
+            bad.engine(),
+            Err(ConfigError::UnknownPreemptionPolicy(_))
+        ));
     }
 
     #[test]

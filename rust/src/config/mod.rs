@@ -289,6 +289,59 @@ impl Default for PrefetchConfig {
     }
 }
 
+/// Which eviction mechanism the [`crate::coordinator::switch`] planner
+/// uses when the scheduler (or allocator pressure) preempts a victim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptionPolicyKind {
+    /// Swap the victim's whole context to CPU — today's behavior and the
+    /// default (seed runs reproduce bit-for-bit).
+    SwapAll,
+    /// Per-victim swap-vs-recompute choice by the
+    /// [`crate::coordinator::switch::SwitchCostModel`] crossover
+    /// (PCIe round-trip bytes vs recompute FLOPs) — the trade-off vLLM
+    /// hardcodes per sequence-group kind.
+    CostAware,
+    /// Evict only the minimal suffix of the victim's block runs needed
+    /// to satisfy the allocation, leaving the head GPU-resident
+    /// ([`crate::coordinator::request::ReqState::PartiallyResident`]).
+    PartialTail,
+}
+
+impl PreemptionPolicyKind {
+    pub fn by_name(s: &str) -> Option<PreemptionPolicyKind> {
+        match s {
+            "swap_all" | "swap-all" | "swap" => Some(PreemptionPolicyKind::SwapAll),
+            "cost_aware" | "cost-aware" | "cost" => Some(PreemptionPolicyKind::CostAware),
+            "partial_tail" | "partial-tail" | "partial" => {
+                Some(PreemptionPolicyKind::PartialTail)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PreemptionPolicyKind::SwapAll => "swap_all",
+            PreemptionPolicyKind::CostAware => "cost_aware",
+            PreemptionPolicyKind::PartialTail => "partial_tail",
+        }
+    }
+}
+
+/// `[preemption]` section: the pluggable context-switch eviction policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PreemptionConfig {
+    pub policy: PreemptionPolicyKind,
+}
+
+impl Default for PreemptionConfig {
+    fn default() -> Self {
+        PreemptionConfig {
+            policy: PreemptionPolicyKind::SwapAll,
+        }
+    }
+}
+
 /// Dispatch-cost constants (per `cudaMemcpyAsync`-equivalent call).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SwapCostConfig {
@@ -338,6 +391,8 @@ pub struct EngineConfig {
     pub fairness: FairnessConfig,
     /// Lookahead swap-in prefetcher (off by default).
     pub prefetch: PrefetchConfig,
+    /// Pluggable eviction policy (`swap_all` default — seed behavior).
+    pub preemption: PreemptionConfig,
     pub label: String,
 }
 
@@ -354,6 +409,7 @@ impl EngineConfig {
             swap_cost: SwapCostConfig::default(),
             fairness: FairnessConfig::default(),
             prefetch: PrefetchConfig::default(),
+            preemption: PreemptionConfig::default(),
             label: "vllm".into(),
         }
     }
@@ -568,6 +624,38 @@ mod tests {
             assert_eq!(cfg.prefetch.depth, 0, "{} prefetches by default", cfg.label);
             assert!(cfg.prefetch.io_budget > 0.0 && cfg.prefetch.io_budget <= 1.0);
         }
+    }
+
+    #[test]
+    fn preemption_defaults_to_swap_all_everywhere() {
+        // The refactor is behavior-pinned: every ladder rung must keep
+        // the whole-victim swap eviction unless explicitly overridden.
+        for cfg in EngineConfig::ablation_ladder() {
+            assert_eq!(
+                cfg.preemption.policy,
+                PreemptionPolicyKind::SwapAll,
+                "{} must default to swap_all",
+                cfg.label
+            );
+        }
+    }
+
+    #[test]
+    fn preemption_policy_names() {
+        assert_eq!(
+            PreemptionPolicyKind::by_name("swap_all"),
+            Some(PreemptionPolicyKind::SwapAll)
+        );
+        assert_eq!(
+            PreemptionPolicyKind::by_name("cost_aware"),
+            Some(PreemptionPolicyKind::CostAware)
+        );
+        assert_eq!(
+            PreemptionPolicyKind::by_name("partial_tail"),
+            Some(PreemptionPolicyKind::PartialTail)
+        );
+        assert_eq!(PreemptionPolicyKind::by_name("nope"), None);
+        assert_eq!(PreemptionPolicyKind::PartialTail.label(), "partial_tail");
     }
 
     #[test]

@@ -1,0 +1,211 @@
+//! Admission and turn handling: arrivals, think-time turn transitions,
+//! the max-model-len rejection rule, priority refresh, and the
+//! scheduler's candidate view of every schedulable request.
+
+use super::ServingEngine;
+use crate::block::KvAllocator;
+use crate::config::PrefillMode;
+use crate::coordinator::request::{KvLocation, ReqState, Request};
+use crate::coordinator::scheduler::Candidate;
+use crate::fairness::TenantId;
+use crate::memory::RequestId;
+use crate::swap::manager::PrefetchCancel;
+
+impl ServingEngine {
+    /// Admission rule: a turn whose full context (plus the first-token
+    /// slot) cannot fit the whole GPU KV space can never be served —
+    /// reject the conversation (vLLM's max-model-len check).
+    pub(super) fn reject_if_oversized(&mut self, id: RequestId) -> bool {
+        let r = self.reqs.get(id);
+        let worst = r.turn_total_tokens() + 1;
+        if Request::blocks_for(worst, self.block_size) <= self.gpu_blocks {
+            return false;
+        }
+        // A rejected conversation may hold speculatively prefetched GPU
+        // blocks: free them now (or let an in-flight transfer drain —
+        // `reap_prefetch_drains` frees the blocks then).
+        match self.mgr.cancel_prefetch(id, self.now) {
+            Some(PrefetchCancel::Draining { .. }) => {}
+            _ => {
+                self.alloc.as_dyn().release(id);
+            }
+        }
+        self.cpu.drop_request(id);
+        self.reuse.forget(id);
+        let r = self.reqs.get_mut(id);
+        r.state = ReqState::Finished;
+        r.kv = KvLocation::None;
+        self.rec.rejected_conversations += 1;
+        true
+    }
+
+    pub(super) fn admit_arrivals(&mut self) {
+        while self.future.last().is_some_and(|(t, _)| *t <= self.now) {
+            let (t, conv) = self.future.pop().unwrap();
+            let id = conv.id;
+            let tenant = conv.tenant;
+            let r = Request::new(id, conv, t);
+            self.rec.turn_arrival(id, 0, t, tenant);
+            self.reqs.insert(r);
+            self.reject_if_oversized(id);
+        }
+        // Turns whose think time elapsed AND whose turn-end swap-out has
+        // drained (requests still in SwappingOutTurnEnd stay pending and
+        // fire right after harvest transitions them).
+        let mut due = Vec::new();
+        let reqs = &self.reqs;
+        self.pending_turns.retain(|&(id, t)| {
+            if t <= self.now && reqs.get(id).state == ReqState::WaitingTurn {
+                due.push((id, t));
+                false
+            } else {
+                true
+            }
+        });
+        for (id, t) in due {
+            let r = self.reqs.get_mut(id);
+            r.advance_turn(t.max(r.turn_arrival));
+            let turn = r.turn as u32;
+            let arr = r.turn_arrival;
+            let tenant = r.tenant();
+            self.rec.turn_arrival(id, turn, arr, tenant);
+            // A later turn may have grown past the servable context.
+            self.reject_if_oversized(id);
+        }
+    }
+
+    pub(super) fn update_priorities(&mut self) {
+        let epoch = self.iter / self.epoch_iters;
+        if epoch == self.last_epoch {
+            return;
+        }
+        self.last_epoch = epoch;
+        // Live (unfinished) requests and the distinct tenants backing
+        // them; finished requests hold no GPU/CPU state, so their stale
+        // priorities are irrelevant.
+        let live: Vec<(RequestId, TenantId)> = self
+            .reqs
+            .iter()
+            .filter(|r| r.state != ReqState::Finished)
+            .map(|r| (r.id, r.tenant()))
+            .collect();
+        let mut active: Vec<TenantId> = live.iter().map(|&(_, t)| t).collect();
+        active.sort_unstable();
+        active.dedup();
+        self.policy.on_schedule(epoch, &active);
+        for (id, tenant) in live {
+            let p = self.policy.priority_of(id, tenant, epoch);
+            self.reqs.get_mut(id).priority = p;
+            self.cpu.set_priority(id, p);
+        }
+    }
+
+    /// Blocks to grow `r` by a prefill grant of `take` tokens. The grant
+    /// that completes the prompt also emits the turn's first output
+    /// token, whose KV occupies a slot too; with `take == rem == 0`
+    /// (a decode-ready request) that degenerates to the next decode
+    /// slot — exactly what re-admission must reserve.
+    pub(super) fn prefill_blocks(&self, r: &Request, take: u32) -> usize {
+        let rem = r.prefill_remaining();
+        let extra = u64::from(take == rem);
+        let after = r.tokens_in_cache + take as u64 + extra;
+        Request::blocks_for(after, self.block_size)
+            .saturating_sub(Request::blocks_for(r.tokens_in_cache, self.block_size))
+    }
+
+    /// The largest prefill grant admission must budget blocks for: one
+    /// chunk (chunked mode) or the whole remaining prompt (monolithic
+    /// all-or-nothing admission).
+    pub(super) fn admit_take(&self, r: &Request) -> u32 {
+        let rem = r.prefill_remaining();
+        match self.cfg.scheduler.prefill_mode {
+            PrefillMode::Monolithic => rem,
+            PrefillMode::Chunked => (self.cfg.scheduler.prefill_chunk as u32).min(rem),
+        }
+    }
+
+    pub(super) fn chunk_blocks(&self, r: &Request) -> usize {
+        self.prefill_blocks(r, self.admit_take(r))
+    }
+
+    pub(super) fn candidates(&self) -> Vec<Candidate> {
+        self.reqs
+            .iter()
+            .filter(|r| {
+                matches!(
+                    r.state,
+                    ReqState::Running
+                        | ReqState::Prefilling
+                        | ReqState::SwappingIn
+                        | ReqState::Queued
+                        | ReqState::SwappedOut
+                        | ReqState::PartiallyResident
+                )
+            })
+            .map(|r| {
+                let held = self.alloc.as_dyn_ref().table(r.id).len();
+                // Off-GPU candidates normally hold no blocks (a draining
+                // async swap-out's source blocks are counted conservatively
+                // on top of the full re-admission ask — see `schedule`'s
+                // transient-inflation note). A *prefetched* candidate is
+                // the exception: its context blocks are already resident,
+                // so only the remainder of the ask is fresh demand.
+                let full_swap_in = |r: &Request| {
+                    let full = Request::blocks_for(r.tokens_in_cache, self.block_size)
+                        + self.chunk_blocks(r);
+                    if self.mgr.prefetch_pending(r.id) {
+                        full.saturating_sub(held)
+                    } else {
+                        full
+                    }
+                };
+                let needed = match r.state {
+                    ReqState::Running => {
+                        Request::blocks_for(r.tokens_in_cache + 1, self.block_size)
+                            .saturating_sub(held)
+                    }
+                    ReqState::Prefilling => self.chunk_blocks(r),
+                    ReqState::SwappingIn => 0,
+                    ReqState::SwappedOut => full_swap_in(r),
+                    // Partial-tail eviction: the head is still resident,
+                    // so re-admission needs only the missing tail plus
+                    // this iteration's growth. (While the tail swap-out
+                    // drains, `held` still counts the draining source
+                    // blocks — the same conservative transient as a
+                    // draining full swap-out.)
+                    ReqState::PartiallyResident => {
+                        (Request::blocks_for(r.tokens_in_cache, self.block_size)
+                            + self.chunk_blocks(r))
+                        .saturating_sub(held)
+                    }
+                    ReqState::Queued => {
+                        if r.kv == KvLocation::Cpu {
+                            full_swap_in(r)
+                        } else {
+                            self.chunk_blocks(r)
+                        }
+                    }
+                    _ => 0,
+                };
+                Candidate {
+                    id: r.id,
+                    priority: r.priority,
+                    turn_arrival: r.turn_arrival,
+                    // Queued-with-CPU-KV and partially-resident requests
+                    // behave like SwappedOut for the scheduler (need
+                    // promotion, not a fresh start).
+                    state: if (r.state == ReqState::Queued && r.kv == KvLocation::Cpu)
+                        || r.state == ReqState::PartiallyResident
+                    {
+                        ReqState::SwappedOut
+                    } else {
+                        r.state
+                    },
+                    blocks_held: held,
+                    blocks_needed: needed,
+                    prefill_remaining: r.prefill_remaining(),
+                }
+            })
+            .collect()
+    }
+}

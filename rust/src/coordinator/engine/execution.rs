@@ -1,0 +1,444 @@
+//! The execution stage: one scheduler iteration — admission, grant
+//! resolution, growth allocation under pressure, the mixed
+//! decode+chunked-prefill roofline advance, and idle fast-forward —
+//! plus run-to-completion and outcome finalization.
+
+use std::time::Instant;
+
+use super::{ServeOutcome, ServingEngine};
+use crate::block::KvAllocator;
+use crate::config::PreemptionPolicyKind;
+use crate::coordinator::request::{ReqState, Request};
+use crate::coordinator::scheduler::schedule;
+use crate::coordinator::switch::{ContextSwitchPlanner, VictimRank};
+use crate::memory::{BlockId, RequestId};
+use crate::metrics::IterationSample;
+use crate::sim::clock::{to_secs, Ns};
+
+impl ServingEngine {
+    /// Advance one scheduler iteration. Returns false when all work is
+    /// done.
+    pub fn step(&mut self) -> bool {
+        // In-flight ops gate the exit too: an evicted conversation's
+        // draining swap-out (cluster migration) still holds GPU blocks
+        // after its record is gone; a step must reap it. Single-engine
+        // serving never hits this — live ops imply a live request.
+        if self.reqs.all_finished()
+            && self.future.is_empty()
+            && self.mgr.next_event().is_none()
+        {
+            return false;
+        }
+        let wall0 = Instant::now();
+        self.admit_arrivals();
+        self.harvest_async();
+        self.update_priorities();
+
+        let cands = self.candidates();
+        let sched = schedule(
+            &cands,
+            self.gpu_blocks,
+            self.cfg.scheduler.max_batch,
+            self.budget(),
+        );
+
+        let mut stall: Ns = 0;
+
+        // Preemptions first (frees blocks for promotions). The planner
+        // decides per victim: swap-all / cost-aware recompute for
+        // whole-victim evictions, or — under `partial_tail` — a
+        // deficit-driven sweep that evicts only the minimal tails the
+        // admitted set actually needs.
+        if self.planner.kind() == PreemptionPolicyKind::PartialTail {
+            stall += self.partial_preemption_sweep(&cands, &sched);
+        } else {
+            for &id in &sched.preempt {
+                stall += self.evict_unadmitted(id);
+            }
+        }
+
+        // Estimate the iteration for the adaptive strategy.
+        let running_ids: Vec<RequestId> = sched
+            .keep
+            .iter()
+            .copied()
+            .filter(|&id| self.reqs.get(id).state == ReqState::Running)
+            .collect();
+        let ctx_total: u64 = running_ids
+            .iter()
+            .map(|&id| self.reqs.get(id).tokens_in_cache)
+            .sum();
+        let batch_now = running_ids.len();
+        let avg_ctx = if batch_now > 0 {
+            ctx_total as f64 / batch_now as f64
+        } else {
+            0.0
+        };
+        let iter_hint = self.perf.decode_iter_ns(batch_now.max(1), ctx_total);
+
+        let mut new_blocks: Vec<BlockId> = Vec::new();
+
+        // Promotions (swap-ins).
+        for &id in &sched.promote {
+            if let Some((s, blocks)) = self.promote(id, iter_hint, batch_now, avg_ctx) {
+                stall = stall.max(s);
+                new_blocks.extend(blocks);
+            }
+        }
+
+        // Fresh starts (first prefill or recompute).
+        for &id in &sched.start {
+            self.reqs.get_mut(id).state = ReqState::Prefilling;
+        }
+
+        // Resolve the token grants against post-admission reality: a
+        // grant is void if its request is mid swap-in (async promote) or
+        // failed to promote; allocator pressure below can still preempt
+        // a granted request, so the sets are re-filtered afterwards.
+        let mut decode_set: Vec<RequestId> = Vec::new();
+        let mut prefill_take: Vec<(RequestId, u32)> = Vec::new();
+        for g in &sched.grants {
+            let r = self.reqs.get(g.id);
+            match r.state {
+                ReqState::Running if g.decode > 0 => decode_set.push(g.id),
+                ReqState::Prefilling if g.prefill > 0 => {
+                    let take = g.prefill.min(r.prefill_remaining());
+                    if take > 0 {
+                        prefill_take.push((g.id, take));
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // Growth allocation for this iteration's grants (a decode slot
+        // or a chunk's blocks each); preempt lowest-priority victims on
+        // failure.
+        let mut grow: Vec<(RequestId, usize)> = decode_set
+            .iter()
+            .map(|&id| {
+                let r = self.reqs.get(id);
+                let need = Request::blocks_for(r.tokens_in_cache + 1, self.block_size)
+                    .saturating_sub(self.alloc.as_dyn_ref().table(id).len());
+                (id, need)
+            })
+            .chain(prefill_take.iter().map(|&(id, take)| {
+                let r = self.reqs.get(id);
+                (id, self.prefill_blocks(r, take))
+            }))
+            .collect();
+        grow.sort_by_key(|&(id, _)| std::cmp::Reverse(self.reqs.get(id).priority));
+        for (id, need) in grow {
+            // A victim preempted earlier in this very loop grows no more.
+            let resident = matches!(
+                self.reqs.get(id).state,
+                ReqState::Running | ReqState::Prefilling
+            );
+            if need == 0 || !resident {
+                continue;
+            }
+            loop {
+                if let Some(b) = self.alloc.as_dyn().allocate(id, need) {
+                    new_blocks.extend(b);
+                    break;
+                }
+                // Pressure order: (0) reclaim a speculative prefetch —
+                // demand growth outranks speculation; (1) KV-cache
+                // conflict resolution — wait for an in-flight swap-out
+                // to release its source blocks (Algorithm 1, step 3.1);
+                // (2) evict the lowest-priority admitted victim (the
+                // planner chooses whole swap, recompute, or a partial
+                // tail of exactly `need` blocks); (3) preempt `id`
+                // itself.
+                if let Some(t) = self.cancel_one_prefetch_for_pressure(id) {
+                    stall = stall.max(t.saturating_sub(self.now));
+                    continue;
+                }
+                if let Some(t) = self.drain_one_swap_out(self.now) {
+                    stall = stall.max(t.saturating_sub(self.now));
+                    continue;
+                }
+                let ranks: Vec<VictimRank> = self
+                    .reqs
+                    .iter()
+                    .filter(|r| {
+                        r.id != id
+                            && matches!(r.state, ReqState::Running | ReqState::Prefilling)
+                    })
+                    .map(|r| VictimRank {
+                        id: r.id,
+                        priority: r.priority,
+                        turn_arrival: r.turn_arrival,
+                    })
+                    .collect();
+                match ContextSwitchPlanner::select_victim(&ranks) {
+                    Some(v) => stall += self.evict_for_pressure(v, need),
+                    None => {
+                        // Partially-resident heads (created only by the
+                        // partial_tail policy) are reclaimed before the
+                        // grower sacrifices itself.
+                        let partial: Vec<VictimRank> = self
+                            .reqs
+                            .iter()
+                            .filter(|r| {
+                                r.id != id && r.state == ReqState::PartiallyResident
+                            })
+                            .map(|r| VictimRank {
+                                id: r.id,
+                                priority: r.priority,
+                                turn_arrival: r.turn_arrival,
+                            })
+                            .collect();
+                        if let Some(v) = ContextSwitchPlanner::select_victim(&partial) {
+                            stall += self.preempt(v, false);
+                        } else {
+                            stall += self.preempt(id, false);
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        let _ = &new_blocks; // retained for tests/metrics hooks
+
+        // Drop grants whose request lost residency to pressure
+        // preemption (their partial prefill progress is preserved for
+        // re-admission).
+        decode_set.retain(|&id| self.reqs.get(id).state == ReqState::Running);
+        prefill_take.retain(|&(id, _)| self.reqs.get(id).state == ReqState::Prefilling);
+
+        // ---- execute: one mixed decode + chunked-prefill iteration ----
+        let sched_ns = if self.charge_sched_overhead {
+            wall0.elapsed().as_nanos() as Ns
+        } else {
+            0
+        };
+
+        let decode_batch = decode_set.len();
+        let decode_ctx: u64 = decode_set
+            .iter()
+            .map(|&id| self.reqs.get(id).tokens_in_cache)
+            .sum();
+        // Decode-ready requests the budget (or a monolithic prefill)
+        // held back this iteration — the decode-interference population.
+        let blocked_decodes = self
+            .reqs
+            .iter()
+            .filter(|r| r.state == ReqState::Running)
+            .count()
+            .saturating_sub(decode_batch);
+
+        // Requests that emit a token at the end of this iteration.
+        let mut emitters: Vec<RequestId> = decode_set.clone();
+        let mut prefill_new = 0u64;
+        let mut prefill_ctx = 0u64;
+        for &(id, take) in &prefill_take {
+            let r = self.reqs.get_mut(id);
+            let tenant = r.tenant();
+            prefill_ctx += r.tokens_in_cache;
+            prefill_new += take as u64;
+            if r.apply_prefill(take) {
+                // The completing chunk emits the turn's next output token
+                // (first token on a fresh turn; generation simply
+                // continues after a recompute-preemption).
+                emitters.push(id);
+            }
+            // Charge the prefill service to the tenant's virtual-token
+            // account chunk-by-chunk: a long prompt accrues virtual
+            // tokens as it progresses and cannot dodge the fairness
+            // accounting by prefilling atomically. (The emitted token is
+            // charged with the emitters below.)
+            self.policy.on_tokens(tenant, take as u64, 0);
+        }
+        for &id in &decode_set {
+            let r = self.reqs.get_mut(id);
+            r.generated += 1;
+            r.tokens_in_cache += 1;
+        }
+        let dur = self
+            .perf
+            .mixed_iter_ns(decode_batch, decode_ctx, prefill_new, prefill_ctx);
+        // Decode-interference stall: the extra latency decodes suffer
+        // from co-running chunks, or the full iteration when prefill
+        // work ran while decode-ready requests sat idle.
+        let decode_block_ns: Ns = if prefill_new == 0 {
+            0
+        } else if decode_batch > 0 {
+            dur.saturating_sub(self.perf.decode_iter_ns(decode_batch, decode_ctx))
+        } else if blocked_decodes > 0 {
+            dur
+        } else {
+            0
+        };
+        let pure_prefill = prefill_new > 0 && decode_batch == 0;
+
+        let tokens_made = emitters.len() as u32;
+        let iter_end = self.now + stall + sched_ns + dur;
+        self.now = iter_end;
+
+        let mut turn_ends: Vec<RequestId> = Vec::new();
+        for id in emitters {
+            let (turn, tenant, arrival, first, gap) = {
+                let r = self.reqs.get_mut(id);
+                // `generated` was already incremented for this emission,
+                // so 1 marks the turn's first token.
+                let first = r.generated == 1;
+                let gap = r.last_emit.map(|t| iter_end.saturating_sub(t));
+                r.last_emit = Some(iter_end);
+                (r.turn as u32, r.tenant(), r.turn_arrival, first, gap)
+            };
+            // One decode token of service; TTFT/TBT feedback for the
+            // SLO-aware policy.
+            self.policy.on_tokens(tenant, 0, 1);
+            if first {
+                self.policy
+                    .on_ttft(tenant, to_secs(iter_end.saturating_sub(arrival)));
+            } else if let Some(g) = gap {
+                self.policy.on_tbt(tenant, to_secs(g));
+            }
+            self.rec.token(id, turn, iter_end);
+            if self.reqs.get(id).turn_done() {
+                turn_ends.push(id);
+            }
+        }
+        // Turn-end swap-outs: synchronous engines stall here too (vLLM
+        // blocks until the copy completes), after the tokens were emitted.
+        let mut post_stall: Ns = 0;
+        for id in turn_ends {
+            post_stall += self.end_turn(id);
+        }
+        self.now += post_stall;
+        let stall = stall + post_stall;
+
+        // Track the working-iteration cadence (idle ticks excluded) —
+        // the prefetcher's epoch-to-wall-clock conversion — then give
+        // speculation its turn on whatever the iteration left idle.
+        if dur > 0 {
+            self.iter_span_ema =
+                0.9 * self.iter_span_ema + 0.1 * (dur + stall + sched_ns) as f64;
+        }
+        self.prefetch_pass();
+
+        let waiting_on_swap = self
+            .reqs
+            .iter()
+            .filter(|r| r.state == ReqState::SwappingIn)
+            .count() as u32;
+
+        self.rec.iteration(IterationSample {
+            at: self.now,
+            inference_ns: dur,
+            swap_stall_ns: stall,
+            sched_overhead_ns: sched_ns,
+            tokens: tokens_made,
+            is_prefill: pure_prefill,
+            prefill_tokens: prefill_new as u32,
+            decode_block_ns,
+            // Mixed/decode iterations: the actual decode set; pure
+            // prefill: the scheduled running batch.
+            batch: if pure_prefill {
+                batch_now as u32
+            } else {
+                decode_batch as u32
+            },
+            waiting_on_swap,
+            prefetch_inflight: self.mgr.prefetch_count() as u32,
+        });
+        self.iter += 1;
+
+        // Idle fast-forward: nothing admitted and nothing running — jump
+        // to the next event instead of spinning.
+        if dur == 0 && stall == 0 {
+            let next_arrival = self.future.last().map(|(t, _)| *t);
+            // A pending turn only fires once its swap-out drains, so the
+            // effective wake time is max(think-time due, event).
+            let next_turn = self
+                .pending_turns
+                .iter()
+                .map(|&(id, t)| {
+                    let drain = self
+                        .mgr
+                        .swap_out_inflight(id)
+                        .unwrap_or(self.now);
+                    t.max(drain)
+                })
+                .min();
+            let next_swap = self.mgr.next_event();
+            // Prefetch lead time: an otherwise idle engine must wake
+            // `horizon` *before* a pending turn is due (not at it), or
+            // the speculative swap-in would never get to run during the
+            // think time. Turns already prefetched or already inside the
+            // horizon are excluded — no 1-ns spin.
+            let depth = self.cfg.prefetch.depth;
+            let prefetch_wake = if depth > 0 {
+                let horizon = self.horizon_ns(depth);
+                self.pending_turns
+                    .iter()
+                    .filter(|&&(id, _)| !self.mgr.prefetch_pending(id))
+                    .map(|&(_, t)| t.saturating_sub(horizon))
+                    .filter(|&w| w > self.now)
+                    .min()
+            } else {
+                None
+            };
+            // A budget-starved prefetch wakes the engine at the refill
+            // instant instead of sleeping until the turn is due.
+            let budget_wake = self.prefetch_retry_at.filter(|&t| t > self.now);
+            // More speculative work queued behind the prefetch that owns
+            // the link right now (RejectedBusy): wake when it completes,
+            // or turn 2's lead time is silently lost.
+            let link_wake = if depth > 0 && !self.prefetch_queue.is_empty() {
+                self.mgr.next_prefetch_completion(self.now)
+            } else {
+                None
+            };
+            let nxt = [
+                next_arrival,
+                next_turn,
+                next_swap,
+                prefetch_wake,
+                budget_wake,
+                link_wake,
+            ]
+            .into_iter()
+            .flatten()
+            .min();
+            if let Some(t) = nxt {
+                self.now = self.now.max(t);
+            } else if self.reqs.all_finished() && self.future.is_empty() {
+                return false;
+            } else {
+                self.now += 1_000_000; // 1 ms safety tick
+            }
+        }
+        true
+    }
+
+    /// Run to completion (or `max_iters`). Returns the outcome summary.
+    pub fn run(mut self, max_iters: u64) -> ServeOutcome {
+        while self.iter < max_iters {
+            if !self.step() {
+                break;
+            }
+        }
+        self.into_outcome()
+    }
+
+    /// Finalize a router-driven engine: invariant checks + outcome
+    /// summary (the tail of [`ServingEngine::run`]).
+    pub fn into_outcome(self) -> ServeOutcome {
+        let alloc = self.alloc.as_dyn_ref();
+        alloc.space().check_invariants();
+        self.cpu.check_invariants();
+        ServeOutcome {
+            span: self.now,
+            iterations: self.iter,
+            swap_stats: self.mgr.stats.clone(),
+            reuse_blocks_transferred: self.reuse.blocks_transferred_out,
+            reuse_blocks_reused: self.reuse.blocks_reused,
+            contaminated: self.cpu.total_contaminated,
+            label: self.cfg.label.clone(),
+            recorder: self.rec,
+        }
+    }
+}

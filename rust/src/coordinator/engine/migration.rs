@@ -1,0 +1,159 @@
+//! Cluster front-end hooks (see [`crate::cluster`]): router-driven
+//! arrival dispatch, held-turn placement, migration eviction, and the
+//! load signals placement policies consume.
+
+use super::{MigratedConv, ServingEngine};
+use crate::block::KvAllocator;
+use crate::coordinator::request::ReqState;
+use crate::memory::RequestId;
+use crate::sim::clock::Ns;
+use crate::swap::manager::PrefetchCancel;
+use crate::workload::{Conversation, Turn};
+
+impl ServingEngine {
+    /// Enqueue a conversation arriving at virtual time `at` (the cluster
+    /// router's dispatch path; `future` stays sorted descending so
+    /// `pop()` still yields the earliest arrival).
+    pub fn push_arrival(&mut self, conv: Conversation, at: Ns) {
+        let idx = self.future.partition_point(|&(t, _)| t > at);
+        self.future.insert(idx, (at, conv));
+    }
+
+    /// Drain the next-turn events held back by `hold_turns`: (request,
+    /// due time after think time). The router must answer each with
+    /// [`ServingEngine::fire_turn`] or
+    /// [`ServingEngine::evict_for_migration`].
+    pub fn take_released_turns(&mut self) -> Vec<(RequestId, Ns)> {
+        std::mem::take(&mut self.released_turns)
+    }
+
+    /// Router kept the conversation on this replica: schedule its held
+    /// next turn at `due` through the normal pending-turn path (the
+    /// turn's KV context is still on this replica's CPU).
+    pub fn fire_turn(&mut self, id: RequestId, due: Ns) {
+        debug_assert!(self.reqs.contains(id));
+        self.pending_turns.push((id, due));
+    }
+
+    /// Router moved the conversation to another replica: drop every local
+    /// trace of it (GPU blocks, CPU copies, reuse state) and hand back
+    /// the unserved remainder. Only valid for a conversation whose held
+    /// turn has not been fired — i.e. it is waiting out think time with
+    /// more turns to go. Returns `None` if the conversation meanwhile
+    /// terminated here (e.g. oversize rejection).
+    pub fn evict_for_migration(&mut self, id: RequestId) -> Option<MigratedConv> {
+        if !self.reqs.contains(id) {
+            return None;
+        }
+        let r = self.reqs.get(id);
+        // A turn-end swap-out may still be on the wire
+        // (SwappingOutTurnEnd): its content was fixed at submit, so the
+        // remainder can migrate now, but the op itself keeps draining —
+        // the source blocks stay allocated and visible to the conflict /
+        // pressure paths until its completion event, exactly like any
+        // other in-flight swap-out (`release_reaped` tolerates the
+        // record being gone by then).
+        if !matches!(
+            r.state,
+            ReqState::WaitingTurn | ReqState::SwappingOutTurnEnd
+        ) || r.is_last_turn()
+        {
+            return None;
+        }
+        let history_tokens = r.turn_total_tokens();
+        let remaining: Vec<Turn> = r.conv.turns[r.turn + 1..].to_vec();
+        let tenant = r.tenant();
+        let cpu_copy_blocks = self.cpu.valid_logical(id).len();
+        let draining = self.mgr.swap_out_inflight(id).is_some();
+        // A speculative prefetch may hold GPU blocks for this
+        // conversation: cancel it. A landed one frees with the release
+        // below; an in-flight one keeps draining and frees at reap
+        // (same tolerance as the draining swap-out).
+        let prefetch_draining = matches!(
+            self.mgr.cancel_prefetch(id, self.now),
+            Some(PrefetchCancel::Draining { .. })
+        );
+        if !draining && !prefetch_draining {
+            self.alloc.as_dyn().release(id);
+        }
+        self.cpu.drop_request(id);
+        self.reuse.forget(id);
+        // Remove the record entirely: the conversation may return to this
+        // replica later and re-insert under the same id; a stale Finished
+        // entry would leak and be rescanned every iteration.
+        let _ = self.reqs.remove(id);
+        Some(MigratedConv {
+            conv_id: id,
+            tenant,
+            remaining,
+            history_tokens,
+            cpu_copy_blocks,
+        })
+    }
+
+    /// Does this replica still have internally schedulable work? A
+    /// request parked in `WaitingTurn` whose next turn the router holds
+    /// does NOT count — only the router can make it progress. In-flight
+    /// swap operations DO count: an evicted conversation's draining
+    /// swap-out still holds GPU source blocks that only a step can reap.
+    pub fn has_pending_work(&self) -> bool {
+        if !self.future.is_empty() || !self.pending_turns.is_empty() {
+            return true;
+        }
+        if self.mgr.ongoing_in_count() > 0 || self.mgr.ongoing_out_count() > 0 {
+            return true;
+        }
+        // A canceled prefetch still draining holds GPU blocks only a
+        // step can reap. (Live unclaimed prefetches belong to requests
+        // already counted below.)
+        if self.mgr.prefetch_draining_count() > 0 {
+            return true;
+        }
+        self.reqs
+            .iter()
+            .any(|r| !matches!(r.state, ReqState::Finished | ReqState::WaitingTurn))
+    }
+
+    /// GPU KV blocks currently allocated (placement load signal).
+    pub fn gpu_blocks_in_use(&self) -> usize {
+        self.alloc.as_dyn_ref().space().used_blocks()
+    }
+
+    /// Admission backlog: dispatched-but-unserved arrivals, scheduled
+    /// pending turns, and requests waiting for GPU residency (placement
+    /// load signal).
+    pub fn backlog(&self) -> usize {
+        self.future.len()
+            + self.pending_turns.len()
+            + self
+                .reqs
+                .iter()
+                .filter(|r| {
+                    matches!(
+                        r.state,
+                        ReqState::Queued
+                            | ReqState::SwappedOut
+                            | ReqState::PartiallyResident
+                    )
+                })
+                .count()
+    }
+
+    /// Max decode batch (normalizes the backlog in load scores).
+    pub fn max_batch(&self) -> usize {
+        self.cfg.scheduler.max_batch
+    }
+
+    /// Testing/experiment access.
+    pub fn request_state(&self, id: RequestId) -> Option<ReqState> {
+        if self.reqs.contains(id) {
+            Some(self.reqs.get(id).state)
+        } else {
+            None
+        }
+    }
+
+    pub fn gpu_capacity_blocks(&self) -> usize {
+        self.gpu_blocks
+    }
+}

@@ -1,0 +1,600 @@
+//! The preemption / promotion stage: evictions (whole-victim swap,
+//! cost-aware recompute, partial tail), swap-ins, async-completion
+//! harvesting, and turn-end context preservation.
+//!
+//! Per-victim eviction decisions are delegated to the
+//! [`crate::coordinator::switch::ContextSwitchPlanner`]; this module
+//! only *executes* the chosen [`EvictionAction`]. The one exception is
+//! the `partial_tail` membership sweep — an inherently multi-victim
+//! decision (how much to shave off whom, given the admitted set's
+//! deficit) that is selected by planner kind rather than the per-victim
+//! trait. With the default `swap_all` policy the execution paths are
+//! exactly the pre-refactor behavior, bit-for-bit.
+
+use super::ServingEngine;
+use crate::block::KvAllocator;
+use crate::config::SwapMode;
+use crate::coordinator::request::{KvLocation, ReqState, Request};
+use crate::coordinator::scheduler::{Candidate, Schedule};
+use crate::coordinator::switch::{
+    ContextSwitchPlanner, EvictionAction, VictimCtx, VictimRank,
+};
+use crate::memory::{BlockId, RequestId};
+use crate::sim::clock::Ns;
+use crate::sim::link::Direction;
+use crate::swap::engine::BlockMove;
+use crate::swap::manager::{PrefetchClaim, SwapInDecision};
+use crate::swap::op::SwapOp;
+
+impl ServingEngine {
+    /// After a swap-in finished reading the CPU copy: keep it as a
+    /// backup (reuse on) or free it (vLLM semantics).
+    pub(super) fn release_cpu_copy_after_swap_in(&mut self, id: RequestId) {
+        if self.reuse.enabled() {
+            self.cpu.set_required(id, false);
+        } else {
+            self.cpu.drop_request(id);
+            self.reuse.forget(id);
+        }
+    }
+
+    pub(super) fn harvest_async(&mut self) {
+        for id in self.mgr.poll_completed(self.now) {
+            let r = self.reqs.get_mut(id);
+            debug_assert_eq!(r.state, ReqState::SwappingIn);
+            r.state = if r.prefill_remaining() > 0 {
+                ReqState::Prefilling
+            } else {
+                ReqState::Running
+            };
+            r.kv = KvLocation::Gpu;
+            self.release_cpu_copy_after_swap_in(id);
+        }
+        let reaped = self.mgr.reap_swap_outs(self.now);
+        self.release_reaped(reaped);
+        let drained = self.mgr.reap_prefetch_drains(self.now);
+        self.release_reaped(drained);
+    }
+
+    /// A swap-out drained: free its GPU source blocks and finish the
+    /// turn-end transition. (Reuse state was committed at submit; readers
+    /// are barriered on the event.) A partial-tail eviction frees only
+    /// the evicted suffix — the resident head stays allocated.
+    pub(super) fn release_reaped(&mut self, ids: Vec<RequestId>) {
+        for id in ids {
+            match self.partial_pending.remove(&id) {
+                Some(n) => {
+                    self.alloc.as_dyn().release_tail(id, n);
+                }
+                None => {
+                    self.alloc.as_dyn().release(id);
+                }
+            }
+            if !self.reqs.contains(id) {
+                // Evicted mid-drain (cluster migration): the record is
+                // gone; only the source blocks needed freeing.
+                continue;
+            }
+            let r = self.reqs.get_mut(id);
+            if r.state == ReqState::SwappingOutTurnEnd {
+                r.state = ReqState::WaitingTurn;
+            }
+        }
+    }
+
+    /// Memory-pressure conflict resolution (§3.2): wait for the earliest
+    /// in-flight swap-out, release its blocks, and charge the wait.
+    /// Returns the synchronization point, or None if nothing is in
+    /// flight.
+    pub(super) fn drain_one_swap_out(&mut self, at_least: Ns) -> Option<Ns> {
+        let t = self.mgr.next_out_event()?.max(at_least);
+        let wait = t.saturating_sub(at_least);
+        self.mgr.record_conflict(wait);
+        let reaped = self.mgr.reap_swap_outs(t);
+        self.release_reaped(reaped);
+        Some(t)
+    }
+
+    /// Recompute-preemption: drop the KV entirely and re-prefill it at
+    /// re-admission — vLLM's fallback when the CPU swap space is
+    /// exhausted, and the `cost_aware` policy's choice when the model
+    /// says compute is cheaper than the PCIe round trip.
+    pub(super) fn recompute_preempt(&mut self, id: RequestId, turn_end: bool) -> Ns {
+        self.alloc.as_dyn().release(id);
+        self.cpu.drop_request(id);
+        self.reuse.forget(id);
+        let r = self.reqs.get_mut(id);
+        r.drop_context();
+        r.state = if turn_end {
+            // Lost context at turn end: the next turn will recompute.
+            ReqState::WaitingTurn
+        } else {
+            ReqState::Queued
+        };
+        self.rec.recompute_preemptions += 1;
+        0
+    }
+
+    /// Whole-victim eviction decided by the planner (the scheduler
+    /// removed the victim from the admitted set entirely): swap-all or
+    /// cost-aware recompute. Partial tails never apply here — the
+    /// scheduler's capacity math assumes the victim's blocks free up.
+    pub(super) fn evict_unadmitted(&mut self, id: RequestId) -> Ns {
+        let held = self.alloc.as_dyn_ref().table(id).len();
+        let tokens = self.reqs.get(id).tokens_in_cache;
+        if held == 0 || tokens == 0 {
+            // Nothing to move and nothing to recompute: the "eviction"
+            // is a pure state transition, not a swap-vs-recompute
+            // decision point — take the baseline path uncounted.
+            return self.preempt(id, false);
+        }
+        let ctx = VictimCtx {
+            id,
+            tokens_in_cache: tokens,
+            blocks_held: held,
+            blocks_wanted: held,
+            full: true,
+        };
+        match self.planner.decide_eviction(&ctx) {
+            EvictionAction::Recompute => {
+                self.rec.evict_recompute_decisions += 1;
+                self.recompute_preempt(id, false)
+            }
+            _ => {
+                self.rec.evict_swap_decisions += 1;
+                self.preempt(id, false)
+            }
+        }
+    }
+
+    /// Pressure eviction of one victim during growth allocation: the
+    /// planner sees exactly how many blocks the allocation needs and may
+    /// answer with a partial tail of that size, a cost-aware recompute,
+    /// or the whole-victim swap.
+    pub(super) fn evict_for_pressure(&mut self, victim: RequestId, need: usize) -> Ns {
+        let held = self.alloc.as_dyn_ref().table(victim).len();
+        let tokens = self.reqs.get(victim).tokens_in_cache;
+        if held == 0 || tokens == 0 {
+            // Pure state transition (see `evict_unadmitted`).
+            return self.preempt(victim, false);
+        }
+        let ctx = VictimCtx {
+            id: victim,
+            tokens_in_cache: tokens,
+            blocks_held: held,
+            blocks_wanted: need,
+            full: false,
+        };
+        match self.planner.decide_eviction(&ctx) {
+            EvictionAction::PartialTail { blocks } => self.preempt_tail(victim, blocks),
+            EvictionAction::Recompute => {
+                self.rec.evict_recompute_decisions += 1;
+                self.recompute_preempt(victim, false)
+            }
+            EvictionAction::SwapAll => {
+                self.rec.evict_swap_decisions += 1;
+                self.preempt(victim, false)
+            }
+        }
+    }
+
+    /// The `partial_tail` membership sweep: instead of evicting every
+    /// un-admitted victim whole, free only the admitted set's block
+    /// *deficit* — shaving victims' tails lowest-priority-first, one
+    /// partial [`crate::swap::op::SwapOp`] per shaved run. Victims whose
+    /// blocks are not actually needed keep full residency (maximum KV
+    /// locality, in the Deficit-LRU spirit): they simply receive no
+    /// token grant this iteration and re-enter admission next time. Any
+    /// shortfall the estimate misses is caught by the growth-allocation
+    /// pressure path, exactly like a draining async swap-out.
+    pub(super) fn partial_preemption_sweep(
+        &mut self,
+        cands: &[Candidate],
+        sched: &Schedule,
+    ) -> Ns {
+        let admitted: std::collections::HashSet<RequestId> = sched
+            .keep
+            .iter()
+            .chain(&sched.promote)
+            .chain(&sched.start)
+            .copied()
+            .collect();
+        let needed: usize = cands
+            .iter()
+            .filter(|c| admitted.contains(&c.id))
+            .map(|c| c.blocks_needed)
+            .sum();
+        let mut deficit =
+            needed.saturating_sub(self.alloc.as_dyn_ref().available_blocks());
+        let mut stall: Ns = 0;
+        // `sched.preempt` is in descending priority order; walk it in
+        // reverse so the lowest-priority victims lose their tails first.
+        for &id in sched.preempt.iter().rev() {
+            if deficit == 0 {
+                break;
+            }
+            let held = self.alloc.as_dyn_ref().table(id).len();
+            if held == 0 {
+                continue;
+            }
+            let wanted = deficit.min(held);
+            deficit -= wanted;
+            let tokens = self.reqs.get(id).tokens_in_cache;
+            if wanted < held && tokens > 0 {
+                stall += self.preempt_tail(id, wanted);
+            } else {
+                // Whole-victim ask (or nothing materialized): baseline
+                // swap eviction.
+                if tokens > 0 {
+                    self.rec.evict_swap_decisions += 1;
+                }
+                stall += self.preempt(id, false);
+            }
+        }
+        stall
+    }
+
+    /// Swap out (or drop) one GPU-resident request whole. Returns
+    /// main-thread stall charged to this iteration. For a partially
+    /// resident victim only the resident head is transferred — the
+    /// evicted tail already lives as valid CPU copies.
+    pub(super) fn preempt(&mut self, id: RequestId, turn_end: bool) -> Ns {
+        let r = self.reqs.get_mut(id);
+        let tokens = r.tokens_in_cache;
+        let prio = r.priority;
+        let was_partial = r.state == ReqState::PartiallyResident;
+        let plan = if was_partial {
+            let held = self.alloc.as_dyn_ref().table(id).len() as u32;
+            self.reuse
+                .plan_swap_out_range(id, tokens, 0, held, &self.cpu)
+        } else {
+            self.reuse.plan_swap_out(id, tokens, &self.cpu)
+        };
+        // Re-transferred blocks that already own a CPU slot (the stale
+        // partial tail) are overwritten in place; only genuinely new
+        // logicals need fresh slots.
+        let existing: std::collections::HashSet<u32> =
+            self.cpu.valid_logical(id).into_iter().collect();
+        let fresh: Vec<u32> = plan
+            .transfer
+            .iter()
+            .copied()
+            .filter(|l| !existing.contains(l))
+            .collect();
+        // Secure CPU slots for the blocks that must move.
+        let copies = match self.cpu.add_copies(id, &fresh, prio) {
+            Some(c) => Some(c),
+            None => {
+                self.cpu.contaminate_backups(fresh.len(), prio);
+                self.cpu.add_copies(id, &fresh, prio)
+            }
+        };
+        let Some(_) = copies else {
+            // CPU swap space exhausted even after contamination →
+            // recompute-preemption (vLLM's fallback).
+            return self.recompute_preempt(id, turn_end);
+        };
+        // Build moves: logical → (gpu block, cpu slot).
+        let slot_of: std::collections::HashMap<u32, u32> = self
+            .cpu
+            .copies_of(id)
+            .map(|c| c.entries.iter().map(|e| (e.logical, e.slot)).collect())
+            .unwrap_or_default();
+        let table = self.alloc.as_dyn_ref().table(id).to_vec();
+        let moves: Vec<BlockMove> = plan
+            .transfer
+            .iter()
+            .map(|&l| BlockMove {
+                logical: l,
+                gpu: table[l as usize],
+                cpu: slot_of[&l],
+            })
+            .collect();
+        let op = self.seg.build(id, Direction::Out, &moves);
+        let nothing_in_flight = op.segments.is_empty();
+        let stall = self.mgr.submit_swap_out(op, self.now);
+        // Synchronous engines free the source blocks now (the copy is
+        // complete); asynchronous ones keep them allocated until the op
+        // drains — reusing them earlier is exactly the KV-cache conflict
+        // of §3.2, which the allocator-pressure path below resolves with
+        // fine-grained synchronization.
+        let async_out = !matches!(self.mgr.mode(), SwapMode::Sync) && !nothing_in_flight;
+        if !async_out {
+            self.alloc.as_dyn().release(id);
+        }
+        self.cpu.set_required(id, true);
+        // The copy's content is fixed at submit; readers are barriered on
+        // the completion event, so the reuse state can commit now.
+        self.reuse.commit_swap_out(id, tokens);
+        let sync_done = matches!(self.mgr.mode(), SwapMode::Sync) || nothing_in_flight;
+        let r = self.reqs.get_mut(id);
+        r.kv = KvLocation::Cpu;
+        r.state = if turn_end {
+            if sync_done {
+                ReqState::WaitingTurn
+            } else {
+                ReqState::SwappingOutTurnEnd
+            }
+        } else {
+            ReqState::SwappedOut
+        };
+        if !turn_end {
+            self.rec.preemptions += 1;
+        }
+        stall
+    }
+
+    /// Partial-tail eviction (`partial_tail` policy): move only the last
+    /// `wanted` blocks of `id`'s table to CPU and shrink the allocation
+    /// in place; the head stays resident and the request re-admits with
+    /// `needed = missing tail` only. Degenerates to a full eviction when
+    /// the ask covers the whole table, and to recompute-preemption when
+    /// the CPU swap space is exhausted.
+    ///
+    /// Mirrors [`ServingEngine::preempt`]'s swap-out pipeline rather
+    /// than sharing a range-parameterized helper *on purpose*: the full
+    /// eviction path is behavior-pinned bit-for-bit against the
+    /// pre-refactor engine and must not change shape while that pin is
+    /// load-bearing.
+    pub(super) fn preempt_tail(&mut self, id: RequestId, wanted: usize) -> Ns {
+        let held = self.alloc.as_dyn_ref().table(id).len();
+        let r = self.reqs.get(id);
+        let tokens = r.tokens_in_cache;
+        let prio = r.priority;
+        let total = Request::blocks_for(tokens, self.block_size);
+        // Never leave an empty head; grown-but-still-empty blocks past
+        // the KV end are dropped first (they hold no data to transfer).
+        let n_tail = wanted
+            .max(held.saturating_sub(total))
+            .min(held.saturating_sub(1));
+        if n_tail == 0 || n_tail >= held {
+            return self.preempt(id, false);
+        }
+        // Logical tail blocks that actually hold KV and must move.
+        let lo = (held - n_tail) as u32;
+        let hi = held.min(total) as u32;
+        let plan = if lo < hi {
+            self.reuse
+                .plan_swap_out_range(id, tokens, lo, hi, &self.cpu)
+        } else {
+            Default::default()
+        };
+        let existing: std::collections::HashSet<u32> =
+            self.cpu.valid_logical(id).into_iter().collect();
+        let fresh: Vec<u32> = plan
+            .transfer
+            .iter()
+            .copied()
+            .filter(|l| !existing.contains(l))
+            .collect();
+        let copies = match self.cpu.add_copies(id, &fresh, prio) {
+            Some(c) => Some(c),
+            None => {
+                self.cpu.contaminate_backups(fresh.len(), prio);
+                self.cpu.add_copies(id, &fresh, prio)
+            }
+        };
+        if copies.is_none() {
+            // CPU swap space exhausted: the tail cannot survive without
+            // its copy — whole-victim recompute fallback.
+            return self.recompute_preempt(id, false);
+        }
+        let slot_of: std::collections::HashMap<u32, u32> = self
+            .cpu
+            .copies_of(id)
+            .map(|c| c.entries.iter().map(|e| (e.logical, e.slot)).collect())
+            .unwrap_or_default();
+        let table = self.alloc.as_dyn_ref().table(id).to_vec();
+        let moves: Vec<BlockMove> = plan
+            .transfer
+            .iter()
+            .map(|&l| BlockMove {
+                logical: l,
+                gpu: table[l as usize],
+                cpu: slot_of[&l],
+            })
+            .collect();
+        let op = self.seg.build(id, Direction::Out, &moves);
+        let nothing_in_flight = op.segments.is_empty();
+        let stall = self.mgr.submit_swap_out(op, self.now);
+        let async_out = !matches!(self.mgr.mode(), SwapMode::Sync) && !nothing_in_flight;
+        if async_out {
+            // Source blocks stay allocated until the op drains;
+            // `release_reaped` then shrinks exactly this tail.
+            self.partial_pending.insert(id, n_tail);
+        } else {
+            self.alloc.as_dyn().release_tail(id, n_tail);
+        }
+        self.cpu.set_required(id, true);
+        self.reuse.commit_swap_out(id, tokens);
+        let r = self.reqs.get_mut(id);
+        r.kv = KvLocation::Split;
+        r.state = ReqState::PartiallyResident;
+        self.rec.preemptions += 1;
+        self.rec.partial_evictions += 1;
+        self.rec.blocks_retained += (held - n_tail) as u64;
+        stall
+    }
+
+    /// Build the CPU→GPU op materializing `id`'s missing suffix onto the
+    /// freshly allocated `blocks` (shared by demand promotion and the
+    /// speculative prefetch path). For fully swapped-out requests the
+    /// suffix is the whole context; for partially resident ones it is
+    /// exactly the evicted tail.
+    pub(super) fn build_swap_in_op(&self, id: RequestId, blocks: &[BlockId]) -> SwapOp {
+        let tokens = self.reqs.get(id).tokens_in_cache;
+        let logicals = self.reuse.plan_swap_in(tokens);
+        let skip = logicals.len() - blocks.len();
+        let slot_of: std::collections::HashMap<u32, u32> = self
+            .cpu
+            .copies_of(id)
+            .map(|c| c.entries.iter().map(|e| (e.logical, e.slot)).collect())
+            .unwrap_or_default();
+        let moves: Vec<BlockMove> = logicals[skip..]
+            .iter()
+            .map(|&l| BlockMove {
+                logical: l,
+                gpu: blocks[l as usize - skip],
+                cpu: *slot_of.get(&l).expect("required CPU copy present"),
+            })
+            .collect();
+        self.seg.build(id, Direction::In, &moves)
+    }
+
+    /// Swap a request back in. Returns (stall, newly allocated blocks);
+    /// `None` if allocation failed (stays swapped out this iteration).
+    pub(super) fn promote(
+        &mut self,
+        id: RequestId,
+        iter_hint: Ns,
+        batch: usize,
+        avg_ctx: f64,
+    ) -> Option<(Ns, Vec<BlockId>)> {
+        // A prefetched request re-admits off its speculative transfer:
+        // zero demand swap-in stall when it has landed, an asynchronous
+        // remainder-wait when still on the wire. Either way the critical
+        // path pays nothing synchronously — the point of the pipeline.
+        match self.mgr.claim_prefetch(id, self.now) {
+            Some(PrefetchClaim::Ready) => {
+                debug_assert_eq!(
+                    self.alloc.as_dyn_ref().table(id).len(),
+                    Request::blocks_for(
+                        self.reqs.get(id).tokens_in_cache,
+                        self.block_size
+                    ),
+                    "prefetched residency must cover the whole context"
+                );
+                let r = self.reqs.get_mut(id);
+                r.state = if r.prefill_remaining() > 0 {
+                    ReqState::Prefilling
+                } else {
+                    ReqState::Running
+                };
+                r.kv = KvLocation::Gpu;
+                self.release_cpu_copy_after_swap_in(id);
+                return Some((0, Vec::new()));
+            }
+            Some(PrefetchClaim::Pending { .. }) => {
+                self.reqs.get_mut(id).state = ReqState::SwappingIn;
+                return Some((0, Vec::new()));
+            }
+            None => {}
+        }
+        // If this request's own swap-out is still writing the CPU copy,
+        // synchronize on it first (its GPU blocks are also still held).
+        let mut pre_stall: Ns = 0;
+        if let Some(done) = self.mgr.swap_out_inflight(id) {
+            pre_stall = done.saturating_sub(self.now);
+            let reaped = self.mgr.reap_swap_outs(done);
+            self.release_reaped(reaped);
+        }
+        let r = self.reqs.get(id);
+        let tokens = r.tokens_in_cache;
+        // Partially resident requests re-materialize only the missing
+        // tail on top of their resident head (held == 0 for full
+        // swap-outs — their draining source blocks were released by the
+        // barrier above).
+        let held = self.alloc.as_dyn_ref().table(id).len();
+        let n = Request::blocks_for(tokens, self.block_size).saturating_sub(held);
+        let blocks = loop {
+            match self.alloc.as_dyn().allocate(id, n) {
+                Some(b) => break b,
+                None => {
+                    // Pressure: (0) reclaim a speculative prefetch, (1)
+                    // drain an in-flight swap-out (conflict) if one
+                    // exists; otherwise give up this iteration.
+                    if let Some(t) = self.cancel_one_prefetch_for_pressure(id) {
+                        pre_stall = pre_stall.max(t.saturating_sub(self.now));
+                        continue;
+                    }
+                    let at = self.now + pre_stall;
+                    match self.drain_one_swap_out(at) {
+                        Some(t) => pre_stall = t.saturating_sub(self.now),
+                        None => {
+                            // partial_tail only: non-admitted
+                            // partially-resident heads are the last
+                            // reclaimable blocks (the scheduler's
+                            // capacity math cannot see them). Reclaim
+                            // the lowest-priority one, then retry.
+                            let partial: Vec<VictimRank> = self
+                                .reqs
+                                .iter()
+                                .filter(|r| {
+                                    r.id != id
+                                        && r.state == ReqState::PartiallyResident
+                                })
+                                .map(|r| VictimRank {
+                                    id: r.id,
+                                    priority: r.priority,
+                                    turn_arrival: r.turn_arrival,
+                                })
+                                .collect();
+                            match ContextSwitchPlanner::select_victim(&partial) {
+                                Some(v) => pre_stall += self.preempt(v, false),
+                                None => return None,
+                            }
+                        }
+                    }
+                }
+            }
+        };
+        let op = self.build_swap_in_op(id, &blocks);
+        let mut stall = pre_stall;
+        let start_at = self.now + pre_stall;
+        match self.mgr.submit_swap_in(op, start_at, iter_hint, batch, avg_ctx) {
+            SwapInDecision::Sync { done } => {
+                stall = stall.max(done.saturating_sub(self.now));
+                let r = self.reqs.get_mut(id);
+                r.state = if r.prefill_remaining() > 0 {
+                    ReqState::Prefilling
+                } else {
+                    ReqState::Running
+                };
+                r.kv = KvLocation::Gpu;
+            }
+            SwapInDecision::Async => {
+                self.reqs.get_mut(id).state = ReqState::SwappingIn;
+            }
+        }
+        // The CPU copy is demoted to a contaminable backup (reuse) or
+        // freed (vLLM) only once the swap-in has finished reading it:
+        // sync → now, async → at harvest.
+        let sync_done = !matches!(self.reqs.get(id).state, ReqState::SwappingIn);
+        if sync_done {
+            self.release_cpu_copy_after_swap_in(id);
+        }
+        Some((stall, blocks))
+    }
+
+    /// End-of-turn handling after the last response token. Turn-end
+    /// swap-outs are always whole-context (the next turn reuses the full
+    /// CPU copy), so the planner is not consulted here.
+    pub(super) fn end_turn(&mut self, id: RequestId) -> Ns {
+        let r = self.reqs.get_mut(id);
+        let turn = r.turn as u32;
+        self.rec.turn_finished(id, turn);
+        let r = self.reqs.get(id);
+        if r.is_last_turn() {
+            self.alloc.as_dyn().release(id);
+            self.cpu.drop_request(id);
+            self.reuse.forget(id);
+            let r = self.reqs.get_mut(id);
+            r.state = ReqState::Finished;
+            r.kv = KvLocation::None;
+            self.rec.finished_conversations += 1;
+            return 0;
+        }
+        // Schedule the next turn after think time, and move the KV cache
+        // out of precious HBM (multi-turn context preservation — the
+        // §3.3 workload). In cluster mode the next turn is instead held
+        // for the router's placement decision.
+        let think = r.conv.turns[r.turn + 1].think_time_s;
+        let due = self.now + (think * 1e9) as Ns;
+        if self.hold_turns {
+            self.released_turns.push((id, due));
+        } else {
+            self.pending_turns.push((id, due));
+        }
+        self.preempt(id, true)
+    }
+}

@@ -1,0 +1,234 @@
+//! Lookahead swap-in prefetch (speculative context switching): the
+//! engine projects the next priority epochs' re-admissions and issues
+//! their swap-ins early as budgeted background PCIe traffic.
+
+use super::ServingEngine;
+use crate::block::KvAllocator;
+use crate::coordinator::request::{KvLocation, ReqState, Request};
+use crate::coordinator::scheduler::predict_admission;
+use crate::memory::RequestId;
+use crate::sim::clock::Ns;
+use crate::swap::manager::{PrefetchCancel, PrefetchSubmit};
+
+impl ServingEngine {
+    /// Rebuild the prediction of upcoming re-admissions, once per
+    /// policy epoch: (a) currently swapped-out requests the live
+    /// priority policy is projected to promote within `depth` epochs
+    /// ([`predict_admission`] — side-effect-free), and (b) stale landed
+    /// prefetches the new projection no longer wants are canceled, their
+    /// blocks returned (the CPU copy stays the valid version under the
+    /// contamination rules).
+    pub(super) fn rebuild_prefetch_predictions(&mut self, epoch: u64, depth: u64) {
+        let cands = self.candidates();
+        // One projection per candidate via `project_priorities`, which
+        // leaves the policy's sequential state (the trace memo) parked
+        // at the live epoch — querying `priority_of(epoch + k)` directly
+        // would force every later live refresh to replay the walk from
+        // epoch 0.
+        let projections: std::collections::HashMap<RequestId, Vec<i64>> = cands
+            .iter()
+            .map(|c| {
+                let tenant = self.reqs.get(c.id).tenant();
+                (
+                    c.id,
+                    self.policy.project_priorities(c.id, tenant, epoch, depth),
+                )
+            })
+            .collect();
+        let predicted = predict_admission(
+            &cands,
+            self.gpu_blocks,
+            self.cfg.scheduler.max_batch,
+            depth,
+            |id, offset| projections[&id][(offset - 1) as usize],
+        );
+        self.prefetch_queue = predicted;
+        // Misprediction cleanup: a landed prefetch for a request that is
+        // still parked off-GPU and no longer projected (priority flip,
+        // pending turn migrated away) is canceled.
+        for id in self.mgr.prefetched_ids() {
+            if self.prefetch_queue.contains(&id) || !self.reqs.contains(id) {
+                continue;
+            }
+            let r = self.reqs.get(id);
+            let parked = matches!(r.state, ReqState::SwappedOut | ReqState::WaitingTurn);
+            let due_soon = self
+                .pending_turns
+                .iter()
+                .any(|&(p, t)| p == id && t <= self.now.saturating_add(self.horizon_ns(depth)));
+            if !parked || due_soon {
+                continue;
+            }
+            if self.mgr.prefetch_ready(id, self.now) {
+                if let Some(PrefetchCancel::Freed { .. }) =
+                    self.mgr.cancel_prefetch(id, self.now)
+                {
+                    self.alloc.as_dyn().release(id);
+                }
+            }
+        }
+    }
+
+    /// The epoch lookahead depth expressed in wall-clock nanoseconds
+    /// (drives the pending-turn horizon).
+    pub(super) fn horizon_ns(&self, depth: u64) -> Ns {
+        (depth as f64 * self.epoch_iters as f64 * self.iter_span_ema) as Ns
+    }
+
+    /// The per-iteration prefetch pass: refresh the I/O budget, fold
+    /// pending turns whose think time expires within the lookahead
+    /// horizon into the prediction (their re-admission is a
+    /// near-certainty — the §3.3 multi-turn workload), and submit as
+    /// many speculative swap-ins as free blocks, link idleness, and the
+    /// byte budget allow. Speculation never preempts and never waits:
+    /// anything it cannot do right now is retried next iteration.
+    pub(super) fn prefetch_pass(&mut self) {
+        let depth = self.cfg.prefetch.depth;
+        if depth == 0 {
+            return;
+        }
+        self.prefetch_retry_at = None; // recomputed below if still starved
+        self.mgr.refill_prefetch_budget(self.now);
+        let epoch = self.iter / self.epoch_iters;
+        if epoch != self.prefetch_epoch {
+            self.prefetch_epoch = epoch;
+            self.rebuild_prefetch_predictions(epoch, depth);
+        }
+        // Pending turns are re-scanned every iteration (they appear
+        // mid-epoch at turn ends). The submission order is rebuilt so
+        // every within-horizon due turn runs first, earliest due time
+        // first, with the policy projection behind them.
+        let horizon = self.horizon_ns(depth);
+        let mut due: Vec<(Ns, RequestId)> = self
+            .pending_turns
+            .iter()
+            .filter(|&&(_, t)| t <= self.now.saturating_add(horizon))
+            .map(|&(id, t)| (t, id))
+            .collect();
+        due.sort_unstable();
+        let mut ordered: Vec<RequestId> = due.into_iter().map(|(_, id)| id).collect();
+        for &id in &self.prefetch_queue {
+            if !ordered.contains(&id) {
+                ordered.push(id);
+            }
+        }
+        self.prefetch_queue = ordered;
+        // Headroom: leave at least one growth block per admitted
+        // request, so speculation never forces the grow pass into
+        // preempting a real victim next iteration.
+        let headroom = self
+            .reqs
+            .iter()
+            .filter(|q| matches!(q.state, ReqState::Running | ReqState::Prefilling))
+            .count();
+        let mut i = 0;
+        while i < self.prefetch_queue.len() {
+            let id = self.prefetch_queue[i];
+            if !self.reqs.contains(id)
+                || self.mgr.prefetch_pending(id)
+                || self.prefetch_never_fits.contains(&id)
+            {
+                self.prefetch_queue.remove(i);
+                continue;
+            }
+            let r = self.reqs.get(id);
+            let eligible = r.kv == KvLocation::Cpu
+                && r.tokens_in_cache > 0
+                && matches!(r.state, ReqState::SwappedOut | ReqState::WaitingTurn);
+            if !eligible {
+                self.prefetch_queue.remove(i);
+                continue;
+            }
+            if self.mgr.swap_out_inflight(id).is_some() {
+                // The CPU copy is still being written: retry after drain.
+                i += 1;
+                continue;
+            }
+            // Cheap pre-flight before touching the allocator: the op
+            // moves every context block, so its bytes are exactly
+            // n × block_bytes.
+            let n = Request::blocks_for(r.tokens_in_cache, self.block_size);
+            let bytes = n as u64 * self.preset.model.block_bytes();
+            match self.mgr.prefetch_admissible(bytes, self.now) {
+                PrefetchSubmit::Started => {}
+                PrefetchSubmit::RejectedTooLarge => {
+                    // Can never fit the burst budget (contexts only
+                    // grow): exclude the request permanently so the
+                    // due-turn scan cannot churn it back in.
+                    self.prefetch_never_fits.insert(id);
+                    self.prefetch_queue.remove(i);
+                    continue;
+                }
+                PrefetchSubmit::RejectedBudget => {
+                    // Bucket dry: wake exactly when the refill covers it.
+                    self.prefetch_retry_at =
+                        self.mgr.prefetch_budget_eta(bytes, self.now);
+                    break;
+                }
+                PrefetchSubmit::RejectedBusy => {
+                    break; // demand traffic owns the link: back off
+                }
+            }
+            if self.alloc.as_dyn_ref().available_blocks() < n + headroom {
+                break; // no free blocks — prefetch never preempts for space
+            }
+            let Some(blocks) = self.alloc.as_dyn().allocate(id, n) else {
+                break;
+            };
+            let op = self.build_swap_in_op(id, &blocks);
+            match self.mgr.submit_prefetch(op, self.now) {
+                PrefetchSubmit::Started => {
+                    self.prefetch_queue.remove(i);
+                }
+                _ => {
+                    // Pre-flight said yes, submit said no — can only be
+                    // a racing state change; give the blocks back.
+                    self.alloc.as_dyn().release(id);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Pressure valve: reclaim the GPU blocks of one unclaimed prefetch
+    /// — demand allocation always outranks speculation, so a
+    /// (mis)predicted prefetch is evicted before any real victim is
+    /// preempted. Landed prefetches free immediately; an in-flight one
+    /// is canceled and its short drain is waited out (still far cheaper
+    /// than a preemption round-trip). Victims are picked landed-first,
+    /// then lowest priority. The victim's CPU copy stays its valid KV
+    /// version. Returns the time the blocks are free (≥ `now` when a
+    /// drain was waited on), or `None` if there was nothing to reclaim.
+    pub(super) fn cancel_one_prefetch_for_pressure(&mut self, keep: RequestId) -> Option<Ns> {
+        let mut victims: Vec<(bool, i64, RequestId)> = self
+            .mgr
+            .prefetched_ids()
+            .into_iter()
+            .filter(|&v| v != keep && self.reqs.contains(v))
+            .map(|v| {
+                (
+                    // false sorts first: landed (freeable now) preferred.
+                    !self.mgr.prefetch_ready(v, self.now),
+                    self.reqs.get(v).priority,
+                    v,
+                )
+            })
+            .collect();
+        victims.sort_unstable();
+        let &(_, _, victim) = victims.first()?;
+        match self.mgr.cancel_prefetch(victim, self.now)? {
+            PrefetchCancel::Freed { .. } => {
+                self.alloc.as_dyn().release(victim);
+                Some(self.now)
+            }
+            PrefetchCancel::Draining { done } => {
+                // Account the wait like any other pressure drain so the
+                // conflict bucket still explains all recorded swap stall.
+                self.mgr.record_conflict(done.saturating_sub(self.now));
+                let drained = self.mgr.reap_prefetch_drains(done);
+                self.release_reaped(drained);
+                Some(done)
+            }
+        }
+    }
+}

@@ -1,0 +1,412 @@
+//! Engine-level tests: whole-loop behavior on a small contended testbed
+//! (moved here unchanged by the staged-pipeline refactor, plus the
+//! preemption-policy coverage).
+
+use super::{ServeOutcome, ServingEngine};
+use crate::config::{EngineConfig, GpuSpec, PrefillMode, PreemptionPolicyKind, Preset};
+use crate::coordinator::priority::Pattern;
+use crate::workload::sharegpt::{generate, ShareGptConfig};
+use crate::workload::{ArrivalTrace, Conversation};
+
+/// Small contended testbed: LLaMA-8B timing constants but only a few
+/// hundred KV blocks, so preemption pressure appears with ~10
+/// conversations.
+fn test_preset(gpu_blocks_target: usize) -> Preset {
+    let model = crate::config::ModelSpec::llama8b();
+    let mut gpu = GpuSpec::a10();
+    // Shrink HBM so preset.gpu_blocks() == gpu_blocks_target.
+    gpu.hbm_bytes =
+        ((model.weight_bytes() + gpu_blocks_target as u64 * model.block_bytes())
+            as f64
+            / gpu.mem_util) as u64
+            + (1 << 20);
+    Preset {
+        model,
+        gpu,
+        cpu_swap_bytes: 4096 * 4 * 1024 * 1024, // plenty
+    }
+}
+
+fn small_workload(n: usize, seed: u64) -> (Vec<Conversation>, ArrivalTrace) {
+    let mut cfg = ShareGptConfig::default();
+    cfg.mean_turns = 3.0;
+    cfg.max_prompt = 256;
+    cfg.max_response = 128;
+    cfg.mean_think_s = 2.0;
+    let convs = generate(&cfg, n, seed);
+    let tr = ArrivalTrace::poisson(&convs, 2.0, seed ^ 1);
+    (convs, tr)
+}
+
+fn run_with(cfg: EngineConfig, blocks: usize, n_conv: usize, seed: u64) -> ServeOutcome {
+    let (convs, tr) = small_workload(n_conv, seed);
+    let mut e = ServingEngine::new(
+        cfg,
+        test_preset(blocks),
+        Pattern::Markov,
+        convs,
+        tr,
+        seed,
+    );
+    e.charge_sched_overhead = false; // determinism for tests
+    e.run(200_000)
+}
+
+#[test]
+fn completes_all_conversations_fastswitch() {
+    let out = run_with(EngineConfig::fastswitch(), 400, 12, 1);
+    assert_eq!(out.recorder.finished_conversations, 12);
+    assert!(out.recorder.total_tokens > 0);
+    assert!(!out.recorder.ttft().is_empty());
+    assert!(!out.recorder.tbt().is_empty());
+}
+
+#[test]
+fn completes_all_conversations_vllm_baseline() {
+    let out = run_with(EngineConfig::vllm_baseline(), 400, 12, 1);
+    assert_eq!(out.recorder.finished_conversations, 12);
+}
+
+#[test]
+fn online_policies_complete_all_conversations() {
+    use crate::fairness::PolicyKind;
+    for kind in [PolicyKind::Vtc, PolicyKind::SloAware] {
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.fairness.policy = kind;
+        let out = run_with(cfg, 400, 12, 1);
+        assert_eq!(
+            out.recorder.finished_conversations, 12,
+            "{kind:?} lost conversations"
+        );
+        assert!(out.recorder.total_tokens > 0);
+    }
+}
+
+#[test]
+fn contended_memory_causes_preemptions() {
+    let mut cfg = EngineConfig::vllm_baseline();
+    cfg.scheduler.priority_update_freq = 0.25; // churn priorities hard
+    let out = run_with(cfg, 96, 16, 2);
+    assert_eq!(out.recorder.finished_conversations, 16);
+    assert!(
+        out.recorder.preemptions + out.recorder.recompute_preemptions > 0,
+        "expected preemption under contention"
+    );
+    assert!(out.swap_stats.swap_out_ops > 0);
+}
+
+#[test]
+fn fastswitch_beats_baseline_on_stall_time() {
+    let mut base = EngineConfig::vllm_baseline();
+    base.scheduler.priority_update_freq = 0.25;
+    let mut fast = EngineConfig::fastswitch();
+    fast.scheduler.priority_update_freq = 0.25;
+    let ob = run_with(base, 96, 16, 3);
+    let of = run_with(fast, 96, 16, 3);
+    let (_, swap_b, _) = ob.recorder.stall_breakdown();
+    let (_, swap_f, _) = of.recorder.stall_breakdown();
+    assert!(
+        swap_f < swap_b,
+        "fastswitch stall {swap_f} !< baseline {swap_b}"
+    );
+}
+
+#[test]
+fn reuse_reduces_swap_out_blocks() {
+    let mut base = EngineConfig::with_dbg();
+    base.scheduler.priority_update_freq = 0.25;
+    let mut reuse = EngineConfig::with_dbg_reuse();
+    reuse.scheduler.priority_update_freq = 0.25;
+    let ob = run_with(base, 96, 16, 4);
+    let orr = run_with(reuse, 96, 16, 4);
+    assert!(orr.reuse_blocks_reused > 0, "reuse must trigger");
+    assert!(
+        orr.reuse_blocks_transferred < ob.reuse_blocks_transferred,
+        "reuse {} !< baseline {}",
+        orr.reuse_blocks_transferred,
+        ob.reuse_blocks_transferred
+    );
+}
+
+#[test]
+fn dbg_coarser_granularity_than_fixed() {
+    let mut base = EngineConfig::vllm_baseline();
+    base.scheduler.priority_update_freq = 0.25;
+    let mut dbg = EngineConfig::with_dbg();
+    dbg.scheduler.priority_update_freq = 0.25;
+    let ob = run_with(base, 96, 16, 5);
+    let od = run_with(dbg, 96, 16, 5);
+    assert!(ob.swap_stats.avg_granularity() < 1.5);
+    assert!(
+        od.swap_stats.avg_granularity() > 2.0 * ob.swap_stats.avg_granularity(),
+        "dbg granularity {} vs fixed {}",
+        od.swap_stats.avg_granularity(),
+        ob.swap_stats.avg_granularity()
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = run_with(EngineConfig::fastswitch(), 128, 8, 7);
+    let b = run_with(EngineConfig::fastswitch(), 128, 8, 7);
+    assert_eq!(a.span, b.span);
+    assert_eq!(a.recorder.total_tokens, b.recorder.total_tokens);
+    assert_eq!(a.swap_stats.total_calls, b.swap_stats.total_calls);
+}
+
+#[test]
+fn chunked_mode_mixes_decodes_with_prefill_chunks() {
+    // Under the default chunked scheduler, prompt chunks co-run with
+    // decode steps: some iterations must carry both prefill tokens
+    // and a non-empty decode batch, and the decode-interference
+    // bucket must be charged for them.
+    let out = run_with(EngineConfig::fastswitch(), 400, 12, 1);
+    let mixed = out
+        .recorder
+        .iterations
+        .iter()
+        .any(|s| s.prefill_tokens > 0 && !s.is_prefill && s.batch > 0);
+    assert!(mixed, "no mixed decode+prefill iteration observed");
+    assert!(out.recorder.decode_interference_ns() > 0);
+    assert!(out.recorder.prefill_tokens() > 0);
+}
+
+#[test]
+fn monolithic_mode_completes_and_stalls_decodes() {
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.scheduler.prefill_mode = PrefillMode::Monolithic;
+    let out = run_with(cfg, 400, 12, 1);
+    assert_eq!(out.recorder.finished_conversations, 12);
+    // Whole prompts run in exclusive iterations: no mixed ones.
+    assert!(out
+        .recorder
+        .iterations
+        .iter()
+        .all(|s| s.prefill_tokens == 0 || s.batch == 0 || s.is_prefill));
+}
+
+#[test]
+fn chunked_caps_prefill_per_iteration() {
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.scheduler.prefill_chunk = 64;
+    cfg.scheduler.max_tokens_per_iter = 96;
+    let out = run_with(cfg, 400, 12, 1);
+    assert_eq!(out.recorder.finished_conversations, 12);
+    assert!(out
+        .recorder
+        .iterations
+        .iter()
+        .all(|s| s.prefill_tokens <= 96));
+}
+
+#[test]
+fn token_budget_auto_sizes_from_roofline() {
+    let (convs, tr) = small_workload(4, 1);
+    let e = ServingEngine::new(
+        EngineConfig::fastswitch(),
+        test_preset(400),
+        Pattern::Markov,
+        convs,
+        tr,
+        1,
+    );
+    let b = e.token_budget();
+    // max_batch (32) decode claims plus a roofline-sized chunk term.
+    assert!(b > 32 && b < 4096, "budget = {b}");
+}
+
+#[test]
+fn prefetch_enabled_run_completes_and_lands_hits() {
+    // Multi-turn think times make pending-turn re-admissions the
+    // prefetcher's bread and butter: with lookahead on, speculative
+    // swap-ins must land and be claimed, and the workload must drain
+    // to exactly the same token totals as the demand-only run.
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.prefetch.depth = 2;
+    let out = run_with(cfg, 400, 12, 1);
+    assert_eq!(out.recorder.finished_conversations, 12);
+    assert!(out.swap_stats.prefetch_ops > 0, "no speculation issued");
+    assert!(out.swap_stats.prefetch_hits > 0, "no prefetch ever claimed");
+    assert!(out.swap_stats.prefetch_hit_rate() > 0.0);
+    assert!(out
+        .recorder
+        .iterations
+        .iter()
+        .any(|s| s.prefetch_inflight > 0));
+    let base = run_with(EngineConfig::fastswitch(), 400, 12, 1);
+    assert_eq!(base.swap_stats.prefetch_ops, 0, "default stays demand-only");
+    assert_eq!(out.recorder.total_tokens, base.recorder.total_tokens);
+}
+
+#[test]
+fn prefetch_under_contention_completes_and_cancels_safely() {
+    // Hard priority churn on a tiny pool: predictions flip, landed
+    // prefetches get canceled for pressure/staleness, and the final
+    // allocator/CPU-space invariant checks (run by `into_outcome`)
+    // must still hold with every conversation served.
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.scheduler.priority_update_freq = 0.25;
+    cfg.prefetch.depth = 2;
+    let out = run_with(cfg, 96, 16, 2);
+    assert_eq!(out.recorder.finished_conversations, 16);
+    assert!(out.swap_stats.prefetch_ops > 0);
+}
+
+#[test]
+fn prefetch_runs_are_deterministic() {
+    let mk = || {
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.prefetch.depth = 2;
+        run_with(cfg, 128, 8, 7)
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.span, b.span);
+    assert_eq!(a.recorder.total_tokens, b.recorder.total_tokens);
+    assert_eq!(a.swap_stats.prefetch_ops, b.swap_stats.prefetch_ops);
+    assert_eq!(a.swap_stats.prefetch_hits, b.swap_stats.prefetch_hits);
+    assert_eq!(
+        a.swap_stats.prefetch_wasted_bytes,
+        b.swap_stats.prefetch_wasted_bytes
+    );
+}
+
+#[test]
+fn ttft_includes_queueing_and_swap_delays() {
+    let out = run_with(EngineConfig::vllm_baseline(), 96, 16, 8);
+    let ttft = out.recorder.ttft();
+    // Tail must exceed median under contention.
+    assert!(ttft.p(99.0) > ttft.p(50.0));
+}
+
+// ---- preemption policies (the ContextSwitchPlanner integration) ----
+
+#[test]
+fn partial_tail_run_completes_with_partial_evictions() {
+    // Hard churn on a tiny pool: the deficit-driven sweep must shave
+    // tails (not whole victims) at least some of the time, retain
+    // blocks, and still drain the workload with the exit invariants
+    // (allocator + CPU space, checked by into_outcome) intact.
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.scheduler.priority_update_freq = 0.25;
+    cfg.preemption.policy = PreemptionPolicyKind::PartialTail;
+    let out = run_with(cfg, 96, 16, 2);
+    assert_eq!(out.recorder.finished_conversations, 16);
+    assert!(
+        out.recorder.partial_evictions > 0,
+        "contended churn must trigger partial tails"
+    );
+    assert!(out.recorder.blocks_retained > 0);
+}
+
+#[test]
+fn partial_tail_works_under_sync_swap_and_fixed_blocks() {
+    // The vLLM-baseline mechanisms (sync swap-outs → release_tail at
+    // submit, fixed-block allocator, no reuse) must also carry the
+    // partial path.
+    let mut cfg = EngineConfig::vllm_baseline();
+    cfg.scheduler.priority_update_freq = 0.25;
+    cfg.preemption.policy = PreemptionPolicyKind::PartialTail;
+    let out = run_with(cfg, 96, 16, 2);
+    assert_eq!(out.recorder.finished_conversations, 16);
+    assert!(out.recorder.partial_evictions > 0);
+}
+
+#[test]
+fn cost_aware_on_the_fast_link_behaves_like_swap_all() {
+    // On the A10 testbed the PCIe round trip beats roofline recompute
+    // at every servable context, so cost_aware must decide SwapAll
+    // everywhere — and then the run is action-for-action identical to
+    // the swap_all baseline.
+    let mk = |kind| {
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.scheduler.priority_update_freq = 0.25;
+        cfg.preemption.policy = kind;
+        run_with(cfg, 96, 16, 2)
+    };
+    let cost = mk(PreemptionPolicyKind::CostAware);
+    assert_eq!(
+        cost.recorder.evict_recompute_decisions, 0,
+        "the fast link must never pick recompute"
+    );
+    assert!(cost.recorder.evict_swap_decisions > 0);
+    let all = mk(PreemptionPolicyKind::SwapAll);
+    assert_eq!(cost.span, all.span, "identical decisions, identical run");
+    assert_eq!(cost.recorder.total_tokens, all.recorder.total_tokens);
+    assert_eq!(cost.swap_stats.total_bytes, all.swap_stats.total_bytes);
+}
+
+#[test]
+fn cost_aware_recomputes_on_a_slow_link() {
+    // Crippling PCIe 64x flips the crossover: every non-empty mid-turn
+    // eviction must come out Recompute, and with ample CPU swap space
+    // the recompute preemptions are exactly those decisions.
+    let mut preset = test_preset(96);
+    preset.gpu.pcie_bw = 0.5e9;
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.scheduler.priority_update_freq = 0.25;
+    cfg.preemption.policy = PreemptionPolicyKind::CostAware;
+    let (convs, tr) = small_workload(16, 2);
+    let mut e = ServingEngine::new(cfg, preset, Pattern::Markov, convs, tr, 2);
+    e.charge_sched_overhead = false;
+    let out = e.run(200_000);
+    assert_eq!(out.recorder.finished_conversations, 16);
+    assert!(out.recorder.evict_recompute_decisions > 0);
+    assert_eq!(
+        out.recorder.evict_swap_decisions, 0,
+        "on the slow link no eviction may choose the round trip"
+    );
+    assert_eq!(
+        out.recorder.recompute_preemptions,
+        out.recorder.evict_recompute_decisions,
+        "every recompute decision must execute as a recompute preemption"
+    );
+}
+
+#[test]
+fn policy_runs_are_deterministic() {
+    for kind in [
+        PreemptionPolicyKind::CostAware,
+        PreemptionPolicyKind::PartialTail,
+    ] {
+        let mk = || {
+            let mut cfg = EngineConfig::fastswitch();
+            cfg.scheduler.priority_update_freq = 0.25;
+            cfg.preemption.policy = kind;
+            run_with(cfg, 96, 16, 7)
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.span, b.span, "{kind:?}");
+        assert_eq!(a.recorder.total_tokens, b.recorder.total_tokens);
+        assert_eq!(
+            a.recorder.partial_evictions,
+            b.recorder.partial_evictions
+        );
+        assert_eq!(
+            a.recorder.recompute_preemptions,
+            b.recorder.recompute_preemptions
+        );
+    }
+}
+
+#[test]
+fn partial_tail_moves_fewer_blocks_than_swap_all() {
+    // The point of the policy: on the same seed/workload, shaving tails
+    // moves strictly fewer blocks over PCIe than whole-victim swaps.
+    let mk = |kind| {
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.scheduler.priority_update_freq = 0.25;
+        cfg.preemption.policy = kind;
+        run_with(cfg, 96, 16, 2)
+    };
+    let all = mk(PreemptionPolicyKind::SwapAll);
+    let partial = mk(PreemptionPolicyKind::PartialTail);
+    assert_eq!(partial.recorder.finished_conversations, 16);
+    assert!(
+        partial.reuse_blocks_transferred < all.reuse_blocks_transferred,
+        "partial {} !< swap_all {} blocks transferred out",
+        partial.reuse_blocks_transferred,
+        all.reuse_blocks_transferred
+    );
+}

@@ -9,13 +9,20 @@
 //!   budget: who runs, who is preempted, who swaps in, and how many
 //!   decode/prefill-chunk tokens each admitted request processes (pure,
 //!   unit-testable).
-//! - [`engine`] — the per-iteration serving loop tying scheduler,
-//!   allocators, reuse and the swap manager together over virtual time.
+//! - [`switch`] — the context-switch planner: every evict decision goes
+//!   through a pluggable [`switch::PreemptionPolicy`] (`swap_all` |
+//!   `cost_aware` | `partial_tail`) consulting a swap-vs-recompute cost
+//!   model.
+//! - [`engine`] — the staged per-iteration serving pipeline (admission →
+//!   preemption → prefetch → execution → migration hooks) tying
+//!   scheduler, allocators, reuse and the swap manager together over
+//!   virtual time.
 
 pub mod engine;
 pub mod priority;
 pub mod request;
 pub mod scheduler;
+pub mod switch;
 
 pub use priority::{Pattern, PriorityTrace};
 pub use request::{KvLocation, ReqState, Request, RequestTable};

@@ -11,6 +11,10 @@ pub enum KvLocation {
     None,
     Gpu,
     Cpu,
+    /// Partial-tail eviction: the head blocks stay GPU-resident while
+    /// the evicted suffix lives as CPU copies (state
+    /// [`ReqState::PartiallyResident`]).
+    Split,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,6 +31,11 @@ pub enum ReqState {
     Running,
     /// Preempted; KV on CPU, waiting for re-admission.
     SwappedOut,
+    /// Partially preempted (`partial_tail` policy): the KV head is still
+    /// GPU-resident, only the evicted tail is on CPU. Re-admission needs
+    /// `missing tail` blocks only; the scheduler sees it as
+    /// [`ReqState::SwappedOut`] with its held head accounted.
+    PartiallyResident,
     /// Turn-end swap-out still draining; then → WaitingTurn/Finished.
     SwappingOutTurnEnd,
     /// Conversation complete.

@@ -1,0 +1,381 @@
+//! Context-switch planning: every evict/promote decision the serving
+//! engine makes is owned here, behind a pluggable [`PreemptionPolicy`].
+//!
+//! The paper's block-group allocator gives context switching its
+//! *mechanism* (cheap coalesced transfers); this module supplies the
+//! *policy* layer on top — which victim to evict, and how:
+//!
+//! - [`SwapAllPolicy`] (`swap_all`, the default): evict the whole victim
+//!   to CPU — the pre-refactor behavior, reproduced bit-for-bit.
+//! - [`CostAwarePolicy`] (`cost_aware`): per-victim swap-vs-recompute
+//!   chosen by the [`SwitchCostModel`] crossover — PCIe round-trip time
+//!   for the context's bytes vs the roofline prefill time to recompute
+//!   it (the trade-off vLLM hardcodes per sequence-group kind).
+//! - [`PartialTailPolicy`] (`partial_tail`): under allocator pressure,
+//!   evict only the minimal suffix of the victim's block runs needed to
+//!   satisfy the allocation (Deficit-LRU spirit: preserve KV locality);
+//!   the victim becomes
+//!   [`crate::coordinator::request::ReqState::PartiallyResident`] and
+//!   re-admits with `needed = missing tail` only.
+
+use crate::config::{GpuSpec, PreemptionConfig, PreemptionPolicyKind};
+use crate::memory::RequestId;
+use crate::sim::clock::Ns;
+use crate::sim::PerfModel;
+
+/// Everything a policy may consult about one prospective victim.
+#[derive(Clone, Copy, Debug)]
+pub struct VictimCtx {
+    pub id: RequestId,
+    /// Context tokens materialized (GPU head + CPU tail for partially
+    /// resident victims).
+    pub tokens_in_cache: u64,
+    /// GPU blocks the victim currently holds.
+    pub blocks_held: usize,
+    /// Blocks the evictor actually needs freed. Equals `blocks_held`
+    /// for a whole-victim preemption (scheduler un-admission).
+    pub blocks_wanted: usize,
+    /// Whole-victim eviction: the scheduler removed the victim from the
+    /// admitted set entirely, so a partial tail cannot apply.
+    pub full: bool,
+}
+
+/// What the planner decided for one victim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictionAction {
+    /// Swap the whole resident context to CPU (baseline).
+    SwapAll,
+    /// Drop the KV and re-prefill it at re-admission (the cost model
+    /// says compute is cheaper than the PCIe round trip).
+    Recompute,
+    /// Evict only the last `blocks` of the victim's table; the head
+    /// stays resident.
+    PartialTail { blocks: usize },
+}
+
+/// Swap-vs-recompute cost model: the crossover between moving a context
+/// over PCIe (out now, back in at re-admission) and recomputing it with
+/// a fresh prefill. Pure and deterministic — the `cost_aware` e2e pins
+/// the engine's decisions against exactly these numbers.
+#[derive(Clone, Debug)]
+pub struct SwitchCostModel {
+    block_bytes: u64,
+    gpu: GpuSpec,
+    perf: PerfModel,
+}
+
+impl SwitchCostModel {
+    pub fn new(block_bytes: u64, gpu: GpuSpec, perf: PerfModel) -> Self {
+        SwitchCostModel {
+            block_bytes,
+            gpu,
+            perf,
+        }
+    }
+
+    /// PCIe time to move `blocks` out and back in (one coalesced
+    /// transfer each way at the link's size-dependent efficiency). Uses
+    /// the full block volume — the reuse mechanism may shave the
+    /// outbound delta, but the decision must not depend on transient
+    /// CPU-copy state or runs become schedule-dependent.
+    pub fn swap_roundtrip_ns(&self, blocks: usize) -> Ns {
+        let bytes = blocks as u64 * self.block_bytes;
+        2 * self.gpu.pcie_exec_ns(bytes)
+    }
+
+    /// Roofline time to re-prefill `tokens` from scratch (dense GEMMs +
+    /// the quadratic attention term, which grows recompute's deficit
+    /// further for long contexts).
+    pub fn recompute_ns(&self, tokens: u64) -> Ns {
+        self.perf.prefill_ns(tokens, 0)
+    }
+
+    /// The crossover: is dropping-and-recomputing cheaper than the PCIe
+    /// round trip for this context? The direction is hardware-driven: on
+    /// the paper's A10 testbed the coalesced round trip (~16 µs/token)
+    /// beats roofline recompute (~284 µs/token) at every servable
+    /// context — exactly the premise that makes cheap swapping worth
+    /// engineering — while a slow or contended link (or an
+    /// abundant-compute accelerator) flips the verdict to recompute,
+    /// vLLM's classic fallback.
+    pub fn recompute_cheaper(&self, tokens: u64, blocks: usize) -> bool {
+        self.recompute_ns(tokens) < self.swap_roundtrip_ns(blocks)
+    }
+}
+
+/// A pluggable eviction policy: given a victim and the cost model,
+/// decide how to free its blocks.
+pub trait PreemptionPolicy {
+    fn label(&self) -> &'static str;
+    fn decide(&self, v: &VictimCtx, cost: &SwitchCostModel) -> EvictionAction;
+}
+
+/// `swap_all` — today's behavior: every eviction swaps the whole victim.
+pub struct SwapAllPolicy;
+
+impl PreemptionPolicy for SwapAllPolicy {
+    fn label(&self) -> &'static str {
+        "swap_all"
+    }
+
+    fn decide(&self, _v: &VictimCtx, _cost: &SwitchCostModel) -> EvictionAction {
+        EvictionAction::SwapAll
+    }
+}
+
+/// `cost_aware` — swap or recompute, whichever the model says is
+/// cheaper for this victim's context.
+pub struct CostAwarePolicy;
+
+impl PreemptionPolicy for CostAwarePolicy {
+    fn label(&self) -> &'static str {
+        "cost_aware"
+    }
+
+    fn decide(&self, v: &VictimCtx, cost: &SwitchCostModel) -> EvictionAction {
+        if cost.recompute_cheaper(v.tokens_in_cache, v.blocks_held) {
+            EvictionAction::Recompute
+        } else {
+            EvictionAction::SwapAll
+        }
+    }
+}
+
+/// `partial_tail` — free only what the allocation needs. Whole-victim
+/// preemptions (and asks covering the whole table) fall back to the
+/// full swap.
+pub struct PartialTailPolicy;
+
+impl PreemptionPolicy for PartialTailPolicy {
+    fn label(&self) -> &'static str {
+        "partial_tail"
+    }
+
+    fn decide(&self, v: &VictimCtx, _cost: &SwitchCostModel) -> EvictionAction {
+        if !v.full && v.blocks_wanted > 0 && v.blocks_wanted < v.blocks_held {
+            EvictionAction::PartialTail {
+                blocks: v.blocks_wanted,
+            }
+        } else {
+            EvictionAction::SwapAll
+        }
+    }
+}
+
+/// A victim candidate for [`ContextSwitchPlanner::select_victim`], in
+/// the engine's request-table iteration order.
+#[derive(Clone, Copy, Debug)]
+pub struct VictimRank {
+    pub id: RequestId,
+    pub priority: i64,
+    pub turn_arrival: Ns,
+}
+
+/// Owns all evict/promote decision making for one engine: the eviction
+/// policy, the cost model it consults, and the victim ordering.
+pub struct ContextSwitchPlanner {
+    policy: Box<dyn PreemptionPolicy>,
+    cost: SwitchCostModel,
+    kind: PreemptionPolicyKind,
+}
+
+impl ContextSwitchPlanner {
+    pub fn new(cfg: &PreemptionConfig, cost: SwitchCostModel) -> Self {
+        let policy: Box<dyn PreemptionPolicy> = match cfg.policy {
+            PreemptionPolicyKind::SwapAll => Box::new(SwapAllPolicy),
+            PreemptionPolicyKind::CostAware => Box::new(CostAwarePolicy),
+            PreemptionPolicyKind::PartialTail => Box::new(PartialTailPolicy),
+        };
+        ContextSwitchPlanner {
+            policy,
+            cost,
+            kind: cfg.policy,
+        }
+    }
+
+    pub fn kind(&self) -> PreemptionPolicyKind {
+        self.kind
+    }
+
+    pub fn label(&self) -> &'static str {
+        self.policy.label()
+    }
+
+    pub fn cost_model(&self) -> &SwitchCostModel {
+        &self.cost
+    }
+
+    /// How to evict this victim.
+    pub fn decide_eviction(&self, v: &VictimCtx) -> EvictionAction {
+        self.policy.decide(v, &self.cost)
+    }
+
+    /// Victim ordering under allocator pressure: lowest priority first,
+    /// latest turn arrival breaking ties (LIFO within a level — the
+    /// newest arrival has the least sunk service), then input order.
+    /// Exactly the pre-refactor engine ordering, now pinned by unit
+    /// tests.
+    pub fn select_victim(cands: &[VictimRank]) -> Option<RequestId> {
+        cands
+            .iter()
+            .min_by_key(|v| (v.priority, std::cmp::Reverse(v.turn_arrival)))
+            .map(|v| v.id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+
+    fn cost() -> SwitchCostModel {
+        let model = ModelSpec::llama8b();
+        let gpu = GpuSpec::a10();
+        SwitchCostModel::new(
+            model.block_bytes(),
+            gpu.clone(),
+            PerfModel::new(model, gpu),
+        )
+    }
+
+    fn victim(tokens: u64, held: usize, wanted: usize, full: bool) -> VictimCtx {
+        VictimCtx {
+            id: 1,
+            tokens_in_cache: tokens,
+            blocks_held: held,
+            blocks_wanted: wanted,
+            full,
+        }
+    }
+
+    #[test]
+    fn swap_all_always_swaps() {
+        let c = cost();
+        for v in [victim(100, 7, 2, false), victim(50_000, 3200, 3200, true)] {
+            assert_eq!(SwapAllPolicy.decide(&v, &c), EvictionAction::SwapAll);
+        }
+    }
+
+    /// The same testbed with its PCIe link crippled 64× (0.5 GB/s): a
+    /// round trip now costs ~1 ms/token while recompute stays ~284
+    /// µs/token, so the crossover flips to recompute.
+    fn slow_link_cost() -> SwitchCostModel {
+        let model = ModelSpec::llama8b();
+        let mut gpu = GpuSpec::a10();
+        gpu.pcie_bw = 0.5e9;
+        SwitchCostModel::new(
+            model.block_bytes(),
+            gpu.clone(),
+            PerfModel::new(model, gpu),
+        )
+    }
+
+    #[test]
+    fn cost_model_fast_link_prefers_swap_at_every_context() {
+        // LLaMA-8B on A10: the coalesced PCIe round trip (~16 µs/token)
+        // beats roofline recompute (~284 µs/token) — the paper's premise
+        // that swapping, done well, is the right preemption mechanism.
+        let c = cost();
+        for (tokens, blocks) in [(100u64, 7usize), (1_000, 63), (12_000, 750)] {
+            assert!(
+                !c.recompute_cheaper(tokens, blocks),
+                "swap must win at {tokens} tokens on the fast link"
+            );
+            assert_eq!(
+                CostAwarePolicy.decide(&victim(tokens, blocks, blocks, true), &c),
+                EvictionAction::SwapAll
+            );
+        }
+    }
+
+    #[test]
+    fn cost_model_slow_link_flips_the_crossover_to_recompute() {
+        let c = slow_link_cost();
+        let tokens = 1_000u64;
+        let blocks = 63;
+        assert!(c.recompute_cheaper(tokens, blocks));
+        assert_eq!(
+            CostAwarePolicy.decide(&victim(tokens, blocks, blocks, true), &c),
+            EvictionAction::Recompute
+        );
+    }
+
+    #[test]
+    fn partial_tail_frees_only_what_is_wanted() {
+        let c = cost();
+        assert_eq!(
+            PartialTailPolicy.decide(&victim(1_000, 63, 4, false), &c),
+            EvictionAction::PartialTail { blocks: 4 }
+        );
+        // Whole-victim preemption or an ask covering the whole table
+        // degrades to the full swap.
+        assert_eq!(
+            PartialTailPolicy.decide(&victim(1_000, 63, 63, false), &c),
+            EvictionAction::SwapAll
+        );
+        assert_eq!(
+            PartialTailPolicy.decide(&victim(1_000, 63, 4, true), &c),
+            EvictionAction::SwapAll
+        );
+    }
+
+    #[test]
+    fn victim_ordering_is_priority_then_latest_arrival_then_input_order() {
+        let rank = |id, priority, turn_arrival| VictimRank {
+            id,
+            priority,
+            turn_arrival,
+        };
+        // Lowest priority loses first.
+        assert_eq!(
+            ContextSwitchPlanner::select_victim(&[
+                rank(1, 5, 100),
+                rank(2, 1, 0),
+                rank(3, 9, 500),
+            ]),
+            Some(2)
+        );
+        // Tie on priority: the latest turn arrival (least sunk service)
+        // is evicted.
+        assert_eq!(
+            ContextSwitchPlanner::select_victim(&[
+                rank(1, 5, 100),
+                rank(2, 5, 900),
+                rank(3, 5, 400),
+            ]),
+            Some(2)
+        );
+        // Full tie: first in input (request-table) order wins — the
+        // pre-refactor `min_by_key` semantics, kept for determinism.
+        assert_eq!(
+            ContextSwitchPlanner::select_victim(&[
+                rank(7, 5, 100),
+                rank(8, 5, 100),
+            ]),
+            Some(7)
+        );
+        assert_eq!(ContextSwitchPlanner::select_victim(&[]), None);
+    }
+
+    #[test]
+    fn planner_dispatches_by_config() {
+        let mk = |kind| {
+            ContextSwitchPlanner::new(&PreemptionConfig { policy: kind }, cost())
+        };
+        let v = victim(1_000, 63, 4, false);
+        assert_eq!(
+            mk(PreemptionPolicyKind::SwapAll).decide_eviction(&v),
+            EvictionAction::SwapAll
+        );
+        assert_eq!(
+            mk(PreemptionPolicyKind::PartialTail).decide_eviction(&v),
+            EvictionAction::PartialTail { blocks: 4 }
+        );
+        assert_eq!(
+            mk(PreemptionPolicyKind::CostAware).decide_eviction(&v),
+            EvictionAction::SwapAll,
+            "on the fast A10 link the round trip beats recompute"
+        );
+        assert_eq!(mk(PreemptionPolicyKind::PartialTail).label(), "partial_tail");
+    }
+}

@@ -71,8 +71,7 @@ mod tests {
         let rep = run(&Scale::quick());
         assert_eq!(rep.rows.len(), 4);
         // Tail totals exceed median (heavy-tailed swap stalls).
-        let p50: f64 = rep.rows[0][1].parse().unwrap();
-        let p99: f64 = rep.rows[2][1].parse().unwrap();
+        let (p50, p99) = (rep.num(0, 1), rep.num(2, 1));
         assert!(p99 > p50, "tail must exceed median: {p50} vs {p99}");
     }
 }

@@ -5,7 +5,7 @@
 //! speedup across frequencies (ratio of context-switch overhead to
 //! end-to-end latency).
 
-use super::runner::{run_sim, Scale};
+use super::runner::{at_freq, run_sim, swap_stall_share, Scale};
 use super::{fx, pct, Report};
 use crate::config::{EngineConfig, Preset};
 use crate::coordinator::priority::Pattern;
@@ -17,17 +17,11 @@ pub fn run(freqs: &[f64], scale: &Scale) -> Report {
         &["freq", "vllm ctx share", "dbg ctx share", "ctx-switch speedup"],
     );
     for &f in freqs {
-        let mut base = EngineConfig::vllm_baseline();
-        base.scheduler.priority_update_freq = f;
-        let mut dbg = EngineConfig::with_dbg();
-        dbg.scheduler.priority_update_freq = f;
+        let base = at_freq(EngineConfig::vllm_baseline(), f);
+        let dbg = at_freq(EngineConfig::with_dbg(), f);
         let ob = run_sim(base, Preset::llama8b_a10(), Pattern::Markov, scale);
         let od = run_sim(dbg, Preset::llama8b_a10(), Pattern::Markov, scale);
-        let share = |o: &crate::coordinator::engine::ServeOutcome| {
-            let (inf, swap, sched) = o.recorder.stall_breakdown();
-            swap as f64 / (inf + swap + sched).max(1) as f64
-        };
-        let (sb, sd) = (share(&ob), share(&od));
+        let (sb, sd) = (swap_stall_share(&ob), swap_stall_share(&od));
         // Speedup in absolute context-switch stall time.
         let (_, swap_b, _) = ob.recorder.stall_breakdown();
         let (_, swap_d, _) = od.recorder.stall_breakdown();
@@ -49,7 +43,7 @@ mod tests {
     #[test]
     fn dbg_reduces_context_switch_overhead() {
         let rep = run(&[0.04], &Scale::quick());
-        let spd: f64 = rep.rows[0][3].trim_end_matches('x').parse().unwrap();
+        let spd = rep.num(0, 3);
         assert!(spd > 1.5, "DBG ctx-switch speedup only {spd}x");
     }
 }

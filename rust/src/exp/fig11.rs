@@ -5,7 +5,7 @@
 //! achieved granularity by ≤ 15.13 % at fixed frequency — the allocator
 //! is robust; GPU memory per task, not the knob, determines granularity.
 
-use super::runner::{run_sim, Scale};
+use super::runner::{at_freq, run_sim, Scale};
 use super::{f2, Report};
 use crate::config::{EngineConfig, Granularity, Preset};
 use crate::coordinator::priority::Pattern;
@@ -26,11 +26,10 @@ pub fn run(init_tokens: &[usize], freqs: &[f64], scale: &Scale) -> Report {
         let blocks = toks.div_ceil(block_size);
         let mut cells = vec![toks.to_string(), blocks.to_string()];
         for &f in freqs {
-            let mut cfg = EngineConfig::fastswitch();
+            let mut cfg = at_freq(EngineConfig::fastswitch(), f);
             cfg.granularity = Granularity::BlockGroup {
                 init_group_blocks: blocks,
             };
-            cfg.scheduler.priority_update_freq = f;
             let out = run_sim(cfg, Preset::llama8b_a10(), Pattern::Markov, scale);
             let g = out.swap_stats.avg_granularity();
             extremes.push(g);

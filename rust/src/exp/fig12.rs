@@ -7,17 +7,16 @@
 //! P99.9 (higher is better — note these are efficiency percentiles, so
 //! low percentiles are the stall-hit windows).
 
-use super::runner::{run_sim, Scale};
+use super::runner::{at_freq, run_sim, Scale};
 use super::{f2, pct, Report};
 use crate::config::{EngineConfig, Preset};
 use crate::coordinator::priority::Pattern;
 
 pub fn run(scale: &Scale) -> Report {
     let freq = 0.04;
-    let mut base = EngineConfig::with_dbg_reuse(); // everything but MTSM
-    base.scheduler.priority_update_freq = freq;
-    let mut full = EngineConfig::fastswitch();
-    full.scheduler.priority_update_freq = freq;
+    // Everything but MTSM vs the full system.
+    let base = at_freq(EngineConfig::with_dbg_reuse(), freq);
+    let full = at_freq(EngineConfig::fastswitch(), freq);
 
     let ob = run_sim(base, Preset::llama8b_a10(), Pattern::Markov, scale);
     let of = run_sim(full, Preset::llama8b_a10(), Pattern::Markov, scale);
@@ -55,10 +54,7 @@ mod tests {
     fn mtsm_improves_stall_windows() {
         let rep = run(&Scale::quick());
         // Mean gain over the stall-hit (low) percentiles must be positive.
-        let gains: Vec<f64> = rep.rows[..3]
-            .iter()
-            .map(|r| r[3].trim_end_matches('%').parse().unwrap())
-            .collect();
+        let gains: Vec<f64> = (0..3).map(|row| rep.num(row, 3)).collect();
         let mean = gains.iter().sum::<f64>() / gains.len() as f64;
         assert!(mean > 0.0, "MTSM should lift stall windows: {gains:?}");
     }

@@ -5,7 +5,7 @@
 //! lower context-switch overhead, with diminishing returns past 60 GB
 //! (their testbed's sweet spot).
 
-use super::runner::{run_sim, Scale};
+use super::runner::{at_freq, run_sim, swap_stall_share, Scale};
 use super::{f2, pct, Report};
 use crate::config::{EngineConfig, Preset};
 use crate::coordinator::priority::Pattern;
@@ -25,14 +25,12 @@ pub fn run(cpu_gb: &[u64], scale: &Scale) -> Report {
     for &gb in cpu_gb {
         let mut preset = Preset::llama8b_a10();
         preset.cpu_swap_bytes = gb * (1 << 30);
-        let mut cfg = EngineConfig::fastswitch();
-        cfg.scheduler.priority_update_freq = 0.04;
+        let cfg = at_freq(EngineConfig::fastswitch(), 0.04);
         let out = run_sim(cfg, preset, Pattern::Markov, scale);
-        let (inf, swap, sched) = out.recorder.stall_breakdown();
         let moved = out.reuse_blocks_transferred + out.reuse_blocks_reused;
         rep.row(vec![
             gb.to_string(),
-            pct(swap as f64 / (inf + swap + sched).max(1) as f64),
+            pct(swap_stall_share(&out)),
             pct(out.reuse_blocks_reused as f64 / moved.max(1) as f64),
             f2(out.contaminated as f64 / out.swap_stats.swap_out_ops.max(1) as f64),
             out.recorder.recompute_preemptions.to_string(),
@@ -49,16 +47,13 @@ mod tests {
     #[test]
     fn more_cpu_memory_never_hurts_reuse() {
         let rep = run(&[2, 60], &Scale::quick());
-        let frac = |r: &Vec<String>, i: usize| -> f64 {
-            r[i].trim_end_matches('%').parse().unwrap()
-        };
         // Larger CPU space: more reuse, not more contamination pressure.
         assert!(
-            frac(&rep.rows[1], 2) >= frac(&rep.rows[0], 2) - 1e-9,
+            rep.num(1, 2) >= rep.num(0, 2) - 1e-9,
             "reuse fraction must not fall with more memory"
         );
-        let ctx_small = frac(&rep.rows[0], 1);
-        let ctx_big = frac(&rep.rows[1], 1);
+        let ctx_small = rep.num(0, 1);
+        let ctx_big = rep.num(1, 1);
         assert!(
             ctx_big <= ctx_small + 0.5,
             "ctx overhead should not grow with memory: {ctx_small} -> {ctx_big}"

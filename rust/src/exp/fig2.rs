@@ -41,7 +41,7 @@ mod tests {
     #[test]
     fn most_iterations_have_no_waiters() {
         let rep = run(&Scale::quick());
-        let zero: f64 = rep.rows[0][1].trim_end_matches('%').parse().unwrap();
+        let zero = rep.num(0, 1);
         assert!(zero > 50.0, "zero-waiter share {zero}% too low");
     }
 }

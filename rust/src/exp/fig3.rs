@@ -80,14 +80,12 @@ mod tests {
     #[test]
     fn dispatch_dominates_fixed_but_not_group() {
         let rep = run();
-        let fixed_share: f64 =
-            rep.rows[0][6].trim_end_matches('%').parse().unwrap();
-        let group_share: f64 =
-            rep.rows[1][6].trim_end_matches('%').parse().unwrap();
+        let fixed_share = rep.num(0, 6);
+        let group_share = rep.num(1, 6);
         assert!(fixed_share > 85.0, "fixed dispatch share {fixed_share}");
         assert!(group_share < fixed_share);
-        let fixed_total: f64 = rep.rows[0][5].parse().unwrap();
-        let group_total: f64 = rep.rows[1][5].parse().unwrap();
+        let fixed_total = rep.num(0, 5);
+        let group_total = rep.num(1, 5);
         assert!(
             group_total * 4.0 < fixed_total,
             "coalescing must win big: {group_total} vs {fixed_total}"

@@ -65,9 +65,9 @@ mod tests {
     #[test]
     fn statistics_match_paper() {
         let rep = run(&Scale::quick());
-        let turns: f64 = rep.rows[0][1].parse().unwrap();
+        let turns = rep.num(0, 1);
         assert!((turns - 5.5).abs() < 0.5);
-        let multi: f64 = rep.rows[1][1].trim_end_matches('%').parse().unwrap();
+        let multi = rep.num(1, 1);
         assert!((multi - 78.0).abs() < 6.0);
     }
 }

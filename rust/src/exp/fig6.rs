@@ -88,7 +88,7 @@ mod tests {
     #[test]
     fn asynchrony_degrees_match_paper_fig6() {
         let rep = run();
-        let total = |i: usize| -> f64 { rep.rows[i][3].parse().unwrap() };
+        let total = |i: usize| -> f64 { rep.num(i, 3) };
         // The paper's key observation: regime (b) barely improves on (a)
         // because the dispatch stage — not DMA execution — is the
         // bottleneck at vLLM granularity (Challenge #1/#2).
@@ -103,7 +103,7 @@ mod tests {
         assert!(total(1) > 1.5 * total(2), "(c) must beat (b) decisively");
         assert!(total(2) < 30.5, "fully async ≈ bare iteration: {}", total(2));
         // (b) still pays the full dispatch stage on the main thread.
-        let dispatch_b: f64 = rep.rows[1][1].parse().unwrap();
+        let dispatch_b = rep.num(1, 1);
         assert!(dispatch_b > 30.0, "GIL dispatch of 2016 calls is heavy");
     }
 }

@@ -9,7 +9,7 @@
 //! (e)–(f): end-to-end throughput across priority-update frequencies
 //! (up to 1.334× / 1.444×).
 
-use super::runner::{run_ladder, run_sim, Scale};
+use super::runner::{at_freq, run_ladder, run_sim, Scale};
 use super::{f2, f3, fx, Report};
 use crate::config::{EngineConfig, Preset};
 use crate::coordinator::priority::Pattern;
@@ -80,10 +80,8 @@ pub fn run_throughput(testbed: &str, pattern: Pattern, freqs: &[f64], scale: &Sc
         &["freq", "vllm tok/s", "fastswitch tok/s", "speedup"],
     );
     for &f in freqs {
-        let mut base = EngineConfig::vllm_baseline();
-        base.scheduler.priority_update_freq = f;
-        let mut fast = EngineConfig::fastswitch();
-        fast.scheduler.priority_update_freq = f;
+        let base = at_freq(EngineConfig::vllm_baseline(), f);
+        let fast = at_freq(EngineConfig::fastswitch(), f);
         let ob = run_sim(base, preset.clone(), pattern, scale);
         let of = run_sim(fast, preset.clone(), pattern, scale);
         rep.row(vec![
@@ -101,17 +99,13 @@ pub fn run_throughput(testbed: &str, pattern: Pattern, freqs: &[f64], scale: &Sc
 mod tests {
     use super::*;
 
-    fn spd(cell: &str) -> f64 {
-        cell.trim_end_matches('x').parse().unwrap()
-    }
-
     #[test]
     fn fastswitch_wins_tail_latency_llama() {
         let rep = run_latency("llama8b", Pattern::Markov, &Scale::quick());
         assert_eq!(rep.rows.len(), 4);
-        let last = rep.rows.last().unwrap();
-        assert!(spd(&last[5]) > 1.0, "P95 TTFT speedup {}", last[5]);
-        assert!(spd(&last[8]) > 1.0, "P99.9 TBT speedup {}", last[8]);
+        let last = rep.rows.len() - 1;
+        assert!(rep.num(last, 5) > 1.0, "P95 TTFT speedup {}", rep.rows[last][5]);
+        assert!(rep.num(last, 8) > 1.0, "P99.9 TBT speedup {}", rep.rows[last][8]);
     }
 
     #[test]
@@ -122,6 +116,6 @@ mod tests {
             &[0.04],
             &Scale::quick(),
         );
-        assert!(spd(&rep.rows[0][3]) > 1.0, "speedup {}", rep.rows[0][3]);
+        assert!(rep.num(0, 3) > 1.0, "speedup {}", rep.rows[0][3]);
     }
 }

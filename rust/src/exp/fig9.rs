@@ -6,7 +6,7 @@
 //! scheduling phases (arrival handling, priority updates, admission,
 //! allocation, swap planning) to the virtual clock.
 
-use super::runner::{run_sim, Scale};
+use super::runner::{at_freq, run_sim, sched_overhead_share, Scale};
 use super::{pct, Report};
 use crate::config::{EngineConfig, Preset};
 use crate::coordinator::priority::Pattern;
@@ -21,11 +21,14 @@ pub fn run(freqs: &[f64], scale: &Scale) -> Report {
     scale.charge_sched_overhead = true;
     for &f in freqs {
         let mut cells = vec![format!("{f:.3}")];
-        for mut cfg in EngineConfig::ablation_ladder() {
-            cfg.scheduler.priority_update_freq = f;
-            let out = run_sim(cfg, Preset::llama8b_a10(), Pattern::Markov, &scale);
-            let (inf, swap, sched) = out.recorder.stall_breakdown();
-            cells.push(pct(sched as f64 / (inf + swap + sched).max(1) as f64));
+        for cfg in EngineConfig::ablation_ladder() {
+            let out = run_sim(
+                at_freq(cfg, f),
+                Preset::llama8b_a10(),
+                Pattern::Markov,
+                &scale,
+            );
+            cells.push(pct(sched_overhead_share(&out)));
         }
         rep.row(cells);
     }
@@ -40,8 +43,8 @@ mod tests {
     #[test]
     fn overhead_under_one_percent() {
         let rep = run(&[0.02], &Scale::quick());
-        for cell in &rep.rows[0][1..] {
-            let v: f64 = cell.trim_end_matches('%').parse().unwrap();
+        for col in 1..rep.headers.len() {
+            let v = rep.num(0, col);
             assert!(v < 1.0, "call-stack overhead {v}% exceeds the paper's 1%");
         }
     }

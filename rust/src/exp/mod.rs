@@ -21,6 +21,7 @@ pub mod fig10;
 pub mod fig11;
 pub mod fig12;
 pub mod fig13;
+pub mod preemption;
 pub mod prefetch;
 pub mod runner;
 pub mod table1;
@@ -86,6 +87,17 @@ impl Report {
         out
     }
 
+    /// Numeric value of cell (`row`, `col`), stripping the `%` / `x`
+    /// suffixes the format helpers append — the one parser every
+    /// experiment test used to hand-roll.
+    pub fn num(&self, row: usize, col: usize) -> f64 {
+        self.rows[row][col]
+            .trim_end_matches('%')
+            .trim_end_matches('x')
+            .parse()
+            .unwrap_or_else(|_| panic!("non-numeric cell ({row},{col}): {:?}", self.rows[row][col]))
+    }
+
     /// Render as a markdown table (for EXPERIMENTS.md).
     pub fn markdown(&self) -> String {
         let mut out = String::new();
@@ -137,6 +149,15 @@ mod tests {
         assert!(t.contains("figX") && t.contains("hello"));
         let m = r.markdown();
         assert!(m.contains("| a | b |") && m.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn num_strips_format_suffixes() {
+        let mut r = Report::new("x", "y", &["a", "b", "c"]);
+        r.row(vec!["1.5".into(), "42.0%".into(), "3.11x".into()]);
+        assert_eq!(r.num(0, 0), 1.5);
+        assert_eq!(r.num(0, 1), 42.0);
+        assert_eq!(r.num(0, 2), 3.11);
     }
 
     #[test]

@@ -145,6 +145,26 @@ pub fn run_sim(
     run_sim_with(cfg, preset, pattern, scale, &WorkloadSpec::default())
 }
 
+/// One-liner for the pattern every figure module used to copy: take a
+/// ladder rung, set its priority-update frequency, return it.
+pub fn at_freq(mut cfg: EngineConfig, freq: f64) -> EngineConfig {
+    cfg.scheduler.priority_update_freq = freq;
+    cfg
+}
+
+/// Swap-stall share of end-to-end (inference + swap + scheduler) time —
+/// the "context-switch overhead" quantity of Figs. 10/13.
+pub fn swap_stall_share(out: &ServeOutcome) -> f64 {
+    let (inf, swap, sched) = out.recorder.stall_breakdown();
+    swap as f64 / (inf + swap + sched).max(1) as f64
+}
+
+/// Scheduler-overhead share of end-to-end time (Fig. 9's quantity).
+pub fn sched_overhead_share(out: &ServeOutcome) -> f64 {
+    let (inf, swap, sched) = out.recorder.stall_breakdown();
+    sched as f64 / (inf + swap + sched).max(1) as f64
+}
+
 /// Run the ablation ladder (vllm → +dbg → +reuse → fastswitch) at a
 /// given priority-update frequency.
 pub fn run_ladder(

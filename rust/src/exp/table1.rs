@@ -4,7 +4,7 @@
 //! Paper numbers: blocks 122 030 → 58 187 (−53 %), operations
 //! 13 076 → 10 713, latency 15.5 s → 6.7 s.
 
-use super::runner::{run_sim, Scale};
+use super::runner::{at_freq, run_sim, Scale};
 use super::{pct, Report};
 use crate::config::{EngineConfig, Preset};
 use crate::coordinator::priority::Pattern;
@@ -12,10 +12,8 @@ use crate::sim::clock::to_secs;
 
 pub fn run(scale: &Scale) -> Report {
     let freq = 0.04;
-    let mut trad = EngineConfig::with_dbg(); // DBG on, reuse off
-    trad.scheduler.priority_update_freq = freq;
-    let mut opt = EngineConfig::with_dbg_reuse();
-    opt.scheduler.priority_update_freq = freq;
+    let trad = at_freq(EngineConfig::with_dbg(), freq); // DBG on, reuse off
+    let opt = at_freq(EngineConfig::with_dbg_reuse(), freq);
 
     let ot = run_sim(trad, Preset::llama8b_a10(), Pattern::Markov, scale);
     let oo = run_sim(opt, Preset::llama8b_a10(), Pattern::Markov, scale);
@@ -58,7 +56,7 @@ mod tests {
     #[test]
     fn reuse_halves_swap_out_volume() {
         let rep = run(&Scale::quick());
-        let red: f64 = rep.rows[0][3].trim_end_matches('%').parse().unwrap();
+        let red = rep.num(0, 3);
         assert!(red > 25.0, "block reduction only {red}% (paper: 53%)");
     }
 }

@@ -6,8 +6,9 @@
 //!     Regenerate a paper figure/table (fig1..fig13, table1), the
 //!     fairness-policy showdown (`exp fairness`), the chunked-prefill
 //!     showdown (`exp chunked`), the multi-replica placement showdown
-//!     (`exp cluster`), or the lookahead swap-in prefetch showdown
-//!     (`exp prefetch`).
+//!     (`exp cluster`), the lookahead swap-in prefetch showdown
+//!     (`exp prefetch`), or the preemption-policy showdown
+//!     (`exp preemption`).
 //!
 //! fastswitch simulate [--preset llama8b_a10|qwen32b_a100]
 //!     [--policy vllm|vllm+dbg|vllm+dbg+reuse|fastswitch]
@@ -17,6 +18,7 @@
 //!     [--prefill-mode chunked|monolithic] [--chunk-tokens N]
 //!     [--iter-budget N (0 = roofline auto)]
 //!     [--prefetch-depth K (0 = off)] [--prefetch-io-budget F]
+//!     [--preemption-policy swap_all|cost_aware|partial_tail]
 //!     [--replicas N] [--placement round_robin|least_loaded|kv_affinity]
 //!     [--spill-threshold F]
 //!     [--conversations N] [--rate R] [--seed S] [--config FILE]
@@ -32,7 +34,9 @@
 //! ```
 
 use fastswitch::cluster::{ClusterConfig, ClusterOutcome, PlacementKind};
-use fastswitch::config::{file::ConfigFile, EngineConfig, Granularity, PrefillMode, Preset};
+use fastswitch::config::{
+    file::ConfigFile, EngineConfig, Granularity, PrefillMode, PreemptionPolicyKind, Preset,
+};
 use fastswitch::coordinator::priority::Pattern;
 use fastswitch::exp;
 use fastswitch::exp::runner::{run_cluster_with, run_sim_with, Scale, WorkloadSpec};
@@ -116,12 +120,14 @@ fn cmd_exp(args: &Args) {
         "chunked" => reports.push(exp::chunked_prefill::run(&scale)),
         "cluster" => reports.push(exp::cluster::run(&scale)),
         "prefetch" => reports.push(exp::prefetch::run(&scale)),
+        "preemption" => reports.push(exp::preemption::run(&scale)),
         other => eprintln!("unknown experiment {other:?}"),
     };
     if id == "all" {
         for e in [
             "fig1", "fig2", "fig3", "fig4", "fig6", "fig8", "fig9", "fig10", "fig11",
             "fig12", "fig13", "table1", "fairness", "chunked", "cluster", "prefetch",
+            "preemption",
         ] {
             eprintln!("[exp] running {e} ...");
             run_one(e, &mut reports);
@@ -203,6 +209,10 @@ fn cmd_simulate(args: &Args) {
     if let Some(b) = args.get("prefetch-io-budget") {
         cfg.prefetch.io_budget = b.parse::<f64>().expect("prefetch-io-budget").clamp(0.0, 1.0);
     }
+    if let Some(p) = args.get("preemption-policy") {
+        cfg.preemption.policy = PreemptionPolicyKind::by_name(p)
+            .expect("unknown preemption policy (swap_all|cost_aware|partial_tail)");
+    }
     if let Some(n) = args.get("tenants") {
         spec.tenants = n.parse().expect("tenants");
     }
@@ -267,6 +277,7 @@ fn cmd_simulate(args: &Args) {
     );
     let multi_tenant = spec.tenants > 1;
     let prefetch_depth = cfg.prefetch.depth;
+    let preemption_policy = cfg.preemption.policy;
     let out = run_sim_with(cfg, preset, pattern, &scale, &spec);
     let ttft = out.recorder.ttft();
     let tbt = out.recorder.tbt();
@@ -309,6 +320,17 @@ fn cmd_simulate(args: &Args) {
             out.swap_stats.prefetch_recovered_ns as f64 / 1e6,
             out.swap_stats.prefetch_wasted_bytes as f64 / 1e6,
             out.swap_stats.prefetch_canceled
+        );
+    }
+    if preemption_policy != PreemptionPolicyKind::SwapAll {
+        println!(
+            "preemption ({}): {} partial evictions ({} blocks retained), \
+             swap/recompute decisions {}/{}",
+            preemption_policy.label(),
+            out.recorder.partial_evictions,
+            out.recorder.blocks_retained,
+            out.recorder.evict_swap_decisions,
+            out.recorder.evict_recompute_decisions
         );
     }
     if multi_tenant {

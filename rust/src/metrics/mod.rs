@@ -69,6 +69,18 @@ pub struct Recorder {
     /// Conversations rejected because their context can never fit the
     /// GPU KV space (the max-model-len admission rule).
     pub rejected_conversations: u64,
+    // ---- context-switch planner (preemption policies) ----
+    /// Partial-tail evictions: preemptions that moved only the victim's
+    /// tail blocks and left the head GPU-resident (`partial_tail`).
+    pub partial_evictions: u64,
+    /// Blocks partial evictions kept resident (the KV locality the
+    /// policy preserved — these never crossed PCIe).
+    pub blocks_retained: u64,
+    /// Planner decisions that chose the swap eviction at a
+    /// swap-vs-recompute choice point.
+    pub evict_swap_decisions: u64,
+    /// Planner decisions that chose recompute (`cost_aware` crossover).
+    pub evict_recompute_decisions: u64,
 }
 
 impl Recorder {

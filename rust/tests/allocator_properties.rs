@@ -51,9 +51,10 @@ fn check_invariants(a: &dyn KvAllocator, tables: &HashMap<RequestId, usize>) {
     );
 }
 
-/// Random alloc/grow/free churn; grows force group splits (buddy) and
-/// scatter (fixed), frees force merges, and oversized asks force tail
-/// steals. Returns the surviving live set.
+/// Random alloc/grow/tail-shrink/free churn; grows force group splits
+/// (buddy) and scatter (fixed), frees force merges, oversized asks force
+/// tail steals, and `release_tail` exercises the partial-eviction
+/// shrink-in-place path. Returns the surviving live set.
 fn churn(
     a: &mut dyn KvAllocator,
     rng: &mut Rng,
@@ -64,11 +65,29 @@ fn churn(
     let mut next: RequestId = 0;
     for _ in 0..ops {
         let roll = rng.f64();
-        if roll < 0.35 && !live.is_empty() {
+        if roll < 0.25 && !live.is_empty() {
             let idx = rng.usize(0, live.len());
             let req = live.swap_remove(idx);
             let freed = a.release(req);
             assert_eq!(freed.len(), tables.remove(&req).unwrap());
+        } else if roll < 0.40 && !live.is_empty() {
+            // Shave a random tail (the partial-eviction primitive). `n`
+            // may cover the whole table, degenerating to a full release
+            // — no double free either way, and capacity must balance
+            // after the shrink (checked below every op).
+            let idx = rng.usize(0, live.len());
+            let req = live[idx];
+            let held = tables[&req];
+            let n = rng.usize(1, held + 1);
+            let freed = a.release_tail(req, n);
+            assert_eq!(freed.len(), n.min(held), "tail shrink size");
+            if n >= held {
+                tables.remove(&req);
+                live.swap_remove(idx);
+                assert!(a.table(req).is_empty(), "full tail must forget");
+            } else {
+                *tables.get_mut(&req).unwrap() -= n;
+            }
         } else if roll < 0.65 && !live.is_empty() {
             // Grow an existing request (splits a new group off once the
             // reserved tail is spent).
@@ -114,6 +133,49 @@ fn fixed_conserves_capacity_and_never_double_allocates() {
     for_cases(0xF15E_D000, 25, |rng| {
         let mut a = FixedBlockAllocator::new(N_BLOCKS);
         churn(&mut a, rng, OPS);
+    });
+}
+
+#[test]
+fn buddy_recoalesces_after_tail_shrinks() {
+    // Shrink every survivor of the churn down to a 1-block head via
+    // release_tail (the partial-eviction path), then free the heads: the
+    // free manager must have re-coalesced everything back into one
+    // maximally contiguous range.
+    for_cases(0x7A11_C0A1, 25, |rng| {
+        let mut a = BlockGroupAllocator::new(N_BLOCKS, rng.usize(4, 80), rng.next_u64());
+        let tables = churn(&mut a, rng, OPS);
+        let mut reqs: Vec<RequestId> = tables.keys().copied().collect();
+        reqs.sort_unstable();
+        let mut held_total = 0usize;
+        for &req in &reqs {
+            let held = tables[&req];
+            if held > 1 {
+                let freed = a.release_tail(req, held - 1);
+                assert_eq!(freed.len(), held - 1);
+            }
+            assert_eq!(a.table(req).len(), 1, "head survives the shrink");
+            held_total += 1;
+        }
+        assert_eq!(
+            a.available_blocks() + held_total,
+            N_BLOCKS,
+            "capacity conserved across tail shrinks"
+        );
+        for req in reqs {
+            a.release(req);
+        }
+        let probe: RequestId = u64::MAX;
+        let got = a
+            .allocate(probe, N_BLOCKS)
+            .expect("whole space allocatable after shrink + free");
+        assert_eq!(
+            runs_of_table(&got).len(),
+            1,
+            "tail shrinks must re-coalesce with neighboring free ranges"
+        );
+        a.release(probe);
+        a.space().check_invariants();
     });
 }
 
