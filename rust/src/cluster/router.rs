@@ -27,6 +27,7 @@ use crate::config::{EngineConfig, Preset};
 use crate::coordinator::engine::{ServeOutcome, ServingEngine};
 use crate::coordinator::priority::Pattern;
 use crate::memory::RequestId;
+use crate::obs::{TraceEvent, TraceRecord, TraceSink};
 use crate::sim::clock::Ns;
 use crate::util::stats::Percentiles;
 use crate::workload::{ArrivalTrace, Conversation};
@@ -65,6 +66,11 @@ pub struct ClusterRouter {
     affinity_hits: u64,
     migrations: u64,
     retransferred_blocks: u64,
+    /// Router-level placement trace — a separate stream from the
+    /// per-replica engine traces (replicas advance independent clocks,
+    /// so their streams cannot interleave meaningfully). Off unless
+    /// `cfg.obs.trace`.
+    trace: TraceSink,
 }
 
 impl ClusterRouter {
@@ -98,6 +104,11 @@ impl ClusterRouter {
                 e
             })
             .collect();
+        let trace = if cfg.obs.trace {
+            TraceSink::on()
+        } else {
+            TraceSink::off()
+        };
         let mut router = ClusterRouter {
             replicas,
             placer: Placer::new(cluster.placement),
@@ -109,6 +120,7 @@ impl ClusterRouter {
             affinity_hits: 0,
             migrations: 0,
             retransferred_blocks: 0,
+            trace,
         };
         for e in &arrivals.entries {
             let conv = convs[e.conversation as usize].clone();
@@ -157,6 +169,13 @@ impl ClusterRouter {
             Work::Fresh(conv) => {
                 let target = self.placer.place(&loads, None);
                 self.placements += 1;
+                self.trace.emit(
+                    qw.due,
+                    TraceEvent::Place {
+                        req: conv.id,
+                        replica: target as u32,
+                    },
+                );
                 self.replicas[target].push_arrival(conv, qw.due);
             }
             Work::Turn { id, home } => {
@@ -165,6 +184,13 @@ impl ClusterRouter {
                 self.affinity_decisions += 1;
                 if target == home {
                     self.affinity_hits += 1;
+                    self.trace.emit(
+                        qw.due,
+                        TraceEvent::Place {
+                            req: id,
+                            replica: home as u32,
+                        },
+                    );
                     self.replicas[home].fire_turn(id, qw.due);
                     return;
                 }
@@ -174,6 +200,15 @@ impl ClusterRouter {
                     return;
                 };
                 self.migrations += 1;
+                self.trace.emit(
+                    qw.due,
+                    TraceEvent::Migrate {
+                        req: id,
+                        from: home as u32,
+                        to: target as u32,
+                        blocks: m.cpu_copy_blocks,
+                    },
+                );
                 // Charge the migration by what locality actually lost:
                 // the CPU-resident context blocks the home replica held
                 // (a recompute-preempted conversation with no copy would
@@ -259,6 +294,7 @@ impl ClusterRouter {
             affinity_hits: self.affinity_hits,
             migrations: self.migrations,
             retransferred_blocks_on_migration: self.retransferred_blocks,
+            router_trace: self.trace.drain(),
             replicas: self
                 .replicas
                 .into_iter()
@@ -287,6 +323,10 @@ pub struct ClusterOutcome {
     /// reuse the target replicas must rebuild from scratch (a migration
     /// of a conversation whose home held no copy costs 0).
     pub retransferred_blocks_on_migration: u64,
+    /// Router-level placement/migration trace (empty unless
+    /// `cfg.obs.trace`). Per-replica engine traces live in
+    /// [`ServeOutcome::trace`].
+    pub router_trace: Vec<TraceRecord>,
 }
 
 impl ClusterOutcome {

@@ -39,6 +39,7 @@ pub enum ConfigError {
     UnknownPrefillMode(String),
     UnknownPlacement(String),
     UnknownPreemptionPolicy(String),
+    UnknownTelemetryMode(String),
 }
 
 impl std::fmt::Display for ConfigError {
@@ -65,6 +66,9 @@ impl std::fmt::Display for ConfigError {
                     f,
                     "unknown preemption policy {p:?} (swap_all|cost_aware|partial_tail)"
                 )
+            }
+            ConfigError::UnknownTelemetryMode(m) => {
+                write!(f, "unknown telemetry mode {m:?} (exact|reservoir)")
             }
         }
     }
@@ -196,6 +200,17 @@ impl ConfigFile {
         }
         if let Some(b) = self.get_f64("prefetch", "io_budget") {
             cfg.prefetch.io_budget = b.clamp(0.0, 1.0);
+        }
+        // `[obs]` — observability (tracing / profiling / telemetry).
+        if let Some(t) = self.get_bool("obs", "trace") {
+            cfg.obs.trace = t;
+        }
+        if let Some(p) = self.get_bool("obs", "profile") {
+            cfg.obs.profile = p;
+        }
+        if let Some(m) = self.get("obs", "telemetry") {
+            cfg.obs.telemetry = crate::obs::TelemetryMode::by_name(m)
+                .ok_or_else(|| ConfigError::UnknownTelemetryMode(m.into()))?;
         }
         if let Some(p) = self.get("fairness", "policy") {
             cfg.fairness.policy = crate::fairness::PolicyKind::by_name(p)
@@ -367,6 +382,28 @@ pattern = "markov"
         assert!(matches!(
             bad.engine(),
             Err(ConfigError::UnknownPreemptionPolicy(_))
+        ));
+    }
+
+    #[test]
+    fn obs_section_sets_tracing_and_telemetry() {
+        use crate::obs::TelemetryMode;
+        let c = ConfigFile::parse(
+            "[obs]\ntrace = true\nprofile = yes\ntelemetry = \"reservoir\"",
+        )
+        .unwrap();
+        let e = c.engine().unwrap();
+        assert!(e.obs.trace);
+        assert!(e.obs.profile);
+        assert_eq!(e.obs.telemetry, TelemetryMode::Reservoir);
+        // Absent section keeps everything off/exact (seed behavior).
+        let d = ConfigFile::parse("").unwrap().engine().unwrap();
+        assert!(!d.obs.trace && !d.obs.profile);
+        assert_eq!(d.obs.telemetry, TelemetryMode::Exact);
+        let bad = ConfigFile::parse("[obs]\ntelemetry = \"nope\"").unwrap();
+        assert!(matches!(
+            bad.engine(),
+            Err(ConfigError::UnknownTelemetryMode(_))
         ));
     }
 

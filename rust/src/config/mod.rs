@@ -10,6 +10,7 @@
 pub mod file;
 
 use crate::fairness::FairnessConfig;
+use crate::obs::ObsConfig;
 
 /// Served-model characteristics that drive KV-cache geometry and the
 /// roofline inference model. Mirrors the paper's LLaMA-8B / Qwen-32B.
@@ -393,6 +394,9 @@ pub struct EngineConfig {
     pub prefetch: PrefetchConfig,
     /// Pluggable eviction policy (`swap_all` default — seed behavior).
     pub preemption: PreemptionConfig,
+    /// Observability: lifecycle tracing, epoch profiling, telemetry
+    /// mode (everything off/exact by default — seed behavior).
+    pub obs: ObsConfig,
     pub label: String,
 }
 
@@ -410,6 +414,7 @@ impl EngineConfig {
             fairness: FairnessConfig::default(),
             prefetch: PrefetchConfig::default(),
             preemption: PreemptionConfig::default(),
+            obs: ObsConfig::default(),
             label: "vllm".into(),
         }
     }
@@ -656,6 +661,18 @@ mod tests {
         );
         assert_eq!(PreemptionPolicyKind::by_name("nope"), None);
         assert_eq!(PreemptionPolicyKind::PartialTail.label(), "partial_tail");
+    }
+
+    #[test]
+    fn obs_defaults_off_everywhere() {
+        use crate::obs::TelemetryMode;
+        // Observability is opt-in on every ladder rung: no trace buffer,
+        // no profiler, exact telemetry — the e2e pins depend on it.
+        for cfg in EngineConfig::ablation_ladder() {
+            assert!(!cfg.obs.trace, "{} traces by default", cfg.label);
+            assert!(!cfg.obs.profile, "{} profiles by default", cfg.label);
+            assert_eq!(cfg.obs.telemetry, TelemetryMode::Exact);
+        }
     }
 
     #[test]

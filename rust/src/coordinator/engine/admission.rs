@@ -9,6 +9,7 @@ use crate::coordinator::request::{KvLocation, ReqState, Request};
 use crate::coordinator::scheduler::Candidate;
 use crate::fairness::TenantId;
 use crate::memory::RequestId;
+use crate::obs::TraceEvent;
 use crate::swap::manager::PrefetchCancel;
 
 impl ServingEngine {
@@ -46,6 +47,7 @@ impl ServingEngine {
             let tenant = conv.tenant;
             let r = Request::new(id, conv, t);
             self.rec.turn_arrival(id, 0, t, tenant);
+            self.trace.emit(t, TraceEvent::Arrival { req: id, turn: 0, tenant });
             self.reqs.insert(r);
             self.reject_if_oversized(id);
         }
@@ -69,6 +71,7 @@ impl ServingEngine {
             let arr = r.turn_arrival;
             let tenant = r.tenant();
             self.rec.turn_arrival(id, turn, arr, tenant);
+            self.trace.emit(arr, TraceEvent::Arrival { req: id, turn, tenant });
             // A later turn may have grown past the servable context.
             self.reject_if_oversized(id);
         }
@@ -80,6 +83,13 @@ impl ServingEngine {
             return;
         }
         self.last_epoch = epoch;
+        self.trace.emit(self.now, TraceEvent::Epoch { epoch });
+        // Fold the per-stage wall-clock accumulators into the epoch
+        // statistics at the same boundary the priorities refresh on (the
+        // very first epoch has accumulated nothing yet — skip it).
+        if self.iter > 0 {
+            self.rec.profiler.roll();
+        }
         // Live (unfinished) requests and the distinct tenants backing
         // them; finished requests hold no GPU/CPU state, so their stale
         // priorities are irrelevant.

@@ -13,6 +13,7 @@ use crate::coordinator::scheduler::schedule;
 use crate::coordinator::switch::{ContextSwitchPlanner, VictimRank};
 use crate::memory::{BlockId, RequestId};
 use crate::metrics::IterationSample;
+use crate::obs::{Stage, TraceEvent};
 use crate::sim::clock::{to_secs, Ns};
 
 impl ServingEngine {
@@ -30,6 +31,10 @@ impl ServingEngine {
             return false;
         }
         let wall0 = Instant::now();
+        // Per-stage wall-clock profiling (telemetry only — never charged
+        // to the virtual clock). `None` when profiling is off, so the
+        // default path takes no `Instant::now` reads here.
+        let mut seg_t = self.rec.profiler.enabled.then(Instant::now);
         self.admit_arrivals();
         self.harvest_async();
         self.update_priorities();
@@ -41,6 +46,12 @@ impl ServingEngine {
             self.cfg.scheduler.max_batch,
             self.budget(),
         );
+        if let Some(t) = seg_t {
+            self.rec
+                .profiler
+                .add(Stage::Admission, t.elapsed().as_nanos() as u64);
+            seg_t = Some(Instant::now());
+        }
 
         let mut stall: Ns = 0;
 
@@ -104,6 +115,13 @@ impl ServingEngine {
                 ReqState::Prefilling if g.prefill > 0 => {
                     let take = g.prefill.min(r.prefill_remaining());
                     if take > 0 {
+                        self.trace.emit(
+                            self.now,
+                            TraceEvent::ChunkGrant {
+                                req: g.id,
+                                tokens: take as usize,
+                            },
+                        );
                         prefill_take.push((g.id, take));
                     }
                 }
@@ -206,6 +224,12 @@ impl ServingEngine {
         // re-admission).
         decode_set.retain(|&id| self.reqs.get(id).state == ReqState::Running);
         prefill_take.retain(|&(id, _)| self.reqs.get(id).state == ReqState::Prefilling);
+        if let Some(t) = seg_t {
+            self.rec
+                .profiler
+                .add(Stage::Preemption, t.elapsed().as_nanos() as u64);
+            seg_t = Some(Instant::now());
+        }
 
         // ---- execute: one mixed decode + chunked-prefill iteration ----
         let sched_ns = if self.charge_sched_overhead {
@@ -309,6 +333,12 @@ impl ServingEngine {
         }
         self.now += post_stall;
         let stall = stall + post_stall;
+        if let Some(t) = seg_t {
+            self.rec
+                .profiler
+                .add(Stage::Execution, t.elapsed().as_nanos() as u64);
+            seg_t = Some(Instant::now());
+        }
 
         // Track the working-iteration cadence (idle ticks excluded) —
         // the prefetcher's epoch-to-wall-clock conversion — then give
@@ -318,6 +348,11 @@ impl ServingEngine {
                 0.9 * self.iter_span_ema + 0.1 * (dur + stall + sched_ns) as f64;
         }
         self.prefetch_pass();
+        if let Some(t) = seg_t {
+            self.rec
+                .profiler
+                .add(Stage::Prefetch, t.elapsed().as_nanos() as u64);
+        }
 
         let waiting_on_swap = self
             .reqs
@@ -438,6 +473,7 @@ impl ServingEngine {
             reuse_blocks_reused: self.reuse.blocks_reused,
             contaminated: self.cpu.total_contaminated,
             label: self.cfg.label.clone(),
+            trace: self.trace.drain(),
             recorder: self.rec,
         }
     }

@@ -6,6 +6,7 @@ use super::{MigratedConv, ServingEngine};
 use crate::block::KvAllocator;
 use crate::coordinator::request::ReqState;
 use crate::memory::RequestId;
+use crate::obs::TraceEvent;
 use crate::sim::clock::Ns;
 use crate::swap::manager::PrefetchCancel;
 use crate::workload::{Conversation, Turn};
@@ -76,6 +77,13 @@ impl ServingEngine {
         if !draining && !prefetch_draining {
             self.alloc.as_dyn().release(id);
         }
+        self.trace.emit(
+            self.now,
+            TraceEvent::MigrationEvict {
+                req: id,
+                blocks: cpu_copy_blocks,
+            },
+        );
         self.cpu.drop_request(id);
         self.reuse.forget(id);
         // Remove the record entirely: the conversation may return to this

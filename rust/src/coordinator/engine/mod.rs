@@ -47,6 +47,7 @@ use crate::coordinator::switch::{ContextSwitchPlanner, SwitchCostModel};
 use crate::fairness::policy::{build_policy, PriorityPolicy};
 use crate::memory::{CpuSwapSpace, RequestId};
 use crate::metrics::Recorder;
+use crate::obs::{TraceRecord, TraceSink};
 use crate::sim::clock::Ns;
 use crate::sim::link::PcieLink;
 use crate::sim::PerfModel;
@@ -65,6 +66,8 @@ pub struct ServeOutcome {
     pub reuse_blocks_reused: u64,
     pub contaminated: u64,
     pub label: String,
+    /// Lifecycle trace stream (empty unless `cfg.obs.trace`).
+    pub trace: Vec<TraceRecord>,
 }
 
 impl ServeOutcome {
@@ -133,6 +136,10 @@ pub struct ServingEngine {
     /// (request, due-time) for turns waiting out think time.
     pending_turns: Vec<(RequestId, Ns)>,
     pub rec: Recorder,
+    /// Lifecycle trace sink — shared with the swap manager so engine
+    /// and I/O events interleave in one ordered stream. Off (no buffer)
+    /// unless `cfg.obs.trace`.
+    trace: TraceSink,
     now: Ns,
     iter: u64,
     epoch_iters: u64,
@@ -196,6 +203,13 @@ impl ServingEngine {
         let link = PcieLink::new(preset.gpu.clone());
         let mut mgr = SwapManager::new(cfg.swap_mode, cfg.dispatch, &cfg.swap_cost, link);
         mgr.configure_prefetch(cfg.prefetch.io_budget * preset.gpu.pcie_bw);
+        let obs = cfg.obs;
+        let trace = if obs.trace {
+            TraceSink::on()
+        } else {
+            TraceSink::off()
+        };
+        mgr.set_trace(trace.clone());
         let seg = SegmentBuilder::new(preset.model.clone(), cfg.granularity);
         let reuse = crate::block::reuse::KvCacheReuse::new(cfg.reuse, block_size);
         let policy = build_policy(
@@ -243,7 +257,8 @@ impl ServingEngine {
             reqs: RequestTable::default(),
             future,
             pending_turns: Vec::new(),
-            rec: Recorder::default(),
+            rec: Recorder::with_obs(obs.telemetry, obs.profile),
+            trace,
             now: 0,
             iter: 0,
             epoch_iters,

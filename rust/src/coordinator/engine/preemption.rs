@@ -20,6 +20,7 @@ use crate::coordinator::switch::{
     ContextSwitchPlanner, EvictionAction, VictimCtx, VictimRank,
 };
 use crate::memory::{BlockId, RequestId};
+use crate::obs::TraceEvent;
 use crate::sim::clock::Ns;
 use crate::sim::link::Direction;
 use crate::swap::engine::BlockMove;
@@ -100,6 +101,13 @@ impl ServingEngine {
     /// exhausted, and the `cost_aware` policy's choice when the model
     /// says compute is cheaper than the PCIe round trip.
     pub(super) fn recompute_preempt(&mut self, id: RequestId, turn_end: bool) -> Ns {
+        self.trace.emit(
+            self.now,
+            TraceEvent::Recompute {
+                req: id,
+                blocks: self.alloc.as_dyn_ref().table(id).len(),
+            },
+        );
         self.alloc.as_dyn().release(id);
         self.cpu.drop_request(id);
         self.reuse.forget(id);
@@ -135,7 +143,17 @@ impl ServingEngine {
             blocks_wanted: held,
             full: true,
         };
-        match self.planner.decide_eviction(&ctx) {
+        let action = self.planner.decide_eviction(&ctx);
+        self.trace.emit(
+            self.now,
+            TraceEvent::Preempt {
+                req: id,
+                reason: "unadmitted",
+                action: action.label(),
+                blocks: held,
+            },
+        );
+        match action {
             EvictionAction::Recompute => {
                 self.rec.evict_recompute_decisions += 1;
                 self.recompute_preempt(id, false)
@@ -165,7 +183,17 @@ impl ServingEngine {
             blocks_wanted: need,
             full: false,
         };
-        match self.planner.decide_eviction(&ctx) {
+        let action = self.planner.decide_eviction(&ctx);
+        self.trace.emit(
+            self.now,
+            TraceEvent::Preempt {
+                req: victim,
+                reason: "pressure",
+                action: action.label(),
+                blocks: held,
+            },
+        );
+        match action {
             EvictionAction::PartialTail { blocks } => self.preempt_tail(victim, blocks),
             EvictionAction::Recompute => {
                 self.rec.evict_recompute_decisions += 1;
@@ -220,7 +248,17 @@ impl ServingEngine {
             let wanted = deficit.min(held);
             deficit -= wanted;
             let tokens = self.reqs.get(id).tokens_in_cache;
-            if wanted < held && tokens > 0 {
+            let partial = wanted < held && tokens > 0;
+            self.trace.emit(
+                self.now,
+                TraceEvent::Preempt {
+                    req: id,
+                    reason: "sweep",
+                    action: if partial { "partial_tail" } else { "swap_all" },
+                    blocks: wanted,
+                },
+            );
+            if partial {
                 stall += self.preempt_tail(id, wanted);
             } else {
                 // Whole-victim ask (or nothing materialized): baseline
@@ -350,6 +388,14 @@ impl ServingEngine {
         if n_tail == 0 || n_tail >= held {
             return self.preempt(id, false);
         }
+        self.trace.emit(
+            self.now,
+            TraceEvent::PartialShave {
+                req: id,
+                evicted: n_tail,
+                retained: held - n_tail,
+            },
+        );
         // Logical tail blocks that actually hold KV and must move.
         let lo = (held - n_tail) as u32;
         let hi = held.min(total) as u32;
@@ -472,10 +518,14 @@ impl ServingEngine {
                 };
                 r.kv = KvLocation::Gpu;
                 self.release_cpu_copy_after_swap_in(id);
+                self.trace
+                    .emit(self.now, TraceEvent::Promote { req: id, stall_ns: 0 });
                 return Some((0, Vec::new()));
             }
             Some(PrefetchClaim::Pending { .. }) => {
                 self.reqs.get_mut(id).state = ReqState::SwappingIn;
+                self.trace
+                    .emit(self.now, TraceEvent::Promote { req: id, stall_ns: 0 });
                 return Some((0, Vec::new()));
             }
             None => {}
@@ -563,6 +613,8 @@ impl ServingEngine {
         if sync_done {
             self.release_cpu_copy_after_swap_in(id);
         }
+        self.trace
+            .emit(self.now, TraceEvent::Promote { req: id, stall_ns: stall });
         Some((stall, blocks))
     }
 
@@ -574,6 +626,14 @@ impl ServingEngine {
         let turn = r.turn as u32;
         self.rec.turn_finished(id, turn);
         let r = self.reqs.get(id);
+        self.trace.emit(
+            self.now,
+            TraceEvent::TurnFinish {
+                req: id,
+                turn,
+                last: r.is_last_turn(),
+            },
+        );
         if r.is_last_turn() {
             self.alloc.as_dyn().release(id);
             self.cpu.drop_request(id);
@@ -595,6 +655,15 @@ impl ServingEngine {
         } else {
             self.pending_turns.push((id, due));
         }
+        self.trace.emit(
+            self.now,
+            TraceEvent::Preempt {
+                req: id,
+                reason: "turn_end",
+                action: "swap_all",
+                blocks: self.alloc.as_dyn_ref().table(id).len(),
+            },
+        );
         self.preempt(id, true)
     }
 }

@@ -53,6 +53,17 @@ pub enum EvictionAction {
     PartialTail { blocks: usize },
 }
 
+impl EvictionAction {
+    /// Stable label for trace events and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvictionAction::SwapAll => "swap_all",
+            EvictionAction::Recompute => "recompute",
+            EvictionAction::PartialTail { .. } => "partial_tail",
+        }
+    }
+}
+
 /// Swap-vs-recompute cost model: the crossover between moving a context
 /// over PCIe (out now, back in at re-admission) and recomputing it with
 /// a fresh prefill. Pure and deterministic — the `cost_aware` e2e pins

@@ -1,0 +1,259 @@
+//! The per-PR performance ledger — the canonical cross-PR measurement
+//! matrix, regenerated into a schema-stable `BENCH_PR<N>.json` at the
+//! repo root so every performance delta shows up as a reviewable diff.
+//!
+//! The matrix has four sections (schema in [`crate::obs::ledger`]):
+//!
+//! - **hotpath** — ns/op micro-measurements of the L3 hot operations
+//!   (RNG draw, reservoir insert, trace emit on/off, percentile merge);
+//! - **scheduler_epoch** — mean wall-ns per priority-update epoch by
+//!   pipeline stage, from the [`crate::obs::EpochProfiler`];
+//! - **throughput** — end-to-end tokens/s at 1 and 3 replicas on the
+//!   bursty 6-tenant churn mix;
+//! - **policies** — p50/p99 TTFT+TBT, stall shares, preemption counts
+//!   and swap volume per preemption policy on the same mix.
+//!
+//! Wall-clock numbers here are measurements, not determinism pins — the
+//! virtual-time e2e pins live in `rust/tests/`.
+//!
+//! `fastswitch exp ledger [--ledger-out PATH]`.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use super::preemption::{self, BURST, FREQ, HEAVY_SHARE, N_TENANTS, POLICIES};
+use super::runner::{
+    at_freq, run_cluster_with, run_sim_with, sched_overhead_share, swap_stall_share,
+    Scale, WorkloadSpec,
+};
+use super::{f2, f3, Report};
+use crate::cluster::ClusterConfig;
+use crate::config::{EngineConfig, Preset};
+use crate::coordinator::priority::Pattern;
+use crate::fairness::PolicyKind;
+use crate::obs::ledger::{
+    EpochCost, HotpathRow, Ledger, LedgerConfig, PolicyRow, ThroughputRow, LEDGER_SCHEMA,
+};
+use crate::obs::{Reservoir, Stage, TraceEvent, TraceSink};
+use crate::util::rng::Rng;
+use crate::util::stats::Percentiles;
+
+/// The PR this tree's ledger is stamped with.
+pub const PR: u32 = 6;
+
+/// The churn mix every section measures under — identical to the
+/// preemption showdown's (6 tenants, bursty arrivals, VTC, hard
+/// priority churn).
+fn churn_spec() -> WorkloadSpec {
+    WorkloadSpec {
+        tenants: N_TENANTS,
+        heavy_share: HEAVY_SHARE,
+        burst: Some(BURST),
+        ..WorkloadSpec::default()
+    }
+}
+
+fn churn_cfg() -> EngineConfig {
+    let mut cfg = at_freq(EngineConfig::fastswitch(), FREQ);
+    cfg.fairness.policy = PolicyKind::Vtc;
+    cfg
+}
+
+/// Time `iters` calls of `f` and report the mean ns/op.
+fn measure(name: &str, iters: u64, mut f: impl FnMut()) -> HotpathRow {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    HotpathRow {
+        name: name.into(),
+        ns_per_op: t0.elapsed().as_nanos() as f64 / iters as f64,
+    }
+}
+
+fn hotpath_rows() -> Vec<HotpathRow> {
+    let mut rng = Rng::new(0xBE7C);
+    let mut res = Reservoir::default();
+    let mut x = 0.0f64;
+    let off = TraceSink::off();
+    let on = TraceSink::on();
+    let parts: Vec<Percentiles> = (0..4)
+        .map(|k| Percentiles::from((0..256).map(|i| (i * 4 + k) as f64).collect()))
+        .collect();
+    vec![
+        measure("rng_next_u64", 1_000_000, || {
+            black_box(rng.next_u64());
+        }),
+        measure("reservoir_add", 1_000_000, || {
+            res.add(black_box(x));
+            x += 1.0;
+        }),
+        // The default-off cost every engine iteration pays per would-be
+        // event — must stay indistinguishable from zero.
+        measure("trace_emit_off", 1_000_000, || {
+            off.emit(0, TraceEvent::Epoch { epoch: 0 });
+        }),
+        measure("trace_emit_on", 100_000, || {
+            on.emit(0, TraceEvent::Epoch { epoch: 0 });
+        }),
+        // Cross-replica percentile aggregation (exercises the
+        // exact-capacity merge preallocation).
+        measure("percentiles_merge_4x256", 2_000, || {
+            black_box(Percentiles::merged(parts.clone()).p(99.0));
+        }),
+    ]
+}
+
+/// Measure the full matrix at `scale`.
+pub fn build(scale: &Scale) -> Ledger {
+    // One profiled single-engine run covers both the per-stage epoch
+    // costs and the 1-replica throughput point.
+    let mut cfg = churn_cfg();
+    cfg.obs.profile = true;
+    cfg.label = "ledger_profiled".into();
+    let spec = churn_spec();
+    let profiled =
+        run_sim_with(cfg, Preset::llama8b_a10(), Pattern::Markov, scale, &spec);
+    let prof = &profiled.recorder.profiler;
+    let scheduler_epoch = EpochCost {
+        admission_ns_mean: prof.mean_ns(Stage::Admission),
+        preemption_ns_mean: prof.mean_ns(Stage::Preemption),
+        prefetch_ns_mean: prof.mean_ns(Stage::Prefetch),
+        execution_ns_mean: prof.mean_ns(Stage::Execution),
+        total_ns_mean: prof.total_mean_ns(),
+    };
+    let cluster = run_cluster_with(
+        churn_cfg(),
+        Preset::llama8b_a10(),
+        Pattern::Markov,
+        ClusterConfig {
+            replicas: 3,
+            ..ClusterConfig::default()
+        },
+        scale,
+        &spec,
+    );
+    let throughput = vec![
+        ThroughputRow {
+            replicas: 1,
+            tokens_per_s: profiled.throughput(),
+        },
+        ThroughputRow {
+            replicas: 3,
+            tokens_per_s: cluster.throughput(),
+        },
+    ];
+
+    let policies = POLICIES
+        .iter()
+        .map(|&kind| {
+            let out = preemption::run_policy(kind, scale);
+            let ttft = out.recorder.ttft();
+            let tbt = out.recorder.tbt();
+            PolicyRow {
+                policy: out.label.clone(),
+                ttft_p50_s: ttft.p(50.0),
+                ttft_p99_s: ttft.p(99.0),
+                tbt_p50_s: tbt.p(50.0),
+                tbt_p99_s: tbt.p(99.0),
+                swap_stall_share: swap_stall_share(&out),
+                sched_overhead_share: sched_overhead_share(&out),
+                preemptions: out.recorder.preemptions,
+                partial_evictions: out.recorder.partial_evictions,
+                swap_gb: out.swap_stats.total_bytes as f64 / 1e9,
+                tokens_per_s: out.throughput(),
+            }
+        })
+        .collect();
+
+    Ledger {
+        pr: PR,
+        config: LedgerConfig {
+            conversations: scale.conversations,
+            seed: scale.seed,
+            tenants: N_TENANTS,
+            heavy_share: HEAVY_SHARE,
+            burst: BURST,
+            priority_update_freq: FREQ,
+        },
+        hotpath: hotpath_rows(),
+        scheduler_epoch,
+        throughput,
+        policies,
+    }
+}
+
+/// Measure the matrix, write `out_path`, and return the summary report.
+pub fn run(scale: &Scale, out_path: &str) -> Report {
+    let ledger = build(scale);
+    let json = ledger.to_json();
+    let mut rep = Report::new(
+        "ledger",
+        &format!("per-PR perf ledger (PR {PR}, schema {LEDGER_SCHEMA})"),
+        &["section", "metric", "value"],
+    );
+    for h in &ledger.hotpath {
+        rep.row(vec!["hotpath".into(), h.name.clone(), f2(h.ns_per_op)]);
+    }
+    rep.row(vec![
+        "epoch".into(),
+        "total_ns_mean".into(),
+        f2(ledger.scheduler_epoch.total_ns_mean),
+    ]);
+    for t in &ledger.throughput {
+        rep.row(vec![
+            "throughput".into(),
+            format!("{}x tok/s", t.replicas),
+            f2(t.tokens_per_s),
+        ]);
+    }
+    for p in &ledger.policies {
+        rep.row(vec![
+            "policy".into(),
+            format!("{} ttft_p99_s", p.policy),
+            f3(p.ttft_p99_s),
+        ]);
+        rep.row(vec![
+            "policy".into(),
+            format!("{} tok/s", p.policy),
+            f2(p.tokens_per_s),
+        ]);
+    }
+    match std::fs::write(out_path, &json) {
+        Ok(()) => rep.note(format!("wrote {out_path} ({} bytes)", json.len())),
+        Err(e) => rep.note(format!("FAILED to write {out_path}: {e}")),
+    }
+    rep.note(
+        "wall-clock sections (hotpath, scheduler_epoch) vary by host; the \
+         virtual-time sections (throughput, policies) are deterministic per seed",
+    );
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_produces_the_full_matrix() {
+        let scale = Scale {
+            conversations: 12,
+            ..Scale::quick()
+        };
+        let l = build(&scale);
+        assert_eq!(l.pr, PR);
+        assert_eq!(l.policies.len(), POLICIES.len());
+        for (row, kind) in l.policies.iter().zip(POLICIES) {
+            assert_eq!(row.policy, kind.label());
+        }
+        assert_eq!(l.throughput.len(), 2);
+        assert_eq!(l.throughput[0].replicas, 1);
+        assert_eq!(l.throughput[1].replicas, 3);
+        assert!(l.throughput[0].tokens_per_s > 0.0);
+        assert!(!l.hotpath.is_empty());
+        assert!(l.hotpath.iter().all(|h| h.ns_per_op.is_finite()));
+        let j = l.to_json();
+        assert!(j.contains(LEDGER_SCHEMA));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+}

@@ -48,7 +48,12 @@
 //!   the next priority epochs will re-admit and issues their swap-ins
 //!   early as background PCIe traffic under an I/O budget, so a
 //!   predicted re-admission lands with zero synchronous swap-in stall
-//!   (`exp prefetch` sweeps the lookahead depth).
+//!   (`exp prefetch` sweeps the lookahead depth);
+//! - the [`obs`] observability layer: zero-cost-when-off request
+//!   lifecycle tracing with a `chrome://tracing` exporter, bounded
+//!   reservoir telemetry + a per-stage scheduler-epoch profiler, and
+//!   the per-PR perf ledger (`exp ledger` regenerates
+//!   `BENCH_PR<N>.json` at the repo root).
 //!
 //! ## Architecture (three layers, Python never on the request path)
 //!
@@ -81,6 +86,7 @@ pub mod exp;
 pub mod fairness;
 pub mod memory;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod sim;

@@ -10,6 +10,11 @@
 //!     (`exp prefetch`), or the preemption-policy showdown
 //!     (`exp preemption`).
 //!
+//! fastswitch exp ledger [--ledger-out FILE] [--conversations N] [--seed S]
+//!     Measure the per-PR perf ledger matrix (hotpath ns/op, scheduler
+//!     epoch cost, throughput at 1/3 replicas, per-policy tail latency)
+//!     and write the schema-stable JSON (default BENCH_PR6.json).
+//!
 //! fastswitch simulate [--preset llama8b_a10|qwen32b_a100]
 //!     [--policy vllm|vllm+dbg|vllm+dbg+reuse|fastswitch]
 //!     [--pattern markov|random|roundrobin] [--freq F]
@@ -22,6 +27,8 @@
 //!     [--replicas N] [--placement round_robin|least_loaded|kv_affinity]
 //!     [--spill-threshold F]
 //!     [--conversations N] [--rate R] [--seed S] [--config FILE]
+//!     [--trace] [--trace-out FILE] [--obs-profile]
+//!     [--telemetry exact|reservoir]
 //!     One simulation run; prints the SLO summary (a per-tenant
 //!     breakdown when --tenants > 1, and cluster aggregates when
 //!     --replicas > 1).
@@ -41,6 +48,7 @@ use fastswitch::coordinator::priority::Pattern;
 use fastswitch::exp;
 use fastswitch::exp::runner::{run_cluster_with, run_sim_with, Scale, WorkloadSpec};
 use fastswitch::fairness::PolicyKind;
+use fastswitch::obs::{chrome, Stage, TelemetryMode, TraceRecord};
 use fastswitch::runtime::PjrtModel;
 use fastswitch::server::{RealEngine, RealEngineConfig, RealRequestSpec};
 use fastswitch::util::cli::Args;
@@ -121,13 +129,17 @@ fn cmd_exp(args: &Args) {
         "cluster" => reports.push(exp::cluster::run(&scale)),
         "prefetch" => reports.push(exp::prefetch::run(&scale)),
         "preemption" => reports.push(exp::preemption::run(&scale)),
+        "ledger" => reports.push(exp::ledger::run(
+            &scale,
+            args.get_or("ledger-out", "BENCH_PR6.json"),
+        )),
         other => eprintln!("unknown experiment {other:?}"),
     };
     if id == "all" {
         for e in [
             "fig1", "fig2", "fig3", "fig4", "fig6", "fig8", "fig9", "fig10", "fig11",
             "fig12", "fig13", "table1", "fairness", "chunked", "cluster", "prefetch",
-            "preemption",
+            "preemption", "ledger",
         ] {
             eprintln!("[exp] running {e} ...");
             run_one(e, &mut reports);
@@ -238,6 +250,18 @@ fn cmd_simulate(args: &Args) {
             };
         }
     }
+    if args.flag("trace") {
+        cfg.obs.trace = true;
+    }
+    if args.flag("obs-profile") {
+        cfg.obs.profile = true;
+    }
+    if let Some(m) = args.get("telemetry") {
+        cfg.obs.telemetry =
+            TelemetryMode::by_name(m).expect("unknown telemetry mode (exact|reservoir)");
+    }
+    let trace_on = cfg.obs.trace;
+    let trace_out = args.get_or("trace-out", "trace.json").to_string();
     let pattern = Pattern::by_name(&pattern_name).expect("unknown pattern");
 
     if ccfg.replicas > 1 {
@@ -254,6 +278,18 @@ fn cmd_simulate(args: &Args) {
         let multi_tenant = spec.tenants > 1;
         let out = run_cluster_with(cfg, preset, pattern, ccfg, &scale, &spec);
         print_cluster_summary(&out, multi_tenant);
+        if trace_on {
+            // One lane per replica, plus the router's own stream (its
+            // events sit on the arrival clock, not any replica clock).
+            let mut lanes: Vec<(u32, &[TraceRecord])> = out
+                .replicas
+                .iter()
+                .enumerate()
+                .map(|(i, o)| (i as u32, o.trace.as_slice()))
+                .collect();
+            lanes.push((out.replicas.len() as u32, out.router_trace.as_slice()));
+            write_trace(&trace_out, &lanes);
+        }
         return;
     }
 
@@ -278,6 +314,7 @@ fn cmd_simulate(args: &Args) {
     let multi_tenant = spec.tenants > 1;
     let prefetch_depth = cfg.prefetch.depth;
     let preemption_policy = cfg.preemption.policy;
+    let profile_on = cfg.obs.profile;
     let out = run_sim_with(cfg, preset, pattern, &scale, &spec);
     let ttft = out.recorder.ttft();
     let tbt = out.recorder.tbt();
@@ -322,6 +359,19 @@ fn cmd_simulate(args: &Args) {
             out.swap_stats.prefetch_canceled
         );
     }
+    if profile_on {
+        let p = &out.recorder.profiler;
+        println!(
+            "epoch cost (wall)      : {:.0} ns mean over {} epochs \
+             (admission {:.0} / preemption {:.0} / prefetch {:.0} / execution {:.0})",
+            p.total_mean_ns(),
+            p.epochs(),
+            p.mean_ns(Stage::Admission),
+            p.mean_ns(Stage::Preemption),
+            p.mean_ns(Stage::Prefetch),
+            p.mean_ns(Stage::Execution)
+        );
+    }
     if preemption_policy != PreemptionPolicyKind::SwapAll {
         println!(
             "preemption ({}): {} partial evictions ({} blocks retained), \
@@ -346,6 +396,19 @@ fn cmd_simulate(args: &Args) {
             out.recorder.jain_fairness()
         );
     }
+    if trace_on {
+        write_trace(&trace_out, &[(0, out.trace.as_slice())]);
+    }
+}
+
+/// Write trace lanes as Chrome trace-event JSON.
+fn write_trace(path: &str, lanes: &[(u32, &[TraceRecord])]) {
+    let events: usize = lanes.iter().map(|(_, r)| r.len()).sum();
+    std::fs::write(path, chrome::export(lanes)).expect("write trace");
+    eprintln!(
+        "[simulate] wrote Chrome trace {path} ({events} events; open in \
+         chrome://tracing or ui.perfetto.dev)"
+    );
 }
 
 /// Shared per-tenant breakdown rows (single-engine and cluster

@@ -9,6 +9,7 @@
 //! of the above by tenant.
 
 use crate::memory::RequestId;
+use crate::obs::{EpochProfiler, Reservoir, TelemetryMode};
 use crate::sim::clock::{to_secs, Ns};
 use crate::util::stats::Percentiles;
 use std::collections::HashMap;
@@ -81,9 +82,28 @@ pub struct Recorder {
     pub evict_swap_decisions: u64,
     /// Planner decisions that chose recompute (`cost_aware` crossover).
     pub evict_recompute_decisions: u64,
+    // ---- observability (obs) --------------------------------------------
+    /// Latency summary mode. [`TelemetryMode::Exact`] (the default)
+    /// keeps every sample and is what the e2e pins measure;
+    /// [`TelemetryMode::Reservoir`] additionally feeds the bounded
+    /// reservoirs online and serves percentiles from them.
+    pub telemetry: TelemetryMode,
+    /// Per-stage scheduler-epoch wall-time profiler (off by default).
+    pub profiler: EpochProfiler,
+    ttft_res: Reservoir,
+    tbt_res: Reservoir,
 }
 
 impl Recorder {
+    /// Recorder with observability knobs applied (the engine's
+    /// constructor path; `Recorder::default()` keeps everything off).
+    pub fn with_obs(telemetry: TelemetryMode, profile: bool) -> Self {
+        Recorder {
+            telemetry,
+            profiler: EpochProfiler::new(profile),
+            ..Recorder::default()
+        }
+    }
     /// A turn became servable (its request arrived / think time elapsed).
     pub fn turn_arrival(&mut self, req: RequestId, turn: u32, at: Ns, tenant: u32) {
         let idx = self.turns.len();
@@ -101,6 +121,11 @@ impl Recorder {
             let rec = &mut self.turns[idx];
             if rec.first_token.is_none() {
                 rec.first_token = Some(at);
+                if self.telemetry == TelemetryMode::Reservoir {
+                    self.ttft_res.add(to_secs(at - rec.arrival));
+                }
+            } else if self.telemetry == TelemetryMode::Reservoir {
+                self.tbt_res.add(to_secs(at - *rec.token_times.last().unwrap()));
             }
             rec.token_times.push(at);
             self.total_tokens += 1;
@@ -118,9 +143,27 @@ impl Recorder {
 
     // ---- summaries -------------------------------------------------------
 
-    /// TTFT samples in seconds (finished or in-flight turns that produced
-    /// a first token).
+    /// TTFT summary in the configured [`TelemetryMode`]: exact over all
+    /// samples, or the bounded reservoir's retained subset.
     pub fn ttft(&self) -> Percentiles {
+        match self.telemetry {
+            TelemetryMode::Exact => self.ttft_exact(),
+            TelemetryMode::Reservoir => self.ttft_res.percentiles(),
+        }
+    }
+
+    /// TBT summary in the configured [`TelemetryMode`].
+    pub fn tbt(&self) -> Percentiles {
+        match self.telemetry {
+            TelemetryMode::Exact => self.tbt_exact(),
+            TelemetryMode::Reservoir => self.tbt_res.percentiles(),
+        }
+    }
+
+    /// Exact TTFT samples in seconds (finished or in-flight turns that
+    /// produced a first token) — always available; the reservoir
+    /// accuracy tests compare against this.
+    pub fn ttft_exact(&self) -> Percentiles {
         Percentiles::from(
             self.turns
                 .iter()
@@ -129,8 +172,8 @@ impl Recorder {
         )
     }
 
-    /// TBT samples in seconds (all inter-token gaps).
-    pub fn tbt(&self) -> Percentiles {
+    /// Exact TBT samples in seconds (all inter-token gaps).
+    pub fn tbt_exact(&self) -> Percentiles {
         let mut gaps = Vec::new();
         for t in &self.turns {
             for w in t.token_times.windows(2) {
@@ -194,40 +237,44 @@ impl Recorder {
         v
     }
 
-    /// Per-tenant TTFT percentiles, sorted by tenant.
-    pub fn ttft_by_tenant(&self) -> Vec<(u32, Percentiles)> {
-        let mut samples: HashMap<u32, Vec<f64>> = HashMap::new();
+    /// Both per-tenant latency breakdowns from ONE tenant-indexed pass
+    /// over the turns — `(ttft, tbt)`, each sorted by tenant. TTFT
+    /// includes only tenants with a first token; TBT includes every
+    /// tenant with a recorded turn (possibly with an empty sample set),
+    /// matching the historical per-metric scans exactly.
+    pub fn latency_by_tenant(&self) -> (Vec<(u32, Percentiles)>, Vec<(u32, Percentiles)>) {
+        let mut ttft: HashMap<u32, Vec<f64>> = HashMap::new();
+        let mut tbt: HashMap<u32, Vec<f64>> = HashMap::new();
         for t in &self.turns {
             if let Some(f) = t.first_token {
-                samples
-                    .entry(t.tenant)
+                ttft.entry(t.tenant)
                     .or_default()
                     .push(to_secs(f - t.arrival));
             }
-        }
-        let mut v: Vec<(u32, Percentiles)> = samples
-            .into_iter()
-            .map(|(t, s)| (t, Percentiles::from(s)))
-            .collect();
-        v.sort_by_key(|&(t, _)| t);
-        v
-    }
-
-    /// Per-tenant TBT percentiles, sorted by tenant.
-    pub fn tbt_by_tenant(&self) -> Vec<(u32, Percentiles)> {
-        let mut samples: HashMap<u32, Vec<f64>> = HashMap::new();
-        for t in &self.turns {
-            let s = samples.entry(t.tenant).or_default();
+            let s = tbt.entry(t.tenant).or_default();
             for w in t.token_times.windows(2) {
                 s.push(to_secs(w[1] - w[0]));
             }
         }
-        let mut v: Vec<(u32, Percentiles)> = samples
-            .into_iter()
-            .map(|(t, s)| (t, Percentiles::from(s)))
-            .collect();
-        v.sort_by_key(|&(t, _)| t);
-        v
+        let finish = |m: HashMap<u32, Vec<f64>>| {
+            let mut v: Vec<(u32, Percentiles)> = m
+                .into_iter()
+                .map(|(t, s)| (t, Percentiles::from(s)))
+                .collect();
+            v.sort_by_key(|&(t, _)| t);
+            v
+        };
+        (finish(ttft), finish(tbt))
+    }
+
+    /// Per-tenant TTFT percentiles, sorted by tenant.
+    pub fn ttft_by_tenant(&self) -> Vec<(u32, Percentiles)> {
+        self.latency_by_tenant().0
+    }
+
+    /// Per-tenant TBT percentiles, sorted by tenant.
+    pub fn tbt_by_tenant(&self) -> Vec<(u32, Percentiles)> {
+        self.latency_by_tenant().1
     }
 
     /// Tokens generated per tenant (every tenant with a recorded turn
@@ -463,6 +510,40 @@ mod tests {
         assert!((shares[0].1 - 0.75).abs() < 1e-9);
         assert!((shares[1].1 - 0.25).abs() < 1e-9);
         assert!((r.max_min_share_ratio() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reservoir_mode_matches_exact_below_capacity() {
+        let mut r = Recorder::with_obs(TelemetryMode::Reservoir, false);
+        r.turn_arrival(1, 0, 0, 0);
+        r.token(1, 0, SEC);
+        r.token(1, 0, SEC + 100 * MS);
+        r.token(1, 0, SEC + 400 * MS);
+        // Below reservoir capacity the retained set IS the sample set.
+        assert_eq!(r.ttft().samples(), r.ttft_exact().samples());
+        assert_eq!(r.tbt().samples(), r.tbt_exact().samples());
+        // Exact mode serves the exact pipeline (the pinned default).
+        let d = Recorder::default();
+        assert_eq!(d.telemetry, TelemetryMode::Exact);
+        assert!(!d.profiler.enabled);
+    }
+
+    #[test]
+    fn single_pass_by_tenant_matches_per_metric_views() {
+        let mut r = Recorder::default();
+        r.turn_arrival(1, 0, 0, 0);
+        r.token(1, 0, SEC);
+        r.token(1, 0, 2 * SEC);
+        r.turn_arrival(2, 0, 0, 3);
+        // Tenant 3 has a turn but no tokens: present in TBT (empty),
+        // absent from TTFT — the historical shape.
+        let (ttft, tbt) = r.latency_by_tenant();
+        assert_eq!(ttft.len(), 1);
+        assert_eq!(tbt.len(), 2);
+        assert!(tbt[1].1.is_empty());
+        assert_eq!(ttft[0].0, 0);
+        assert_eq!(r.ttft_by_tenant().len(), ttft.len());
+        assert_eq!(r.tbt_by_tenant().len(), tbt.len());
     }
 
     #[test]

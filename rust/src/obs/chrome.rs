@@ -1,0 +1,229 @@
+//! Chrome trace-event exporter: renders a trace stream as the JSON
+//! array format `chrome://tracing` / Perfetto load directly, keyed by
+//! simulation time.
+//!
+//! Mapping: events with a completion timestamp (swap-out, swap-in,
+//! prefetch issue) become complete spans (`"ph": "X"`, `dur` =
+//! `done - at`); everything else is an instant (`"ph": "i"`). `pid` is
+//! the replica lane (0 for single-engine runs, replica count = router
+//! lane), `tid` groups events by subsystem so the viewer stacks
+//! lifecycle, swap, prefetch, and routing rows separately. Timestamps
+//! are virtual nanoseconds rendered as microseconds (the unit the
+//! viewer expects).
+
+use super::trace::{TraceEvent, TraceRecord};
+use std::fmt::Write as _;
+
+/// Subsystem row within a process lane.
+fn tid(ev: &TraceEvent) -> u32 {
+    match ev {
+        TraceEvent::SwapOut { .. } | TraceEvent::SwapIn { .. } => 1,
+        TraceEvent::PrefetchIssue { .. }
+        | TraceEvent::PrefetchClaim { .. }
+        | TraceEvent::PrefetchCancel { .. } => 2,
+        TraceEvent::Place { .. }
+        | TraceEvent::Migrate { .. }
+        | TraceEvent::MigrationEvict { .. } => 3,
+        _ => 0,
+    }
+}
+
+fn push_arg(args: &mut String, key: &str, val: impl std::fmt::Display) {
+    if !args.is_empty() {
+        args.push(',');
+    }
+    let _ = write!(args, "\"{key}\":{val}");
+}
+
+/// The `args` object for one event — every payload field, numerically.
+fn args_json(ev: &TraceEvent) -> String {
+    let mut a = String::new();
+    match ev {
+        TraceEvent::Arrival { req, turn, tenant } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "turn", turn);
+            push_arg(&mut a, "tenant", tenant);
+        }
+        TraceEvent::Epoch { epoch } => push_arg(&mut a, "epoch", epoch),
+        TraceEvent::Promote { req, stall_ns } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "stall_ns", stall_ns);
+        }
+        TraceEvent::ChunkGrant { req, tokens } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "tokens", tokens);
+        }
+        TraceEvent::Preempt { req, reason, action, blocks } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "reason", format_args!("\"{reason}\""));
+            push_arg(&mut a, "action", format_args!("\"{action}\""));
+            push_arg(&mut a, "blocks", blocks);
+        }
+        TraceEvent::PartialShave { req, evicted, retained } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "evicted", evicted);
+            push_arg(&mut a, "retained", retained);
+        }
+        TraceEvent::Recompute { req, blocks } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "blocks", blocks);
+        }
+        TraceEvent::SwapOut { req, blocks, bytes, sync, .. }
+        | TraceEvent::SwapIn { req, blocks, bytes, sync, .. } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "blocks", blocks);
+            push_arg(&mut a, "bytes", bytes);
+            push_arg(&mut a, "sync", sync);
+        }
+        TraceEvent::PrefetchIssue { req, blocks, bytes, .. } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "blocks", blocks);
+            push_arg(&mut a, "bytes", bytes);
+        }
+        TraceEvent::PrefetchClaim { req, ready } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "ready", ready);
+        }
+        TraceEvent::PrefetchCancel { req, landed } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "landed", landed);
+        }
+        TraceEvent::TurnFinish { req, turn, last } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "turn", turn);
+            push_arg(&mut a, "last", last);
+        }
+        TraceEvent::Place { req, replica } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "replica", replica);
+        }
+        TraceEvent::Migrate { req, from, to, blocks } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "from", from);
+            push_arg(&mut a, "to", to);
+            push_arg(&mut a, "blocks", blocks);
+        }
+        TraceEvent::MigrationEvict { req, blocks } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "blocks", blocks);
+        }
+    }
+    a
+}
+
+/// Export one or more trace lanes as a Chrome trace-event JSON object.
+///
+/// Each `(pid, records)` pair is one process lane — replica index for
+/// engine streams, one extra lane for the cluster router. The output is
+/// loadable as-is in `chrome://tracing` or <https://ui.perfetto.dev>.
+pub fn export(lanes: &[(u32, &[TraceRecord])]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for &(pid, records) in lanes {
+        for r in records {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let ts = r.at as f64 / 1000.0;
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"pid\":{},\"tid\":{},\"ts\":{:.3},",
+                r.ev.name(),
+                pid,
+                tid(&r.ev),
+                ts
+            );
+            match r.ev.done() {
+                Some(done) => {
+                    let dur = done.saturating_sub(r.at) as f64 / 1000.0;
+                    let _ = write!(out, "\"ph\":\"X\",\"dur\":{dur:.3},");
+                }
+                None => {
+                    let _ = write!(out, "\"ph\":\"i\",\"s\":\"t\",");
+                }
+            }
+            let _ = write!(out, "\"args\":{{{}}}}}", args_json(&r.ev));
+        }
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<TraceRecord> {
+        vec![
+            TraceRecord { at: 1_000, ev: TraceEvent::Arrival { req: 1, turn: 0, tenant: 2 } },
+            TraceRecord {
+                at: 2_000,
+                ev: TraceEvent::SwapOut { req: 1, blocks: 4, bytes: 4096, sync: false, done: 9_000 },
+            },
+            TraceRecord {
+                at: 3_500,
+                ev: TraceEvent::Preempt { req: 1, reason: "pressure", action: "partial_tail", blocks: 8 },
+            },
+        ]
+    }
+
+    /// Minimal structural JSON check: balanced braces/brackets outside
+    /// string literals, correct top-level shape.
+    fn assert_balanced(s: &str) {
+        let (mut brace, mut bracket, mut in_str, mut esc) = (0i64, 0i64, false, false);
+        for c in s.chars() {
+            if in_str {
+                if esc {
+                    esc = false;
+                } else if c == '\\' {
+                    esc = true;
+                } else if c == '"' {
+                    in_str = false;
+                }
+                continue;
+            }
+            match c {
+                '"' => in_str = true,
+                '{' => brace += 1,
+                '}' => brace -= 1,
+                '[' => bracket += 1,
+                ']' => bracket -= 1,
+                _ => {}
+            }
+            assert!(brace >= 0 && bracket >= 0, "early close in {s}");
+        }
+        assert_eq!(brace, 0, "unbalanced braces");
+        assert_eq!(bracket, 0, "unbalanced brackets");
+        assert!(!in_str, "unterminated string");
+    }
+
+    #[test]
+    fn export_shape_and_balance() {
+        let recs = sample();
+        let json = export(&[(0, recs.as_slice())]);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("\"displayTimeUnit\":\"ms\"}"));
+        assert_balanced(&json);
+        assert_eq!(json.matches("\"ph\":").count(), recs.len());
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), 1, "one span event");
+        assert!(json.contains("\"dur\":7.000"), "9µs - 2µs span: {json}");
+        assert!(json.contains("\"reason\":\"pressure\""));
+    }
+
+    #[test]
+    fn lanes_become_pids() {
+        let recs = sample();
+        let json = export(&[(0, recs.as_slice()), (3, recs.as_slice())]);
+        assert_balanced(&json);
+        assert_eq!(json.matches("\"pid\":3").count(), recs.len());
+        assert_eq!(json.matches("\"ph\":").count(), 2 * recs.len());
+    }
+
+    #[test]
+    fn empty_export_is_valid() {
+        let json = export(&[]);
+        assert_balanced(&json);
+        assert!(json.contains("\"traceEvents\":[]"));
+    }
+}

@@ -1,0 +1,251 @@
+//! Perf-ledger schema: the typed record behind `BENCH_PR<N>.json` and
+//! its hand-rolled (dependency-free) JSON emitter.
+//!
+//! The ledger is the regression-visible performance trajectory: every
+//! PR regenerates the canonical matrix (hotpath ops, scheduler epoch
+//! cost, tokens/s at 1 and 3 replicas, per-policy tail latency + stall
+//! breakdown under the bursty 6-tenant churn mix) into a schema-stable
+//! JSON file at the repo root, so any perf delta shows up as a diff.
+//! The matrix *runner* lives in `exp::ledger`; this module is only the
+//! schema + serializer, so `obs` never depends on `exp`.
+
+use std::fmt::Write as _;
+
+/// Schema identifier — bump only on breaking key/type changes.
+pub const LEDGER_SCHEMA: &str = "fastswitch-ledger-v1";
+
+/// Workload/config fingerprint the matrix was measured under.
+#[derive(Clone, Debug)]
+pub struct LedgerConfig {
+    pub conversations: usize,
+    pub seed: u64,
+    pub tenants: usize,
+    pub heavy_share: f64,
+    pub burst: f64,
+    pub priority_update_freq: f64,
+}
+
+/// One micro-benchmarked hot operation.
+#[derive(Clone, Debug)]
+pub struct HotpathRow {
+    pub name: String,
+    pub ns_per_op: f64,
+}
+
+/// Mean wall-ns per scheduler epoch, by stage (from the epoch
+/// profiler).
+#[derive(Clone, Debug, Default)]
+pub struct EpochCost {
+    pub admission_ns_mean: f64,
+    pub preemption_ns_mean: f64,
+    pub prefetch_ns_mean: f64,
+    pub execution_ns_mean: f64,
+    pub total_ns_mean: f64,
+}
+
+/// End-to-end throughput at a replica count.
+#[derive(Clone, Debug)]
+pub struct ThroughputRow {
+    pub replicas: usize,
+    pub tokens_per_s: f64,
+}
+
+/// Tail latency + stall breakdown for one preemption policy on the
+/// churn mix.
+#[derive(Clone, Debug)]
+pub struct PolicyRow {
+    pub policy: String,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tbt_p50_s: f64,
+    pub tbt_p99_s: f64,
+    pub swap_stall_share: f64,
+    pub sched_overhead_share: f64,
+    pub preemptions: u64,
+    pub partial_evictions: u64,
+    pub swap_gb: f64,
+    pub tokens_per_s: f64,
+}
+
+/// The full canonical matrix for one PR.
+#[derive(Clone, Debug)]
+pub struct Ledger {
+    pub pr: u32,
+    pub config: LedgerConfig,
+    pub hotpath: Vec<HotpathRow>,
+    pub scheduler_epoch: EpochCost,
+    pub throughput: Vec<ThroughputRow>,
+    pub policies: Vec<PolicyRow>,
+}
+
+/// JSON number: finite floats at fixed precision, non-finite → 0.0 (a
+/// `NaN` would make the file unparseable).
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "0.0".to_string()
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl Ledger {
+    /// Serialize to the schema-stable pretty JSON written at repo root.
+    pub fn to_json(&self) -> String {
+        let mut o = String::new();
+        let _ = writeln!(o, "{{");
+        let _ = writeln!(o, "  \"schema\": \"{LEDGER_SCHEMA}\",");
+        let _ = writeln!(o, "  \"pr\": {},", self.pr);
+        let c = &self.config;
+        let _ = writeln!(o, "  \"config\": {{");
+        let _ = writeln!(o, "    \"conversations\": {},", c.conversations);
+        let _ = writeln!(o, "    \"seed\": {},", c.seed);
+        let _ = writeln!(o, "    \"tenants\": {},", c.tenants);
+        let _ = writeln!(o, "    \"heavy_share\": {},", num(c.heavy_share));
+        let _ = writeln!(o, "    \"burst\": {},", num(c.burst));
+        let _ = writeln!(
+            o,
+            "    \"priority_update_freq\": {}",
+            num(c.priority_update_freq)
+        );
+        let _ = writeln!(o, "  }},");
+        let _ = writeln!(o, "  \"hotpath\": [");
+        for (i, h) in self.hotpath.iter().enumerate() {
+            let comma = if i + 1 < self.hotpath.len() { "," } else { "" };
+            let _ = writeln!(
+                o,
+                "    {{\"name\": \"{}\", \"ns_per_op\": {}}}{comma}",
+                esc(&h.name),
+                num(h.ns_per_op)
+            );
+        }
+        let _ = writeln!(o, "  ],");
+        let e = &self.scheduler_epoch;
+        let _ = writeln!(o, "  \"scheduler_epoch\": {{");
+        let _ = writeln!(o, "    \"admission_ns_mean\": {},", num(e.admission_ns_mean));
+        let _ = writeln!(o, "    \"preemption_ns_mean\": {},", num(e.preemption_ns_mean));
+        let _ = writeln!(o, "    \"prefetch_ns_mean\": {},", num(e.prefetch_ns_mean));
+        let _ = writeln!(o, "    \"execution_ns_mean\": {},", num(e.execution_ns_mean));
+        let _ = writeln!(o, "    \"total_ns_mean\": {}", num(e.total_ns_mean));
+        let _ = writeln!(o, "  }},");
+        let _ = writeln!(o, "  \"throughput\": [");
+        for (i, t) in self.throughput.iter().enumerate() {
+            let comma = if i + 1 < self.throughput.len() { "," } else { "" };
+            let _ = writeln!(
+                o,
+                "    {{\"replicas\": {}, \"tokens_per_s\": {}}}{comma}",
+                t.replicas,
+                num(t.tokens_per_s)
+            );
+        }
+        let _ = writeln!(o, "  ],");
+        let _ = writeln!(o, "  \"policies\": [");
+        for (i, p) in self.policies.iter().enumerate() {
+            let comma = if i + 1 < self.policies.len() { "," } else { "" };
+            let _ = writeln!(o, "    {{");
+            let _ = writeln!(o, "      \"policy\": \"{}\",", esc(&p.policy));
+            let _ = writeln!(o, "      \"ttft_p50_s\": {},", num(p.ttft_p50_s));
+            let _ = writeln!(o, "      \"ttft_p99_s\": {},", num(p.ttft_p99_s));
+            let _ = writeln!(o, "      \"tbt_p50_s\": {},", num(p.tbt_p50_s));
+            let _ = writeln!(o, "      \"tbt_p99_s\": {},", num(p.tbt_p99_s));
+            let _ = writeln!(o, "      \"swap_stall_share\": {},", num(p.swap_stall_share));
+            let _ = writeln!(
+                o,
+                "      \"sched_overhead_share\": {},",
+                num(p.sched_overhead_share)
+            );
+            let _ = writeln!(o, "      \"preemptions\": {},", p.preemptions);
+            let _ = writeln!(o, "      \"partial_evictions\": {},", p.partial_evictions);
+            let _ = writeln!(o, "      \"swap_gb\": {},", num(p.swap_gb));
+            let _ = writeln!(o, "      \"tokens_per_s\": {}", num(p.tokens_per_s));
+            let _ = writeln!(o, "    }}{comma}");
+        }
+        let _ = writeln!(o, "  ]");
+        o.push('}');
+        o.push('\n');
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Ledger {
+        Ledger {
+            pr: 6,
+            config: LedgerConfig {
+                conversations: 24,
+                seed: 42,
+                tenants: 6,
+                heavy_share: 0.5,
+                burst: 4.0,
+                priority_update_freq: 0.25,
+            },
+            hotpath: vec![HotpathRow { name: "rng_next_u64".into(), ns_per_op: 1.5 }],
+            scheduler_epoch: EpochCost {
+                admission_ns_mean: 100.0,
+                preemption_ns_mean: 200.0,
+                prefetch_ns_mean: 50.0,
+                execution_ns_mean: 400.0,
+                total_ns_mean: 750.0,
+            },
+            throughput: vec![
+                ThroughputRow { replicas: 1, tokens_per_s: 1000.0 },
+                ThroughputRow { replicas: 3, tokens_per_s: 2800.0 },
+            ],
+            policies: vec![PolicyRow {
+                policy: "swap_all".into(),
+                ttft_p50_s: 0.1,
+                ttft_p99_s: 0.9,
+                tbt_p50_s: 0.03,
+                tbt_p99_s: 0.2,
+                swap_stall_share: 0.05,
+                sched_overhead_share: 0.01,
+                preemptions: 12,
+                partial_evictions: 0,
+                swap_gb: 1.25,
+                tokens_per_s: 990.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn json_has_every_schema_key() {
+        let j = sample().to_json();
+        for key in [
+            "\"schema\"", "\"pr\"", "\"config\"", "\"conversations\"", "\"seed\"",
+            "\"tenants\"", "\"heavy_share\"", "\"burst\"", "\"priority_update_freq\"",
+            "\"hotpath\"", "\"ns_per_op\"", "\"scheduler_epoch\"", "\"admission_ns_mean\"",
+            "\"preemption_ns_mean\"", "\"prefetch_ns_mean\"", "\"execution_ns_mean\"",
+            "\"total_ns_mean\"", "\"throughput\"", "\"replicas\"", "\"tokens_per_s\"",
+            "\"policies\"", "\"policy\"", "\"ttft_p50_s\"", "\"ttft_p99_s\"",
+            "\"tbt_p50_s\"", "\"tbt_p99_s\"", "\"swap_stall_share\"",
+            "\"sched_overhead_share\"", "\"preemptions\"", "\"partial_evictions\"",
+            "\"swap_gb\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in\n{j}");
+        }
+        assert!(j.contains(LEDGER_SCHEMA));
+    }
+
+    #[test]
+    fn json_guards_non_finite() {
+        let mut l = sample();
+        l.scheduler_epoch.total_ns_mean = f64::NAN;
+        let j = l.to_json();
+        assert!(!j.contains("NaN"), "NaN leaked into JSON:\n{j}");
+        assert!(j.contains("\"total_ns_mean\": 0.0"));
+    }
+
+    #[test]
+    fn json_is_structurally_balanced() {
+        let j = sample().to_json();
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+    }
+}

@@ -1,0 +1,89 @@
+//! Observability layer: request-lifecycle tracing, bounded-reservoir
+//! telemetry, and the perf-ledger schema.
+//!
+//! Three layers, all default-off and all side-effect-free on the
+//! simulation itself:
+//!
+//! - [`trace`]: a zero-cost-when-off [`TraceSink`] recording typed
+//!   events for every request state transition (arrival, promotion,
+//!   preemption, swap/prefetch I/O, migration, turn finish), plus the
+//!   [`chrome`] exporter that renders a run for `chrome://tracing`.
+//! - [`reservoir`]: O(1) fixed-array reservoir percentiles (the Falcon
+//!   `Timer` idiom) and the per-stage scheduler-epoch profiler — the
+//!   bounded alternative to the exact Vec-push percentile pipeline.
+//! - [`ledger`]: the schema behind the per-PR `BENCH_PR<N>.json`
+//!   perf trajectory (the matrix runner lives in [`crate::exp`]).
+//!
+//! The determinism contract: with [`ObsConfig::default`] (everything
+//! off) no trace buffer exists, no reservoir is fed, no wall clock is
+//! read, and no RNG stream is touched — every e2e pin stays
+//! byte-identical.
+
+pub mod chrome;
+pub mod ledger;
+pub mod reservoir;
+pub mod trace;
+
+pub use reservoir::{EpochProfiler, Reservoir, Stage, RESERVOIR_N};
+pub use trace::{text_dump, TraceEvent, TraceRecord, TraceSink};
+
+/// How the [`crate::metrics::Recorder`] summarizes TTFT/TBT latency.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TelemetryMode {
+    /// Keep every sample; percentiles are exact (the default — e2e
+    /// pins and paper figures rely on it).
+    #[default]
+    Exact,
+    /// Feed bounded reservoirs online; percentiles are sampled with
+    /// O(1) memory per metric.
+    Reservoir,
+}
+
+impl TelemetryMode {
+    pub fn by_name(s: &str) -> Option<TelemetryMode> {
+        match s {
+            "exact" => Some(TelemetryMode::Exact),
+            "reservoir" => Some(TelemetryMode::Reservoir),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TelemetryMode::Exact => "exact",
+            TelemetryMode::Reservoir => "reservoir",
+        }
+    }
+}
+
+/// The `[obs]` config section: every knob defaults to off/exact.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Record the lifecycle trace stream.
+    pub trace: bool,
+    /// Measure per-stage scheduler wall time per epoch.
+    pub profile: bool,
+    /// Latency summary mode.
+    pub telemetry: TelemetryMode,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_fully_off() {
+        let o = ObsConfig::default();
+        assert!(!o.trace);
+        assert!(!o.profile);
+        assert_eq!(o.telemetry, TelemetryMode::Exact);
+    }
+
+    #[test]
+    fn telemetry_mode_round_trips() {
+        for m in [TelemetryMode::Exact, TelemetryMode::Reservoir] {
+            assert_eq!(TelemetryMode::by_name(m.label()), Some(m));
+        }
+        assert_eq!(TelemetryMode::by_name("bogus"), None);
+    }
+}

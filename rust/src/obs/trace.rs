@@ -1,0 +1,247 @@
+//! Request-lifecycle tracing: a zero-cost-when-off [`TraceSink`]
+//! recording typed events for every request state transition.
+//!
+//! The sink is a cloneable handle over one shared buffer, so the engine,
+//! the swap manager, and (in cluster runs) the router all append to a
+//! single ordered stream per replica. When tracing is off the handle
+//! holds no buffer and [`TraceSink::emit`] is a branch on `None` —
+//! nothing is allocated, no clock is read, no RNG is consumed, which is
+//! what keeps the e2e determinism pins byte-identical with `[obs]`
+//! disabled.
+//!
+//! Events carry their *completion* timestamp (`done`) where the
+//! underlying operation has duration (swap-out, swap-in, prefetch), so
+//! the Chrome exporter can render them as complete (`"ph": "X"`) spans
+//! without issue/drain pairing.
+
+use crate::memory::RequestId;
+use crate::sim::clock::Ns;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+/// One typed lifecycle event. Variants mirror the taxonomy in
+/// DESIGN.md §Observability; every field is plain data so the stream
+/// is cheap to record and trivially deterministic to dump.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// A turn became runnable: fresh conversation arrival or a due
+    /// follow-up turn entering the waiting queue.
+    Arrival { req: RequestId, turn: u32, tenant: u32 },
+    /// Priority-update epoch boundary crossed by the scheduler.
+    Epoch { epoch: u64 },
+    /// A waiting request was promoted into the running batch;
+    /// `stall_ns` is the swap-in stall charged to the iteration.
+    Promote { req: RequestId, stall_ns: Ns },
+    /// Chunked prefill granted another chunk of `tokens` to a request.
+    ChunkGrant { req: RequestId, tokens: usize },
+    /// Preemption decision taken against a victim. `reason` is the
+    /// selection site (`"unadmitted"`, `"pressure"`, `"sweep"`,
+    /// `"turn_end"`); `action` is the planner's eviction action label;
+    /// `blocks` is the victim's GPU footprint at decision time.
+    Preempt {
+        req: RequestId,
+        reason: &'static str,
+        action: &'static str,
+        blocks: usize,
+    },
+    /// Partial-tail shave: only the tail of the victim's block runs was
+    /// evicted, the head stayed GPU-resident.
+    PartialShave {
+        req: RequestId,
+        evicted: usize,
+        retained: usize,
+    },
+    /// Victim preempted by dropping KV for recompute (no PCIe traffic).
+    Recompute { req: RequestId, blocks: usize },
+    /// Swap-out submitted; completes at `done` (== submit time when
+    /// `sync`).
+    SwapOut {
+        req: RequestId,
+        blocks: usize,
+        bytes: u64,
+        sync: bool,
+        done: Ns,
+    },
+    /// Swap-in submitted; completes at `done`.
+    SwapIn {
+        req: RequestId,
+        blocks: usize,
+        bytes: u64,
+        sync: bool,
+        done: Ns,
+    },
+    /// Lookahead prefetch issued on the background link lane.
+    PrefetchIssue {
+        req: RequestId,
+        blocks: usize,
+        bytes: u64,
+        done: Ns,
+    },
+    /// A promotion claimed its prefetch (`ready` = fully landed, else
+    /// the residual drain overlaps execution).
+    PrefetchClaim { req: RequestId, ready: bool },
+    /// A prefetch was canceled (misprediction or memory pressure);
+    /// `landed` = the blocks had already arrived and were freed.
+    PrefetchCancel { req: RequestId, landed: bool },
+    /// A turn emitted its last token.
+    TurnFinish { req: RequestId, turn: u32, last: bool },
+    /// Router placed a fresh conversation on a replica.
+    Place { req: RequestId, replica: u32 },
+    /// Router moved a conversation's next turn to a different replica.
+    Migrate {
+        req: RequestId,
+        from: u32,
+        to: u32,
+        blocks: usize,
+    },
+    /// Engine-side eviction of a conversation's state for migration.
+    MigrationEvict { req: RequestId, blocks: usize },
+}
+
+impl TraceEvent {
+    /// Short stable name (Chrome trace `name` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::Arrival { .. } => "Arrival",
+            TraceEvent::Epoch { .. } => "Epoch",
+            TraceEvent::Promote { .. } => "Promote",
+            TraceEvent::ChunkGrant { .. } => "ChunkGrant",
+            TraceEvent::Preempt { .. } => "Preempt",
+            TraceEvent::PartialShave { .. } => "PartialShave",
+            TraceEvent::Recompute { .. } => "Recompute",
+            TraceEvent::SwapOut { .. } => "SwapOut",
+            TraceEvent::SwapIn { .. } => "SwapIn",
+            TraceEvent::PrefetchIssue { .. } => "PrefetchIssue",
+            TraceEvent::PrefetchClaim { .. } => "PrefetchClaim",
+            TraceEvent::PrefetchCancel { .. } => "PrefetchCancel",
+            TraceEvent::TurnFinish { .. } => "TurnFinish",
+            TraceEvent::Place { .. } => "Place",
+            TraceEvent::Migrate { .. } => "Migrate",
+            TraceEvent::MigrationEvict { .. } => "MigrationEvict",
+        }
+    }
+
+    /// Completion time for events that span an interval.
+    pub fn done(&self) -> Option<Ns> {
+        match self {
+            TraceEvent::SwapOut { done, .. }
+            | TraceEvent::SwapIn { done, .. }
+            | TraceEvent::PrefetchIssue { done, .. } => Some(*done),
+            _ => None,
+        }
+    }
+}
+
+/// One timestamped event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Virtual (simulation) time of emission.
+    pub at: Ns,
+    pub ev: TraceEvent,
+}
+
+/// Cloneable handle to a trace buffer; `None` buffer = tracing off.
+///
+/// The buffer is behind `Arc<Mutex<..>>` only so the handle stays
+/// `Send` inside engine state — the simulation is single-threaded, so
+/// the lock is never contended and emission order is deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSink {
+    buf: Option<Arc<Mutex<Vec<TraceRecord>>>>,
+}
+
+impl TraceSink {
+    /// An enabled sink with a fresh shared buffer.
+    pub fn on() -> Self {
+        TraceSink {
+            buf: Some(Arc::new(Mutex::new(Vec::new()))),
+        }
+    }
+
+    /// A disabled sink (`emit` is a no-op).
+    pub fn off() -> Self {
+        TraceSink::default()
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.buf.is_some()
+    }
+
+    /// Record one event; no-op (one `None` check) when disabled.
+    #[inline]
+    pub fn emit(&self, at: Ns, ev: TraceEvent) {
+        if let Some(buf) = &self.buf {
+            buf.lock().unwrap().push(TraceRecord { at, ev });
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.as_ref().map_or(0, |b| b.lock().unwrap().len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take every record out of the shared buffer (emission order).
+    pub fn drain(&self) -> Vec<TraceRecord> {
+        match &self.buf {
+            Some(buf) => std::mem::take(&mut *buf.lock().unwrap()),
+            None => Vec::new(),
+        }
+    }
+}
+
+/// Compact line-per-event dump — the byte-identical artifact the
+/// determinism tests pin (`{:?}` on plain-data enums is stable).
+pub fn text_dump(records: &[TraceRecord]) -> String {
+    let mut out = String::new();
+    for r in records {
+        let _ = writeln!(out, "{:>12} {:?}", r.at, r.ev);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_sink_records_nothing() {
+        let t = TraceSink::off();
+        assert!(!t.enabled());
+        t.emit(5, TraceEvent::Epoch { epoch: 1 });
+        assert!(t.is_empty());
+        assert!(t.drain().is_empty());
+    }
+
+    #[test]
+    fn clones_share_one_ordered_buffer() {
+        let a = TraceSink::on();
+        let b = a.clone();
+        a.emit(1, TraceEvent::Epoch { epoch: 0 });
+        b.emit(2, TraceEvent::TurnFinish { req: 7, turn: 0, last: true });
+        a.emit(3, TraceEvent::Epoch { epoch: 1 });
+        let recs = a.drain();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].at, 1);
+        assert_eq!(recs[1].ev.name(), "TurnFinish");
+        assert!(b.is_empty(), "drain empties the shared buffer");
+    }
+
+    #[test]
+    fn text_dump_is_line_per_event_and_stable() {
+        let t = TraceSink::on();
+        t.emit(
+            10,
+            TraceEvent::SwapOut { req: 3, blocks: 4, bytes: 1024, sync: false, done: 20 },
+        );
+        let recs = t.drain();
+        let d1 = text_dump(&recs);
+        let d2 = text_dump(&recs);
+        assert_eq!(d1, d2);
+        assert_eq!(d1.lines().count(), 1);
+        assert!(d1.contains("SwapOut"));
+        assert_eq!(recs[0].ev.done(), Some(20));
+    }
+}

@@ -21,6 +21,7 @@ use std::collections::VecDeque;
 use super::op::{InflightOp, SwapOp};
 use crate::config::{DispatchMode, SwapCostConfig, SwapMode};
 use crate::memory::{BlockId, RequestId};
+use crate::obs::{TraceEvent, TraceSink};
 use crate::sim::clock::Ns;
 use crate::sim::dispatch::DispatchLanes;
 use crate::sim::link::{Direction, PcieLink};
@@ -213,6 +214,10 @@ pub struct SwapManager {
     r_info_cap: usize,
     pub stats: SwapStats,
     adaptive_overlap_threshold: f64,
+    /// Lifecycle trace sink, shared with the engine's — I/O events
+    /// interleave with scheduling events in one ordered stream. Off (a
+    /// no-op) unless the engine enables tracing.
+    trace: TraceSink,
 }
 
 impl SwapManager {
@@ -240,11 +245,17 @@ impl SwapManager {
             r_info_cap: 32,
             stats: SwapStats::default(),
             adaptive_overlap_threshold: cost.adaptive_overlap_threshold,
+            trace: TraceSink::default(),
         }
     }
 
     pub fn mode(&self) -> SwapMode {
         self.mode
+    }
+
+    /// Share the engine's trace sink (clones write into one buffer).
+    pub fn set_trace(&mut self, trace: TraceSink) {
+        self.trace = trace;
     }
 
     /// Step 1 of Algorithm 1: harvest asynchronous swap-ins whose event
@@ -326,7 +337,18 @@ impl SwapManager {
         if op.segments.is_empty() {
             return 0;
         }
+        let (req, blocks, bytes) = (op.req, op.blocks as usize, op.total_bytes());
         let inflight = self.run_op(op, now);
+        self.trace.emit(
+            now,
+            TraceEvent::SwapOut {
+                req,
+                blocks,
+                bytes,
+                sync: matches!(self.mode, SwapMode::Sync),
+                done: inflight.exec_done,
+            },
+        );
         self.stats.swap_out_ops += 1;
         let main_thread = match self.dispatch_mode {
             DispatchMode::Gil => inflight.dispatch_done.saturating_sub(now),
@@ -366,6 +388,7 @@ impl SwapManager {
         if op.segments.is_empty() {
             return SwapInDecision::Sync { done: now };
         }
+        let (req, blocks, bytes) = (op.req, op.blocks as usize, op.total_bytes());
         let inflight = self.run_op(op, now);
         self.stats.swap_in_ops += 1;
         let main_thread = match self.dispatch_mode {
@@ -389,6 +412,16 @@ impl SwapManager {
                 worth_overlapping && !many_short
             }
         };
+        self.trace.emit(
+            now,
+            TraceEvent::SwapIn {
+                req,
+                blocks,
+                bytes,
+                sync: !go_async,
+                done: inflight.exec_done,
+            },
+        );
         if go_async {
             self.stats.async_swap_ins += 1;
             let ev = self.events.acquire();
@@ -483,6 +516,15 @@ impl SwapManager {
         self.stats.prefetch_ops += 1;
         self.stats.prefetch_bytes += bytes;
         self.stats.prefetch_blocks += op.blocks as u64;
+        self.trace.emit(
+            now,
+            TraceEvent::PrefetchIssue {
+                req: op.req,
+                blocks: op.blocks as usize,
+                bytes,
+                done: exec_done,
+            },
+        );
         let ev = self.events.acquire();
         self.prefetches.push(PrefetchEntry {
             inflight: InflightOp {
@@ -506,6 +548,13 @@ impl SwapManager {
             .iter()
             .position(|e| e.inflight.op.req == req)?;
         let e = self.prefetches.swap_remove(i);
+        self.trace.emit(
+            now,
+            TraceEvent::PrefetchClaim {
+                req,
+                ready: e.inflight.exec_done <= now,
+            },
+        );
         if e.inflight.exec_done <= now {
             self.events.release(e.ev);
             self.stats.prefetch_hits += 1;
@@ -533,6 +582,13 @@ impl SwapManager {
             .iter()
             .position(|e| e.inflight.op.req == req)?;
         let e = self.prefetches.swap_remove(i);
+        self.trace.emit(
+            now,
+            TraceEvent::PrefetchCancel {
+                req,
+                landed: e.inflight.exec_done <= now,
+            },
+        );
         self.stats.prefetch_canceled += 1;
         self.stats.prefetch_wasted_bytes += e.inflight.op.total_bytes();
         if e.inflight.exec_done <= now {

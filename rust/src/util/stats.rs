@@ -77,9 +77,14 @@ impl Percentiles {
         &self.sorted
     }
 
-    /// Exact union of several percentile sets.
+    /// Exact union of several percentile sets. The merged buffer is
+    /// preallocated at the exact summed length — cluster aggregation
+    /// merges hundreds of thousands of samples per metric, and repeated
+    /// doubling grows were measurable there.
     pub fn merged(parts: impl IntoIterator<Item = Percentiles>) -> Percentiles {
-        let mut all = Vec::new();
+        let parts: Vec<Percentiles> = parts.into_iter().collect();
+        let total = parts.iter().map(|p| p.sorted.len()).sum();
+        let mut all = Vec::with_capacity(total);
         for p in parts {
             all.extend_from_slice(&p.sorted);
         }

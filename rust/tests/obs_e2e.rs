@@ -1,0 +1,250 @@
+//! Observability e2e pins: the trace stream is deterministic per seed,
+//! turning the full obs stack on leaves the simulation byte-identical
+//! (virtual span, tokens, swap traffic, exact latency samples), the
+//! bounded reservoir tracks the exact percentile pipeline, and the
+//! Chrome exporter round-trips a seeded churn run structurally.
+
+use fastswitch::cluster::ClusterConfig;
+use fastswitch::config::{
+    EngineConfig, GpuSpec, ModelSpec, PreemptionPolicyKind, Preset,
+};
+use fastswitch::coordinator::engine::{ServeOutcome, ServingEngine};
+use fastswitch::coordinator::priority::Pattern;
+use fastswitch::exp::runner::{run_cluster_with, Scale, WorkloadSpec};
+use fastswitch::obs::{chrome, text_dump, TelemetryMode, RESERVOIR_N};
+use fastswitch::workload::sharegpt::{generate, ShareGptConfig};
+use fastswitch::workload::ArrivalTrace;
+
+/// Small contended testbed (same shape as the preemption e2e): LLaMA-8B
+/// timing constants but only `blocks` KV blocks, so priority churn
+/// forces constant preemption and swap traffic — every trace event
+/// family fires.
+fn contended_preset(blocks: usize) -> Preset {
+    let model = ModelSpec::llama8b();
+    let mut gpu = GpuSpec::a10();
+    gpu.hbm_bytes = ((model.weight_bytes() + blocks as u64 * model.block_bytes())
+        as f64
+        / gpu.mem_util) as u64
+        + (1 << 20);
+    Preset {
+        model,
+        gpu,
+        cpu_swap_bytes: 4096 * 4 * 1024 * 1024,
+    }
+}
+
+fn run_churn(cfg: EngineConfig) -> ServeOutcome {
+    let mut wl = ShareGptConfig::default();
+    wl.mean_turns = 3.0;
+    wl.max_prompt = 256;
+    wl.max_response = 128;
+    wl.mean_think_s = 2.0;
+    let convs = generate(&wl, 16, 2);
+    let arrivals = ArrivalTrace::poisson(&convs, 2.0, 3);
+    let mut e = ServingEngine::new(
+        cfg,
+        contended_preset(96),
+        Pattern::Markov,
+        convs,
+        arrivals,
+        2,
+    );
+    e.charge_sched_overhead = false;
+    e.run(200_000)
+}
+
+fn churn_cfg() -> EngineConfig {
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.scheduler.priority_update_freq = 0.25;
+    cfg.preemption.policy = PreemptionPolicyKind::PartialTail;
+    cfg
+}
+
+#[test]
+fn trace_stream_is_deterministic_and_covers_the_lifecycle() {
+    let mut cfg = churn_cfg();
+    cfg.obs.trace = true;
+    let a = run_churn(cfg.clone());
+    let b = run_churn(cfg);
+    assert!(!a.trace.is_empty(), "traced churn run must emit events");
+    let (da, db) = (text_dump(&a.trace), text_dump(&b.trace));
+    assert_eq!(da, db, "same seed ⇒ byte-identical trace dump");
+    for name in [
+        "Arrival",
+        "Epoch",
+        "ChunkGrant",
+        "TurnFinish",
+        "Preempt",
+        "PartialShave",
+        "SwapOut",
+        "SwapIn",
+        "Promote",
+    ] {
+        assert!(da.contains(name), "contended churn must emit {name}:\n{da}");
+    }
+}
+
+#[test]
+fn full_obs_stack_leaves_the_simulation_byte_identical() {
+    let base = run_churn(churn_cfg()); // obs default-off
+    let mut cfg = churn_cfg();
+    cfg.obs.trace = true;
+    cfg.obs.profile = true;
+    let obs = run_churn(cfg);
+
+    assert!(base.trace.is_empty(), "default-off must record nothing");
+    assert!(!obs.trace.is_empty());
+    // The simulation itself must not move by one nanosecond or token.
+    assert_eq!(base.span, obs.span);
+    assert_eq!(base.iterations, obs.iterations);
+    assert_eq!(base.recorder.total_tokens, obs.recorder.total_tokens);
+    assert_eq!(base.recorder.preemptions, obs.recorder.preemptions);
+    assert_eq!(
+        base.recorder.partial_evictions,
+        obs.recorder.partial_evictions
+    );
+    assert_eq!(base.swap_stats.total_bytes, obs.swap_stats.total_bytes);
+    assert_eq!(base.swap_stats.swap_in_ops, obs.swap_stats.swap_in_ops);
+    // Exact latency pipelines bit-for-bit (f64 bit patterns, not ≈).
+    let bits = |p: &fastswitch::util::stats::Percentiles| {
+        p.samples().iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    };
+    assert_eq!(bits(&base.recorder.ttft()), bits(&obs.recorder.ttft()));
+    assert_eq!(bits(&base.recorder.tbt()), bits(&obs.recorder.tbt()));
+    // The profiled run measured real epochs without touching the above.
+    assert!(obs.recorder.profiler.epochs() > 0);
+    assert_eq!(base.recorder.profiler.epochs(), 0);
+}
+
+#[test]
+fn reservoir_percentiles_track_the_exact_pipeline() {
+    let mut cfg = churn_cfg();
+    cfg.obs.telemetry = TelemetryMode::Reservoir;
+    let out = run_churn(cfg);
+    let (ttft, ttft_ex) = (out.recorder.ttft(), out.recorder.ttft_exact());
+    let (tbt, tbt_ex) = (out.recorder.tbt(), out.recorder.tbt_exact());
+
+    // TTFT volume sits below reservoir capacity here, so the retained
+    // subset IS the sample set: exact match, not approximation.
+    assert!(ttft_ex.len() <= RESERVOIR_N);
+    assert_eq!(ttft.samples(), ttft_ex.samples());
+
+    // TBT overflows capacity — the reservoir genuinely samples — and
+    // the summary must still land near the exact percentiles.
+    assert!(
+        tbt_ex.len() > RESERVOIR_N,
+        "churn must overflow the TBT reservoir ({} samples)",
+        tbt_ex.len()
+    );
+    assert_eq!(tbt.samples().len(), RESERVOIR_N);
+    // Quantile-space bounds: the sampled p50 must land inside the exact
+    // p35..p65 band, the sampled p99 inside exact p90..max — generous
+    // enough for 1024-of-N sampling, tight enough to catch a broken
+    // reservoir (which would collapse to early or duplicate samples).
+    let p50 = tbt.p(50.0);
+    assert!(
+        (tbt_ex.p(35.0)..=tbt_ex.p(65.0)).contains(&p50),
+        "TBT p50: reservoir {p50} outside exact p35..p65"
+    );
+    let p99 = tbt.p(99.0);
+    assert!(
+        (tbt_ex.p(90.0)..=tbt_ex.p(100.0)).contains(&p99),
+        "TBT p99: reservoir {p99} outside exact p90..max"
+    );
+}
+
+#[test]
+fn chrome_export_round_trips_a_seeded_churn_run() {
+    let mut cfg = churn_cfg();
+    cfg.obs.trace = true;
+    let out = run_churn(cfg);
+    let json = chrome::export(&[(0, out.trace.as_slice())]);
+    assert!(json.starts_with("{\"traceEvents\":["));
+    assert!(json.ends_with("\"displayTimeUnit\":\"ms\"}"));
+    // One event object per record, and every swap span is a complete
+    // ("X") event with a duration.
+    assert_eq!(json.matches("\"ph\":").count(), out.trace.len());
+    let spans = out.trace.iter().filter(|r| r.ev.done().is_some()).count();
+    assert_eq!(json.matches("\"ph\":\"X\"").count(), spans);
+    assert!(spans > 0, "churn must produce swap spans");
+    // Structural balance outside string literals.
+    let (mut brace, mut bracket, mut in_str, mut esc) = (0i64, 0i64, false, false);
+    for c in json.chars() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' => brace += 1,
+            '}' => brace -= 1,
+            '[' => bracket += 1,
+            ']' => bracket -= 1,
+            _ => {}
+        }
+        assert!(brace >= 0 && bracket >= 0);
+    }
+    assert_eq!((brace, bracket, in_str), (0, 0, false));
+}
+
+#[test]
+fn cluster_router_records_its_own_trace_lane() {
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.obs.trace = true;
+    let scale = Scale {
+        conversations: 24,
+        ..Scale::quick()
+    };
+    let spec = WorkloadSpec {
+        tenants: 3,
+        ..WorkloadSpec::default()
+    };
+    let out = run_cluster_with(
+        cfg,
+        Preset::llama8b_a10(),
+        Pattern::Markov,
+        ClusterConfig {
+            replicas: 2,
+            ..ClusterConfig::default()
+        },
+        &scale,
+        &spec,
+    );
+    assert!(
+        !out.router_trace.is_empty(),
+        "router must trace placement decisions"
+    );
+    assert!(out
+        .router_trace
+        .iter()
+        .any(|r| r.ev.name() == "Place"));
+    assert!(out.replicas.iter().any(|o| !o.trace.is_empty()));
+    // Every fresh conversation got exactly one placement event.
+    let places = out
+        .router_trace
+        .iter()
+        .filter(|r| r.ev.name() == "Place")
+        .count();
+    assert!(places >= scale.conversations, "one Place per arrival turn");
+
+    // Off by default: no stream anywhere.
+    let off = run_cluster_with(
+        EngineConfig::fastswitch(),
+        Preset::llama8b_a10(),
+        Pattern::Markov,
+        ClusterConfig {
+            replicas: 2,
+            ..ClusterConfig::default()
+        },
+        &scale,
+        &spec,
+    );
+    assert!(off.router_trace.is_empty());
+    assert!(off.replicas.iter().all(|o| o.trace.is_empty()));
+}

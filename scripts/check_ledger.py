@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_PR<N>.json perf ledger against fastswitch-ledger-v1.
+
+Usage: check_ledger.py LEDGER.json
+
+Checks the schema tag, every required key, value types, and basic sanity
+(non-negative measurements, non-empty sections). Exits non-zero with a
+per-violation message on failure — CI gates the `exp ledger` smoke run
+on this.
+"""
+
+import json
+import sys
+
+SCHEMA = "fastswitch-ledger-v1"
+
+CONFIG_KEYS = {
+    "conversations": int,
+    "seed": int,
+    "tenants": int,
+    "heavy_share": float,
+    "burst": float,
+    "priority_update_freq": float,
+}
+HOTPATH_KEYS = {"name": str, "ns_per_op": float}
+EPOCH_KEYS = {
+    "admission_ns_mean": float,
+    "preemption_ns_mean": float,
+    "prefetch_ns_mean": float,
+    "execution_ns_mean": float,
+    "total_ns_mean": float,
+}
+THROUGHPUT_KEYS = {"replicas": int, "tokens_per_s": float}
+POLICY_KEYS = {
+    "policy": str,
+    "ttft_p50_s": float,
+    "ttft_p99_s": float,
+    "tbt_p50_s": float,
+    "tbt_p99_s": float,
+    "swap_stall_share": float,
+    "sched_overhead_share": float,
+    "preemptions": int,
+    "partial_evictions": int,
+    "swap_gb": float,
+    "tokens_per_s": float,
+}
+
+errors = []
+
+
+def fail(msg):
+    errors.append(msg)
+
+
+def check_obj(obj, keys, where):
+    if not isinstance(obj, dict):
+        fail(f"{where}: expected object, got {type(obj).__name__}")
+        return
+    for key, ty in keys.items():
+        if key not in obj:
+            fail(f"{where}: missing key {key!r}")
+            continue
+        val = obj[key]
+        # Ints are acceptable where floats are expected (JSON "4" vs "4.0").
+        ok = isinstance(val, ty) or (ty is float and isinstance(val, int))
+        if isinstance(val, bool):  # bool is an int subclass — never valid here
+            ok = False
+        if not ok:
+            fail(f"{where}.{key}: expected {ty.__name__}, got {val!r}")
+        elif ty in (int, float) and key != "seed" and val < 0:
+            fail(f"{where}.{key}: negative measurement {val!r}")
+    for key in obj:
+        if key not in keys:
+            fail(f"{where}: unknown key {key!r} (schema drift?)")
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    with open(sys.argv[1]) as f:
+        ledger = json.load(f)
+
+    if ledger.get("schema") != SCHEMA:
+        fail(f"schema: expected {SCHEMA!r}, got {ledger.get('schema')!r}")
+    if not isinstance(ledger.get("pr"), int) or ledger.get("pr") < 1:
+        fail(f"pr: expected positive int, got {ledger.get('pr')!r}")
+
+    check_obj(ledger.get("config"), CONFIG_KEYS, "config")
+    check_obj(ledger.get("scheduler_epoch"), EPOCH_KEYS, "scheduler_epoch")
+    for section, keys in [
+        ("hotpath", HOTPATH_KEYS),
+        ("throughput", THROUGHPUT_KEYS),
+        ("policies", POLICY_KEYS),
+    ]:
+        rows = ledger.get(section)
+        if not isinstance(rows, list) or not rows:
+            fail(f"{section}: expected non-empty array, got {rows!r}")
+            continue
+        for i, row in enumerate(rows):
+            check_obj(row, keys, f"{section}[{i}]")
+
+    top = {"schema", "pr", "config", "hotpath", "scheduler_epoch",
+           "throughput", "policies"}
+    for key in set(ledger) - top:
+        fail(f"top level: unknown key {key!r} (schema drift?)")
+
+    if errors:
+        for e in errors:
+            print(f"check_ledger: {e}", file=sys.stderr)
+        return 1
+    n_pol = len(ledger["policies"])
+    print(f"check_ledger: OK — PR {ledger['pr']}, {len(ledger['hotpath'])} "
+          f"hotpath rows, {n_pol} policies")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
