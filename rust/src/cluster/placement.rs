@@ -73,15 +73,20 @@ impl ReplicaLoad {
     }
 }
 
-/// Lowest-score replica; ties break to the lowest index (deterministic).
-fn least_loaded(loads: &[ReplicaLoad]) -> usize {
-    let mut best = 0usize;
-    for (i, l) in loads.iter().enumerate().skip(1) {
-        if l.score() < loads[best].score() {
-            best = i;
+/// Lowest-score replica among those `up`; ties break to the lowest
+/// index (deterministic). At least one replica must be up.
+fn least_loaded_up(loads: &[ReplicaLoad], up: &impl Fn(usize) -> bool) -> usize {
+    let mut best: Option<usize> = None;
+    for (i, l) in loads.iter().enumerate() {
+        if !up(i) {
+            continue;
+        }
+        match best {
+            Some(b) if l.score() >= loads[b].score() => {}
+            _ => best = Some(i),
         }
     }
-    best
+    best.expect("no up replica")
 }
 
 /// Stateful placement driver (round-robin needs a rotation cursor).
@@ -104,18 +109,44 @@ impl Placer {
     /// holding the conversation's CPU KV copy (`None` for fresh
     /// conversations).
     pub fn place(&mut self, loads: &[ReplicaLoad], home: Option<usize>) -> usize {
+        self.place_filtered(loads, home, None)
+    }
+
+    /// [`Placer::place`] with an availability mask: `down[i] == true`
+    /// excludes replica `i` from every candidate set (a drained/failed
+    /// replica). A drained home forces a migration; round-robin skips
+    /// drained slots without disturbing its rotation over the rest. At
+    /// least one replica must remain up.
+    pub fn place_filtered(
+        &mut self,
+        loads: &[ReplicaLoad],
+        home: Option<usize>,
+        down: Option<&[bool]>,
+    ) -> usize {
         assert!(!loads.is_empty(), "placement over an empty cluster");
+        let up = |i: usize| down.is_none_or(|d| !d[i]);
+        assert!(
+            (0..loads.len()).any(up),
+            "placement over a fully drained cluster"
+        );
         match self.kind {
-            PlacementKind::RoundRobin => {
+            PlacementKind::RoundRobin => loop {
                 let r = self.rr_next % loads.len();
                 self.rr_next = self.rr_next.wrapping_add(1);
-                r
-            }
-            PlacementKind::LeastLoaded => least_loaded(loads),
+                if up(r) {
+                    return r;
+                }
+            },
+            PlacementKind::LeastLoaded => least_loaded_up(loads, &up),
             PlacementKind::KvAffinity { spill_threshold } => {
-                let best = least_loaded(loads);
+                let best = least_loaded_up(loads, &up);
                 match home {
-                    Some(h) if loads[h].score() <= loads[best].score() + spill_threshold => h,
+                    Some(h)
+                        if up(h)
+                            && loads[h].score() <= loads[best].score() + spill_threshold =>
+                    {
+                        h
+                    }
                     _ => best,
                 }
             }
@@ -202,6 +233,40 @@ mod tests {
         assert_eq!(p.place(&[load(10, 0), load(10, 0)], Some(1)), 1);
         // Any imbalance: spill.
         assert_eq!(p.place(&[load(10, 0), load(11, 0)], Some(1)), 0);
+    }
+
+    #[test]
+    fn filtered_placement_skips_drained_replicas() {
+        let down = [false, true, false];
+        // Round-robin rotation skips the drained middle replica.
+        let mut rr = Placer::new(PlacementKind::RoundRobin);
+        let even = vec![load(0, 0), load(0, 0), load(0, 0)];
+        let seq: Vec<usize> = (0..4)
+            .map(|_| rr.place_filtered(&even, None, Some(&down)))
+            .collect();
+        assert_eq!(seq, vec![0, 2, 0, 2]);
+        // Least-loaded ignores a drained minimum.
+        let mut ll = Placer::new(PlacementKind::LeastLoaded);
+        assert_eq!(
+            ll.place_filtered(&[load(90, 0), load(0, 0), load(40, 0)], None, Some(&down)),
+            2
+        );
+        // A drained home forces the spill even inside the threshold.
+        let mut aff = Placer::new(PlacementKind::KvAffinity { spill_threshold: 10.0 });
+        assert_eq!(
+            aff.place_filtered(&[load(0, 0), load(0, 0), load(40, 0)], Some(1), Some(&down)),
+            0
+        );
+        // No mask degenerates to plain place().
+        let mut p = Placer::new(PlacementKind::LeastLoaded);
+        assert_eq!(p.place_filtered(&[load(5, 0), load(0, 0)], None, None), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "fully drained")]
+    fn fully_drained_cluster_is_rejected() {
+        let mut p = Placer::new(PlacementKind::LeastLoaded);
+        p.place_filtered(&[load(0, 0)], None, Some(&[true]));
     }
 
     #[test]

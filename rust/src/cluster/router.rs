@@ -42,6 +42,11 @@ enum Work {
     Fresh(Conversation),
     /// A live conversation's next turn; `home` holds its CPU KV copy.
     Turn { id: RequestId, home: usize },
+    /// Replica drain/failure event: from this decision point on the
+    /// replica receives no placements and every conversation it holds
+    /// migrates off at its next turn (in-flight turns finish first —
+    /// drain semantics, not a crash).
+    Drain { replica: usize },
 }
 
 #[derive(Clone, Debug)]
@@ -66,6 +71,10 @@ pub struct ClusterRouter {
     affinity_hits: u64,
     migrations: u64,
     retransferred_blocks: u64,
+    /// Availability mask: `true` = drained, excluded from placement.
+    drained: Vec<bool>,
+    /// The scheduled drain event, echoed into the outcome.
+    drain: Option<(usize, Ns)>,
     /// Router-level placement trace — a separate stream from the
     /// per-replica engine traces (replicas advance independent clocks,
     /// so their streams cannot interleave meaningfully). Off unless
@@ -120,6 +129,8 @@ impl ClusterRouter {
             affinity_hits: 0,
             migrations: 0,
             retransferred_blocks: 0,
+            drained: vec![false; cluster.replicas],
+            drain: None,
             trace,
         };
         for e in &arrivals.entries {
@@ -135,6 +146,21 @@ impl ClusterRouter {
         for r in &mut self.replicas {
             r.charge_sched_overhead = on;
         }
+    }
+
+    /// Schedule a replica drain/failure at virtual time `at`: the event
+    /// enters the same deterministic `(due, seq)` queue as every
+    /// placement, so drained runs stay byte-reproducible. Requires at
+    /// least one other replica to absorb the migrated work.
+    pub fn set_drain(&mut self, replica: usize, at: Ns) {
+        assert!(replica < self.replicas.len(), "drain target out of range");
+        assert!(
+            self.replicas.len() >= 2,
+            "draining the only replica leaves nowhere to migrate"
+        );
+        assert!(self.drain.is_none(), "one drain event per run");
+        self.drain = Some((replica, at));
+        self.push_work(at, Work::Drain { replica });
     }
 
     fn push_work(&mut self, due: Ns, work: Work) {
@@ -166,8 +192,12 @@ impl ClusterRouter {
     fn place(&mut self, qw: QueuedWork) {
         let loads = self.loads();
         match qw.work {
+            Work::Drain { replica } => {
+                self.drained[replica] = true;
+                self.trace.emit(qw.due, TraceEvent::Drain { replica: replica as u32 });
+            }
             Work::Fresh(conv) => {
-                let target = self.placer.place(&loads, None);
+                let target = self.placer.place_filtered(&loads, None, Some(&self.drained));
                 self.placements += 1;
                 self.trace.emit(
                     qw.due,
@@ -179,7 +209,7 @@ impl ClusterRouter {
                 self.replicas[target].push_arrival(conv, qw.due);
             }
             Work::Turn { id, home } => {
-                let target = self.placer.place(&loads, Some(home));
+                let target = self.placer.place_filtered(&loads, Some(home), Some(&self.drained));
                 self.placements += 1;
                 self.affinity_decisions += 1;
                 if target == home {
@@ -290,6 +320,7 @@ impl ClusterRouter {
             placement: self.placer.kind(),
             label: self.label,
             placements: self.placements,
+            drain: self.drain,
             affinity_decisions: self.affinity_decisions,
             affinity_hits: self.affinity_hits,
             migrations: self.migrations,
@@ -313,6 +344,8 @@ pub struct ClusterOutcome {
     pub label: String,
     /// Total placement decisions (fresh dispatches + turn placements).
     pub placements: u64,
+    /// The drain event this run executed, if any: `(replica, at)`.
+    pub drain: Option<(usize, Ns)>,
     /// Later-turn placements (the decisions where KV locality matters).
     pub affinity_decisions: u64,
     /// Later-turn placements routed to the replica holding the KV copy.
@@ -564,6 +597,87 @@ mod tests {
             let jain = out.jain_fairness();
             assert!(jain > 0.0 && jain <= 1.0 + 1e-12, "jain = {jain}");
         }
+    }
+
+    #[test]
+    fn drain_excludes_replica_and_forces_migrations() {
+        let scale = quick_scale();
+        let spec = WorkloadSpec {
+            tenants: 3,
+            heavy_share: 0.5,
+            ..WorkloadSpec::default()
+        };
+        let (convs, arrivals) = build_workload(&scale, &spec);
+        let total = convs.len() as u64;
+        // Early drain: most turn placements happen after the event, so
+        // the drained replica's conversations must all move off.
+        let drain_at = arrivals.span() / 4;
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.scheduler.priority_update_freq = 0.04;
+        let mut router = ClusterRouter::new(
+            cfg,
+            Preset::llama8b_a10(),
+            Pattern::Markov,
+            ClusterConfig {
+                replicas: 3,
+                placement: PlacementKind::KvAffinity {
+                    spill_threshold: DEFAULT_SPILL_THRESHOLD,
+                },
+            },
+            convs,
+            arrivals,
+            scale.seed,
+        );
+        router.set_charge_sched_overhead(false);
+        router.set_drain(1, drain_at);
+        let out = router.run(scale.max_iters);
+        assert_eq!(out.drain, Some((1, drain_at)));
+        // Accounting survives the failure: nothing is lost or served
+        // twice across the migrations.
+        assert_eq!(
+            out.finished_conversations() + out.rejected_conversations(),
+            total,
+            "drain lost conversations"
+        );
+        assert!(out.migrations > 0, "drain must force migrations");
+        assert!(out.total_tokens() > 0);
+    }
+
+    #[test]
+    fn drained_runs_are_deterministic() {
+        let run = || {
+            let scale = quick_scale();
+            let spec = WorkloadSpec {
+                tenants: 3,
+                heavy_share: 0.5,
+                ..WorkloadSpec::default()
+            };
+            let (convs, arrivals) = build_workload(&scale, &spec);
+            let drain_at = arrivals.span() / 3;
+            let mut cfg = EngineConfig::fastswitch();
+            cfg.scheduler.priority_update_freq = 0.04;
+            let mut router = ClusterRouter::new(
+                cfg,
+                Preset::llama8b_a10(),
+                Pattern::Markov,
+                ClusterConfig {
+                    replicas: 2,
+                    placement: PlacementKind::LeastLoaded,
+                },
+                convs,
+                arrivals,
+                scale.seed,
+            );
+            router.set_charge_sched_overhead(false);
+            router.set_drain(0, drain_at);
+            router.run(scale.max_iters)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.total_tokens(), b.total_tokens());
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.span(), b.span());
+        assert_eq!(a.tokens_by_tenant(), b.tokens_by_tenant());
     }
 
     #[test]

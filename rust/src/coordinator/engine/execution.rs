@@ -465,6 +465,7 @@ impl ServingEngine {
         let alloc = self.alloc.as_dyn_ref();
         alloc.space().check_invariants();
         self.cpu.check_invariants();
+        let space = alloc.space();
         ServeOutcome {
             span: self.now,
             iterations: self.iter,
@@ -474,6 +475,12 @@ impl ServingEngine {
             contaminated: self.cpu.total_contaminated,
             label: self.cfg.label.clone(),
             trace: self.trace.drain(),
+            gpu_blocks_used_final: space.used_blocks(),
+            gpu_blocks_free_final: space.free_blocks(),
+            gpu_blocks_capacity: space.capacity(),
+            cpu_blocks_used_final: self.cpu.used_slots(),
+            cpu_blocks_capacity: self.cpu.capacity(),
+            vtc_counters: self.policy.vtc_counters().unwrap_or_default(),
             recorder: self.rec,
         }
     }

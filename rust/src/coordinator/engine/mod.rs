@@ -68,6 +68,21 @@ pub struct ServeOutcome {
     pub label: String,
     /// Lifecycle trace stream (empty unless `cfg.obs.trace`).
     pub trace: Vec<TraceRecord>,
+    /// GPU KV blocks still allocated when the run ended (0 for a fully
+    /// drained run — every conversation finished and released its KV).
+    pub gpu_blocks_used_final: usize,
+    /// GPU KV blocks free at end of run.
+    pub gpu_blocks_free_final: usize,
+    /// Total GPU KV capacity in blocks (constant over the run).
+    pub gpu_blocks_capacity: usize,
+    /// CPU swap-space slots still held at end of run.
+    pub cpu_blocks_used_final: usize,
+    /// Total CPU swap-space capacity in block slots.
+    pub cpu_blocks_capacity: usize,
+    /// Final virtual-time counters per tenant when an online VTC-family
+    /// fairness policy drove priorities (empty otherwise). Sorted by
+    /// tenant id.
+    pub vtc_counters: Vec<(u32, f64)>,
 }
 
 impl ServeOutcome {

@@ -1,0 +1,243 @@
+//! The scenario gauntlet — every preemption policy × every adversarial
+//! workload scenario in one seeded run, with shared invariant checks
+//! after each cell and a schema-stable JSON scorecard
+//! (`GAUNTLET_PR<N>.json`, schema in [`crate::obs::gauntlet`]).
+//!
+//! The grid: rows are the [`crate::workload::ScenarioSpec`] fleet
+//! (agentic tool-call loops, mega-context summarization, thundering
+//! herd with a mid-run replica drain, diurnal load wave); columns are
+//! the preemption ladder ([`super::preemption::POLICIES`]: `swap_all`,
+//! `cost_aware`, `partial_tail`). Every cell runs the full 3-replica
+//! cluster path — placement, migrations, and (thundering herd) the
+//! drain event all exercise the router — under VTC fairness, hard
+//! priority churn, and a depth-2 lookahead prefetcher, so every
+//! subsystem the scenarios stress is live.
+//!
+//! After each cell, [`crate::metrics::invariants::check_cluster`]
+//! audits block conservation, stall-bucket partition, served-token
+//! accounting, and monotone VTC. The scorecard is written *first* (with
+//! per-cell violation counts), then the run fails if any cell was
+//! dirty — a CI artifact of a broken run still shows which cell broke.
+//!
+//! `fastswitch exp gauntlet [--gauntlet-out PATH]`.
+
+use super::preemption::{FREQ, POLICIES};
+use super::runner::{at_freq, run_cluster_scenario, Scale};
+use super::{f2, f3, Report};
+use crate::cluster::ClusterConfig;
+use crate::config::{EngineConfig, Preset};
+use crate::coordinator::priority::Pattern;
+use crate::fairness::PolicyKind;
+use crate::metrics::invariants::check_cluster;
+use crate::obs::gauntlet::{GauntletConfig, Scorecard, ScorecardCell, GAUNTLET_SCHEMA};
+use crate::workload::scenario::SCENARIO_TENANTS;
+use crate::workload::ScenarioSpec;
+
+/// Replica fan-out every cell runs at (the thundering-herd drain needs
+/// somewhere to migrate; 3 matches the ledger's cluster point).
+pub const REPLICAS: usize = 3;
+/// Lookahead prefetch depth — on, so the agentic scenario's think-time
+/// churn exercises issue/claim/cancel in every cell.
+pub const PREFETCH_DEPTH: u64 = 2;
+
+/// The engine configuration every cell shares (only the preemption
+/// policy varies): fastswitch ladder rung, VTC fairness, hard priority
+/// churn, depth-2 prefetch.
+fn cell_cfg(kind: crate::config::PreemptionPolicyKind) -> EngineConfig {
+    let mut cfg = at_freq(EngineConfig::fastswitch(), FREQ);
+    cfg.fairness.policy = PolicyKind::Vtc;
+    cfg.preemption.policy = kind;
+    cfg.prefetch.depth = PREFETCH_DEPTH;
+    cfg.label = kind.label().to_string();
+    cfg
+}
+
+/// Run the full grid and assemble the scorecard. Scenario workloads are
+/// built once per scenario and reused across the policy column, so
+/// every policy sees byte-identical conversations and arrivals.
+pub fn build(scale: &Scale) -> (Scorecard, Vec<String>) {
+    let max_model_len = EngineConfig::fastswitch().scheduler.max_seq_len;
+    let mut cells = Vec::new();
+    let mut violations = Vec::new();
+    for spec in ScenarioSpec::all(max_model_len) {
+        let wl = spec.build(scale.conversations, scale.request_rate, scale.seed);
+        let total = wl.conversations.len() as u64;
+        for kind in POLICIES {
+            let out = run_cluster_scenario(
+                cell_cfg(kind),
+                Preset::llama8b_a10(),
+                Pattern::Markov,
+                ClusterConfig {
+                    replicas: REPLICAS,
+                    ..ClusterConfig::default()
+                },
+                scale,
+                &wl,
+            );
+            let cell_violations = check_cluster(&out, total, spec.expect_rejection_free());
+            let ttft = out.ttft();
+            let tbt = out.tbt();
+            let (mut inf, mut swap, mut sched) = (0u64, 0u64, 0u64);
+            let (mut hits, mut demand, mut preempts) = (0u64, 0u64, 0u64);
+            for r in &out.replicas {
+                let (i, s, c) = r.recorder.stall_breakdown();
+                inf += i;
+                swap += s;
+                sched += c;
+                hits += r.swap_stats.prefetch_hits + r.swap_stats.prefetch_partial_hits;
+                demand += r.swap_stats.swap_in_ops;
+                preempts += r.recorder.preemptions;
+            }
+            let wall = (inf + swap + sched).max(1) as f64;
+            cells.push(ScorecardCell {
+                scenario: spec.label().to_string(),
+                policy: kind.label().to_string(),
+                ttft_p50_s: ttft.p(50.0),
+                ttft_p99_s: ttft.p(99.0),
+                tbt_p50_s: tbt.p(50.0),
+                tbt_p99_s: tbt.p(99.0),
+                swap_stall_share: swap as f64 / wall,
+                sched_overhead_share: sched as f64 / wall,
+                swap_gb: out.swap_bytes_total() as f64 / 1e9,
+                swap_blocks: out.swap_blocks_total(),
+                jain_fairness: out.jain_fairness(),
+                prefetch_hit_rate: if hits + demand == 0 {
+                    0.0
+                } else {
+                    hits as f64 / (hits + demand) as f64
+                },
+                tokens_per_s: out.throughput(),
+                finished: out.finished_conversations(),
+                rejected: out.rejected_conversations(),
+                migrations: out.migrations,
+                preemptions: preempts,
+                invariant_violations: cell_violations.len() as u64,
+            });
+            for v in cell_violations {
+                violations.push(format!("{}/{}: {v}", spec.label(), kind.label()));
+            }
+        }
+    }
+    let card = Scorecard {
+        pr: super::ledger::PR,
+        config: GauntletConfig {
+            conversations: scale.conversations,
+            seed: scale.seed,
+            replicas: REPLICAS,
+            tenants: SCENARIO_TENANTS,
+            max_model_len,
+            request_rate: scale.request_rate,
+            priority_update_freq: FREQ,
+        },
+        cells,
+    };
+    (card, violations)
+}
+
+/// Run the gauntlet, write the scorecard to `out_path`, and return the
+/// summary report. The scorecard (with per-cell violation counts) is
+/// written *before* the zero-violations assertion, so a failing run
+/// still leaves the artifact showing which cell broke.
+pub fn run(scale: &Scale, out_path: &str) -> Report {
+    let (card, violations) = build(scale);
+    let json = card.to_json();
+    let write_result = std::fs::write(out_path, &json);
+    let mut rep = Report::new(
+        "gauntlet",
+        &format!(
+            "scenario gauntlet (PR {}, schema {GAUNTLET_SCHEMA}): {} scenarios x {} \
+             policies, {REPLICAS} replicas, VTC, churn freq {FREQ}",
+            card.pr,
+            card.cells.len() / POLICIES.len(),
+            POLICIES.len()
+        ),
+        &[
+            "scenario",
+            "policy",
+            "TTFT P99 s",
+            "TBT P99 s",
+            "swap GB",
+            "jain",
+            "prefetch hit",
+            "migrations",
+            "finished",
+            "rejected",
+            "violations",
+        ],
+    );
+    for c in &card.cells {
+        rep.row(vec![
+            c.scenario.clone(),
+            c.policy.clone(),
+            f3(c.ttft_p99_s),
+            f3(c.tbt_p99_s),
+            f2(c.swap_gb),
+            f3(c.jain_fairness),
+            f3(c.prefetch_hit_rate),
+            c.migrations.to_string(),
+            c.finished.to_string(),
+            c.rejected.to_string(),
+            c.invariant_violations.to_string(),
+        ]);
+    }
+    match write_result {
+        Ok(()) => rep.note(format!("wrote {out_path} ({} bytes)", json.len())),
+        Err(e) => rep.note(format!("FAILED to write {out_path}: {e}")),
+    }
+    rep.note(
+        "thundering_herd rows include a mid-run replica drain: migrations must be \
+         > 0 there and conversation accounting must survive it",
+    );
+    assert!(
+        violations.is_empty(),
+        "gauntlet invariant violations:\n{}",
+        violations.join("\n")
+    );
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> Scale {
+        Scale {
+            conversations: 12,
+            request_rate: 2.0,
+            ..Scale::quick()
+        }
+    }
+
+    #[test]
+    fn grid_covers_every_scenario_policy_pair_cleanly() {
+        let (card, violations) = build(&quick());
+        assert_eq!(violations, Vec::<String>::new());
+        let scenarios = ScenarioSpec::all(4096).len();
+        assert_eq!(card.cells.len(), scenarios * POLICIES.len());
+        // Row-major: scenario outer, policy inner, in canonical order.
+        for (i, cell) in card.cells.iter().enumerate() {
+            assert_eq!(cell.policy, POLICIES[i % POLICIES.len()].label());
+            assert_eq!(cell.invariant_violations, 0);
+            assert!(cell.finished + cell.rejected == quick().conversations as u64);
+        }
+        // Mega-context is rejection-free by construction.
+        for cell in card.cells.iter().filter(|c| c.scenario == "mega_context") {
+            assert_eq!(cell.rejected, 0, "mega_context must admit everything");
+        }
+        // The herd's drain forces migrations in every policy column.
+        for cell in card
+            .cells
+            .iter()
+            .filter(|c| c.scenario == "thundering_herd")
+        {
+            assert!(cell.migrations > 0, "drain must force migrations");
+        }
+    }
+
+    #[test]
+    fn same_seed_rebuild_is_identical() {
+        let (a, _) = build(&quick());
+        let (b, _) = build(&quick());
+        assert_eq!(a.to_json(), b.to_json(), "gauntlet must be deterministic");
+    }
+}

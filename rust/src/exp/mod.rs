@@ -21,6 +21,7 @@ pub mod fig10;
 pub mod fig11;
 pub mod fig12;
 pub mod fig13;
+pub mod gauntlet;
 pub mod ledger;
 pub mod preemption;
 pub mod prefetch;

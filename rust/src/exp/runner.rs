@@ -6,7 +6,7 @@ use crate::coordinator::engine::{ServeOutcome, ServingEngine};
 use crate::coordinator::priority::Pattern;
 use crate::workload::sharegpt::{generate, Conversation, ShareGptConfig};
 use crate::workload::tenants::{assign_tenants, TenantMix};
-use crate::workload::ArrivalTrace;
+use crate::workload::{ArrivalTrace, ScenarioWorkload};
 
 /// Experiment scale knobs (defaults keep each figure seconds-scale; the
 /// paper's full scale is `conversations = 1000`).
@@ -132,6 +132,58 @@ pub fn run_cluster_with(
         scale.seed,
     );
     router.set_charge_sched_overhead(scale.charge_sched_overhead);
+    router.run(scale.max_iters)
+}
+
+/// Run one simulation over a pre-built scenario workload (the gauntlet
+/// scenarios carry their own conversations + arrivals; any drain plan
+/// is ignored on the single-engine path — there is nowhere to migrate).
+pub fn run_sim_scenario(
+    cfg: EngineConfig,
+    preset: Preset,
+    pattern: Pattern,
+    scale: &Scale,
+    wl: &ScenarioWorkload,
+) -> ServeOutcome {
+    let mut engine = ServingEngine::new(
+        cfg,
+        preset,
+        pattern,
+        wl.conversations.clone(),
+        wl.arrivals.clone(),
+        scale.seed,
+    );
+    engine.charge_sched_overhead = scale.charge_sched_overhead;
+    engine.run(scale.max_iters)
+}
+
+/// Run one cluster simulation over a pre-built scenario workload. When
+/// the scenario carries a [`crate::workload::DrainPlan`] and the
+/// cluster has somewhere to migrate (≥ 2 replicas), the drain event is
+/// scheduled through the router's deterministic work queue.
+pub fn run_cluster_scenario(
+    cfg: EngineConfig,
+    preset: Preset,
+    pattern: Pattern,
+    cluster: ClusterConfig,
+    scale: &Scale,
+    wl: &ScenarioWorkload,
+) -> ClusterOutcome {
+    let mut router = ClusterRouter::new(
+        cfg,
+        preset,
+        pattern,
+        cluster,
+        wl.conversations.clone(),
+        wl.arrivals.clone(),
+        scale.seed,
+    );
+    router.set_charge_sched_overhead(scale.charge_sched_overhead);
+    if let Some(d) = wl.drain {
+        if cluster.replicas >= 2 {
+            router.set_drain(d.replica, d.at);
+        }
+    }
     router.run(scale.max_iters)
 }
 

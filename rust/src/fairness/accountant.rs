@@ -119,6 +119,16 @@ impl VtcAccountant {
         self.active = active.to_vec();
     }
 
+    /// Snapshot of every tenant's counter, sorted by tenant id — the
+    /// end-of-run export the invariant checker audits (counters only
+    /// ever increase: `charge` adds a non-negative cost, the newcomer
+    /// lift and gap bound only raise values).
+    pub fn counters(&self) -> Vec<(TenantId, f64)> {
+        let mut out: Vec<(TenantId, f64)> = self.counters.iter().map(|(&t, &c)| (t, c)).collect();
+        out.sort_by_key(|&(t, _)| t);
+        out
+    }
+
     /// Virtual service accrued by `tenant` so far (0 if unseen).
     pub fn virtual_service(&self, tenant: TenantId) -> f64 {
         self.counters.get(&tenant).copied().unwrap_or(0.0)

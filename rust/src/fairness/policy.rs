@@ -77,6 +77,15 @@ pub trait PriorityPolicy {
     /// epoch `epoch` (higher = better).
     fn priority_of(&mut self, conv: u64, tenant: TenantId, epoch: u64) -> i64;
 
+    /// Final per-tenant virtual-time counters, sorted by tenant id, for
+    /// policies backed by a VTC accountant; `None` for policies with no
+    /// service accounting (the offline trace). Exposed on
+    /// [`crate::coordinator::engine::ServeOutcome`] so end-to-end
+    /// invariant checks can audit monotone VTC accounting.
+    fn vtc_counters(&self) -> Option<Vec<(TenantId, f64)>> {
+        None
+    }
+
     /// Projected priorities of `conv` for the `depth` epochs after
     /// `epoch` (index 0 = `epoch + 1`) — the lookahead prefetcher's
     /// view of the future. Implementations must not disturb their
@@ -226,6 +235,10 @@ impl PriorityPolicy for VtcPolicy {
             .copied()
             .unwrap_or(self.levels - 1)
     }
+
+    fn vtc_counters(&self) -> Option<Vec<(TenantId, f64)>> {
+        Some(self.acct.counters())
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -273,6 +286,10 @@ impl PriorityPolicy for SloAwarePolicy {
 
     fn priority_of(&mut self, conv: u64, tenant: TenantId, epoch: u64) -> i64 {
         self.base.priority_of(conv, tenant, epoch) + self.slo.boost(tenant)
+    }
+
+    fn vtc_counters(&self) -> Option<Vec<(TenantId, f64)>> {
+        self.base.vtc_counters()
     }
 }
 

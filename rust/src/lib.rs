@@ -53,7 +53,15 @@
 //!   lifecycle tracing with a `chrome://tracing` exporter, bounded
 //!   reservoir telemetry + a per-stage scheduler-epoch profiler, and
 //!   the per-PR perf ledger (`exp ledger` regenerates
-//!   `BENCH_PR<N>.json` at the repo root).
+//!   `BENCH_PR<N>.json` at the repo root);
+//! - the [`workload::scenario`] fleet: four seeded adversarial workload
+//!   generators (agentic tool-call loops, mega-context summarization,
+//!   a thundering herd with a mid-run replica drain, a diurnal load
+//!   wave) behind one [`workload::ScenarioSpec`], driven by
+//!   `exp gauntlet` — every preemption policy × every scenario on the
+//!   3-replica cluster path, audited per cell by
+//!   [`metrics::invariants`] and scored into the schema-stable
+//!   `GAUNTLET_PR<N>.json` regression scorecard.
 //!
 //! ## Architecture (three layers, Python never on the request path)
 //!

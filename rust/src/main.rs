@@ -13,7 +13,14 @@
 //! fastswitch exp ledger [--ledger-out FILE] [--conversations N] [--seed S]
 //!     Measure the per-PR perf ledger matrix (hotpath ns/op, scheduler
 //!     epoch cost, throughput at 1/3 replicas, per-policy tail latency)
-//!     and write the schema-stable JSON (default BENCH_PR6.json).
+//!     and write the schema-stable JSON (default BENCH_PR7.json).
+//!
+//! fastswitch exp gauntlet [--gauntlet-out FILE] [--conversations N] [--seed S]
+//!     Run the scenario gauntlet: every preemption policy x every
+//!     adversarial scenario (agentic, mega_context, thundering_herd,
+//!     diurnal) on the 3-replica cluster path, invariant-checked per
+//!     cell, writing the schema-stable scorecard (default
+//!     GAUNTLET_PR7.json).
 //!
 //! fastswitch simulate [--preset llama8b_a10|qwen32b_a100]
 //!     [--policy vllm|vllm+dbg|vllm+dbg+reuse|fastswitch]
@@ -26,12 +33,15 @@
 //!     [--preemption-policy swap_all|cost_aware|partial_tail]
 //!     [--replicas N] [--placement round_robin|least_loaded|kv_affinity]
 //!     [--spill-threshold F]
+//!     [--scenario agentic|mega_context|thundering_herd|diurnal]
 //!     [--conversations N] [--rate R] [--seed S] [--config FILE]
 //!     [--trace] [--trace-out FILE] [--obs-profile]
 //!     [--telemetry exact|reservoir]
 //!     One simulation run; prints the SLO summary (a per-tenant
 //!     breakdown when --tenants > 1, and cluster aggregates when
-//!     --replicas > 1).
+//!     --replicas > 1). --scenario swaps the ShareGPT workload for a
+//!     seeded gauntlet scenario (4 tenants; the thundering-herd drain
+//!     fires only with --replicas >= 2).
 //!
 //! fastswitch serve [--artifacts DIR] [--requests N] [--policy ...]
 //!     Serve batched requests on the real AOT-compiled model via PJRT.
@@ -46,12 +56,15 @@ use fastswitch::config::{
 };
 use fastswitch::coordinator::priority::Pattern;
 use fastswitch::exp;
-use fastswitch::exp::runner::{run_cluster_with, run_sim_with, Scale, WorkloadSpec};
+use fastswitch::exp::runner::{
+    run_cluster_scenario, run_cluster_with, run_sim_scenario, run_sim_with, Scale, WorkloadSpec,
+};
 use fastswitch::fairness::PolicyKind;
 use fastswitch::obs::{chrome, Stage, TelemetryMode, TraceRecord};
 use fastswitch::runtime::PjrtModel;
 use fastswitch::server::{RealEngine, RealEngineConfig, RealRequestSpec};
 use fastswitch::util::cli::Args;
+use fastswitch::workload::ScenarioSpec;
 use fastswitch::util::rng::Rng;
 use fastswitch::util::stats::Percentiles;
 
@@ -131,7 +144,11 @@ fn cmd_exp(args: &Args) {
         "preemption" => reports.push(exp::preemption::run(&scale)),
         "ledger" => reports.push(exp::ledger::run(
             &scale,
-            args.get_or("ledger-out", "BENCH_PR6.json"),
+            args.get_or("ledger-out", "BENCH_PR7.json"),
+        )),
+        "gauntlet" => reports.push(exp::gauntlet::run(
+            &scale,
+            args.get_or("gauntlet-out", "GAUNTLET_PR7.json"),
         )),
         other => eprintln!("unknown experiment {other:?}"),
     };
@@ -139,7 +156,7 @@ fn cmd_exp(args: &Args) {
         for e in [
             "fig1", "fig2", "fig3", "fig4", "fig6", "fig8", "fig9", "fig10", "fig11",
             "fig12", "fig13", "table1", "fairness", "chunked", "cluster", "prefetch",
-            "preemption", "ledger",
+            "preemption", "gauntlet", "ledger",
         ] {
             eprintln!("[exp] running {e} ...");
             run_one(e, &mut reports);
@@ -263,6 +280,22 @@ fn cmd_simulate(args: &Args) {
     let trace_on = cfg.obs.trace;
     let trace_out = args.get_or("trace-out", "trace.json").to_string();
     let pattern = Pattern::by_name(&pattern_name).expect("unknown pattern");
+    let scenario = args.get("scenario").map(|name| {
+        ScenarioSpec::by_name(name, cfg.scheduler.max_seq_len)
+            .expect("unknown scenario (agentic|mega_context|thundering_herd|diurnal)")
+    });
+    if let Some(sc) = &scenario {
+        eprintln!(
+            "[simulate] scenario {} ({} tenants{})",
+            sc.label(),
+            fastswitch::workload::scenario::SCENARIO_TENANTS,
+            if matches!(sc, ScenarioSpec::ThunderingHerd) {
+                ", mid-run replica drain"
+            } else {
+                ""
+            }
+        );
+    }
 
     if ccfg.replicas > 1 {
         eprintln!(
@@ -275,8 +308,13 @@ fn cmd_simulate(args: &Args) {
             scale.conversations,
             spec.tenants
         );
-        let multi_tenant = spec.tenants > 1;
-        let out = run_cluster_with(cfg, preset, pattern, ccfg, &scale, &spec);
+        let multi_tenant = scenario.is_some() || spec.tenants > 1;
+        let out = if let Some(sc) = &scenario {
+            let wl = sc.build(scale.conversations, scale.request_rate, scale.seed);
+            run_cluster_scenario(cfg, preset, pattern, ccfg, &scale, &wl)
+        } else {
+            run_cluster_with(cfg, preset, pattern, ccfg, &scale, &spec)
+        };
         print_cluster_summary(&out, multi_tenant);
         if trace_on {
             // One lane per replica, plus the router's own stream (its
@@ -311,11 +349,16 @@ fn cmd_simulate(args: &Args) {
         scale.conversations,
         spec.tenants
     );
-    let multi_tenant = spec.tenants > 1;
+    let multi_tenant = scenario.is_some() || spec.tenants > 1;
     let prefetch_depth = cfg.prefetch.depth;
     let preemption_policy = cfg.preemption.policy;
     let profile_on = cfg.obs.profile;
-    let out = run_sim_with(cfg, preset, pattern, &scale, &spec);
+    let out = if let Some(sc) = &scenario {
+        let wl = sc.build(scale.conversations, scale.request_rate, scale.seed);
+        run_sim_scenario(cfg, preset, pattern, &scale, &wl)
+    } else {
+        run_sim_with(cfg, preset, pattern, &scale, &spec)
+    };
     let ttft = out.recorder.ttft();
     let tbt = out.recorder.tbt();
     let (inf, swap, sched) = out.recorder.stall_breakdown();

@@ -1,0 +1,346 @@
+//! End-to-end invariant checks shared by the scenario gauntlet
+//! (`exp gauntlet`) and the e2e test suite.
+//!
+//! Every gauntlet cell — each preemption policy × scenario pair — is
+//! audited with the same checks after its run, so a regression that
+//! keeps the summary numbers plausible but corrupts the underlying
+//! accounting (a leaked block, a stall bucket double-count, a lost
+//! conversation during a drain) still fails loudly:
+//!
+//! - **block conservation** — GPU used + free equals capacity at end of
+//!   run, and the CPU swap space never exceeds its slot capacity;
+//! - **stall-bucket partition** — per iteration, decode-interference
+//!   stall is bounded by inference time, sample timestamps are
+//!   monotone, and the summed critical-path buckets (inference + swap
+//!   stall + scheduler overhead) fit inside the run's span;
+//! - **served-token accounting** — the per-tenant token split sums back
+//!   to the total, and (cluster runs) every dispatched conversation is
+//!   either finished or rejected — nothing is lost or served twice
+//!   across migrations and drains;
+//! - **monotone VTC** — when an online VTC-family policy ran, every
+//!   final virtual-time counter is finite, non-negative, and at least
+//!   the tenant's served tokens (charges are weighted ≥ 1 per token and
+//!   counters are only ever lifted, never decreased).
+//!
+//! Checks return violations as strings rather than panicking so the
+//! gauntlet can finish writing its scorecard (with the violation count
+//! per cell) before failing the run.
+
+use crate::cluster::ClusterOutcome;
+use crate::coordinator::engine::ServeOutcome;
+
+/// Audit one engine outcome. Returns one message per violated
+/// invariant; empty means clean.
+pub fn check_engine(out: &ServeOutcome) -> Vec<String> {
+    let mut v = Vec::new();
+    let label = &out.label;
+
+    // Block conservation.
+    if out.gpu_blocks_used_final + out.gpu_blocks_free_final != out.gpu_blocks_capacity {
+        v.push(format!(
+            "[{label}] gpu block conservation: used {} + free {} != capacity {}",
+            out.gpu_blocks_used_final, out.gpu_blocks_free_final, out.gpu_blocks_capacity
+        ));
+    }
+    if out.cpu_blocks_used_final > out.cpu_blocks_capacity {
+        v.push(format!(
+            "[{label}] cpu slots over capacity: {} > {}",
+            out.cpu_blocks_used_final, out.cpu_blocks_capacity
+        ));
+    }
+
+    // Stall-bucket partition.
+    let mut prev_at = 0;
+    let (mut inf, mut swap, mut sched) = (0u128, 0u128, 0u128);
+    for (i, s) in out.recorder.iterations.iter().enumerate() {
+        if s.at < prev_at {
+            v.push(format!(
+                "[{label}] iteration {i}: timestamp {} before predecessor {prev_at}",
+                s.at
+            ));
+        }
+        prev_at = s.at;
+        if s.decode_block_ns > s.inference_ns {
+            v.push(format!(
+                "[{label}] iteration {i}: decode-interference {} exceeds inference {}",
+                s.decode_block_ns, s.inference_ns
+            ));
+        }
+        inf += s.inference_ns as u128;
+        swap += s.swap_stall_ns as u128;
+        sched += s.sched_overhead_ns as u128;
+    }
+    if inf + swap + sched > out.span as u128 {
+        v.push(format!(
+            "[{label}] critical-path buckets exceed span: {inf} + {swap} + {sched} > {}",
+            out.span
+        ));
+    }
+
+    // Served-token accounting (per-tenant split vs total).
+    let by_tenant: u64 = out.recorder.tokens_by_tenant().iter().map(|&(_, n)| n).sum();
+    if by_tenant != out.recorder.total_tokens {
+        v.push(format!(
+            "[{label}] token split {} != total {}",
+            by_tenant, out.recorder.total_tokens
+        ));
+    }
+    if out.recorder.finished_conversations > out.recorder.finished_turns {
+        v.push(format!(
+            "[{label}] finished conversations {} exceed finished turns {}",
+            out.recorder.finished_conversations, out.recorder.finished_turns
+        ));
+    }
+
+    // Monotone VTC: counters are lifted-only, so the final value must
+    // cover at least the tenant's served tokens (every token charges a
+    // weight ≥ 1; mid-prompt prefill chunks only add more).
+    if !out.vtc_counters.is_empty() {
+        for &(tenant, counter) in &out.vtc_counters {
+            if !counter.is_finite() || counter < 0.0 {
+                v.push(format!(
+                    "[{label}] vtc counter for tenant {tenant} not finite/non-negative: {counter}"
+                ));
+            }
+        }
+        for &(tenant, tokens) in &out.recorder.tokens_by_tenant() {
+            if tokens == 0 {
+                continue;
+            }
+            let counter = out
+                .vtc_counters
+                .iter()
+                .find(|&&(t, _)| t == tenant)
+                .map(|&(_, c)| c);
+            match counter {
+                None => v.push(format!(
+                    "[{label}] tenant {tenant} served {tokens} tokens but has no vtc counter"
+                )),
+                Some(c) if c + 1e-9 < tokens as f64 => v.push(format!(
+                    "[{label}] vtc counter for tenant {tenant} below served tokens: {c} < {tokens}"
+                )),
+                _ => {}
+            }
+        }
+    }
+    v
+}
+
+/// Audit a cluster outcome: every replica's engine invariants, plus the
+/// router-level accounting. `total_conversations` is the dispatched
+/// workload size; `expect_rejection_free` asserts the scenario's
+/// by-construction guarantee (mega-context sizes every request under
+/// the admission bound).
+pub fn check_cluster(
+    out: &ClusterOutcome,
+    total_conversations: u64,
+    expect_rejection_free: bool,
+) -> Vec<String> {
+    let mut v = Vec::new();
+    for r in &out.replicas {
+        v.extend(check_engine(r));
+    }
+    let finished = out.finished_conversations();
+    let rejected = out.rejected_conversations();
+    if finished + rejected != total_conversations {
+        v.push(format!(
+            "[{}] conversation accounting: finished {finished} + rejected {rejected} != dispatched {total_conversations}",
+            out.label
+        ));
+    }
+    if expect_rejection_free && rejected > 0 {
+        v.push(format!(
+            "[{}] scenario is rejection-free by construction but {rejected} conversations were rejected",
+            out.label
+        ));
+    }
+    if out.affinity_hits > out.affinity_decisions {
+        v.push(format!(
+            "[{}] affinity hits {} exceed decisions {}",
+            out.label, out.affinity_hits, out.affinity_decisions
+        ));
+    }
+    if out.migrations > out.affinity_decisions {
+        v.push(format!(
+            "[{}] migrations {} exceed later-turn placements {}",
+            out.label, out.migrations, out.affinity_decisions
+        ));
+    }
+    if out.affinity_decisions > out.placements {
+        v.push(format!(
+            "[{}] later-turn placements {} exceed total placements {}",
+            out.label, out.affinity_decisions, out.placements
+        ));
+    }
+    if let Some((replica, _)) = out.drain {
+        if replica >= out.replicas.len() {
+            v.push(format!(
+                "[{}] drain target {replica} out of range ({} replicas)",
+                out.label,
+                out.replicas.len()
+            ));
+        }
+    }
+    let split: u64 = out.tokens_by_tenant().iter().map(|&(_, n)| n).sum();
+    if split != out.total_tokens() {
+        v.push(format!(
+            "[{}] cluster token split {split} != total {}",
+            out.label,
+            out.total_tokens()
+        ));
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{IterationSample, Recorder};
+
+    fn clean_outcome() -> ServeOutcome {
+        let mut rec = Recorder::default();
+        rec.turn_arrival(1, 0, 0, 0);
+        rec.token(1, 0, 1_000);
+        rec.token(1, 0, 2_000);
+        rec.turn_finished(1, 0);
+        rec.finished_conversations = 1;
+        rec.iteration(IterationSample {
+            at: 1_000,
+            inference_ns: 800,
+            swap_stall_ns: 100,
+            sched_overhead_ns: 50,
+            decode_block_ns: 200,
+            tokens: 1,
+            batch: 1,
+            ..Default::default()
+        });
+        rec.iteration(IterationSample {
+            at: 2_000,
+            inference_ns: 700,
+            decode_block_ns: 0,
+            tokens: 1,
+            batch: 1,
+            ..Default::default()
+        });
+        ServeOutcome {
+            recorder: rec,
+            span: 2_000,
+            iterations: 2,
+            swap_stats: Default::default(),
+            reuse_blocks_transferred: 0,
+            reuse_blocks_reused: 0,
+            contaminated: 0,
+            label: "test".into(),
+            trace: Vec::new(),
+            gpu_blocks_used_final: 0,
+            gpu_blocks_free_final: 100,
+            gpu_blocks_capacity: 100,
+            cpu_blocks_used_final: 3,
+            cpu_blocks_capacity: 50,
+            vtc_counters: vec![(0, 4.0)],
+        }
+    }
+
+    #[test]
+    fn clean_outcome_passes() {
+        assert_eq!(check_engine(&clean_outcome()), Vec::<String>::new());
+    }
+
+    #[test]
+    fn block_leak_is_caught() {
+        let mut o = clean_outcome();
+        o.gpu_blocks_free_final = 98; // two blocks vanished
+        let v = check_engine(&o);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("gpu block conservation"), "{v:?}");
+    }
+
+    #[test]
+    fn cpu_overflow_is_caught() {
+        let mut o = clean_outcome();
+        o.cpu_blocks_used_final = 51;
+        assert!(check_engine(&o)[0].contains("cpu slots over capacity"));
+    }
+
+    #[test]
+    fn stall_partition_violations_are_caught() {
+        // Decode interference larger than the iteration's inference.
+        let mut o = clean_outcome();
+        o.recorder.iterations[0].decode_block_ns = 900;
+        assert!(check_engine(&o)[0].contains("decode-interference"));
+        // Non-monotone timestamps.
+        let mut o = clean_outcome();
+        o.recorder.iterations[1].at = 500;
+        assert!(check_engine(&o)[0].contains("before predecessor"));
+        // Buckets summing past the span.
+        let mut o = clean_outcome();
+        o.span = 1_000;
+        assert!(check_engine(&o)
+            .iter()
+            .any(|m| m.contains("exceed span")));
+    }
+
+    #[test]
+    fn vtc_violations_are_caught() {
+        // Counter below served tokens (2 tokens, counter 1.0).
+        let mut o = clean_outcome();
+        o.vtc_counters = vec![(0, 1.0)];
+        assert!(check_engine(&o)[0].contains("below served tokens"));
+        // Served tenant missing from the counters.
+        let mut o = clean_outcome();
+        o.vtc_counters = vec![(7, 10.0)];
+        assert!(check_engine(&o)
+            .iter()
+            .any(|m| m.contains("no vtc counter")));
+        // NaN counter.
+        let mut o = clean_outcome();
+        o.vtc_counters = vec![(0, f64::NAN)];
+        assert!(check_engine(&o)
+            .iter()
+            .any(|m| m.contains("not finite")));
+        // Empty counters (trace policy): VTC checks are skipped.
+        let mut o = clean_outcome();
+        o.vtc_counters = Vec::new();
+        assert!(check_engine(&o).is_empty());
+    }
+
+    fn clean_cluster() -> ClusterOutcome {
+        use crate::cluster::PlacementKind;
+        ClusterOutcome {
+            replicas: vec![clean_outcome()],
+            placement: PlacementKind::LeastLoaded,
+            label: "cluster".into(),
+            placements: 5,
+            drain: Some((0, 1_000)),
+            affinity_decisions: 4,
+            affinity_hits: 2,
+            migrations: 2,
+            retransferred_blocks_on_migration: 0,
+            router_trace: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn cluster_accounting_is_checked() {
+        assert_eq!(check_cluster(&clean_cluster(), 1, true), Vec::<String>::new());
+        // One conversation lost.
+        assert!(check_cluster(&clean_cluster(), 2, false)[0].contains("conversation accounting"));
+        // Rejection-free scenario that rejected.
+        let mut rej = clean_cluster();
+        rej.replicas[0].recorder.rejected_conversations = 1;
+        assert!(check_cluster(&rej, 2, true)
+            .iter()
+            .any(|m| m.contains("rejection-free")));
+        // Router counter inversions.
+        let mut inv = clean_cluster();
+        inv.affinity_hits = 9;
+        assert!(check_cluster(&inv, 1, false)
+            .iter()
+            .any(|m| m.contains("affinity hits")));
+        let mut oob = clean_cluster();
+        oob.drain = Some((3, 1_000));
+        assert!(check_cluster(&oob, 1, false)
+            .iter()
+            .any(|m| m.contains("out of range")));
+    }
+}

@@ -8,6 +8,8 @@
 //! tagged with its owning tenant so fairness experiments can split all
 //! of the above by tenant.
 
+pub mod invariants;
+
 use crate::memory::RequestId;
 use crate::obs::{EpochProfiler, Reservoir, TelemetryMode};
 use crate::sim::clock::{to_secs, Ns};

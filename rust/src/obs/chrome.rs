@@ -23,7 +23,8 @@ fn tid(ev: &TraceEvent) -> u32 {
         | TraceEvent::PrefetchCancel { .. } => 2,
         TraceEvent::Place { .. }
         | TraceEvent::Migrate { .. }
-        | TraceEvent::MigrationEvict { .. } => 3,
+        | TraceEvent::MigrationEvict { .. }
+        | TraceEvent::Drain { .. } => 3,
         _ => 0,
     }
 }
@@ -107,6 +108,7 @@ fn args_json(ev: &TraceEvent) -> String {
             push_arg(&mut a, "req", req);
             push_arg(&mut a, "blocks", blocks);
         }
+        TraceEvent::Drain { replica } => push_arg(&mut a, "replica", replica),
     }
     a
 }

@@ -1,0 +1,254 @@
+//! Gauntlet scorecard schema: the typed record behind
+//! `GAUNTLET_PR<N>.json` and its hand-rolled (dependency-free) JSON
+//! emitter — the same discipline as [`super::ledger`].
+//!
+//! The scorecard is the regression grid of the scenario gauntlet: one
+//! cell per preemption policy × workload scenario, each carrying tail
+//! latency, stall shares, swap volume, fairness, prefetch efficiency,
+//! and the cell's invariant-violation count (always 0 on a passing
+//! run — the count is serialized so a CI artifact of a *failing* run
+//! still shows which cell broke). The matrix runner lives in
+//! `exp::gauntlet`; this module is only the schema + serializer, so
+//! `obs` never depends on `exp`.
+
+use std::fmt::Write as _;
+
+/// Schema identifier — bump only on breaking key/type changes.
+pub const GAUNTLET_SCHEMA: &str = "fastswitch-gauntlet-v1";
+
+/// Workload/config fingerprint the gauntlet was run under.
+#[derive(Clone, Debug)]
+pub struct GauntletConfig {
+    pub conversations: usize,
+    pub seed: u64,
+    pub replicas: usize,
+    pub tenants: usize,
+    pub max_model_len: usize,
+    pub request_rate: f64,
+    pub priority_update_freq: f64,
+}
+
+/// One policy × scenario cell of the grid.
+#[derive(Clone, Debug)]
+pub struct ScorecardCell {
+    pub scenario: String,
+    pub policy: String,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tbt_p50_s: f64,
+    pub tbt_p99_s: f64,
+    pub swap_stall_share: f64,
+    pub sched_overhead_share: f64,
+    pub swap_gb: f64,
+    pub swap_blocks: u64,
+    pub jain_fairness: f64,
+    pub prefetch_hit_rate: f64,
+    pub tokens_per_s: f64,
+    pub finished: u64,
+    pub rejected: u64,
+    pub migrations: u64,
+    pub preemptions: u64,
+    pub invariant_violations: u64,
+}
+
+/// The full scorecard for one PR.
+#[derive(Clone, Debug)]
+pub struct Scorecard {
+    pub pr: u32,
+    pub config: GauntletConfig,
+    pub cells: Vec<ScorecardCell>,
+}
+
+/// JSON number: finite floats at fixed precision, non-finite → 0.0 (a
+/// `NaN` would make the file unparseable).
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "0.0".to_string()
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl Scorecard {
+    /// Sum of per-cell invariant violations (0 on a healthy run).
+    pub fn total_violations(&self) -> u64 {
+        self.cells.iter().map(|c| c.invariant_violations).sum()
+    }
+
+    /// Serialize to the schema-stable pretty JSON written at repo root.
+    pub fn to_json(&self) -> String {
+        let mut o = String::new();
+        let _ = writeln!(o, "{{");
+        let _ = writeln!(o, "  \"schema\": \"{GAUNTLET_SCHEMA}\",");
+        let _ = writeln!(o, "  \"pr\": {},", self.pr);
+        let c = &self.config;
+        let _ = writeln!(o, "  \"config\": {{");
+        let _ = writeln!(o, "    \"conversations\": {},", c.conversations);
+        let _ = writeln!(o, "    \"seed\": {},", c.seed);
+        let _ = writeln!(o, "    \"replicas\": {},", c.replicas);
+        let _ = writeln!(o, "    \"tenants\": {},", c.tenants);
+        let _ = writeln!(o, "    \"max_model_len\": {},", c.max_model_len);
+        let _ = writeln!(o, "    \"request_rate\": {},", num(c.request_rate));
+        let _ = writeln!(
+            o,
+            "    \"priority_update_freq\": {}",
+            num(c.priority_update_freq)
+        );
+        let _ = writeln!(o, "  }},");
+        let _ = writeln!(o, "  \"cells\": [");
+        for (i, cell) in self.cells.iter().enumerate() {
+            let comma = if i + 1 < self.cells.len() { "," } else { "" };
+            let _ = writeln!(o, "    {{");
+            let _ = writeln!(o, "      \"scenario\": \"{}\",", esc(&cell.scenario));
+            let _ = writeln!(o, "      \"policy\": \"{}\",", esc(&cell.policy));
+            let _ = writeln!(o, "      \"ttft_p50_s\": {},", num(cell.ttft_p50_s));
+            let _ = writeln!(o, "      \"ttft_p99_s\": {},", num(cell.ttft_p99_s));
+            let _ = writeln!(o, "      \"tbt_p50_s\": {},", num(cell.tbt_p50_s));
+            let _ = writeln!(o, "      \"tbt_p99_s\": {},", num(cell.tbt_p99_s));
+            let _ = writeln!(
+                o,
+                "      \"swap_stall_share\": {},",
+                num(cell.swap_stall_share)
+            );
+            let _ = writeln!(
+                o,
+                "      \"sched_overhead_share\": {},",
+                num(cell.sched_overhead_share)
+            );
+            let _ = writeln!(o, "      \"swap_gb\": {},", num(cell.swap_gb));
+            let _ = writeln!(o, "      \"swap_blocks\": {},", cell.swap_blocks);
+            let _ = writeln!(o, "      \"jain_fairness\": {},", num(cell.jain_fairness));
+            let _ = writeln!(
+                o,
+                "      \"prefetch_hit_rate\": {},",
+                num(cell.prefetch_hit_rate)
+            );
+            let _ = writeln!(o, "      \"tokens_per_s\": {},", num(cell.tokens_per_s));
+            let _ = writeln!(o, "      \"finished\": {},", cell.finished);
+            let _ = writeln!(o, "      \"rejected\": {},", cell.rejected);
+            let _ = writeln!(o, "      \"migrations\": {},", cell.migrations);
+            let _ = writeln!(o, "      \"preemptions\": {},", cell.preemptions);
+            let _ = writeln!(
+                o,
+                "      \"invariant_violations\": {}",
+                cell.invariant_violations
+            );
+            let _ = writeln!(o, "    }}{comma}");
+        }
+        let _ = writeln!(o, "  ]");
+        o.push('}');
+        o.push('\n');
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Scorecard {
+        Scorecard {
+            pr: 7,
+            config: GauntletConfig {
+                conversations: 24,
+                seed: 42,
+                replicas: 3,
+                tenants: 4,
+                max_model_len: 4096,
+                request_rate: 2.0,
+                priority_update_freq: 0.25,
+            },
+            cells: vec![
+                ScorecardCell {
+                    scenario: "agentic".into(),
+                    policy: "swap_all".into(),
+                    ttft_p50_s: 0.12,
+                    ttft_p99_s: 0.8,
+                    tbt_p50_s: 0.03,
+                    tbt_p99_s: 0.2,
+                    swap_stall_share: 0.04,
+                    sched_overhead_share: 0.0,
+                    swap_gb: 1.5,
+                    swap_blocks: 3000,
+                    jain_fairness: 0.93,
+                    prefetch_hit_rate: 0.6,
+                    tokens_per_s: 900.0,
+                    finished: 24,
+                    rejected: 0,
+                    migrations: 2,
+                    preemptions: 11,
+                    invariant_violations: 0,
+                },
+                ScorecardCell {
+                    scenario: "thundering_herd".into(),
+                    policy: "partial_tail".into(),
+                    ttft_p50_s: 0.5,
+                    ttft_p99_s: 3.0,
+                    tbt_p50_s: 0.05,
+                    tbt_p99_s: 0.4,
+                    swap_stall_share: 0.1,
+                    sched_overhead_share: 0.0,
+                    swap_gb: 4.0,
+                    swap_blocks: 8000,
+                    jain_fairness: 0.88,
+                    prefetch_hit_rate: 0.3,
+                    tokens_per_s: 1200.0,
+                    finished: 23,
+                    rejected: 1,
+                    migrations: 9,
+                    preemptions: 40,
+                    invariant_violations: 0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_has_every_schema_key() {
+        let j = sample().to_json();
+        for key in [
+            "\"schema\"", "\"pr\"", "\"config\"", "\"conversations\"", "\"seed\"",
+            "\"replicas\"", "\"tenants\"", "\"max_model_len\"", "\"request_rate\"",
+            "\"priority_update_freq\"", "\"cells\"", "\"scenario\"", "\"policy\"",
+            "\"ttft_p50_s\"", "\"ttft_p99_s\"", "\"tbt_p50_s\"", "\"tbt_p99_s\"",
+            "\"swap_stall_share\"", "\"sched_overhead_share\"", "\"swap_gb\"",
+            "\"swap_blocks\"", "\"jain_fairness\"", "\"prefetch_hit_rate\"",
+            "\"tokens_per_s\"", "\"finished\"", "\"rejected\"", "\"migrations\"",
+            "\"preemptions\"", "\"invariant_violations\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in\n{j}");
+        }
+        assert!(j.contains(GAUNTLET_SCHEMA));
+    }
+
+    #[test]
+    fn json_guards_non_finite() {
+        let mut s = sample();
+        s.cells[0].jain_fairness = f64::NAN;
+        s.cells[0].prefetch_hit_rate = f64::INFINITY;
+        let j = s.to_json();
+        assert!(!j.contains("NaN") && !j.contains("inf"), "non-finite leaked:\n{j}");
+        assert!(j.contains("\"jain_fairness\": 0.0"));
+    }
+
+    #[test]
+    fn json_is_structurally_balanced_and_deterministic() {
+        let j = sample().to_json();
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+        assert_eq!(j, sample().to_json(), "serialization must be pure");
+    }
+
+    #[test]
+    fn violations_sum_across_cells() {
+        let mut s = sample();
+        assert_eq!(s.total_violations(), 0);
+        s.cells[1].invariant_violations = 3;
+        assert_eq!(s.total_violations(), 3);
+    }
+}

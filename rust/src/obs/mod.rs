@@ -13,6 +13,8 @@
 //!   bounded alternative to the exact Vec-push percentile pipeline.
 //! - [`ledger`]: the schema behind the per-PR `BENCH_PR<N>.json`
 //!   perf trajectory (the matrix runner lives in [`crate::exp`]).
+//! - [`gauntlet`]: the schema behind the per-PR `GAUNTLET_PR<N>.json`
+//!   scenario-gauntlet scorecard (runner in [`crate::exp`] as well).
 //!
 //! The determinism contract: with [`ObsConfig::default`] (everything
 //! off) no trace buffer exists, no reservoir is fed, no wall clock is
@@ -20,6 +22,7 @@
 //! byte-identical.
 
 pub mod chrome;
+pub mod gauntlet;
 pub mod ledger;
 pub mod reservoir;
 pub mod trace;

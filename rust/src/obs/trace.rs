@@ -96,6 +96,9 @@ pub enum TraceEvent {
     },
     /// Engine-side eviction of a conversation's state for migration.
     MigrationEvict { req: RequestId, blocks: usize },
+    /// Router drained a replica: no further placements land on it and
+    /// its conversations migrate off at their next turns.
+    Drain { replica: u32 },
 }
 
 impl TraceEvent {
@@ -118,6 +121,7 @@ impl TraceEvent {
             TraceEvent::Place { .. } => "Place",
             TraceEvent::Migrate { .. } => "Migrate",
             TraceEvent::MigrationEvict { .. } => "MigrationEvict",
+            TraceEvent::Drain { .. } => "Drain",
         }
     }
 

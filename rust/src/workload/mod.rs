@@ -1,12 +1,15 @@
 //! Workload generation: ShareGPT-like multi-turn conversations with
 //! Poisson or bursty (on/off MMPP) arrivals, optionally split across
 //! tenants with a skewed request mix (paper §4 "System and Workload
-//! Configuration", extended for the online fairness policies).
+//! Configuration", extended for the online fairness policies), plus the
+//! [`scenario`] fleet of adversarial shapes behind the `exp gauntlet`.
 
+pub mod scenario;
 pub mod sharegpt;
 pub mod tenants;
 pub mod trace;
 
+pub use scenario::{DrainPlan, ScenarioSpec, ScenarioWorkload};
 pub use sharegpt::{Conversation, ShareGptConfig, Turn};
 pub use tenants::{assign_tenants, conversations_per_tenant, TenantMix};
 pub use trace::{ArrivalTrace, TraceEntry};

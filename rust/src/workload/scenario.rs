@@ -1,0 +1,495 @@
+//! Scenario fleet: seeded adversarial workload generators behind one
+//! [`ScenarioSpec`] abstraction (the `exp gauntlet` input matrix).
+//!
+//! Four shapes, each stressing a different subsystem at its design
+//! limit — the traffic the paper's preemption-heavy claims rest on and
+//! the skewed-tenant/MMPP mixes cannot produce:
+//!
+//! - [`ScenarioSpec::Agentic`] — tool-call loops: many short turns with
+//!   sub-second think times, stressing prefetch lead time and
+//!   claim/cancel churn (the lookahead pipeline barely has one epoch of
+//!   warning before a turn fires).
+//! - [`ScenarioSpec::MegaContext`] — single-turn summarization requests
+//!   near `max_model_len`, stressing `partial_tail` and the capacity
+//!   backstops. Rejection-free *by construction*: every prompt+response
+//!   fits the configured `max_model_len`, which on the testbed presets
+//!   is far below the GPU-capacity admission bound, so
+//!   `rejected_conversations == 0` is an invariant, not a hope.
+//! - [`ScenarioSpec::ThunderingHerd`] — synchronized arrival waves plus
+//!   a mid-run replica drain event (injected through the cluster
+//!   router) that forces live migrations, stressing migration costing.
+//! - [`ScenarioSpec::Diurnal`] — a long-run sinusoidal load wave
+//!   (non-homogeneous Poisson via thinning) for steady-state drift.
+//!
+//! Every generator is pure over `(spec, n, rate, seed)`: same inputs,
+//! byte-identical workload (the determinism pins and the gauntlet's
+//! same-seed scorecard test rely on it).
+
+use super::sharegpt::{generate, Conversation, ShareGptConfig, Turn};
+use super::tenants::{assign_tenants, TenantMix};
+use super::trace::{ArrivalTrace, TraceEntry};
+use crate::sim::clock::{Ns, SEC};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Spec bounds (public so property tests assert generators stay in-spec)
+// ---------------------------------------------------------------------
+
+/// Tenants every scenario splits across (Jain index needs > 1).
+pub const SCENARIO_TENANTS: usize = 4;
+/// Share of conversations owned by tenant 0 (mild skew).
+pub const SCENARIO_HEAVY_SHARE: f64 = 0.4;
+
+/// Agentic: turns per conversation, inclusive bounds.
+pub const AGENTIC_TURNS_MIN: usize = 8;
+pub const AGENTIC_TURNS_MAX: usize = 16;
+/// Agentic: sub-second think times (tool execution latency), seconds.
+pub const AGENTIC_THINK_MIN_S: f64 = 0.05;
+pub const AGENTIC_THINK_MAX_S: f64 = 0.9;
+/// Agentic: token bounds — first prompt carries the task, follow-ups
+/// are tool results, responses are short tool calls. Inclusive.
+pub const AGENTIC_FIRST_PROMPT: (u32, u32) = (96, 256);
+pub const AGENTIC_TOOL_PROMPT: (u32, u32) = (24, 96);
+pub const AGENTIC_RESPONSE: (u32, u32) = (16, 64);
+
+/// Mega-context: response token bounds, inclusive.
+pub const MEGA_RESPONSE: (u32, u32) = (64, 256);
+/// Mega-context: prompts start at this fraction of the remaining
+/// context budget (`max_model_len - response`) — "near the cap".
+pub const MEGA_PROMPT_FLOOR_FRAC: f64 = 0.70;
+
+/// Thundering herd: arrival waves and their spacing.
+pub const HERD_WAVES: usize = 3;
+pub const HERD_WAVE_GAP_S: f64 = 30.0;
+/// Within-wave arrival rate multiplier over the base request rate.
+pub const HERD_SPIKE: f64 = 20.0;
+/// Herd conversations: turns (inclusive), think times, token bounds.
+pub const HERD_TURNS_MIN: usize = 2;
+pub const HERD_TURNS_MAX: usize = 6;
+pub const HERD_THINK_MIN_S: f64 = 0.5;
+pub const HERD_THINK_MAX_S: f64 = 3.0;
+pub const HERD_PROMPT: (u32, u32) = (32, 256);
+pub const HERD_RESPONSE: (u32, u32) = (32, 192);
+/// Mid-run drain: which replica fails, and how long after the second
+/// wave's first arrival. Anchoring to the wave (not a span fraction)
+/// guarantees the drained replica holds live multi-turn conversations
+/// at the event — a fraction could land in the silent gap between
+/// waves, where a drain would migrate nothing.
+pub const HERD_DRAIN_REPLICA: usize = 1;
+pub const HERD_DRAIN_DELAY_S: f64 = 1.0;
+
+/// Diurnal: full load-wave periods the arrival span covers, and the
+/// modulation depth (`rate · (1 ± amplitude)` at peak/trough).
+pub const DIURNAL_PERIODS: f64 = 2.0;
+pub const DIURNAL_AMPLITUDE: f64 = 0.8;
+
+/// Mid-run replica drain/failure request: the cluster router stops
+/// placing work on `replica` once its clock passes `at`, and every held
+/// conversation migrates off on its next turn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DrainPlan {
+    pub replica: usize,
+    pub at: Ns,
+}
+
+/// One scenario's full deterministic workload.
+#[derive(Clone, Debug)]
+pub struct ScenarioWorkload {
+    pub conversations: Vec<Conversation>,
+    pub arrivals: ArrivalTrace,
+    /// Replica drain event (thundering herd only).
+    pub drain: Option<DrainPlan>,
+}
+
+/// One scenario of the fleet (see module docs for what each stresses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioSpec {
+    Agentic,
+    MegaContext {
+        /// Context cap every prompt+response stays within (the
+        /// `[scheduler] max_seq_len` of the run's config).
+        max_model_len: usize,
+    },
+    ThunderingHerd,
+    Diurnal,
+}
+
+impl ScenarioSpec {
+    /// The whole fleet in canonical (gauntlet row) order.
+    pub fn all(max_model_len: usize) -> Vec<ScenarioSpec> {
+        vec![
+            ScenarioSpec::Agentic,
+            ScenarioSpec::MegaContext { max_model_len },
+            ScenarioSpec::ThunderingHerd,
+            ScenarioSpec::Diurnal,
+        ]
+    }
+
+    pub fn by_name(s: &str, max_model_len: usize) -> Option<ScenarioSpec> {
+        match s {
+            "agentic" => Some(ScenarioSpec::Agentic),
+            "mega_context" | "mega-context" | "mega" => {
+                Some(ScenarioSpec::MegaContext { max_model_len })
+            }
+            "thundering_herd" | "thundering-herd" | "herd" => {
+                Some(ScenarioSpec::ThunderingHerd)
+            }
+            "diurnal" => Some(ScenarioSpec::Diurnal),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScenarioSpec::Agentic => "agentic",
+            ScenarioSpec::MegaContext { .. } => "mega_context",
+            ScenarioSpec::ThunderingHerd => "thundering_herd",
+            ScenarioSpec::Diurnal => "diurnal",
+        }
+    }
+
+    /// Whether the generator guarantees zero max-model-len rejections
+    /// by construction (the gauntlet asserts it as an invariant).
+    pub fn expect_rejection_free(&self) -> bool {
+        matches!(self, ScenarioSpec::MegaContext { .. })
+    }
+
+    /// Generate the scenario's workload: `conversations` conversations,
+    /// base arrival rate `request_rate`/s, everything derived from
+    /// `seed` via tagged sub-streams (conversation shapes, tenant
+    /// assignment, and arrivals never share draws).
+    pub fn build(
+        &self,
+        conversations: usize,
+        request_rate: f64,
+        seed: u64,
+    ) -> ScenarioWorkload {
+        match *self {
+            ScenarioSpec::Agentic => agentic(conversations, request_rate, seed),
+            ScenarioSpec::MegaContext { max_model_len } => {
+                mega_context(conversations, request_rate, seed, max_model_len)
+            }
+            ScenarioSpec::ThunderingHerd => herd(conversations, request_rate, seed),
+            ScenarioSpec::Diurnal => diurnal(conversations, request_rate, seed),
+        }
+    }
+}
+
+fn split_tenants(convs: &mut [Conversation], seed: u64) {
+    assign_tenants(
+        convs,
+        &TenantMix::skewed(SCENARIO_TENANTS, SCENARIO_HEAVY_SHARE),
+        seed ^ 0x7E,
+    );
+}
+
+/// Inclusive uniform draw over a `(lo, hi)` token-bound pair.
+fn tokens(rng: &mut Rng, bounds: (u32, u32)) -> u32 {
+    rng.range(bounds.0 as u64, bounds.1 as u64 + 1) as u32
+}
+
+fn uniform_s(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    lo + rng.f64() * (hi - lo)
+}
+
+fn agentic(n: usize, rate: f64, seed: u64) -> ScenarioWorkload {
+    let mut rng = Rng::new(seed ^ 0xA9E7_71C0);
+    let mut convs: Vec<Conversation> = (0..n)
+        .map(|id| {
+            let n_turns = rng.usize(AGENTIC_TURNS_MIN, AGENTIC_TURNS_MAX + 1);
+            let turns = (0..n_turns)
+                .map(|t| Turn {
+                    prompt_tokens: if t == 0 {
+                        tokens(&mut rng, AGENTIC_FIRST_PROMPT)
+                    } else {
+                        tokens(&mut rng, AGENTIC_TOOL_PROMPT)
+                    },
+                    response_tokens: tokens(&mut rng, AGENTIC_RESPONSE),
+                    think_time_s: if t == 0 {
+                        0.0
+                    } else {
+                        uniform_s(&mut rng, AGENTIC_THINK_MIN_S, AGENTIC_THINK_MAX_S)
+                    },
+                })
+                .collect();
+            Conversation { id: id as u64, tenant: 0, turns }
+        })
+        .collect();
+    split_tenants(&mut convs, seed);
+    let arrivals = ArrivalTrace::poisson(&convs, rate, seed ^ 0x5EED);
+    ScenarioWorkload { conversations: convs, arrivals, drain: None }
+}
+
+fn mega_context(n: usize, rate: f64, seed: u64, max_model_len: usize) -> ScenarioWorkload {
+    let mut rng = Rng::new(seed ^ 0x3E6A_C027);
+    let mut convs: Vec<Conversation> = (0..n)
+        .map(|id| {
+            let response = tokens(&mut rng, MEGA_RESPONSE);
+            // Rejection-free by construction: prompt + response never
+            // exceeds the context cap (and the cap itself sits far
+            // below the GPU-capacity admission bound on the testbed
+            // presets, so the max-model-len rule can never fire).
+            let budget = (max_model_len as u64).saturating_sub(response as u64).max(8);
+            let floor = ((budget as f64) * MEGA_PROMPT_FLOOR_FRAC) as u64;
+            let prompt = rng.range(floor.max(8), budget + 1) as u32;
+            Conversation {
+                id: id as u64,
+                tenant: 0,
+                turns: vec![Turn {
+                    prompt_tokens: prompt,
+                    response_tokens: response,
+                    think_time_s: 0.0,
+                }],
+            }
+        })
+        .collect();
+    split_tenants(&mut convs, seed);
+    let arrivals = ArrivalTrace::poisson(&convs, rate, seed ^ 0x5EED);
+    ScenarioWorkload { conversations: convs, arrivals, drain: None }
+}
+
+fn herd(n: usize, rate: f64, seed: u64) -> ScenarioWorkload {
+    let mut rng = Rng::new(seed ^ 0x4E8D_11B2);
+    let mut convs: Vec<Conversation> = (0..n)
+        .map(|id| {
+            let n_turns = rng.usize(HERD_TURNS_MIN, HERD_TURNS_MAX + 1);
+            let turns = (0..n_turns)
+                .map(|t| Turn {
+                    prompt_tokens: tokens(&mut rng, HERD_PROMPT),
+                    response_tokens: tokens(&mut rng, HERD_RESPONSE),
+                    think_time_s: if t == 0 {
+                        0.0
+                    } else {
+                        uniform_s(&mut rng, HERD_THINK_MIN_S, HERD_THINK_MAX_S)
+                    },
+                })
+                .collect();
+            Conversation { id: id as u64, tenant: 0, turns }
+        })
+        .collect();
+    split_tenants(&mut convs, seed);
+
+    // Synchronized waves: conversations split into HERD_WAVES contiguous
+    // chunks, each arriving in a tight burst at HERD_SPIKE times the
+    // base rate; waves start HERD_WAVE_GAP_S apart. `t.max(wave_start)`
+    // keeps arrivals monotone even if a wave overruns its gap.
+    let mut arr_rng = Rng::new(seed ^ 0x5EED ^ 0x4E8D_11B2);
+    let mut entries = Vec::with_capacity(n);
+    let base = n / HERD_WAVES;
+    let extra = n % HERD_WAVES;
+    let mut t = 0.0f64;
+    let mut next = 0usize;
+    let mut second_wave_start: Option<f64> = None;
+    for wave in 0..HERD_WAVES {
+        let count = base + usize::from(wave < extra);
+        t = t.max(wave as f64 * HERD_WAVE_GAP_S);
+        for _ in 0..count {
+            t += arr_rng.exp(rate * HERD_SPIKE);
+            if wave == 1 && second_wave_start.is_none() {
+                second_wave_start = Some(t);
+            }
+            entries.push(TraceEntry {
+                conversation: convs[next].id,
+                arrival: (t * SEC as f64) as Ns,
+            });
+            next += 1;
+        }
+    }
+    let arrivals = ArrivalTrace { entries };
+    // Drain while the second wave is live: its conversations all have
+    // ≥ HERD_TURNS_MIN turns and ≥ HERD_THINK_MIN_S think times, so the
+    // drained replica provably holds work whose next turns must migrate
+    // off. (Degenerate single-wave workloads fall back to mid-span.)
+    let drain_at_s = second_wave_start
+        .map(|w| w + HERD_DRAIN_DELAY_S)
+        .unwrap_or_else(|| arrivals.span() as f64 * 0.45 / SEC as f64);
+    let drain = DrainPlan {
+        replica: HERD_DRAIN_REPLICA,
+        at: (drain_at_s * SEC as f64) as Ns,
+    };
+    ScenarioWorkload { conversations: convs, arrivals, drain: Some(drain) }
+}
+
+fn diurnal(n: usize, rate: f64, seed: u64) -> ScenarioWorkload {
+    // Conversation shapes are the calibrated ShareGPT clone — the
+    // scenario's stress is the load wave, not the per-request shape.
+    let mut convs = generate(&ShareGptConfig::default(), n, seed ^ 0xD1);
+    split_tenants(&mut convs, seed);
+
+    // Non-homogeneous Poisson via thinning: candidates at the peak rate
+    // λmax, accepted with probability λ(t)/λmax where
+    // λ(t) = rate · (1 + A·sin(2πt/period)). The period is sized so the
+    // expected span (n/rate seconds) covers DIURNAL_PERIODS full waves.
+    let mut rng = Rng::new(seed ^ 0x5EED ^ 0xD1FF_A301);
+    let period_s = (n as f64 / (rate * DIURNAL_PERIODS)).max(1.0);
+    let lmax = rate * (1.0 + DIURNAL_AMPLITUDE);
+    let mut t = 0.0f64;
+    let entries = convs
+        .iter()
+        .map(|c| {
+            loop {
+                t += rng.exp(lmax);
+                let phase = 2.0 * std::f64::consts::PI * t / period_s;
+                let lam = rate * (1.0 + DIURNAL_AMPLITUDE * phase.sin());
+                if rng.f64() * lmax <= lam {
+                    break;
+                }
+            }
+            TraceEntry {
+                conversation: c.id,
+                arrival: (t * SEC as f64) as Ns,
+            }
+        })
+        .collect();
+    ScenarioWorkload {
+        conversations: convs,
+        arrivals: ArrivalTrace { entries },
+        drain: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LEN: usize = 4096;
+
+    #[test]
+    fn fleet_has_four_scenarios_and_names_round_trip() {
+        let fleet = ScenarioSpec::all(LEN);
+        assert_eq!(fleet.len(), 4);
+        for s in &fleet {
+            assert_eq!(ScenarioSpec::by_name(s.label(), LEN), Some(*s));
+        }
+        assert_eq!(ScenarioSpec::by_name("mega", LEN), ScenarioSpec::by_name("mega_context", LEN));
+        assert_eq!(ScenarioSpec::by_name("herd", LEN), ScenarioSpec::by_name("thundering_herd", LEN));
+        assert_eq!(ScenarioSpec::by_name("bogus", LEN), None);
+    }
+
+    #[test]
+    fn every_scenario_is_deterministic_per_seed() {
+        for spec in ScenarioSpec::all(LEN) {
+            let a = spec.build(40, 2.0, 7);
+            let b = spec.build(40, 2.0, 7);
+            assert_eq!(a.conversations.len(), 40);
+            assert_eq!(a.drain, b.drain);
+            for (x, y) in a.conversations.iter().zip(&b.conversations) {
+                assert_eq!(x.tenant, y.tenant);
+                assert_eq!(x.turns.len(), y.turns.len());
+                for (t, u) in x.turns.iter().zip(&y.turns) {
+                    assert_eq!(t.prompt_tokens, u.prompt_tokens);
+                    assert_eq!(t.response_tokens, u.response_tokens);
+                    assert_eq!(t.think_time_s, u.think_time_s);
+                }
+            }
+            for (x, y) in a.arrivals.entries.iter().zip(&b.arrivals.entries) {
+                assert_eq!(x.arrival, y.arrival);
+            }
+            let c = spec.build(40, 2.0, 8);
+            assert!(
+                a.arrivals.entries.iter().zip(&c.arrivals.entries).any(|(x, y)| x.arrival != y.arrival),
+                "{}: seed change must change the workload",
+                spec.label()
+            );
+        }
+    }
+
+    #[test]
+    fn agentic_stays_within_spec_bounds() {
+        let wl = ScenarioSpec::Agentic.build(60, 2.0, 3);
+        for c in &wl.conversations {
+            assert!((AGENTIC_TURNS_MIN..=AGENTIC_TURNS_MAX).contains(&c.turns.len()));
+            assert_eq!(c.turns[0].think_time_s, 0.0);
+            for (i, t) in c.turns.iter().enumerate() {
+                if i > 0 {
+                    assert!(t.think_time_s >= AGENTIC_THINK_MIN_S);
+                    assert!(t.think_time_s < AGENTIC_THINK_MAX_S);
+                    assert!((AGENTIC_TOOL_PROMPT.0..=AGENTIC_TOOL_PROMPT.1).contains(&t.prompt_tokens));
+                } else {
+                    assert!((AGENTIC_FIRST_PROMPT.0..=AGENTIC_FIRST_PROMPT.1).contains(&t.prompt_tokens));
+                }
+                assert!((AGENTIC_RESPONSE.0..=AGENTIC_RESPONSE.1).contains(&t.response_tokens));
+            }
+        }
+    }
+
+    #[test]
+    fn mega_context_is_single_turn_near_but_under_the_cap() {
+        let wl = ScenarioSpec::MegaContext { max_model_len: LEN }.build(60, 1.0, 5);
+        for c in &wl.conversations {
+            assert_eq!(c.turns.len(), 1);
+            let total = c.turns[0].prompt_tokens as usize + c.turns[0].response_tokens as usize;
+            assert!(total <= LEN, "conv {} context {total} > {LEN}", c.id);
+            assert!(
+                c.turns[0].prompt_tokens as f64 >= MEGA_PROMPT_FLOOR_FRAC * 0.9 * LEN as f64,
+                "prompt {} not near the cap",
+                c.turns[0].prompt_tokens
+            );
+        }
+    }
+
+    #[test]
+    fn herd_waves_are_separated_and_drain_lands_mid_run() {
+        let wl = ScenarioSpec::ThunderingHerd.build(90, 1.0, 11);
+        for w in wl.arrivals.entries.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival, "arrivals must be monotone");
+        }
+        // Inter-wave silence: with ~30-conv waves at 20 req/s the wave
+        // spread is ~1.5 s against a 30 s gap — at least HERD_WAVES-1
+        // gaps far exceed any in-wave spacing.
+        let big_gaps = wl
+            .arrivals
+            .entries
+            .windows(2)
+            .filter(|w| w[1].arrival - w[0].arrival > 10 * SEC)
+            .count();
+        assert!(big_gaps >= HERD_WAVES - 1, "{big_gaps} inter-wave gaps");
+        let d = wl.drain.expect("herd must carry a drain event");
+        assert_eq!(d.replica, HERD_DRAIN_REPLICA);
+        assert!(d.at > 0 && d.at < wl.arrivals.span());
+        // The drain is anchored inside the second wave (first wave-2
+        // arrival + delay), never in the silent inter-wave gap: with 90
+        // conversations the waves are thirds of the entry list.
+        let wave2_first = wl.arrivals.entries[30].arrival;
+        let wave3_first = wl.arrivals.entries[60].arrival;
+        assert!(
+            d.at > wave2_first && d.at < wave3_first,
+            "drain {} outside wave 2 [{wave2_first}, {wave3_first})",
+            d.at
+        );
+    }
+
+    #[test]
+    fn diurnal_span_covers_the_configured_wave_count() {
+        let n = 400;
+        let rate = 2.0;
+        let wl = ScenarioSpec::Diurnal.build(n, rate, 13);
+        for w in wl.arrivals.entries.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        // Thinning keeps the long-run average at `rate`, so the span
+        // should sit near n/rate seconds (= DIURNAL_PERIODS periods).
+        let span_s = wl.arrivals.span() as f64 / SEC as f64;
+        let expect = n as f64 / rate;
+        assert!(
+            span_s > 0.5 * expect && span_s < 2.0 * expect,
+            "span {span_s:.1}s vs expected ≈{expect:.1}s"
+        );
+    }
+
+    #[test]
+    fn every_scenario_spans_all_tenants() {
+        for spec in ScenarioSpec::all(LEN) {
+            let wl = spec.build(80, 2.0, 17);
+            let mut seen: Vec<u32> = wl.conversations.iter().map(|c| c.tenant).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(
+                seen.len(),
+                SCENARIO_TENANTS,
+                "{}: tenants {seen:?}",
+                spec.label()
+            );
+        }
+    }
+}

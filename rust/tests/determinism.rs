@@ -11,9 +11,10 @@ use fastswitch::config::{EngineConfig, Preset};
 use fastswitch::coordinator::engine::ServeOutcome;
 use fastswitch::coordinator::priority::Pattern;
 use fastswitch::exp::runner::{
-    build_workload, run_cluster_with, run_sim_with, Scale, WorkloadSpec,
+    build_workload, run_cluster_scenario, run_cluster_with, run_sim_with, Scale, WorkloadSpec,
 };
 use fastswitch::fairness::PolicyKind;
+use fastswitch::workload::ScenarioSpec;
 use std::fmt::Write as _;
 
 fn scale(seed: u64) -> Scale {
@@ -171,6 +172,41 @@ fn same_seed_cluster_runs_are_byte_identical() {
         cluster_summary(&a),
         cluster_summary(&b),
         "same seed must reproduce the 3-replica cluster summary byte-for-byte"
+    );
+}
+
+/// The agentic gauntlet scenario through the full 3-replica cluster
+/// path (KV-affinity placement, VTC, depth-2 prefetch): the scenario
+/// generator's sub-second think-time churn drives the densest
+/// claim/cancel traffic in the fleet, and it too must be a pure
+/// function of the seed.
+#[test]
+fn same_seed_agentic_scenario_cluster_runs_are_byte_identical() {
+    let s = scale(123);
+    let run = || {
+        let wl = ScenarioSpec::Agentic.build(s.conversations, s.request_rate, s.seed);
+        run_cluster_scenario(
+            engine_cfg(),
+            Preset::llama8b_a10(),
+            Pattern::Markov,
+            ClusterConfig {
+                replicas: 3,
+                placement: PlacementKind::KvAffinity {
+                    spill_threshold: 0.5,
+                },
+            },
+            &s,
+            &wl,
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.replicas.len(), 3);
+    assert!(a.total_tokens() > 0, "agentic cluster run served nothing");
+    assert_eq!(
+        cluster_summary(&a),
+        cluster_summary(&b),
+        "same seed must reproduce the agentic 3-replica summary byte-for-byte"
     );
 }
 

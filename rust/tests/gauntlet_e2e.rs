@@ -1,0 +1,93 @@
+//! Gauntlet e2e: the scenario × policy grid must be a pure function of
+//! the seed (byte-identical scorecard JSON), every cell must pass the
+//! shared invariant audit, and the thundering-herd drain must provably
+//! migrate work with conversation accounting intact.
+
+use fastswitch::exp::gauntlet::{build, REPLICAS};
+use fastswitch::exp::preemption::POLICIES;
+use fastswitch::exp::runner::Scale;
+use fastswitch::obs::gauntlet::GAUNTLET_SCHEMA;
+use fastswitch::workload::ScenarioSpec;
+
+fn scale() -> Scale {
+    Scale {
+        conversations: 16,
+        request_rate: 2.0,
+        seed: 77,
+        max_iters: 400_000,
+        charge_sched_overhead: false,
+    }
+}
+
+#[test]
+fn same_seed_scorecards_are_byte_identical() {
+    let (a, _) = build(&scale());
+    let (b, _) = build(&scale());
+    let ja = a.to_json();
+    assert!(ja.contains(GAUNTLET_SCHEMA), "scorecard must carry its schema tag");
+    assert_eq!(
+        ja,
+        b.to_json(),
+        "same seed must reproduce the scorecard JSON byte-for-byte"
+    );
+    // A changed seed must actually change the measurement.
+    let (c, _) = build(&Scale { seed: 78, ..scale() });
+    assert_ne!(ja, c.to_json(), "a changed seed must change the scorecard");
+}
+
+#[test]
+fn every_cell_upholds_the_invariants() {
+    let s = scale();
+    let (card, violations) = build(&s);
+    assert_eq!(violations, Vec::<String>::new(), "invariant violations");
+    assert_eq!(card.config.replicas, REPLICAS);
+    assert_eq!(card.config.conversations, s.conversations);
+    let scenarios = ScenarioSpec::all(card.config.max_model_len).len();
+    assert_eq!(card.cells.len(), scenarios * POLICIES.len());
+    for cell in &card.cells {
+        assert_eq!(
+            cell.invariant_violations, 0,
+            "{}/{} failed the audit",
+            cell.scenario, cell.policy
+        );
+        assert_eq!(
+            cell.finished + cell.rejected,
+            s.conversations as u64,
+            "{}/{} lost conversations",
+            cell.scenario,
+            cell.policy
+        );
+        assert!(cell.ttft_p99_s.is_finite() && cell.ttft_p99_s >= 0.0);
+        assert!(cell.jain_fairness > 0.0 && cell.jain_fairness <= 1.0 + 1e-9);
+    }
+    // Mega-context is rejection-free by construction.
+    for cell in card.cells.iter().filter(|c| c.scenario == "mega_context") {
+        assert_eq!(cell.rejected, 0, "mega_context must admit everything");
+    }
+}
+
+#[test]
+fn herd_drain_provably_migrates_with_accounting_intact() {
+    let s = scale();
+    let (card, violations) = build(&s);
+    assert!(violations.is_empty(), "{violations:?}");
+    let herd: Vec<_> = card
+        .cells
+        .iter()
+        .filter(|c| c.scenario == "thundering_herd")
+        .collect();
+    assert_eq!(herd.len(), POLICIES.len());
+    for cell in herd {
+        assert!(
+            cell.migrations > 0,
+            "{}: the mid-run drain must force migrations",
+            cell.policy
+        );
+        assert_eq!(
+            cell.finished + cell.rejected,
+            s.conversations as u64,
+            "{}: accounting must survive the drain",
+            cell.policy
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Property tests for the scenario fleet generators: seeded
+//! reproducibility, arrival monotonicity, and the per-scenario spec
+//! bounds (agentic turn/think envelopes, mega-context prompts capped at
+//! `max_model_len`, herd drain anchored inside the run).
+
+use fastswitch::sim::clock::SEC;
+use fastswitch::workload::scenario::{
+    AGENTIC_RESPONSE, AGENTIC_THINK_MAX_S, AGENTIC_THINK_MIN_S, AGENTIC_TURNS_MAX,
+    AGENTIC_TURNS_MIN, HERD_DRAIN_REPLICA, MEGA_PROMPT_FLOOR_FRAC, SCENARIO_TENANTS,
+};
+use fastswitch::workload::{ScenarioSpec, ScenarioWorkload};
+
+const MAX_MODEL_LEN: usize = 4096;
+
+fn fleet() -> Vec<ScenarioSpec> {
+    ScenarioSpec::all(MAX_MODEL_LEN)
+}
+
+/// A byte-comparable digest of a full workload (shapes, tenants,
+/// arrivals, drain) — any generator drift flips it.
+fn digest(wl: &ScenarioWorkload) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for c in &wl.conversations {
+        let _ = write!(s, "c{}t{}:", c.id, c.tenant);
+        for t in &c.turns {
+            let _ = write!(s, "{}/{}/{:e};", t.prompt_tokens, t.response_tokens, t.think_time_s);
+        }
+    }
+    for e in &wl.arrivals.entries {
+        let _ = write!(s, "a{}@{};", e.conversation, e.arrival);
+    }
+    let _ = write!(s, "d{:?}", wl.drain);
+    s
+}
+
+#[test]
+fn every_scenario_reproduces_per_seed_and_moves_per_seed() {
+    for spec in fleet() {
+        let a = spec.build(48, 2.0, 91);
+        let b = spec.build(48, 2.0, 91);
+        assert_eq!(
+            digest(&a),
+            digest(&b),
+            "{}: same seed must rebuild the identical workload",
+            spec.label()
+        );
+        let c = spec.build(48, 2.0, 92);
+        assert_ne!(
+            digest(&a),
+            digest(&c),
+            "{}: a changed seed must change the workload",
+            spec.label()
+        );
+    }
+}
+
+#[test]
+fn every_scenario_has_monotone_arrivals_covering_all_conversations() {
+    for spec in fleet() {
+        let wl = spec.build(48, 2.0, 33);
+        assert_eq!(wl.arrivals.entries.len(), wl.conversations.len());
+        for w in wl.arrivals.entries.windows(2) {
+            assert!(
+                w[0].arrival <= w[1].arrival,
+                "{}: arrivals must be non-decreasing",
+                spec.label()
+            );
+        }
+        let mut ids: Vec<u64> = wl.arrivals.entries.iter().map(|e| e.conversation).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(
+            ids.len(),
+            wl.conversations.len(),
+            "{}: every conversation must arrive exactly once",
+            spec.label()
+        );
+        let tenants: std::collections::BTreeSet<u32> =
+            wl.conversations.iter().map(|c| c.tenant).collect();
+        assert_eq!(tenants.len(), SCENARIO_TENANTS, "{}", spec.label());
+    }
+}
+
+#[test]
+fn agentic_turn_counts_and_think_times_stay_in_the_spec_envelope() {
+    let wl = ScenarioSpec::Agentic.build(64, 2.0, 7);
+    for c in &wl.conversations {
+        assert!(
+            (AGENTIC_TURNS_MIN..=AGENTIC_TURNS_MAX).contains(&c.turns.len()),
+            "conv {}: {} turns",
+            c.id,
+            c.turns.len()
+        );
+        assert_eq!(c.turns[0].think_time_s, 0.0, "first turn fires at arrival");
+        for t in &c.turns[1..] {
+            assert!(
+                t.think_time_s >= AGENTIC_THINK_MIN_S && t.think_time_s < AGENTIC_THINK_MAX_S,
+                "think {} outside [{AGENTIC_THINK_MIN_S}, {AGENTIC_THINK_MAX_S})",
+                t.think_time_s
+            );
+        }
+        for t in &c.turns {
+            assert!(
+                (AGENTIC_RESPONSE.0..=AGENTIC_RESPONSE.1).contains(&t.response_tokens),
+                "response {} outside tool-call bounds",
+                t.response_tokens
+            );
+        }
+    }
+}
+
+#[test]
+fn mega_context_prompts_fill_but_never_exceed_the_context_cap() {
+    let wl = ScenarioSpec::MegaContext { max_model_len: MAX_MODEL_LEN }.build(64, 1.0, 19);
+    for c in &wl.conversations {
+        assert_eq!(c.turns.len(), 1, "mega-context is single-turn");
+        let t = &c.turns[0];
+        let total = t.prompt_tokens as usize + t.response_tokens as usize;
+        assert!(
+            total <= MAX_MODEL_LEN,
+            "conv {}: context {total} exceeds max_model_len {MAX_MODEL_LEN}",
+            c.id
+        );
+        assert!(
+            (t.prompt_tokens as f64) >= MEGA_PROMPT_FLOOR_FRAC * 0.9 * MAX_MODEL_LEN as f64,
+            "conv {}: prompt {} is not near the cap",
+            c.id,
+            t.prompt_tokens
+        );
+    }
+}
+
+#[test]
+fn herd_drain_targets_a_real_replica_inside_the_arrival_span() {
+    let wl = ScenarioSpec::ThunderingHerd.build(48, 1.0, 23);
+    let d = wl.drain.expect("thundering herd must carry a drain plan");
+    assert_eq!(d.replica, HERD_DRAIN_REPLICA);
+    assert!(d.at > 0 && d.at < wl.arrivals.span(), "drain must land mid-run");
+    // The rest of the fleet never drains.
+    for spec in fleet() {
+        if spec.label() != "thundering_herd" {
+            assert!(spec.build(12, 1.0, 23).drain.is_none(), "{}", spec.label());
+        }
+    }
+    // Sanity on the virtual clock units the drain timestamp uses.
+    assert!(wl.arrivals.span() > SEC, "herd span must exceed one second");
+}

@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Validate a GAUNTLET_PR<N>.json scorecard against fastswitch-gauntlet-v1.
+
+Usage: check_gauntlet.py SCORECARD.json
+
+Checks the schema tag, every required key, value types, that the grid
+covers every scenario x policy pair exactly once, and that every cell
+passed the invariant audit (invariant_violations == 0). Exits non-zero
+with a per-violation message on failure — CI gates the `exp gauntlet`
+smoke run on this.
+"""
+
+import json
+import sys
+
+SCHEMA = "fastswitch-gauntlet-v1"
+
+SCENARIOS = ["agentic", "mega_context", "thundering_herd", "diurnal"]
+POLICIES = ["swap_all", "cost_aware", "partial_tail"]
+
+CONFIG_KEYS = {
+    "conversations": int,
+    "seed": int,
+    "replicas": int,
+    "tenants": int,
+    "max_model_len": int,
+    "request_rate": float,
+    "priority_update_freq": float,
+}
+CELL_KEYS = {
+    "scenario": str,
+    "policy": str,
+    "ttft_p50_s": float,
+    "ttft_p99_s": float,
+    "tbt_p50_s": float,
+    "tbt_p99_s": float,
+    "swap_stall_share": float,
+    "sched_overhead_share": float,
+    "swap_gb": float,
+    "swap_blocks": int,
+    "jain_fairness": float,
+    "prefetch_hit_rate": float,
+    "tokens_per_s": float,
+    "finished": int,
+    "rejected": int,
+    "migrations": int,
+    "preemptions": int,
+    "invariant_violations": int,
+}
+
+errors = []
+
+
+def fail(msg):
+    errors.append(msg)
+
+
+def check_obj(obj, keys, where):
+    if not isinstance(obj, dict):
+        fail(f"{where}: expected object, got {type(obj).__name__}")
+        return
+    for key, ty in keys.items():
+        if key not in obj:
+            fail(f"{where}: missing key {key!r}")
+            continue
+        val = obj[key]
+        # Ints are acceptable where floats are expected (JSON "4" vs "4.0").
+        ok = isinstance(val, ty) or (ty is float and isinstance(val, int))
+        if isinstance(val, bool):  # bool is an int subclass — never valid here
+            ok = False
+        if not ok:
+            fail(f"{where}.{key}: expected {ty.__name__}, got {val!r}")
+        elif ty in (int, float) and key != "seed" and val < 0:
+            fail(f"{where}.{key}: negative measurement {val!r}")
+    for key in obj:
+        if key not in keys:
+            fail(f"{where}: unknown key {key!r} (schema drift?)")
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    with open(sys.argv[1]) as f:
+        card = json.load(f)
+
+    if card.get("schema") != SCHEMA:
+        fail(f"schema: expected {SCHEMA!r}, got {card.get('schema')!r}")
+    if not isinstance(card.get("pr"), int) or card.get("pr") < 1:
+        fail(f"pr: expected positive int, got {card.get('pr')!r}")
+
+    check_obj(card.get("config"), CONFIG_KEYS, "config")
+
+    cells = card.get("cells")
+    if not isinstance(cells, list) or not cells:
+        fail(f"cells: expected non-empty array, got {cells!r}")
+        cells = []
+    seen = set()
+    for i, cell in enumerate(cells):
+        check_obj(cell, CELL_KEYS, f"cells[{i}]")
+        if not isinstance(cell, dict):
+            continue
+        pair = (cell.get("scenario"), cell.get("policy"))
+        if pair in seen:
+            fail(f"cells[{i}]: duplicate cell {pair!r}")
+        seen.add(pair)
+        if cell.get("invariant_violations", 0) != 0:
+            fail(f"cells[{i}] {pair!r}: "
+                 f"{cell['invariant_violations']} invariant violation(s)")
+        share = cell.get("jain_fairness")
+        if isinstance(share, (int, float)) and not isinstance(share, bool):
+            if not 0.0 <= share <= 1.0 + 1e-9:
+                fail(f"cells[{i}] {pair!r}: jain_fairness {share!r} outside [0, 1]")
+        hit = cell.get("prefetch_hit_rate")
+        if isinstance(hit, (int, float)) and not isinstance(hit, bool):
+            if not 0.0 <= hit <= 1.0 + 1e-9:
+                fail(f"cells[{i}] {pair!r}: prefetch_hit_rate {hit!r} outside [0, 1]")
+
+    expected = {(s, p) for s in SCENARIOS for p in POLICIES}
+    if seen and seen != expected:
+        for missing in sorted(expected - seen):
+            fail(f"cells: missing cell {missing!r}")
+        for extra in sorted(seen - expected, key=repr):
+            fail(f"cells: unexpected cell {extra!r}")
+
+    top = {"schema", "pr", "config", "cells"}
+    for key in set(card) - top:
+        fail(f"top level: unknown key {key!r} (schema drift?)")
+
+    if errors:
+        for e in errors:
+            print(f"check_gauntlet: {e}", file=sys.stderr)
+        return 1
+    print(f"check_gauntlet: OK — PR {card['pr']}, {len(cells)} cells "
+          f"({len(SCENARIOS)} scenarios x {len(POLICIES)} policies), "
+          f"0 invariant violations")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
