@@ -29,7 +29,11 @@ fn run_once(replicas: usize, placement: PlacementKind, conversations: usize) -> 
         cfg,
         Preset::llama8b_a10(),
         Pattern::Markov,
-        ClusterConfig { replicas, placement },
+        ClusterConfig {
+            replicas,
+            placement,
+            parallel: false,
+        },
         &scale,
         &spec,
     );

@@ -31,6 +31,12 @@
 //! `cargo bench --bench cluster_scaling` measures router cost as the
 //! replica count grows; `rust/tests/cluster_e2e.rs` pins the reuse
 //! semantics deterministically.
+//!
+//! Execution is actor-shaped ([`crate::runtime::actor`]): the router
+//! and every replica communicate through typed messages, and
+//! [`ClusterConfig::parallel`] picks the executor — the seeded
+//! deterministic scheduler (default, byte-reproducible) or one OS
+//! thread per replica over real channels.
 
 pub mod placement;
 pub mod router;
@@ -46,6 +52,11 @@ pub struct ClusterConfig {
     /// serving; the router is bypassed).
     pub replicas: usize,
     pub placement: PlacementKind,
+    /// Run replicas on real OS threads (`--parallel` /
+    /// `[cluster] parallel`). Placement decisions then use slightly
+    /// stale load reports, so per-replica metrics may differ from the
+    /// default deterministic executor; workload totals do not.
+    pub parallel: bool,
 }
 
 impl Default for ClusterConfig {
@@ -55,6 +66,7 @@ impl Default for ClusterConfig {
             placement: PlacementKind::KvAffinity {
                 spill_threshold: DEFAULT_SPILL_THRESHOLD,
             },
+            parallel: false,
         }
     }
 }

@@ -49,8 +49,12 @@ impl PlacementKind {
     }
 }
 
-/// One replica's load snapshot at placement time.
-#[derive(Clone, Copy, Debug, Default)]
+/// One replica's load snapshot at placement time. In actor runs this
+/// travels inside [`crate::runtime::actor::RouterMsg::Status`] reports:
+/// the deterministic executor reads it synchronously at decision time,
+/// the threaded executor places on the latest reported (slightly stale)
+/// snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ReplicaLoad {
     /// GPU KV blocks currently allocated.
     pub blocks_in_use: usize,

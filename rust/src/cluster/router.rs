@@ -1,5 +1,6 @@
 //! The cluster front-end: replica lifecycle, per-turn dispatch, KV
-//! migration, and cross-replica metric aggregation.
+//! migration, and cross-replica metric aggregation — structured as a
+//! router actor over replica actors ([`crate::runtime::actor`]).
 //!
 //! Each replica is a full [`ServingEngine`] in `hold_turns` mode: at
 //! every turn end the engine swaps the conversation's KV out to its own
@@ -7,35 +8,43 @@
 //! self-scheduling it. The router then makes one placement decision per
 //! turn:
 //!
-//! - **keep** — [`ServingEngine::fire_turn`] on the home replica: the
+//! - **keep** — a [`ReplicaMsg::FireTurn`] to the home replica: the
 //!   turn re-enters through the normal pending-turn path and the §3.3
 //!   reuse machinery sees the preserved CPU copy (an *affinity hit*);
-//! - **migrate** — [`ServingEngine::evict_for_migration`] on the home
-//!   replica, then the unserved remainder is re-dispatched to the target
-//!   as a fresh conversation whose first turn re-prefills the whole
-//!   accumulated context (`retransferred_blocks_on_migration` counts the
-//!   cost).
+//! - **migrate** — a [`ReplicaMsg::Migrate`] to the home replica; the
+//!   evicted remainder comes back as a [`RouterMsg::Migrated`] and is
+//!   re-dispatched to the target as a fresh conversation whose first
+//!   turn re-prefills the whole accumulated context
+//!   (`retransferred_blocks_on_migration` counts the cost).
 //!
-//! Virtual time: replicas advance their own clocks independently (they
-//! share no simulated hardware), but every placement decision is made
-//! only once all replicas with runnable work have reached the decision
-//! time, so load snapshots are causal and runs are deterministic.
+//! The decision logic lives in [`RouterCore`]; *when* messages flow is
+//! the executor's business. The default deterministic executor delivers
+//! in virtual-clock `(due, seq)` order — every placement decision is
+//! made only once all replicas with runnable work have reached the
+//! decision time, so load snapshots are causal and runs are
+//! byte-reproducible. The threaded executor (`--parallel`,
+//! [`ClusterConfig::parallel`]) races real replica threads over
+//! channels instead; see the actor-runtime module docs for what that
+//! relaxes.
 
 use std::collections::HashMap;
 
 use crate::config::{EngineConfig, Preset};
-use crate::coordinator::engine::{ServeOutcome, ServingEngine};
+use crate::coordinator::engine::{MigratedConv, ServeOutcome, ServingEngine};
 use crate::coordinator::priority::Pattern;
 use crate::memory::RequestId;
 use crate::obs::{TraceEvent, TraceRecord, TraceSink};
-use crate::sim::clock::Ns;
+use crate::runtime::actor::deterministic::DeterministicExecutor;
+use crate::runtime::actor::threaded::ThreadedExecutor;
+use crate::runtime::actor::{Executor, Mailbox, ReplicaActor, ReplicaMsg};
+use crate::sim::clock::{Ns, Stamp};
 use crate::util::stats::Percentiles;
 use crate::workload::{ArrivalTrace, Conversation};
 
 use super::placement::{Placer, PlacementKind, ReplicaLoad};
 use super::ClusterConfig;
 
-/// One placeable unit of work.
+/// One placeable unit of work in the router's stamped mailbox.
 #[derive(Clone, Debug)]
 enum Work {
     /// A conversation's first dispatch (no KV anywhere yet).
@@ -47,23 +56,19 @@ enum Work {
     /// migrates off at its next turn (in-flight turns finish first —
     /// drain semantics, not a crash).
     Drain { replica: usize },
+    /// Drained replica re-joins the placement rotation.
+    Rejoin { replica: usize },
 }
 
-#[derive(Clone, Debug)]
-struct QueuedWork {
-    due: Ns,
-    /// Tie-breaker: queue insertion order (determinism).
-    seq: u64,
-    work: Work,
-}
-
-/// The multi-replica front end. Construct with the full workload, then
-/// [`ClusterRouter::run`] to completion.
-pub struct ClusterRouter {
-    replicas: Vec<ServingEngine>,
+/// The router's decision state: placement policy, the stamped work
+/// mailbox, availability mask, counters, and the trace lane. Executors
+/// drive it through a small message-shaped API — [`RouterCore::route`]
+/// turns the next due work item into replica deliveries,
+/// [`RouterCore::on_released`] / [`RouterCore::on_migrated`] feed
+/// replica reports back in.
+pub struct RouterCore {
     placer: Placer,
-    queue: Vec<QueuedWork>,
-    seq: u64,
+    queue: Mailbox<Work>,
     label: String,
     // ---- placement counters ----
     placements: u64,
@@ -75,11 +80,177 @@ pub struct ClusterRouter {
     drained: Vec<bool>,
     /// The scheduled drain event, echoed into the outcome.
     drain: Option<(usize, Ns)>,
+    /// The scheduled re-join event, echoed into the outcome.
+    rejoin: Option<(usize, Ns)>,
     /// Router-level placement trace — a separate stream from the
     /// per-replica engine traces (replicas advance independent clocks,
     /// so their streams cannot interleave meaningfully). Off unless
     /// `cfg.obs.trace`.
     trace: TraceSink,
+}
+
+impl RouterCore {
+    fn push_work(&mut self, due: Ns, work: Work) {
+        self.queue.push(due, work);
+        self.trace.emit(
+            due,
+            TraceEvent::MailboxDepth {
+                actor: self.drained.len() as u32,
+                depth: self.queue.depth() as u32,
+            },
+        );
+    }
+
+    /// Replica count this router dispatches over.
+    pub fn n_replicas(&self) -> usize {
+        self.drained.len()
+    }
+
+    /// Stamp of the next due work item, if any.
+    pub fn peek_due(&self) -> Option<Stamp> {
+        self.queue.peek_min()
+    }
+
+    /// No undispatched work queued.
+    pub fn queue_is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// A replica released a held turn: queue its placement decision.
+    pub fn on_released(&mut self, replica: usize, id: RequestId, due: Ns) {
+        self.push_work(due, Work::Turn { id, home: replica });
+    }
+
+    /// Pop the minimum-stamped work item and decide it against the given
+    /// load snapshots. Returns the replica deliveries to make, in order
+    /// (`(replica, due, msg)`), or `None` when the queue is empty.
+    pub fn route(&mut self, loads: &[ReplicaLoad]) -> Option<Vec<(usize, Ns, ReplicaMsg)>> {
+        let (stamp, work) = self.queue.pop_min()?;
+        let due = stamp.due;
+        Some(match work {
+            Work::Drain { replica } => {
+                self.drained[replica] = true;
+                self.trace
+                    .emit(due, TraceEvent::Drain { replica: replica as u32 });
+                vec![(replica, due, ReplicaMsg::Drain)]
+            }
+            Work::Rejoin { replica } => {
+                self.drained[replica] = false;
+                self.trace
+                    .emit(due, TraceEvent::Rejoin { replica: replica as u32 });
+                vec![(replica, due, ReplicaMsg::Rejoin)]
+            }
+            Work::Fresh(conv) => {
+                let target = self.placer.place_filtered(loads, None, Some(&self.drained));
+                self.placements += 1;
+                self.trace.emit(
+                    due,
+                    TraceEvent::Place {
+                        req: conv.id,
+                        replica: target as u32,
+                    },
+                );
+                vec![(target, due, ReplicaMsg::Arrive { conv })]
+            }
+            Work::Turn { id, home } => {
+                let target = self
+                    .placer
+                    .place_filtered(loads, Some(home), Some(&self.drained));
+                self.placements += 1;
+                self.affinity_decisions += 1;
+                if target == home {
+                    self.affinity_hits += 1;
+                    self.trace.emit(
+                        due,
+                        TraceEvent::Place {
+                            req: id,
+                            replica: home as u32,
+                        },
+                    );
+                    vec![(home, due, ReplicaMsg::FireTurn { id })]
+                } else {
+                    vec![(home, due, ReplicaMsg::Migrate { id, to: target })]
+                }
+            }
+        })
+    }
+
+    /// A home replica answered a [`ReplicaMsg::Migrate`]. `None` conv
+    /// means the conversation terminated there in the meantime
+    /// (oversize rejection) — nothing to move. Otherwise the migration
+    /// is charged and the rebased remainder is returned as the target's
+    /// [`ReplicaMsg::Arrive`] delivery.
+    pub fn on_migrated(
+        &mut self,
+        home: usize,
+        to: usize,
+        at: Ns,
+        conv: Option<MigratedConv>,
+    ) -> Option<(usize, Ns, ReplicaMsg)> {
+        let m = conv?;
+        self.migrations += 1;
+        self.trace.emit(
+            at,
+            TraceEvent::Migrate {
+                req: m.conv_id,
+                from: home as u32,
+                to: to as u32,
+                blocks: m.cpu_copy_blocks,
+            },
+        );
+        // Charge the migration by what locality actually lost: the
+        // CPU-resident context blocks the home replica held (a
+        // recompute-preempted conversation with no copy would re-prefill
+        // everything even if kept home — cost 0).
+        self.retransferred_blocks += m.cpu_copy_blocks as u64;
+        let mut turns = m.remaining;
+        // The target holds no context: fold the whole history into the
+        // first prompt (saturating — an oversized rebase must trip the
+        // target's max-model-len check, not wrap).
+        turns[0].prompt_tokens = u32::try_from(m.history_tokens + turns[0].prompt_tokens as u64)
+            .unwrap_or(u32::MAX);
+        turns[0].think_time_s = 0.0;
+        Some((
+            to,
+            at,
+            ReplicaMsg::Arrive {
+                conv: Conversation {
+                    id: m.conv_id,
+                    tenant: m.tenant,
+                    turns,
+                },
+            },
+        ))
+    }
+
+    /// Assemble the cluster outcome from the finished replica outcomes
+    /// (index order).
+    pub fn into_outcome(self, replicas: Vec<ServeOutcome>) -> ClusterOutcome {
+        ClusterOutcome {
+            placement: self.placer.kind(),
+            label: self.label,
+            placements: self.placements,
+            drain: self.drain,
+            rejoin: self.rejoin,
+            affinity_decisions: self.affinity_decisions,
+            affinity_hits: self.affinity_hits,
+            migrations: self.migrations,
+            retransferred_blocks_on_migration: self.retransferred_blocks,
+            router_trace: self.trace.drain(),
+            replicas,
+        }
+    }
+}
+
+/// The multi-replica front end. Construct with the full workload, then
+/// [`ClusterRouter::run`] to completion. `run` hands the
+/// [`RouterCore`] and replica actors to the configured executor: the
+/// seeded deterministic one by default, the threaded one when
+/// [`ClusterConfig::parallel`] is set.
+pub struct ClusterRouter {
+    core: RouterCore,
+    actors: Vec<ReplicaActor>,
+    parallel: bool,
 }
 
 impl ClusterRouter {
@@ -99,7 +270,12 @@ impl ClusterRouter {
             cluster.placement.label(),
             cluster.replicas
         );
-        let replicas: Vec<ServingEngine> = (0..cluster.replicas)
+        let trace = if cfg.obs.trace {
+            TraceSink::on()
+        } else {
+            TraceSink::off()
+        };
+        let actors: Vec<ReplicaActor> = (0..cluster.replicas)
             .map(|i| {
                 let mut e = ServingEngine::new(
                     cfg.clone(),
@@ -110,19 +286,13 @@ impl ClusterRouter {
                     seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
                 );
                 e.hold_turns = true;
-                e
+                // Budget policy belongs to the executor; unbounded here.
+                ReplicaActor::new(i, e, u64::MAX)
             })
             .collect();
-        let trace = if cfg.obs.trace {
-            TraceSink::on()
-        } else {
-            TraceSink::off()
-        };
-        let mut router = ClusterRouter {
-            replicas,
+        let mut core = RouterCore {
             placer: Placer::new(cluster.placement),
-            queue: Vec::new(),
-            seq: 0,
+            queue: Mailbox::new(),
             label,
             placements: 0,
             affinity_decisions: 0,
@@ -131,20 +301,25 @@ impl ClusterRouter {
             retransferred_blocks: 0,
             drained: vec![false; cluster.replicas],
             drain: None,
+            rejoin: None,
             trace,
         };
         for e in &arrivals.entries {
             let conv = convs[e.conversation as usize].clone();
-            router.push_work(e.arrival, Work::Fresh(conv));
+            core.push_work(e.arrival, Work::Fresh(conv));
         }
-        router
+        ClusterRouter {
+            core,
+            actors,
+            parallel: cluster.parallel,
+        }
     }
 
     /// Propagate the Fig-9 wall-clock charging flag to every replica
     /// (off for deterministic experiments, like the single-engine path).
     pub fn set_charge_sched_overhead(&mut self, on: bool) {
-        for r in &mut self.replicas {
-            r.charge_sched_overhead = on;
+        for a in &mut self.actors {
+            a.engine_mut().charge_sched_overhead = on;
         }
     }
 
@@ -153,184 +328,41 @@ impl ClusterRouter {
     /// placement, so drained runs stay byte-reproducible. Requires at
     /// least one other replica to absorb the migrated work.
     pub fn set_drain(&mut self, replica: usize, at: Ns) {
-        assert!(replica < self.replicas.len(), "drain target out of range");
+        assert!(replica < self.actors.len(), "drain target out of range");
         assert!(
-            self.replicas.len() >= 2,
+            self.actors.len() >= 2,
             "draining the only replica leaves nowhere to migrate"
         );
-        assert!(self.drain.is_none(), "one drain event per run");
-        self.drain = Some((replica, at));
-        self.push_work(at, Work::Drain { replica });
+        assert!(self.core.drain.is_none(), "one drain event per run");
+        self.core.drain = Some((replica, at));
+        self.core.push_work(at, Work::Drain { replica });
     }
 
-    fn push_work(&mut self, due: Ns, work: Work) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.queue.push(QueuedWork { due, seq, work });
-    }
-
-    fn drain_turn_events(&mut self) {
-        for i in 0..self.replicas.len() {
-            for (id, due) in self.replicas[i].take_released_turns() {
-                self.push_work(due, Work::Turn { id, home: i });
-            }
-        }
-    }
-
-    fn loads(&self) -> Vec<ReplicaLoad> {
-        self.replicas
-            .iter()
-            .map(|e| ReplicaLoad {
-                blocks_in_use: e.gpu_blocks_in_use(),
-                gpu_blocks: e.gpu_capacity_blocks(),
-                backlog: e.backlog(),
-                max_batch: e.max_batch(),
-            })
-            .collect()
-    }
-
-    fn place(&mut self, qw: QueuedWork) {
-        let loads = self.loads();
-        match qw.work {
-            Work::Drain { replica } => {
-                self.drained[replica] = true;
-                self.trace.emit(qw.due, TraceEvent::Drain { replica: replica as u32 });
-            }
-            Work::Fresh(conv) => {
-                let target = self.placer.place_filtered(&loads, None, Some(&self.drained));
-                self.placements += 1;
-                self.trace.emit(
-                    qw.due,
-                    TraceEvent::Place {
-                        req: conv.id,
-                        replica: target as u32,
-                    },
-                );
-                self.replicas[target].push_arrival(conv, qw.due);
-            }
-            Work::Turn { id, home } => {
-                let target = self.placer.place_filtered(&loads, Some(home), Some(&self.drained));
-                self.placements += 1;
-                self.affinity_decisions += 1;
-                if target == home {
-                    self.affinity_hits += 1;
-                    self.trace.emit(
-                        qw.due,
-                        TraceEvent::Place {
-                            req: id,
-                            replica: home as u32,
-                        },
-                    );
-                    self.replicas[home].fire_turn(id, qw.due);
-                    return;
-                }
-                let Some(m) = self.replicas[home].evict_for_migration(id) else {
-                    // The conversation terminated on the home replica in
-                    // the meantime (oversize rejection): nothing to move.
-                    return;
-                };
-                self.migrations += 1;
-                self.trace.emit(
-                    qw.due,
-                    TraceEvent::Migrate {
-                        req: id,
-                        from: home as u32,
-                        to: target as u32,
-                        blocks: m.cpu_copy_blocks,
-                    },
-                );
-                // Charge the migration by what locality actually lost:
-                // the CPU-resident context blocks the home replica held
-                // (a recompute-preempted conversation with no copy would
-                // re-prefill everything even if kept home — cost 0).
-                self.retransferred_blocks += m.cpu_copy_blocks as u64;
-                let mut turns = m.remaining;
-                // The target holds no context: fold the whole history
-                // into the first prompt (saturating — an oversized rebase
-                // must trip the target's max-model-len check, not wrap).
-                turns[0].prompt_tokens =
-                    u32::try_from(m.history_tokens + turns[0].prompt_tokens as u64)
-                        .unwrap_or(u32::MAX);
-                turns[0].think_time_s = 0.0;
-                self.replicas[target].push_arrival(
-                    Conversation {
-                        id: m.conv_id,
-                        tenant: m.tenant,
-                        turns,
-                    },
-                    qw.due,
-                );
-            }
-        }
+    /// Schedule the drained replica's re-join at virtual time `at`: the
+    /// availability mask clears and the replica re-enters the placement
+    /// rotation from that decision point on. Must follow a
+    /// [`ClusterRouter::set_drain`] of the same replica.
+    pub fn set_rejoin(&mut self, replica: usize, at: Ns) {
+        let (drained, drain_at) = self
+            .core
+            .drain
+            .expect("rejoin requires a scheduled drain");
+        assert_eq!(replica, drained, "rejoin must target the drained replica");
+        assert!(at > drain_at, "rejoin must come after the drain");
+        assert!(self.core.rejoin.is_none(), "one rejoin event per run");
+        self.core.rejoin = Some((replica, at));
+        self.core.push_work(at, Work::Rejoin { replica });
     }
 
     /// Run the cluster to completion (or `max_iters` engine iterations
-    /// per replica, pro-rated as a global step budget). Consumes the
-    /// router and returns the aggregated outcome.
-    pub fn run(mut self, max_iters: u64) -> ClusterOutcome {
-        let max_steps = max_iters.saturating_mul(self.replicas.len() as u64);
-        let mut steps = 0u64;
-        loop {
-            self.drain_turn_events();
-            let next = self
-                .queue
-                .iter()
-                .map(|w| (w.due, w.seq))
-                .min();
-            if let Some((due, seq)) = next {
-                // Bring every replica's clock up to the decision point so
-                // the placement's load snapshot is causal.
-                if let Some(r) = self
-                    .replicas
-                    .iter_mut()
-                    .find(|r| r.has_pending_work() && r.now() < due)
-                {
-                    r.step();
-                    steps += 1;
-                    if steps >= max_steps {
-                        break;
-                    }
-                    continue;
-                }
-                let idx = self
-                    .queue
-                    .iter()
-                    .position(|w| (w.due, w.seq) == (due, seq))
-                    .expect("queued work vanished");
-                let qw = self.queue.swap_remove(idx);
-                self.place(qw);
-                continue;
-            }
-            // No routable work pending: advance the laggard replica.
-            let Some(r) = self
-                .replicas
-                .iter_mut()
-                .filter(|r| r.has_pending_work())
-                .min_by_key(|r| r.now())
-            else {
-                break;
-            };
-            r.step();
-            steps += 1;
-            if steps >= max_steps {
-                break;
-            }
-        }
-        ClusterOutcome {
-            placement: self.placer.kind(),
-            label: self.label,
-            placements: self.placements,
-            drain: self.drain,
-            affinity_decisions: self.affinity_decisions,
-            affinity_hits: self.affinity_hits,
-            migrations: self.migrations,
-            retransferred_blocks_on_migration: self.retransferred_blocks,
-            router_trace: self.trace.drain(),
-            replicas: self
-                .replicas
-                .into_iter()
-                .map(|e| e.into_outcome())
-                .collect(),
+    /// per replica, pro-rated as a step budget). Consumes the router
+    /// and returns the aggregated outcome.
+    pub fn run(self, max_iters: u64) -> ClusterOutcome {
+        let ClusterRouter { core, actors, parallel } = self;
+        if parallel {
+            ThreadedExecutor.run(core, actors, max_iters)
+        } else {
+            DeterministicExecutor.run(core, actors, max_iters)
         }
     }
 }
@@ -346,6 +378,8 @@ pub struct ClusterOutcome {
     pub placements: u64,
     /// The drain event this run executed, if any: `(replica, at)`.
     pub drain: Option<(usize, Ns)>,
+    /// The re-join event this run executed, if any: `(replica, at)`.
+    pub rejoin: Option<(usize, Ns)>,
     /// Later-turn placements (the decisions where KV locality matters).
     pub affinity_decisions: u64,
     /// Later-turn placements routed to the replica holding the KV copy.
@@ -533,7 +567,11 @@ mod tests {
             cfg,
             Preset::llama8b_a10(),
             Pattern::Markov,
-            ClusterConfig { replicas, placement },
+            ClusterConfig {
+                replicas,
+                placement,
+                parallel: false,
+            },
             convs,
             arrivals,
             scale.seed,
@@ -623,6 +661,7 @@ mod tests {
                 placement: PlacementKind::KvAffinity {
                     spill_threshold: DEFAULT_SPILL_THRESHOLD,
                 },
+                parallel: false,
             },
             convs,
             arrivals,
@@ -632,6 +671,7 @@ mod tests {
         router.set_drain(1, drain_at);
         let out = router.run(scale.max_iters);
         assert_eq!(out.drain, Some((1, drain_at)));
+        assert_eq!(out.rejoin, None);
         // Accounting survives the failure: nothing is lost or served
         // twice across the migrations.
         assert_eq!(
@@ -641,6 +681,72 @@ mod tests {
         );
         assert!(out.migrations > 0, "drain must force migrations");
         assert!(out.total_tokens() > 0);
+    }
+
+    #[test]
+    fn rejoin_restores_placement_rotation() {
+        let scale = quick_scale();
+        let spec = WorkloadSpec {
+            tenants: 3,
+            heavy_share: 0.5,
+            ..WorkloadSpec::default()
+        };
+        let (convs, arrivals) = build_workload(&scale, &spec);
+        let total = convs.len() as u64;
+        let drain_at = arrivals.span() / 4;
+        let rejoin_at = arrivals.span() / 2;
+        let mut cfg = EngineConfig::fastswitch();
+        cfg.scheduler.priority_update_freq = 0.04;
+        cfg.obs.trace = true;
+        let mut router = ClusterRouter::new(
+            cfg,
+            Preset::llama8b_a10(),
+            Pattern::Markov,
+            ClusterConfig {
+                replicas: 3,
+                placement: PlacementKind::RoundRobin,
+                parallel: false,
+            },
+            convs,
+            arrivals,
+            scale.seed,
+        );
+        router.set_charge_sched_overhead(false);
+        router.set_drain(1, drain_at);
+        router.set_rejoin(1, rejoin_at);
+        let out = router.run(scale.max_iters);
+        assert_eq!(out.drain, Some((1, drain_at)));
+        assert_eq!(out.rejoin, Some((1, rejoin_at)));
+        // Nothing lost across the drain → rejoin cycle.
+        assert_eq!(
+            out.finished_conversations() + out.rejected_conversations(),
+            total,
+            "drain/rejoin lost conversations"
+        );
+        // The drained window still forces migrations off replica 1...
+        assert!(out.migrations > 0, "drain must force migrations");
+        // ...the mask clears at the scheduled time...
+        assert!(out
+            .router_trace
+            .iter()
+            .any(|r| r.ev == TraceEvent::Rejoin { replica: 1 } && r.at == rejoin_at));
+        // ...and round-robin rotation places on replica 1 again after.
+        assert!(
+            out.router_trace.iter().any(|r| {
+                r.at > rejoin_at
+                    && matches!(r.ev, TraceEvent::Place { replica: 1, .. })
+            }),
+            "no placement returned to the rejoined replica"
+        );
+        // No placement landed on replica 1 inside the drained window.
+        assert!(
+            !out.router_trace.iter().any(|r| {
+                r.at > drain_at
+                    && r.at < rejoin_at
+                    && matches!(r.ev, TraceEvent::Place { replica: 1, .. })
+            }),
+            "placement landed on the drained replica"
+        );
     }
 
     #[test]
@@ -663,6 +769,7 @@ mod tests {
                 ClusterConfig {
                     replicas: 2,
                     placement: PlacementKind::LeastLoaded,
+                    parallel: false,
                 },
                 convs,
                 arrivals,

@@ -251,6 +251,9 @@ impl ConfigFile {
                 c.placement = PlacementKind::KvAffinity { spill_threshold: s };
             }
         }
+        if let Some(p) = self.get_bool("cluster", "parallel") {
+            c.parallel = p;
+        }
         Ok(c)
     }
 }
@@ -426,7 +429,8 @@ pattern = "markov"
     fn cluster_section_configures_the_front_end() {
         use crate::cluster::PlacementKind;
         let c = ConfigFile::parse(
-            "[cluster]\nreplicas = 4\nplacement = \"kv_affinity\"\nspill_threshold = 1.25",
+            "[cluster]\nreplicas = 4\nplacement = \"kv_affinity\"\nspill_threshold = 1.25\n\
+             parallel = true",
         )
         .unwrap();
         let cl = c.cluster().unwrap();
@@ -435,9 +439,12 @@ pattern = "markov"
             cl.placement,
             PlacementKind::KvAffinity { spill_threshold: 1.25 }
         );
-        // Absent section → single-replica default.
+        assert!(cl.parallel);
+        // Absent section → single-replica default on the deterministic
+        // executor.
         let d = ConfigFile::parse("").unwrap().cluster().unwrap();
         assert_eq!(d.replicas, 1);
+        assert!(!d.parallel);
     }
 
     #[test]

@@ -459,6 +459,28 @@ impl ServingEngine {
         self.into_outcome()
     }
 
+    /// Advance up to `max_steps` iterations for an actor-runtime driver
+    /// ([`crate::runtime::actor`]). Counts every [`ServingEngine::step`]
+    /// call taken (including a final no-progress one, matching the
+    /// pre-actor router's step accounting) and stops early when the run
+    /// finishes or — with `stop_on_release` — as soon as a held turn is
+    /// released, so the router hears about it with minimal lag. Returns
+    /// the number of steps taken.
+    pub fn step_chunk(&mut self, max_steps: u64, stop_on_release: bool) -> u64 {
+        let mut taken = 0u64;
+        while taken < max_steps {
+            let more = self.step();
+            taken += 1;
+            if !more {
+                break;
+            }
+            if stop_on_release && !self.released_turns.is_empty() {
+                break;
+            }
+        }
+        taken
+    }
+
     /// Finalize a router-driven engine: invariant checks + outcome
     /// summary (the tail of [`ServingEngine::run`]).
     pub fn into_outcome(self) -> ServeOutcome {

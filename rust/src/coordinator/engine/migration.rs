@@ -152,6 +152,19 @@ impl ServingEngine {
         self.cfg.scheduler.max_batch
     }
 
+    /// The placement load snapshot in one call — what a replica actor
+    /// reports in every [`crate::runtime::actor::RouterMsg::Status`] and
+    /// what the deterministic executor reads synchronously at each
+    /// placement decision.
+    pub fn load_snapshot(&self) -> crate::cluster::placement::ReplicaLoad {
+        crate::cluster::placement::ReplicaLoad {
+            blocks_in_use: self.gpu_blocks_in_use(),
+            gpu_blocks: self.gpu_capacity_blocks(),
+            backlog: self.backlog(),
+            max_batch: self.max_batch(),
+        }
+    }
+
     /// Testing/experiment access.
     pub fn request_state(&self, id: RequestId) -> Option<ReqState> {
         if self.reqs.contains(id) {

@@ -196,6 +196,14 @@ pub struct ServingEngine {
     iter_span_ema: f64,
 }
 
+// A replica actor moves its engine onto an OS thread under the threaded
+// cluster executor ([`crate::runtime::actor::threaded`]); the policy and
+// planner trait objects carry `Send` supertraits for exactly this.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<ServingEngine>();
+};
+
 impl ServingEngine {
     pub fn new(
         cfg: EngineConfig,

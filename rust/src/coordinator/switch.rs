@@ -115,8 +115,11 @@ impl SwitchCostModel {
 }
 
 /// A pluggable eviction policy: given a victim and the cost model,
-/// decide how to free its blocks.
-pub trait PreemptionPolicy {
+/// decide how to free its blocks. `Send` because a replica actor
+/// carries its engine — planner and policy included — onto an OS thread
+/// under the threaded cluster executor
+/// ([`crate::runtime::actor::threaded`]).
+pub trait PreemptionPolicy: Send {
     fn label(&self) -> &'static str;
     fn decide(&self, v: &VictimCtx, cost: &SwitchCostModel) -> EvictionAction;
 }

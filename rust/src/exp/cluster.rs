@@ -67,6 +67,7 @@ pub fn run_policy(placement: PlacementKind, scale: &Scale) -> ClusterOutcome {
         ClusterConfig {
             replicas: REPLICAS,
             placement,
+            parallel: false,
         },
         &scale,
         &spec,

@@ -5,7 +5,8 @@
 //!
 //! The grid: rows are the [`crate::workload::ScenarioSpec`] fleet
 //! (agentic tool-call loops, mega-context summarization, thundering
-//! herd with a mid-run replica drain, diurnal load wave); columns are
+//! herd with a mid-run replica drain + rejoin, diurnal load wave);
+//! columns are
 //! the preemption ladder ([`super::preemption::POLICIES`]: `swap_all`,
 //! `cost_aware`, `partial_tail`). Every cell runs the full 3-replica
 //! cluster path — placement, migrations, and (thundering herd) the
@@ -31,7 +32,7 @@ use crate::fairness::PolicyKind;
 use crate::metrics::invariants::check_cluster;
 use crate::obs::gauntlet::{GauntletConfig, Scorecard, ScorecardCell, GAUNTLET_SCHEMA};
 use crate::workload::scenario::SCENARIO_TENANTS;
-use crate::workload::ScenarioSpec;
+use crate::workload::{ScenarioParams, ScenarioSpec};
 
 /// Replica fan-out every cell runs at (the thundering-herd drain needs
 /// somewhere to migrate; 3 matches the ledger's cluster point).
@@ -54,13 +55,15 @@ fn cell_cfg(kind: crate::config::PreemptionPolicyKind) -> EngineConfig {
 
 /// Run the full grid and assemble the scorecard. Scenario workloads are
 /// built once per scenario and reused across the policy column, so
-/// every policy sees byte-identical conversations and arrivals.
-pub fn build(scale: &Scale) -> (Scorecard, Vec<String>) {
+/// every policy sees byte-identical conversations and arrivals. The
+/// generator knobs (`--herd-spike`, `--think-floor`) land in `params`;
+/// defaults reproduce the canonical grid.
+pub fn build(scale: &Scale, params: &ScenarioParams) -> (Scorecard, Vec<String>) {
     let max_model_len = EngineConfig::fastswitch().scheduler.max_seq_len;
     let mut cells = Vec::new();
     let mut violations = Vec::new();
     for spec in ScenarioSpec::all(max_model_len) {
-        let wl = spec.build(scale.conversations, scale.request_rate, scale.seed);
+        let wl = spec.build_with(scale.conversations, scale.request_rate, scale.seed, params);
         let total = wl.conversations.len() as u64;
         for kind in POLICIES {
             let out = run_cluster_scenario(
@@ -128,6 +131,8 @@ pub fn build(scale: &Scale) -> (Scorecard, Vec<String>) {
             max_model_len,
             request_rate: scale.request_rate,
             priority_update_freq: FREQ,
+            herd_spike: params.herd_spike,
+            agentic_think_floor: params.agentic_think_floor_s,
         },
         cells,
     };
@@ -138,8 +143,8 @@ pub fn build(scale: &Scale) -> (Scorecard, Vec<String>) {
 /// summary report. The scorecard (with per-cell violation counts) is
 /// written *before* the zero-violations assertion, so a failing run
 /// still leaves the artifact showing which cell broke.
-pub fn run(scale: &Scale, out_path: &str) -> Report {
-    let (card, violations) = build(scale);
+pub fn run(scale: &Scale, params: &ScenarioParams, out_path: &str) -> Report {
+    let (card, violations) = build(scale, params);
     let json = card.to_json();
     let write_result = std::fs::write(out_path, &json);
     let mut rep = Report::new(
@@ -185,8 +190,9 @@ pub fn run(scale: &Scale, out_path: &str) -> Report {
         Err(e) => rep.note(format!("FAILED to write {out_path}: {e}")),
     }
     rep.note(
-        "thundering_herd rows include a mid-run replica drain: migrations must be \
-         > 0 there and conversation accounting must survive it",
+        "thundering_herd rows include a mid-run replica drain and a pre-wave-3 \
+         rejoin: migrations must be > 0 there and conversation accounting must \
+         survive the full drain/rejoin cycle",
     );
     assert!(
         violations.is_empty(),
@@ -210,7 +216,7 @@ mod tests {
 
     #[test]
     fn grid_covers_every_scenario_policy_pair_cleanly() {
-        let (card, violations) = build(&quick());
+        let (card, violations) = build(&quick(), &ScenarioParams::default());
         assert_eq!(violations, Vec::<String>::new());
         let scenarios = ScenarioSpec::all(4096).len();
         assert_eq!(card.cells.len(), scenarios * POLICIES.len());
@@ -236,8 +242,8 @@ mod tests {
 
     #[test]
     fn same_seed_rebuild_is_identical() {
-        let (a, _) = build(&quick());
-        let (b, _) = build(&quick());
+        let (a, _) = build(&quick(), &ScenarioParams::default());
+        let (b, _) = build(&quick(), &ScenarioParams::default());
         assert_eq!(a.to_json(), b.to_json(), "gauntlet must be deterministic");
     }
 }

@@ -10,6 +10,9 @@
 //!   pipeline stage, from the [`crate::obs::EpochProfiler`];
 //! - **throughput** — end-to-end tokens/s at 1 and 3 replicas on the
 //!   bursty 6-tenant churn mix;
+//! - **parallel** — wall-clock of the 3-replica churn run under the
+//!   deterministic executor vs the threaded (`--parallel`) executor,
+//!   with the resulting speedup;
 //! - **policies** — p50/p99 TTFT+TBT, stall shares, preemption counts
 //!   and swap volume per preemption policy on the same mix.
 //!
@@ -32,14 +35,15 @@ use crate::config::{EngineConfig, Preset};
 use crate::coordinator::priority::Pattern;
 use crate::fairness::PolicyKind;
 use crate::obs::ledger::{
-    EpochCost, HotpathRow, Ledger, LedgerConfig, PolicyRow, ThroughputRow, LEDGER_SCHEMA,
+    EpochCost, HotpathRow, Ledger, LedgerConfig, ParallelRow, PolicyRow, ThroughputRow,
+    LEDGER_SCHEMA,
 };
 use crate::obs::{Reservoir, Stage, TraceEvent, TraceSink};
 use crate::util::rng::Rng;
 use crate::util::stats::Percentiles;
 
 /// The PR this tree's ledger is stamped with.
-pub const PR: u32 = 7;
+pub const PR: u32 = 8;
 
 /// The churn mix every section measures under — identical to the
 /// preemption showdown's (6 tenants, bursty arrivals, VTC, hard
@@ -122,6 +126,7 @@ pub fn build(scale: &Scale) -> Ledger {
         execution_ns_mean: prof.mean_ns(Stage::Execution),
         total_ns_mean: prof.total_mean_ns(),
     };
+    let t_det = Instant::now();
     let cluster = run_cluster_with(
         churn_cfg(),
         Preset::llama8b_a10(),
@@ -133,6 +138,7 @@ pub fn build(scale: &Scale) -> Ledger {
         scale,
         &spec,
     );
+    let deterministic_wall_s = t_det.elapsed().as_secs_f64();
     let throughput = vec![
         ThroughputRow {
             replicas: 1,
@@ -143,6 +149,36 @@ pub fn build(scale: &Scale) -> Ledger {
             tokens_per_s: cluster.throughput(),
         },
     ];
+
+    // Same workload, same seed, threaded executor: one OS thread per
+    // replica plus the router. Virtual-time totals agree with the
+    // deterministic run (the actor e2e suite pins that); this row is
+    // the wall-clock delta only.
+    let t_par = Instant::now();
+    let par = run_cluster_with(
+        churn_cfg(),
+        Preset::llama8b_a10(),
+        Pattern::Markov,
+        ClusterConfig {
+            replicas: 3,
+            parallel: true,
+            ..ClusterConfig::default()
+        },
+        scale,
+        &spec,
+    );
+    let parallel_wall_s = t_par.elapsed().as_secs_f64();
+    assert_eq!(
+        par.finished_conversations() + par.rejected_conversations(),
+        cluster.finished_conversations() + cluster.rejected_conversations(),
+        "threaded executor lost or duplicated conversations"
+    );
+    let parallel = ParallelRow {
+        replicas: 3,
+        deterministic_wall_s,
+        parallel_wall_s,
+        speedup: deterministic_wall_s / parallel_wall_s.max(1e-9),
+    };
 
     let policies = POLICIES
         .iter()
@@ -179,6 +215,7 @@ pub fn build(scale: &Scale) -> Ledger {
         hotpath: hotpath_rows(),
         scheduler_epoch,
         throughput,
+        parallel,
         policies,
     }
 }
@@ -207,6 +244,18 @@ pub fn run(scale: &Scale, out_path: &str) -> Report {
             f2(t.tokens_per_s),
         ]);
     }
+    let p = &ledger.parallel;
+    rep.row(vec![
+        "parallel".into(),
+        format!("{}x deterministic wall s", p.replicas),
+        f3(p.deterministic_wall_s),
+    ]);
+    rep.row(vec![
+        "parallel".into(),
+        format!("{}x threaded wall s", p.replicas),
+        f3(p.parallel_wall_s),
+    ]);
+    rep.row(vec!["parallel".into(), "speedup".into(), f2(p.speedup)]);
     for p in &ledger.policies {
         rep.row(vec![
             "policy".into(),
@@ -224,8 +273,8 @@ pub fn run(scale: &Scale, out_path: &str) -> Report {
         Err(e) => rep.note(format!("FAILED to write {out_path}: {e}")),
     }
     rep.note(
-        "wall-clock sections (hotpath, scheduler_epoch) vary by host; the \
-         virtual-time sections (throughput, policies) are deterministic per seed",
+        "wall-clock sections (hotpath, scheduler_epoch, parallel) vary by host; \
+         the virtual-time sections (throughput, policies) are deterministic per seed",
     );
     rep
 }
@@ -250,6 +299,10 @@ mod tests {
         assert_eq!(l.throughput[0].replicas, 1);
         assert_eq!(l.throughput[1].replicas, 3);
         assert!(l.throughput[0].tokens_per_s > 0.0);
+        assert_eq!(l.parallel.replicas, 3);
+        assert!(l.parallel.deterministic_wall_s > 0.0);
+        assert!(l.parallel.parallel_wall_s > 0.0);
+        assert!(l.parallel.speedup.is_finite() && l.parallel.speedup > 0.0);
         assert!(!l.hotpath.is_empty());
         assert!(l.hotpath.iter().all(|h| h.ns_per_op.is_finite()));
         let j = l.to_json();

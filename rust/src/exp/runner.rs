@@ -159,8 +159,9 @@ pub fn run_sim_scenario(
 
 /// Run one cluster simulation over a pre-built scenario workload. When
 /// the scenario carries a [`crate::workload::DrainPlan`] and the
-/// cluster has somewhere to migrate (≥ 2 replicas), the drain event is
-/// scheduled through the router's deterministic work queue.
+/// cluster has somewhere to migrate (≥ 2 replicas), the drain event —
+/// and its re-join, if the plan schedules one — is scheduled through
+/// the router's deterministic work queue.
 pub fn run_cluster_scenario(
     cfg: EngineConfig,
     preset: Preset,
@@ -182,6 +183,9 @@ pub fn run_cluster_scenario(
     if let Some(d) = wl.drain {
         if cluster.replicas >= 2 {
             router.set_drain(d.replica, d.at);
+            if let Some(rejoin_at) = d.rejoin_at {
+                router.set_rejoin(d.replica, rejoin_at);
+            }
         }
     }
     router.run(scale.max_iters)

@@ -54,8 +54,11 @@ impl PolicyKind {
 }
 
 /// The engine ↔ policy contract. All hooks default to no-ops so passive
-/// policies (the trace) only implement `priority_of`.
-pub trait PriorityPolicy {
+/// policies (the trace) only implement `priority_of`. `Send` because a
+/// replica actor carries its engine — policy included — onto an OS
+/// thread under the threaded cluster executor
+/// ([`crate::runtime::actor::threaded`]).
+pub trait PriorityPolicy: Send {
     fn label(&self) -> &'static str;
 
     /// Service rendered to `tenant` since the last call (one prefill

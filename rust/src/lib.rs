@@ -61,7 +61,17 @@
 //!   `exp gauntlet` — every preemption policy × every scenario on the
 //!   3-replica cluster path, audited per cell by
 //!   [`metrics::invariants`] and scored into the schema-stable
-//!   `GAUNTLET_PR<N>.json` regression scorecard.
+//!   `GAUNTLET_PR<N>.json` regression scorecard;
+//! - the [`runtime::actor`] cluster runtime: each replica is an actor
+//!   owning its [`ServingEngine`] behind a typed mailbox
+//!   ([`runtime::actor::ReplicaMsg`]), the router is a message-driven
+//!   work-queue core ([`cluster::RouterCore`]), and one
+//!   [`runtime::actor::Executor`] trait hosts two interchangeable
+//!   schedulers — the seeded single-threaded deterministic executor
+//!   (default; every e2e pin reproduces byte-for-byte) and the threaded
+//!   executor (`--parallel`: one OS thread per replica, real channels,
+//!   wall-clock speedup reported in the perf ledger's `parallel`
+//!   section).
 //!
 //! ## Architecture (three layers, Python never on the request path)
 //!

@@ -12,15 +12,19 @@
 //!
 //! fastswitch exp ledger [--ledger-out FILE] [--conversations N] [--seed S]
 //!     Measure the per-PR perf ledger matrix (hotpath ns/op, scheduler
-//!     epoch cost, throughput at 1/3 replicas, per-policy tail latency)
-//!     and write the schema-stable JSON (default BENCH_PR7.json).
+//!     epoch cost, throughput at 1/3 replicas, deterministic-vs-threaded
+//!     executor wall-clock, per-policy tail latency) and write the
+//!     schema-stable JSON (default BENCH_PR8.json).
 //!
 //! fastswitch exp gauntlet [--gauntlet-out FILE] [--conversations N] [--seed S]
+//!     [--herd-spike F] [--think-floor F]
 //!     Run the scenario gauntlet: every preemption policy x every
 //!     adversarial scenario (agentic, mega_context, thundering_herd,
 //!     diurnal) on the 3-replica cluster path, invariant-checked per
 //!     cell, writing the schema-stable scorecard (default
-//!     GAUNTLET_PR7.json).
+//!     GAUNTLET_PR8.json). --herd-spike scales the thundering-herd
+//!     within-wave arrival spike; --think-floor raises the agentic
+//!     think-time floor (seconds).
 //!
 //! fastswitch simulate [--preset llama8b_a10|qwen32b_a100]
 //!     [--policy vllm|vllm+dbg|vllm+dbg+reuse|fastswitch]
@@ -32,7 +36,7 @@
 //!     [--prefetch-depth K (0 = off)] [--prefetch-io-budget F]
 //!     [--preemption-policy swap_all|cost_aware|partial_tail]
 //!     [--replicas N] [--placement round_robin|least_loaded|kv_affinity]
-//!     [--spill-threshold F]
+//!     [--spill-threshold F] [--parallel]
 //!     [--scenario agentic|mega_context|thundering_herd|diurnal]
 //!     [--conversations N] [--rate R] [--seed S] [--config FILE]
 //!     [--trace] [--trace-out FILE] [--obs-profile]
@@ -40,8 +44,10 @@
 //!     One simulation run; prints the SLO summary (a per-tenant
 //!     breakdown when --tenants > 1, and cluster aggregates when
 //!     --replicas > 1). --scenario swaps the ShareGPT workload for a
-//!     seeded gauntlet scenario (4 tenants; the thundering-herd drain
-//!     fires only with --replicas >= 2).
+//!     seeded gauntlet scenario (4 tenants; the thundering-herd
+//!     drain + rejoin fires only with --replicas >= 2). --parallel
+//!     runs the cluster on the threaded actor executor (one OS thread
+//!     per replica) instead of the seeded deterministic one.
 //!
 //! fastswitch serve [--artifacts DIR] [--requests N] [--policy ...]
 //!     Serve batched requests on the real AOT-compiled model via PJRT.
@@ -64,7 +70,7 @@ use fastswitch::obs::{chrome, Stage, TelemetryMode, TraceRecord};
 use fastswitch::runtime::PjrtModel;
 use fastswitch::server::{RealEngine, RealEngineConfig, RealRequestSpec};
 use fastswitch::util::cli::Args;
-use fastswitch::workload::ScenarioSpec;
+use fastswitch::workload::{ScenarioParams, ScenarioSpec};
 use fastswitch::util::rng::Rng;
 use fastswitch::util::stats::Percentiles;
 
@@ -144,12 +150,21 @@ fn cmd_exp(args: &Args) {
         "preemption" => reports.push(exp::preemption::run(&scale)),
         "ledger" => reports.push(exp::ledger::run(
             &scale,
-            args.get_or("ledger-out", "BENCH_PR7.json"),
+            args.get_or("ledger-out", "BENCH_PR8.json"),
         )),
-        "gauntlet" => reports.push(exp::gauntlet::run(
-            &scale,
-            args.get_or("gauntlet-out", "GAUNTLET_PR7.json"),
-        )),
+        "gauntlet" => {
+            let canon = ScenarioParams::default();
+            let params = ScenarioParams {
+                herd_spike: args.get_f64("herd-spike", canon.herd_spike),
+                agentic_think_floor_s: args
+                    .get_f64("think-floor", canon.agentic_think_floor_s),
+            };
+            reports.push(exp::gauntlet::run(
+                &scale,
+                &params,
+                args.get_or("gauntlet-out", "GAUNTLET_PR8.json"),
+            ));
+        }
         other => eprintln!("unknown experiment {other:?}"),
     };
     if id == "all" {
@@ -267,6 +282,9 @@ fn cmd_simulate(args: &Args) {
             };
         }
     }
+    if args.flag("parallel") {
+        ccfg.parallel = true;
+    }
     if args.flag("trace") {
         cfg.obs.trace = true;
     }
@@ -299,12 +317,13 @@ fn cmd_simulate(args: &Args) {
 
     if ccfg.replicas > 1 {
         eprintln!(
-            "[simulate] cluster: {} on {}, {} replicas, {} placement, {} conversations, \
-             {} tenant(s)",
+            "[simulate] cluster: {} on {}, {} replicas, {} placement, {} executor, \
+             {} conversations, {} tenant(s)",
             cfg.label,
             preset.model.name,
             ccfg.replicas,
             ccfg.placement.label(),
+            if ccfg.parallel { "threaded" } else { "deterministic" },
             scale.conversations,
             spec.tenants
         );
@@ -501,6 +520,20 @@ fn print_cluster_summary(out: &ClusterOutcome, multi_tenant: bool) {
         out.migrations,
         out.retransferred_blocks_on_migration
     );
+    if let Some((replica, at)) = out.drain {
+        match out.rejoin {
+            Some((_, back)) => println!(
+                "drain/rejoin           : replica {replica} drained at {:.1}s, \
+                 rejoined at {:.1}s",
+                at as f64 / 1e9,
+                back as f64 / 1e9
+            ),
+            None => println!(
+                "drain                  : replica {replica} drained at {:.1}s",
+                at as f64 / 1e9
+            ),
+        }
+    }
     println!(
         "swap volume            : {} blocks / {:.2} GB across replicas",
         out.swap_blocks_total(),

@@ -181,6 +181,28 @@ pub fn check_cluster(
             ));
         }
     }
+    if let Some((replica, at)) = out.rejoin {
+        match out.drain {
+            None => v.push(format!(
+                "[{}] rejoin without a drain event",
+                out.label
+            )),
+            Some((drained, drain_at)) => {
+                if replica != drained {
+                    v.push(format!(
+                        "[{}] rejoin replica {replica} != drained replica {drained}",
+                        out.label
+                    ));
+                }
+                if at <= drain_at {
+                    v.push(format!(
+                        "[{}] rejoin at {at} not after drain at {drain_at}",
+                        out.label
+                    ));
+                }
+            }
+        }
+    }
     let split: u64 = out.tokens_by_tenant().iter().map(|&(_, n)| n).sum();
     if split != out.total_tokens() {
         v.push(format!(
@@ -312,6 +334,7 @@ mod tests {
             label: "cluster".into(),
             placements: 5,
             drain: Some((0, 1_000)),
+            rejoin: None,
             affinity_decisions: 4,
             affinity_hits: 2,
             migrations: 2,
@@ -342,5 +365,32 @@ mod tests {
         assert!(check_cluster(&oob, 1, false)
             .iter()
             .any(|m| m.contains("out of range")));
+    }
+
+    #[test]
+    fn rejoin_consistency_is_checked() {
+        // A matching drain → rejoin pair is clean.
+        let mut ok = clean_cluster();
+        ok.rejoin = Some((0, 2_000));
+        assert_eq!(check_cluster(&ok, 1, true), Vec::<String>::new());
+        // Rejoin with no drain at all.
+        let mut orphan = clean_cluster();
+        orphan.drain = None;
+        orphan.rejoin = Some((0, 2_000));
+        assert!(check_cluster(&orphan, 1, false)
+            .iter()
+            .any(|m| m.contains("rejoin without a drain")));
+        // Rejoin of a different replica than the drained one.
+        let mut wrong = clean_cluster();
+        wrong.rejoin = Some((1, 2_000));
+        assert!(check_cluster(&wrong, 1, false)
+            .iter()
+            .any(|m| m.contains("!= drained replica")));
+        // Rejoin not after the drain.
+        let mut early = clean_cluster();
+        early.rejoin = Some((0, 1_000));
+        assert!(check_cluster(&early, 1, false)
+            .iter()
+            .any(|m| m.contains("not after drain")));
     }
 }

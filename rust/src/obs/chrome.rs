@@ -7,7 +7,8 @@
 //! `done - at`); everything else is an instant (`"ph": "i"`). `pid` is
 //! the replica lane (0 for single-engine runs, replica count = router
 //! lane), `tid` groups events by subsystem so the viewer stacks
-//! lifecycle, swap, prefetch, and routing rows separately. Timestamps
+//! lifecycle, swap, prefetch, routing, and actor-mailbox rows
+//! separately. Timestamps
 //! are virtual nanoseconds rendered as microseconds (the unit the
 //! viewer expects).
 
@@ -24,7 +25,9 @@ fn tid(ev: &TraceEvent) -> u32 {
         TraceEvent::Place { .. }
         | TraceEvent::Migrate { .. }
         | TraceEvent::MigrationEvict { .. }
-        | TraceEvent::Drain { .. } => 3,
+        | TraceEvent::Drain { .. }
+        | TraceEvent::Rejoin { .. } => 3,
+        TraceEvent::MailboxDepth { .. } => 4,
         _ => 0,
     }
 }
@@ -109,6 +112,11 @@ fn args_json(ev: &TraceEvent) -> String {
             push_arg(&mut a, "blocks", blocks);
         }
         TraceEvent::Drain { replica } => push_arg(&mut a, "replica", replica),
+        TraceEvent::Rejoin { replica } => push_arg(&mut a, "replica", replica),
+        TraceEvent::MailboxDepth { actor, depth } => {
+            push_arg(&mut a, "actor", actor);
+            push_arg(&mut a, "depth", depth);
+        }
     }
     a
 }

@@ -26,6 +26,13 @@ pub struct GauntletConfig {
     pub max_model_len: usize,
     pub request_rate: f64,
     pub priority_update_freq: f64,
+    /// Thundering-herd within-wave spike factor the run used
+    /// (`--herd-spike`; canonical default in
+    /// [`crate::workload::scenario::HERD_SPIKE`]).
+    pub herd_spike: f64,
+    /// Agentic think-time floor in seconds (`--think-floor`; canonical
+    /// default in [`crate::workload::scenario::AGENTIC_THINK_MIN_S`]).
+    pub agentic_think_floor: f64,
 }
 
 /// One policy × scenario cell of the grid.
@@ -95,8 +102,14 @@ impl Scorecard {
         let _ = writeln!(o, "    \"request_rate\": {},", num(c.request_rate));
         let _ = writeln!(
             o,
-            "    \"priority_update_freq\": {}",
+            "    \"priority_update_freq\": {},",
             num(c.priority_update_freq)
+        );
+        let _ = writeln!(o, "    \"herd_spike\": {},", num(c.herd_spike));
+        let _ = writeln!(
+            o,
+            "    \"agentic_think_floor\": {}",
+            num(c.agentic_think_floor)
         );
         let _ = writeln!(o, "  }},");
         let _ = writeln!(o, "  \"cells\": [");
@@ -161,6 +174,8 @@ mod tests {
                 max_model_len: 4096,
                 request_rate: 2.0,
                 priority_update_freq: 0.25,
+                herd_spike: 20.0,
+                agentic_think_floor: 0.05,
             },
             cells: vec![
                 ScorecardCell {
@@ -213,7 +228,8 @@ mod tests {
         for key in [
             "\"schema\"", "\"pr\"", "\"config\"", "\"conversations\"", "\"seed\"",
             "\"replicas\"", "\"tenants\"", "\"max_model_len\"", "\"request_rate\"",
-            "\"priority_update_freq\"", "\"cells\"", "\"scenario\"", "\"policy\"",
+            "\"priority_update_freq\"", "\"herd_spike\"", "\"agentic_think_floor\"",
+            "\"cells\"", "\"scenario\"", "\"policy\"",
             "\"ttft_p50_s\"", "\"ttft_p99_s\"", "\"tbt_p50_s\"", "\"tbt_p99_s\"",
             "\"swap_stall_share\"", "\"sched_overhead_share\"", "\"swap_gb\"",
             "\"swap_blocks\"", "\"jain_fairness\"", "\"prefetch_hit_rate\"",

@@ -50,6 +50,19 @@ pub struct ThroughputRow {
     pub tokens_per_s: f64,
 }
 
+/// Wall-clock comparison of the two cluster executors on the same
+/// workload: the seeded deterministic scheduler vs the threaded
+/// (`--parallel`) runtime. `speedup` > 1 means the threads paid off on
+/// this host; the *virtual-time* workload totals agree by construction
+/// (the actor e2e suite pins that), so this row is pure wall-clock.
+#[derive(Clone, Debug)]
+pub struct ParallelRow {
+    pub replicas: usize,
+    pub deterministic_wall_s: f64,
+    pub parallel_wall_s: f64,
+    pub speedup: f64,
+}
+
 /// Tail latency + stall breakdown for one preemption policy on the
 /// churn mix.
 #[derive(Clone, Debug)]
@@ -75,6 +88,7 @@ pub struct Ledger {
     pub hotpath: Vec<HotpathRow>,
     pub scheduler_epoch: EpochCost,
     pub throughput: Vec<ThroughputRow>,
+    pub parallel: ParallelRow,
     pub policies: Vec<PolicyRow>,
 }
 
@@ -142,6 +156,17 @@ impl Ledger {
             );
         }
         let _ = writeln!(o, "  ],");
+        let p = &self.parallel;
+        let _ = writeln!(o, "  \"parallel\": {{");
+        let _ = writeln!(o, "    \"replicas\": {},", p.replicas);
+        let _ = writeln!(
+            o,
+            "    \"deterministic_wall_s\": {},",
+            num(p.deterministic_wall_s)
+        );
+        let _ = writeln!(o, "    \"parallel_wall_s\": {},", num(p.parallel_wall_s));
+        let _ = writeln!(o, "    \"speedup\": {}", num(p.speedup));
+        let _ = writeln!(o, "  }},");
         let _ = writeln!(o, "  \"policies\": [");
         for (i, p) in self.policies.iter().enumerate() {
             let comma = if i + 1 < self.policies.len() { "," } else { "" };
@@ -197,6 +222,12 @@ mod tests {
                 ThroughputRow { replicas: 1, tokens_per_s: 1000.0 },
                 ThroughputRow { replicas: 3, tokens_per_s: 2800.0 },
             ],
+            parallel: ParallelRow {
+                replicas: 3,
+                deterministic_wall_s: 1.2,
+                parallel_wall_s: 0.8,
+                speedup: 1.5,
+            },
             policies: vec![PolicyRow {
                 policy: "swap_all".into(),
                 ttft_p50_s: 0.1,
@@ -222,6 +253,8 @@ mod tests {
             "\"hotpath\"", "\"ns_per_op\"", "\"scheduler_epoch\"", "\"admission_ns_mean\"",
             "\"preemption_ns_mean\"", "\"prefetch_ns_mean\"", "\"execution_ns_mean\"",
             "\"total_ns_mean\"", "\"throughput\"", "\"replicas\"", "\"tokens_per_s\"",
+            "\"parallel\"", "\"deterministic_wall_s\"", "\"parallel_wall_s\"",
+            "\"speedup\"",
             "\"policies\"", "\"policy\"", "\"ttft_p50_s\"", "\"ttft_p99_s\"",
             "\"tbt_p50_s\"", "\"tbt_p99_s\"", "\"swap_stall_share\"",
             "\"sched_overhead_share\"", "\"preemptions\"", "\"partial_evictions\"",

@@ -99,6 +99,12 @@ pub enum TraceEvent {
     /// Router drained a replica: no further placements land on it and
     /// its conversations migrate off at their next turns.
     Drain { replica: u32 },
+    /// A drained replica re-entered the placement rotation.
+    Rejoin { replica: u32 },
+    /// Actor-runtime mailbox depth after an enqueue: `actor` is the
+    /// replica index, or the replica count for the router's own work
+    /// mailbox (matching the trace-lane numbering).
+    MailboxDepth { actor: u32, depth: u32 },
 }
 
 impl TraceEvent {
@@ -122,6 +128,8 @@ impl TraceEvent {
             TraceEvent::Migrate { .. } => "Migrate",
             TraceEvent::MigrationEvict { .. } => "MigrationEvict",
             TraceEvent::Drain { .. } => "Drain",
+            TraceEvent::Rejoin { .. } => "Rejoin",
+            TraceEvent::MailboxDepth { .. } => "MailboxDepth",
         }
     }
 

@@ -1,0 +1,144 @@
+//! The default executor: a single-threaded virtual-clock scheduler
+//! delivering messages in `(due, seq)` order.
+//!
+//! This is a behaviour-preserving restructuring of the pre-actor
+//! router loop, and every seeded e2e pin depends on the equivalence:
+//!
+//! 1. **Decision gate** — the next work item (minimum stamp in the
+//!    router mailbox) is decided only once no replica with runnable
+//!    work is still behind its due time; until then the *first* such
+//!    straggler (by replica index) gets a one-iteration
+//!    [`ReplicaMsg::Tick`].
+//! 2. **Eager report drain** — exactly one replica advances between
+//!    decisions, so draining its [`RouterMsg::Released`] reports
+//!    immediately after each interaction assigns the same mailbox
+//!    `seq` numbers the old loop-top scan produced.
+//! 3. **Idle tail** — with the router mailbox empty, the replica with
+//!    the smallest virtual clock (first on ties) ticks until no replica
+//!    has pending work.
+//!
+//! The global step budget is `max_iters × replicas`, counted per tick
+//! exactly like the old loop; actors themselves run unbounded here
+//! (their per-actor budget is the *threaded* executor's tool).
+
+use crate::cluster::placement::ReplicaLoad;
+use crate::cluster::router::{ClusterOutcome, RouterCore};
+use crate::sim::clock::Ns;
+
+use super::{Executor, ReplicaActor, ReplicaMsg, RouterMsg};
+
+/// Seeded, single-threaded, byte-reproducible. See the module docs.
+pub struct DeterministicExecutor;
+
+impl DeterministicExecutor {
+    fn tick_one(actor: &mut ReplicaActor, reports: &mut Vec<RouterMsg>) {
+        let at = actor.now();
+        actor.post(at, ReplicaMsg::Tick { max_steps: 1 });
+        actor.process(reports);
+    }
+}
+
+impl Executor for DeterministicExecutor {
+    fn label(&self) -> &'static str {
+        "deterministic"
+    }
+
+    fn run(
+        &mut self,
+        mut core: RouterCore,
+        mut actors: Vec<ReplicaActor>,
+        max_iters: u64,
+    ) -> ClusterOutcome {
+        // Global backstop against runaway runs, pro-rated per replica.
+        let max_steps = max_iters.saturating_mul(actors.len() as u64);
+        let mut steps = 0u64;
+        let mut reports: Vec<RouterMsg> = Vec::new();
+        loop {
+            match core.peek_due() {
+                Some(stamp) => {
+                    let due = stamp.due;
+                    // Let every replica that still has runnable work
+                    // catch up to the decision time first, so the load
+                    // snapshot the placement sees is causal.
+                    if let Some(a) = actors
+                        .iter_mut()
+                        .find(|a| a.runnable() && a.now() < due)
+                    {
+                        Self::tick_one(a, &mut reports);
+                        steps += 1;
+                        if steps >= max_steps {
+                            break;
+                        }
+                        drain_reports(&mut core, &mut actors, &mut reports);
+                        continue;
+                    }
+                    let loads: Vec<ReplicaLoad> = actors.iter().map(|a| a.load()).collect();
+                    let deliveries = core.route(&loads).expect("peeked work vanished");
+                    for (replica, msg_due, msg) in deliveries {
+                        deliver(&mut actors, replica, msg_due, msg, &mut reports);
+                    }
+                    drain_reports(&mut core, &mut actors, &mut reports);
+                }
+                None => {
+                    // No undispatched work: advance the laggard (its
+                    // next turn release is the only thing that can
+                    // refill the mailbox), first-by-index on clock ties.
+                    if let Some(a) = actors
+                        .iter_mut()
+                        .filter(|a| a.runnable())
+                        .min_by_key(|a| a.now())
+                    {
+                        Self::tick_one(a, &mut reports);
+                        steps += 1;
+                        if steps >= max_steps {
+                            break;
+                        }
+                        drain_reports(&mut core, &mut actors, &mut reports);
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+        let outcomes = actors.into_iter().map(|a| a.into_outcome()).collect();
+        core.into_outcome(outcomes)
+    }
+}
+
+fn deliver(
+    actors: &mut [ReplicaActor],
+    replica: usize,
+    due: Ns,
+    msg: ReplicaMsg,
+    reports: &mut Vec<RouterMsg>,
+) {
+    actors[replica].post(due, msg);
+    actors[replica].process(reports);
+}
+
+/// Feed replica reports back into the router until the worklist
+/// settles. A [`RouterMsg::Migrated`] reply produces the target's
+/// [`ReplicaMsg::Arrive`] delivery, whose own report lands on the same
+/// worklist; status reports are the threaded executor's handshake and
+/// carry nothing here (the deterministic executor reads actor state
+/// synchronously).
+fn drain_reports(
+    core: &mut RouterCore,
+    actors: &mut [ReplicaActor],
+    reports: &mut Vec<RouterMsg>,
+) {
+    while !reports.is_empty() {
+        let batch: Vec<RouterMsg> = std::mem::take(reports);
+        for msg in batch {
+            match msg {
+                RouterMsg::Released { replica, id, due } => core.on_released(replica, id, due),
+                RouterMsg::Migrated { replica, to, at, conv } => {
+                    if let Some((target, due, m)) = core.on_migrated(replica, to, at, conv) {
+                        deliver(actors, target, due, m, reports);
+                    }
+                }
+                RouterMsg::Status { .. } | RouterMsg::Finished { .. } => {}
+            }
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! Actor runtime for the cluster: replicas as message-driven tasks
+//! behind a pluggable executor.
+//!
+//! The pre-actor cluster was N engine replicas stepped sequentially
+//! inside one loop that called engine hooks directly; router dispatch,
+//! swap/prefetch I/O, and replica compute could never actually be
+//! concurrent. This layer restructures that loop into actors:
+//!
+//! - every replica is a [`ReplicaActor`] owning its
+//!   [`ServingEngine`], with a typed [`Mailbox`] of [`ReplicaMsg`]
+//!   deliveries (arrivals, turn firings, migrations, drain/rejoin,
+//!   clock ticks, shutdown);
+//! - the router ([`crate::cluster::router::RouterCore`]) owns only the
+//!   placement state and its own stamped work mailbox; everything it
+//!   learns about replicas arrives as [`RouterMsg`] reports (released
+//!   turns, migration results, status/load snapshots, final outcomes);
+//! - an [`Executor`] decides *how* messages flow.
+//!
+//! Two executors ship behind the one trait:
+//!
+//! - [`deterministic::DeterministicExecutor`] — the default. A
+//!   single-threaded virtual-clock scheduler delivering messages in
+//!   [`Stamp`] `(due, seq)` order, replicating the pre-actor router
+//!   loop decision-for-decision so every seeded e2e pin stays
+//!   byte-identical. As the virtual clock itself, it may inspect actor
+//!   clocks and loads synchronously — the inspection *is* the
+//!   simulated "message" and costs nothing in virtual time.
+//! - [`threaded::ThreadedExecutor`] — `--parallel`. One OS thread per
+//!   replica plus the router thread, real mpsc channels, replicas
+//!   free-running their virtual clocks concurrently. Placement uses
+//!   the latest *reported* (slightly stale) clocks and loads, so
+//!   placement counters and latency percentiles may differ run-to-run;
+//!   the workload outcome — which conversations finish, which are
+//!   rejected, how many tokens are served — is placement-invariant and
+//!   must match the deterministic executor exactly
+//!   (`rust/tests/actor_e2e.rs` pins this).
+//!
+//! The determinism contract, in one line: **messages are totally
+//! ordered by `(due, seq)` and the deterministic executor delivers them
+//! in exactly that order**; the threaded executor preserves per-sender
+//! FIFO order only, and every aggregate it reports must be an invariant
+//! of that relaxation.
+
+pub mod deterministic;
+pub mod mailbox;
+pub mod threaded;
+
+pub use mailbox::Mailbox;
+
+use crate::cluster::placement::ReplicaLoad;
+use crate::cluster::router::{ClusterOutcome, RouterCore};
+use crate::coordinator::engine::{MigratedConv, ServeOutcome, ServingEngine};
+use crate::memory::RequestId;
+use crate::sim::clock::Ns;
+use crate::workload::Conversation;
+
+/// Messages a replica actor can receive (router → replica).
+#[derive(Debug)]
+pub enum ReplicaMsg {
+    /// Place a conversation on this replica; it enters the engine's
+    /// arrival queue at the stamp's due time.
+    Arrive { conv: Conversation },
+    /// Fire a held turn of a conversation homed here (affinity hit).
+    FireTurn { id: RequestId },
+    /// Evict a conversation for migration to replica `to`; the actor
+    /// answers with [`RouterMsg::Migrated`] carrying the unserved
+    /// remainder (or `None` if the conversation already terminated).
+    Migrate { id: RequestId, to: usize },
+    /// The router drained this replica: no further placements will
+    /// arrive until a [`ReplicaMsg::Rejoin`]. In-flight work finishes.
+    Drain,
+    /// The drained replica re-enters the placement rotation.
+    Rejoin,
+    /// Advance the engine's virtual clock by at most `max_steps`
+    /// iterations (deterministic executor only — the threaded executor
+    /// free-runs instead).
+    Tick { max_steps: u64 },
+    /// Finish up: after this the actor reports its outcome and stops.
+    Shutdown,
+}
+
+/// Messages a replica actor sends back (replica → router).
+#[derive(Debug)]
+pub enum RouterMsg {
+    /// A held conversation finished a turn; its next turn is due for a
+    /// placement decision at `due`.
+    Released { replica: usize, id: RequestId, due: Ns },
+    /// Answer to [`ReplicaMsg::Migrate`]: the evicted remainder headed
+    /// for replica `to` (`None` when the conversation terminated on the
+    /// home replica in the meantime — nothing to move).
+    Migrated { replica: usize, to: usize, at: Ns, conv: Option<MigratedConv> },
+    /// Liveness/load report, appended after every processed batch:
+    /// the actor's virtual clock, whether it still has runnable work
+    /// (within its step budget), its current placement load snapshot,
+    /// and how many router→replica messages it has processed so far
+    /// (the threaded executor's quiescence handshake compares this
+    /// against its send count).
+    Status { replica: usize, now: Ns, runnable: bool, load: ReplicaLoad, acked: u64 },
+    /// Terminal report after [`ReplicaMsg::Shutdown`].
+    Finished { replica: usize, outcome: Box<ServeOutcome> },
+}
+
+/// A replica as an actor: the engine, its mailbox, and the local step
+/// budget. All engine access from the cluster layer flows through
+/// [`ReplicaActor::post`] + [`ReplicaActor::process`] (message
+/// delivery) or the read-only snapshot accessors the deterministic
+/// executor uses as its virtual-clock view.
+pub struct ReplicaActor {
+    id: usize,
+    engine: ServingEngine,
+    mailbox: Mailbox<ReplicaMsg>,
+    /// Router→replica messages processed (Status handshake).
+    handled: u64,
+    /// Engine iterations this actor may still take (backstop against
+    /// runaway runs; mirrors the pre-actor global step budget).
+    budget: u64,
+    steps: u64,
+    alive: bool,
+}
+
+impl ReplicaActor {
+    /// Wrap an engine as an actor with a step budget.
+    pub fn new(id: usize, engine: ServingEngine, budget: u64) -> Self {
+        ReplicaActor {
+            id,
+            engine,
+            mailbox: Mailbox::new(),
+            handled: 0,
+            budget,
+            steps: 0,
+            alive: true,
+        }
+    }
+
+    /// Replica index (also its trace lane).
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Re-arm the step budget (the executor owns the budget policy:
+    /// the deterministic executor enforces a global budget itself and
+    /// leaves actors unbounded; the threaded executor caps each actor).
+    pub fn set_budget(&mut self, budget: u64) {
+        self.budget = budget;
+    }
+
+    /// Enqueue a message for delivery at `due`.
+    pub fn post(&mut self, due: Ns, msg: ReplicaMsg) {
+        self.mailbox.push(due, msg);
+    }
+
+    /// Deliver every queued message in `(due, seq)` order, then report:
+    /// released turns first (per-sender FIFO guarantees the router sees
+    /// them before the Status that acknowledges this batch), then one
+    /// [`RouterMsg::Status`]. Returns `false` once a
+    /// [`ReplicaMsg::Shutdown`] was delivered.
+    pub fn process(&mut self, out: &mut Vec<RouterMsg>) -> bool {
+        while let Some((stamp, msg)) = self.mailbox.pop_min() {
+            self.handled += 1;
+            match msg {
+                ReplicaMsg::Arrive { conv } => self.engine.push_arrival(conv, stamp.due),
+                ReplicaMsg::FireTurn { id } => self.engine.fire_turn(id, stamp.due),
+                ReplicaMsg::Migrate { id, to } => {
+                    let conv = self.engine.evict_for_migration(id);
+                    out.push(RouterMsg::Migrated {
+                        replica: self.id,
+                        to,
+                        at: stamp.due,
+                        conv,
+                    });
+                }
+                // Drain/rejoin only move the replica in and out of the
+                // router's placement rotation; the engine itself keeps
+                // serving whatever it already holds.
+                ReplicaMsg::Drain | ReplicaMsg::Rejoin => {}
+                ReplicaMsg::Tick { max_steps } => self.step_chunk(max_steps, false),
+                ReplicaMsg::Shutdown => self.alive = false,
+            }
+        }
+        self.report(out);
+        self.alive
+    }
+
+    /// Free-run a chunk of engine iterations (threaded executor),
+    /// early-stopping as soon as a turn is released so the router hears
+    /// about it with minimal lag, then report.
+    pub fn tick(&mut self, max_steps: u64, out: &mut Vec<RouterMsg>) {
+        self.step_chunk(max_steps, true);
+        self.report(out);
+    }
+
+    fn step_chunk(&mut self, max_steps: u64, stop_on_release: bool) {
+        let taken = self
+            .engine
+            .step_chunk(max_steps.min(self.budget.saturating_sub(self.steps)), stop_on_release);
+        self.steps += taken;
+    }
+
+    fn report(&mut self, out: &mut Vec<RouterMsg>) {
+        for (id, due) in self.engine.take_released_turns() {
+            out.push(RouterMsg::Released { replica: self.id, id, due });
+        }
+        out.push(RouterMsg::Status {
+            replica: self.id,
+            now: self.engine.now(),
+            runnable: self.runnable(),
+            load: self.engine.load_snapshot(),
+            acked: self.handled,
+        });
+    }
+
+    /// Virtual clock (deterministic executor's synchronous view).
+    pub fn now(&self) -> Ns {
+        self.engine.now()
+    }
+
+    /// Runnable = has pending work and step budget left.
+    pub fn runnable(&self) -> bool {
+        self.engine.has_pending_work() && self.steps < self.budget
+    }
+
+    /// Current placement load (deterministic executor's synchronous
+    /// view; the threaded executor gets this via [`RouterMsg::Status`]).
+    pub fn load(&self) -> ReplicaLoad {
+        self.engine.load_snapshot()
+    }
+
+    /// Engine iterations taken so far under this actor.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Direct engine access for pre-run configuration (e.g. the
+    /// Fig-9 wall-clock charging flag). Not used while an executor is
+    /// driving the actor.
+    pub fn engine_mut(&mut self) -> &mut ServingEngine {
+        &mut self.engine
+    }
+
+    /// Undelivered mailbox depth (observability).
+    pub fn mailbox_depth(&self) -> usize {
+        self.mailbox.depth()
+    }
+
+    /// Finish the actor and extract its engine outcome.
+    pub fn into_outcome(self) -> ServeOutcome {
+        self.engine.into_outcome()
+    }
+}
+
+/// One strategy for driving the router + replica actors to completion.
+/// Implementations consume the router core and actors and return the
+/// aggregated outcome.
+pub trait Executor {
+    /// Short name for banners and the ledger.
+    fn label(&self) -> &'static str;
+    /// Drive the message flow until the workload completes (or the step
+    /// budget derived from `max_iters` runs out).
+    fn run(&mut self, core: RouterCore, actors: Vec<ReplicaActor>, max_iters: u64)
+        -> ClusterOutcome;
+}
+
+/// Re-exported for executor implementations and tests.
+pub use crate::sim::clock::Stamp as MessageStamp;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replica_messages_are_send() {
+        // The threaded executor moves actors and both message enums
+        // across OS threads; keep that property pinned at compile time.
+        fn assert_send<T: Send>() {}
+        assert_send::<ReplicaMsg>();
+        assert_send::<RouterMsg>();
+        assert_send::<ReplicaActor>();
+    }
+
+    #[test]
+    fn stamp_reexport_matches_clock_stamp() {
+        let s = MessageStamp { due: 1, seq: 2 };
+        assert_eq!(s, crate::sim::clock::Stamp { due: 1, seq: 2 });
+    }
+}

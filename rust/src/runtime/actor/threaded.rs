@@ -1,0 +1,237 @@
+//! The `--parallel` executor: one OS thread per replica plus the router
+//! on the calling thread, real mpsc channels in both directions.
+//!
+//! Replicas free-run their virtual clocks in [`CHUNK`]-iteration
+//! bursts (early-stopping on turn release so the router hears about
+//! due placements with minimal lag) and block on their inbox when
+//! idle. The router dispatches a placement decision once no replica it
+//! *believes* runnable is still behind the decision's due time — the
+//! belief comes from the latest [`RouterMsg::Status`] reports, so it
+//! is slightly stale and placements can differ from the deterministic
+//! executor's. That staleness is the whole relaxation: which replica
+//! serves a conversation affects latency percentiles and migration
+//! counts, but never whether the conversation finishes, gets rejected,
+//! or how many tokens it is served — those depend only on the
+//! conversation's own content (migration folds served history into the
+//! next prompt, so the max-model-len check sees the same cumulative
+//! length on any replica). `rust/tests/actor_e2e.rs` pins exactly that
+//! agreement against the deterministic run.
+//!
+//! Termination is a two-sided handshake. A replica is *settled* when
+//! its last report says it is not runnable and has acknowledged every
+//! message the router sent it (`acked == sent`). Per-sender channel
+//! FIFO means that final [`RouterMsg::Status`] arrives after anything
+//! else the replica sent, so once every replica is settled and the
+//! report channel drains empty, nothing can be in flight: the router
+//! sends [`ReplicaMsg::Shutdown`] and collects one
+//! [`RouterMsg::Finished`] per replica. Step budgets are per-actor
+//! (`max_iters` each); a budget-exhausted replica reports itself not
+//! runnable, so exhaustion ends the run instead of deadlocking it.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread;
+
+use crate::cluster::placement::ReplicaLoad;
+use crate::cluster::router::{ClusterOutcome, RouterCore};
+use crate::coordinator::engine::ServeOutcome;
+use crate::sim::clock::Ns;
+
+use super::{Executor, ReplicaActor, ReplicaMsg, RouterMsg};
+
+/// Iterations per free-run burst between inbox polls. Small enough to
+/// keep status reports fresh, large enough to amortize channel traffic.
+const CHUNK: u64 = 256;
+
+/// One OS thread per replica; placement on stale reported state. See
+/// the module docs for the invariants this preserves.
+pub struct ThreadedExecutor;
+
+/// The router's latest belief about one replica, rebuilt from every
+/// [`RouterMsg::Status`] it receives.
+struct ReplicaView {
+    now: Ns,
+    runnable: bool,
+    load: ReplicaLoad,
+    sent: u64,
+    acked: u64,
+}
+
+impl Executor for ThreadedExecutor {
+    fn label(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn run(
+        &mut self,
+        mut core: RouterCore,
+        actors: Vec<ReplicaActor>,
+        max_iters: u64,
+    ) -> ClusterOutcome {
+        let n = actors.len();
+        let (report_tx, report_rx) = mpsc::channel::<RouterMsg>();
+        let mut inboxes: Vec<Sender<(Ns, ReplicaMsg)>> = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for mut actor in actors {
+            actor.set_budget(max_iters);
+            let (tx, rx) = mpsc::channel::<(Ns, ReplicaMsg)>();
+            inboxes.push(tx);
+            let out = report_tx.clone();
+            handles.push(thread::spawn(move || replica_main(actor, rx, out)));
+        }
+        drop(report_tx);
+
+        let mut views: Vec<ReplicaView> = (0..n)
+            .map(|_| ReplicaView {
+                now: 0,
+                runnable: false,
+                load: ReplicaLoad::default(),
+                sent: 0,
+                acked: 0,
+            })
+            .collect();
+
+        let mut send = |views: &mut [ReplicaView], replica: usize, due: Ns, msg: ReplicaMsg| {
+            // A send can only fail if the replica thread panicked; the
+            // panic surfaces at join below, so losing the message here
+            // is moot.
+            let _ = inboxes[replica].send((due, msg));
+            views[replica].sent += 1;
+            // Optimistic: assume the delivery wakes the replica until
+            // its next status report says otherwise. This paces
+            // dispatch (later-due decisions wait for the report) and
+            // keeps the settled-check honest.
+            views[replica].runnable = true;
+        };
+
+        loop {
+            // Dispatch every decision already reached by all replicas
+            // believed runnable; their clocks only move forward, so
+            // waiting on stale reports is conservative, never wrong.
+            while let Some(stamp) = core.peek_due() {
+                let due = stamp.due;
+                if views.iter().any(|v| v.runnable && v.now < due) {
+                    break;
+                }
+                let loads: Vec<ReplicaLoad> = views.iter().map(|v| v.load).collect();
+                let deliveries = core.route(&loads).expect("peeked work vanished");
+                for (replica, msg_due, msg) in deliveries {
+                    send(&mut views, replica, msg_due, msg);
+                }
+            }
+            let settled = core.queue_is_empty()
+                && views.iter().all(|v| !v.runnable && v.acked == v.sent);
+            if settled {
+                // Per-sender FIFO: a settled replica's final status is
+                // the last thing it sent, so an empty channel here is a
+                // true fixpoint, not a race window.
+                match report_rx.try_recv() {
+                    Ok(msg) => {
+                        handle_report(&mut core, &mut views, &mut send, msg);
+                        continue;
+                    }
+                    Err(_) => break,
+                }
+            }
+            match report_rx.recv() {
+                Ok(msg) => handle_report(&mut core, &mut views, &mut send, msg),
+                Err(_) => break, // every replica hung up (all panicked)
+            }
+        }
+
+        for (replica, inbox) in inboxes.iter().enumerate() {
+            let _ = inbox.send((views[replica].now, ReplicaMsg::Shutdown));
+        }
+        let mut outcomes: Vec<Option<ServeOutcome>> = (0..n).map(|_| None).collect();
+        let mut finished = 0usize;
+        while finished < n {
+            match report_rx.recv() {
+                // Only trailing status reports can interleave here: a
+                // shutting-down replica drains an idle engine, so no
+                // releases or migration replies are possible.
+                Ok(RouterMsg::Finished { replica, outcome }) => {
+                    outcomes[replica] = Some(*outcome);
+                    finished += 1;
+                }
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        for h in handles {
+            h.join().expect("replica thread panicked");
+        }
+        let outcomes = outcomes
+            .into_iter()
+            .map(|o| o.expect("replica exited without a final report"))
+            .collect();
+        core.into_outcome(outcomes)
+    }
+}
+
+fn handle_report(
+    core: &mut RouterCore,
+    views: &mut [ReplicaView],
+    send: &mut impl FnMut(&mut [ReplicaView], usize, Ns, ReplicaMsg),
+    msg: RouterMsg,
+) {
+    match msg {
+        RouterMsg::Released { replica, id, due } => core.on_released(replica, id, due),
+        RouterMsg::Migrated { replica, to, at, conv } => {
+            if let Some((target, due, m)) = core.on_migrated(replica, to, at, conv) {
+                send(views, target, due, m);
+            }
+        }
+        RouterMsg::Status { replica, now, runnable, load, acked } => {
+            let v = &mut views[replica];
+            v.now = now;
+            v.load = load;
+            v.acked = acked;
+            // Trust a status only once it acknowledges everything we
+            // sent — an older report must not flip a woken replica back
+            // to idle.
+            if acked == v.sent {
+                v.runnable = runnable;
+            }
+        }
+        RouterMsg::Finished { .. } => {}
+    }
+}
+
+/// Replica thread body: block when idle, drain the inbox, process, then
+/// free-run a burst if there is runnable work. Every loop iteration
+/// flushes its reports, so the router's view lags by at most one burst.
+fn replica_main(
+    mut actor: ReplicaActor,
+    inbox: Receiver<(Ns, ReplicaMsg)>,
+    out: Sender<RouterMsg>,
+) {
+    let mut reports: Vec<RouterMsg> = Vec::new();
+    loop {
+        if !actor.runnable() && actor.mailbox_depth() == 0 {
+            match inbox.recv() {
+                Ok((due, msg)) => actor.post(due, msg),
+                Err(_) => return, // router dropped us without shutdown
+            }
+        }
+        while let Ok((due, msg)) = inbox.try_recv() {
+            actor.post(due, msg);
+        }
+        let alive = actor.process(&mut reports);
+        if !alive {
+            for m in reports.drain(..) {
+                let _ = out.send(m);
+            }
+            let id = actor.id();
+            let _ = out.send(RouterMsg::Finished {
+                replica: id,
+                outcome: Box::new(actor.into_outcome()),
+            });
+            return;
+        }
+        if actor.runnable() {
+            actor.tick(CHUNK, &mut reports);
+        }
+        for m in reports.drain(..) {
+            let _ = out.send(m);
+        }
+    }
+}

@@ -12,7 +12,12 @@
 //! executable call passes them in and receives the updated caches back.
 //! Swap in real mode = physical `memcpy` between the GPU-pool and
 //! CPU-pool buffers, dispatched through [`crate::swap::pool::CopyPool`].
+//!
+//! The [`actor`] submodule is the *cluster* runtime: replica engines as
+//! message-driven actors behind a pluggable executor (deterministic
+//! virtual-clock or threaded `--parallel`).
 
+pub mod actor;
 pub mod meta;
 pub mod model;
 

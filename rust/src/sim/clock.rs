@@ -28,6 +28,20 @@ pub fn to_ms(ns: Ns) -> f64 {
     ns as f64 / MS as f64
 }
 
+/// A virtual-time delivery stamp: the instant a message becomes due plus
+/// a monotonically assigned insertion sequence number used as the
+/// tie-breaker. Total `(due, seq)` ordering is the determinism contract
+/// of the actor runtime ([`crate::runtime::actor`]): two messages due at
+/// the same nanosecond are always delivered in the order they were
+/// enqueued, so a seeded run replays identically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Stamp {
+    /// Virtual-time instant the stamped message becomes deliverable.
+    pub due: Ns,
+    /// Enqueue order within the owning mailbox (determinism tie-break).
+    pub seq: u64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -44,5 +58,15 @@ mod tests {
     fn conversions() {
         assert_eq!(to_secs(2 * SEC), 2.0);
         assert_eq!(to_ms(5 * MS), 5.0);
+    }
+
+    #[test]
+    fn stamp_orders_by_due_then_seq() {
+        let a = Stamp { due: 10, seq: 5 };
+        let b = Stamp { due: 10, seq: 6 };
+        let c = Stamp { due: 11, seq: 0 };
+        assert!(a < b, "same due: earlier enqueue wins");
+        assert!(b < c, "earlier due wins regardless of seq");
+        assert_eq!(a.min(b).min(c), a);
     }
 }

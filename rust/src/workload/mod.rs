@@ -9,7 +9,7 @@ pub mod sharegpt;
 pub mod tenants;
 pub mod trace;
 
-pub use scenario::{DrainPlan, ScenarioSpec, ScenarioWorkload};
+pub use scenario::{DrainPlan, ScenarioParams, ScenarioSpec, ScenarioWorkload};
 pub use sharegpt::{Conversation, ShareGptConfig, Turn};
 pub use tenants::{assign_tenants, conversations_per_tenant, TenantMix};
 pub use trace::{ArrivalTrace, TraceEntry};

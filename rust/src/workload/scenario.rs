@@ -77,6 +77,12 @@ pub const HERD_RESPONSE: (u32, u32) = (32, 192);
 /// waves, where a drain would migrate nothing.
 pub const HERD_DRAIN_REPLICA: usize = 1;
 pub const HERD_DRAIN_DELAY_S: f64 = 1.0;
+/// How long after the drain the replica re-joins the placement
+/// rotation. Sized to land inside the inter-wave gap (well before the
+/// third wave at 2·[`HERD_WAVE_GAP_S`]), so the rejoined replica
+/// provably receives wave-3 placements — the drain→rejoin cycle is
+/// exercised, not just scheduled.
+pub const HERD_REJOIN_DELAY_S: f64 = 20.0;
 
 /// Diurnal: full load-wave periods the arrival span covers, and the
 /// modulation depth (`rate · (1 ± amplitude)` at peak/trough).
@@ -85,11 +91,39 @@ pub const DIURNAL_AMPLITUDE: f64 = 0.8;
 
 /// Mid-run replica drain/failure request: the cluster router stops
 /// placing work on `replica` once its clock passes `at`, and every held
-/// conversation migrates off on its next turn.
+/// conversation migrates off on its next turn. An optional `rejoin_at`
+/// returns the replica to the placement rotation later (recovery after
+/// a rolling restart rather than a permanent loss).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DrainPlan {
     pub replica: usize,
     pub at: Ns,
+    /// Re-join time (must be after `at`); `None` = drained for good.
+    pub rejoin_at: Option<Ns>,
+}
+
+/// Generator knobs the gauntlet exposes as CLI flags
+/// (`--herd-spike`, `--think-floor`); defaults reproduce the canonical
+/// scenarios byte-for-byte.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScenarioParams {
+    /// Within-wave arrival rate multiplier for the thundering herd
+    /// (default [`HERD_SPIKE`]): higher = tighter, more adversarial
+    /// bursts.
+    pub herd_spike: f64,
+    /// Lower bound on agentic think times, seconds (default
+    /// [`AGENTIC_THINK_MIN_S`]): the floor the prefetch lookahead gets
+    /// to work with.
+    pub agentic_think_floor_s: f64,
+}
+
+impl Default for ScenarioParams {
+    fn default() -> Self {
+        ScenarioParams {
+            herd_spike: HERD_SPIKE,
+            agentic_think_floor_s: AGENTIC_THINK_MIN_S,
+        }
+    }
 }
 
 /// One scenario's full deterministic workload.
@@ -157,19 +191,33 @@ impl ScenarioSpec {
     /// Generate the scenario's workload: `conversations` conversations,
     /// base arrival rate `request_rate`/s, everything derived from
     /// `seed` via tagged sub-streams (conversation shapes, tenant
-    /// assignment, and arrivals never share draws).
+    /// assignment, and arrivals never share draws). Canonical
+    /// [`ScenarioParams::default`] knobs.
     pub fn build(
         &self,
         conversations: usize,
         request_rate: f64,
         seed: u64,
     ) -> ScenarioWorkload {
+        self.build_with(conversations, request_rate, seed, &ScenarioParams::default())
+    }
+
+    /// [`ScenarioSpec::build`] with explicit generator knobs. Default
+    /// params are byte-identical to `build` — the knobs multiply into
+    /// the same RNG draws, they never add or skip any.
+    pub fn build_with(
+        &self,
+        conversations: usize,
+        request_rate: f64,
+        seed: u64,
+        params: &ScenarioParams,
+    ) -> ScenarioWorkload {
         match *self {
-            ScenarioSpec::Agentic => agentic(conversations, request_rate, seed),
+            ScenarioSpec::Agentic => agentic(conversations, request_rate, seed, params),
             ScenarioSpec::MegaContext { max_model_len } => {
                 mega_context(conversations, request_rate, seed, max_model_len)
             }
-            ScenarioSpec::ThunderingHerd => herd(conversations, request_rate, seed),
+            ScenarioSpec::ThunderingHerd => herd(conversations, request_rate, seed, params),
             ScenarioSpec::Diurnal => diurnal(conversations, request_rate, seed),
         }
     }
@@ -192,7 +240,12 @@ fn uniform_s(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
     lo + rng.f64() * (hi - lo)
 }
 
-fn agentic(n: usize, rate: f64, seed: u64) -> ScenarioWorkload {
+fn agentic(n: usize, rate: f64, seed: u64, params: &ScenarioParams) -> ScenarioWorkload {
+    // The think floor shifts the uniform draw's bounds, never its RNG
+    // consumption — raising the ceiling alongside keeps lo ≤ hi for
+    // floors past AGENTIC_THINK_MAX_S.
+    let think_lo = params.agentic_think_floor_s;
+    let think_hi = AGENTIC_THINK_MAX_S.max(think_lo);
     let mut rng = Rng::new(seed ^ 0xA9E7_71C0);
     let mut convs: Vec<Conversation> = (0..n)
         .map(|id| {
@@ -208,7 +261,7 @@ fn agentic(n: usize, rate: f64, seed: u64) -> ScenarioWorkload {
                     think_time_s: if t == 0 {
                         0.0
                     } else {
-                        uniform_s(&mut rng, AGENTIC_THINK_MIN_S, AGENTIC_THINK_MAX_S)
+                        uniform_s(&mut rng, think_lo, think_hi)
                     },
                 })
                 .collect();
@@ -248,7 +301,7 @@ fn mega_context(n: usize, rate: f64, seed: u64, max_model_len: usize) -> Scenari
     ScenarioWorkload { conversations: convs, arrivals, drain: None }
 }
 
-fn herd(n: usize, rate: f64, seed: u64) -> ScenarioWorkload {
+fn herd(n: usize, rate: f64, seed: u64, params: &ScenarioParams) -> ScenarioWorkload {
     let mut rng = Rng::new(seed ^ 0x4E8D_11B2);
     let mut convs: Vec<Conversation> = (0..n)
         .map(|id| {
@@ -270,9 +323,10 @@ fn herd(n: usize, rate: f64, seed: u64) -> ScenarioWorkload {
     split_tenants(&mut convs, seed);
 
     // Synchronized waves: conversations split into HERD_WAVES contiguous
-    // chunks, each arriving in a tight burst at HERD_SPIKE times the
-    // base rate; waves start HERD_WAVE_GAP_S apart. `t.max(wave_start)`
-    // keeps arrivals monotone even if a wave overruns its gap.
+    // chunks, each arriving in a tight burst at `params.herd_spike`
+    // (canonically HERD_SPIKE) times the base rate; waves start
+    // HERD_WAVE_GAP_S apart. `t.max(wave_start)` keeps arrivals monotone
+    // even if a wave overruns its gap.
     let mut arr_rng = Rng::new(seed ^ 0x5EED ^ 0x4E8D_11B2);
     let mut entries = Vec::with_capacity(n);
     let base = n / HERD_WAVES;
@@ -284,7 +338,7 @@ fn herd(n: usize, rate: f64, seed: u64) -> ScenarioWorkload {
         let count = base + usize::from(wave < extra);
         t = t.max(wave as f64 * HERD_WAVE_GAP_S);
         for _ in 0..count {
-            t += arr_rng.exp(rate * HERD_SPIKE);
+            t += arr_rng.exp(rate * params.herd_spike);
             if wave == 1 && second_wave_start.is_none() {
                 second_wave_start = Some(t);
             }
@@ -300,12 +354,15 @@ fn herd(n: usize, rate: f64, seed: u64) -> ScenarioWorkload {
     // ≥ HERD_TURNS_MIN turns and ≥ HERD_THINK_MIN_S think times, so the
     // drained replica provably holds work whose next turns must migrate
     // off. (Degenerate single-wave workloads fall back to mid-span.)
+    // The replica re-joins in the inter-wave gap, before the third
+    // wave — the router must route wave-3 placements back onto it.
     let drain_at_s = second_wave_start
         .map(|w| w + HERD_DRAIN_DELAY_S)
         .unwrap_or_else(|| arrivals.span() as f64 * 0.45 / SEC as f64);
     let drain = DrainPlan {
         replica: HERD_DRAIN_REPLICA,
         at: (drain_at_s * SEC as f64) as Ns,
+        rejoin_at: Some(((drain_at_s + HERD_REJOIN_DELAY_S) * SEC as f64) as Ns),
     };
     ScenarioWorkload { conversations: convs, arrivals, drain: Some(drain) }
 }
@@ -457,6 +514,50 @@ mod tests {
             "drain {} outside wave 2 [{wave2_first}, {wave3_first})",
             d.at
         );
+        // The rejoin lands in the gap before wave 3, so the recovered
+        // replica is back in rotation when the third wave hits.
+        let rejoin = d.rejoin_at.expect("herd drain must schedule a rejoin");
+        assert!(
+            rejoin > d.at && rejoin < wave3_first,
+            "rejoin {rejoin} outside (drain {}, wave 3 {wave3_first})",
+            d.at
+        );
+    }
+
+    #[test]
+    fn params_knobs_shift_generators_without_new_rng_draws() {
+        // Default params reproduce build() byte-for-byte.
+        let canon = ScenarioSpec::ThunderingHerd.build(60, 1.0, 11);
+        let explicit = ScenarioSpec::ThunderingHerd.build_with(
+            60,
+            1.0,
+            11,
+            &ScenarioParams::default(),
+        );
+        assert_eq!(canon.drain, explicit.drain);
+        assert_eq!(canon.arrivals.entries, explicit.arrivals.entries);
+        // A hotter spike compresses in-wave spacing (same exp() draws,
+        // scaled) — the first wave's arrivals come strictly earlier.
+        let hot = ScenarioSpec::ThunderingHerd.build_with(
+            60,
+            1.0,
+            11,
+            &ScenarioParams { herd_spike: 2.0 * HERD_SPIKE, ..Default::default() },
+        );
+        assert!(hot.arrivals.entries[1].arrival < canon.arrivals.entries[1].arrival);
+        // A raised think floor bounds every agentic follow-up turn.
+        let floor = 0.4;
+        let slow = ScenarioSpec::Agentic.build_with(
+            40,
+            2.0,
+            7,
+            &ScenarioParams { agentic_think_floor_s: floor, ..Default::default() },
+        );
+        for c in &slow.conversations {
+            for t in &c.turns[1..] {
+                assert!(t.think_time_s >= floor, "think {} under floor", t.think_time_s);
+            }
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@ use crate::sim::clock::{Ns, SEC};
 use crate::util::rng::Rng;
 
 /// One conversation's first-turn arrival.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TraceEntry {
     pub conversation: u64,
     pub arrival: Ns,

@@ -1,0 +1,155 @@
+//! Actor-runtime e2e: the threaded (`--parallel`) executor must agree
+//! with the seeded deterministic executor on every conservation total —
+//! conversations finished, conversations rejected, tokens served — and
+//! both must pass the shared cluster invariant audit, including across
+//! the thundering-herd drain → rejoin cycle. Placement *decisions* may
+//! differ between executors (the threaded run sees real thread timing);
+//! the totals may not, because rejection and token generation depend
+//! only on conversation content, never on which replica served it.
+
+use fastswitch::cluster::ClusterConfig;
+use fastswitch::config::{EngineConfig, Preset};
+use fastswitch::coordinator::priority::Pattern;
+use fastswitch::exp::preemption::FREQ;
+use fastswitch::exp::runner::{
+    at_freq, run_cluster_scenario, run_cluster_with, Scale, WorkloadSpec,
+};
+use fastswitch::fairness::PolicyKind;
+use fastswitch::metrics::invariants::check_cluster;
+use fastswitch::workload::{ScenarioParams, ScenarioSpec};
+
+/// The gauntlet's shared cell config: VTC fairness + hard priority
+/// churn, so the executors are compared on the busiest code path.
+fn cfg() -> EngineConfig {
+    let mut cfg = at_freq(EngineConfig::fastswitch(), FREQ);
+    cfg.fairness.policy = PolicyKind::Vtc;
+    cfg
+}
+
+fn scale() -> Scale {
+    Scale {
+        conversations: 24,
+        request_rate: 2.0,
+        seed: 1234,
+        max_iters: 400_000,
+        charge_sched_overhead: false,
+    }
+}
+
+fn cluster(parallel: bool) -> ClusterConfig {
+    ClusterConfig {
+        replicas: 3,
+        parallel,
+        ..ClusterConfig::default()
+    }
+}
+
+#[test]
+fn threaded_executor_matches_deterministic_conservation_totals() {
+    let spec = WorkloadSpec {
+        tenants: 4,
+        heavy_share: 0.4,
+        burst: Some(4.0),
+        ..WorkloadSpec::default()
+    };
+    let s = scale();
+    let det = run_cluster_with(
+        cfg(),
+        Preset::llama8b_a10(),
+        Pattern::Markov,
+        cluster(false),
+        &s,
+        &spec,
+    );
+    let par = run_cluster_with(
+        cfg(),
+        Preset::llama8b_a10(),
+        Pattern::Markov,
+        cluster(true),
+        &s,
+        &spec,
+    );
+    let n = s.conversations as u64;
+    assert_eq!(
+        check_cluster(&det, n, false),
+        Vec::<String>::new(),
+        "deterministic run failed the invariant audit"
+    );
+    assert_eq!(
+        check_cluster(&par, n, false),
+        Vec::<String>::new(),
+        "threaded run failed the invariant audit"
+    );
+    assert_eq!(
+        det.finished_conversations(),
+        par.finished_conversations(),
+        "executors disagree on finished conversations"
+    );
+    assert_eq!(
+        det.rejected_conversations(),
+        par.rejected_conversations(),
+        "executors disagree on rejected conversations"
+    );
+    assert_eq!(
+        det.total_tokens(),
+        par.total_tokens(),
+        "executors disagree on tokens served"
+    );
+}
+
+#[test]
+fn threaded_herd_drain_rejoin_conserves_conversations() {
+    let s = scale();
+    let spec = ScenarioSpec::ThunderingHerd;
+    let wl = spec.build_with(
+        s.conversations,
+        s.request_rate,
+        s.seed,
+        &ScenarioParams::default(),
+    );
+    let plan = wl.drain.expect("thundering herd must carry a drain plan");
+    assert!(plan.rejoin_at.is_some(), "herd drain plan must schedule a rejoin");
+    let n = wl.conversations.len() as u64;
+    let run = |parallel: bool| {
+        run_cluster_scenario(
+            cfg(),
+            Preset::llama8b_a10(),
+            Pattern::Markov,
+            cluster(parallel),
+            &s,
+            &wl,
+        )
+    };
+    let det = run(false);
+    let par = run(true);
+    for (out, label) in [(&det, "deterministic"), (&par, "threaded")] {
+        assert_eq!(
+            check_cluster(out, n, spec.expect_rejection_free()),
+            Vec::<String>::new(),
+            "{label} herd run failed the invariant audit"
+        );
+        let (replica, at) = out.drain.expect("drain must be recorded");
+        let (back_replica, back_at) =
+            out.rejoin.expect("rejoin must be recorded");
+        assert_eq!(replica, plan.replica);
+        assert_eq!(back_replica, plan.replica);
+        assert_eq!(at, plan.at);
+        assert!(back_at > at, "{label}: rejoin must land after the drain");
+        assert!(out.migrations > 0, "{label}: the drain must force migrations");
+    }
+    assert_eq!(
+        det.finished_conversations() + det.rejected_conversations(),
+        par.finished_conversations() + par.rejected_conversations(),
+        "executors disagree on dispatched-conversation accounting"
+    );
+    assert_eq!(
+        det.finished_conversations(),
+        par.finished_conversations(),
+        "executors disagree on finished conversations across drain/rejoin"
+    );
+    assert_eq!(
+        det.total_tokens(),
+        par.total_tokens(),
+        "executors disagree on tokens served across drain/rejoin"
+    );
+}

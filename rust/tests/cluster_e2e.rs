@@ -49,6 +49,7 @@ fn run_cluster(
         ClusterConfig {
             replicas: 2,
             placement,
+            parallel: false,
         },
         convs,
         arrivals,

@@ -159,6 +159,7 @@ fn same_seed_cluster_runs_are_byte_identical() {
                 placement: PlacementKind::KvAffinity {
                     spill_threshold: 0.5,
                 },
+                parallel: false,
             },
             &scale(123),
             &spec(),
@@ -194,6 +195,7 @@ fn same_seed_agentic_scenario_cluster_runs_are_byte_identical() {
                 placement: PlacementKind::KvAffinity {
                     spill_threshold: 0.5,
                 },
+                parallel: false,
             },
             &s,
             &wl,

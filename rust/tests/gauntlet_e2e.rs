@@ -1,13 +1,13 @@
 //! Gauntlet e2e: the scenario × policy grid must be a pure function of
 //! the seed (byte-identical scorecard JSON), every cell must pass the
-//! shared invariant audit, and the thundering-herd drain must provably
-//! migrate work with conversation accounting intact.
+//! shared invariant audit, and the thundering-herd drain → rejoin cycle
+//! must provably migrate work with conversation accounting intact.
 
 use fastswitch::exp::gauntlet::{build, REPLICAS};
 use fastswitch::exp::preemption::POLICIES;
 use fastswitch::exp::runner::Scale;
 use fastswitch::obs::gauntlet::GAUNTLET_SCHEMA;
-use fastswitch::workload::ScenarioSpec;
+use fastswitch::workload::{ScenarioParams, ScenarioSpec};
 
 fn scale() -> Scale {
     Scale {
@@ -21,8 +21,9 @@ fn scale() -> Scale {
 
 #[test]
 fn same_seed_scorecards_are_byte_identical() {
-    let (a, _) = build(&scale());
-    let (b, _) = build(&scale());
+    let params = ScenarioParams::default();
+    let (a, _) = build(&scale(), &params);
+    let (b, _) = build(&scale(), &params);
     let ja = a.to_json();
     assert!(ja.contains(GAUNTLET_SCHEMA), "scorecard must carry its schema tag");
     assert_eq!(
@@ -31,14 +32,14 @@ fn same_seed_scorecards_are_byte_identical() {
         "same seed must reproduce the scorecard JSON byte-for-byte"
     );
     // A changed seed must actually change the measurement.
-    let (c, _) = build(&Scale { seed: 78, ..scale() });
+    let (c, _) = build(&Scale { seed: 78, ..scale() }, &params);
     assert_ne!(ja, c.to_json(), "a changed seed must change the scorecard");
 }
 
 #[test]
 fn every_cell_upholds_the_invariants() {
     let s = scale();
-    let (card, violations) = build(&s);
+    let (card, violations) = build(&s, &ScenarioParams::default());
     assert_eq!(violations, Vec::<String>::new(), "invariant violations");
     assert_eq!(card.config.replicas, REPLICAS);
     assert_eq!(card.config.conversations, s.conversations);
@@ -69,7 +70,7 @@ fn every_cell_upholds_the_invariants() {
 #[test]
 fn herd_drain_provably_migrates_with_accounting_intact() {
     let s = scale();
-    let (card, violations) = build(&s);
+    let (card, violations) = build(&s, &ScenarioParams::default());
     assert!(violations.is_empty(), "{violations:?}");
     let herd: Vec<_> = card
         .cells

@@ -26,6 +26,8 @@ CONFIG_KEYS = {
     "max_model_len": int,
     "request_rate": float,
     "priority_update_freq": float,
+    "herd_spike": float,
+    "agentic_think_floor": float,
 }
 CELL_KEYS = {
     "scenario": str,

@@ -31,6 +31,12 @@ EPOCH_KEYS = {
     "total_ns_mean": float,
 }
 THROUGHPUT_KEYS = {"replicas": int, "tokens_per_s": float}
+PARALLEL_KEYS = {
+    "replicas": int,
+    "deterministic_wall_s": float,
+    "parallel_wall_s": float,
+    "speedup": float,
+}
 POLICY_KEYS = {
     "policy": str,
     "ttft_p50_s": float,
@@ -88,6 +94,7 @@ def main():
 
     check_obj(ledger.get("config"), CONFIG_KEYS, "config")
     check_obj(ledger.get("scheduler_epoch"), EPOCH_KEYS, "scheduler_epoch")
+    check_obj(ledger.get("parallel"), PARALLEL_KEYS, "parallel")
     for section, keys in [
         ("hotpath", HOTPATH_KEYS),
         ("throughput", THROUGHPUT_KEYS),
@@ -101,7 +108,7 @@ def main():
             check_obj(row, keys, f"{section}[{i}]")
 
     top = {"schema", "pr", "config", "hotpath", "scheduler_epoch",
-           "throughput", "policies"}
+           "throughput", "parallel", "policies"}
     for key in set(ledger) - top:
         fail(f"top level: unknown key {key!r} (schema drift?)")
 
