@@ -11,10 +11,12 @@
 //!   split/merge and reserved-tail stealing, so swap traffic coalesces
 //!   into few large segments.
 //!
-//! [`reuse::KvCacheReuse`] adds §3.3's CPU-copy reuse on top of either.
+//! [`reuse::KvCacheReuse`] adds §3.3's CPU-copy reuse on top of either,
+//! and [`prefix::PrefixIndex`] the cross-request global prefix cache.
 
 pub mod buddy;
 pub mod fixed;
+pub mod prefix;
 pub mod reuse;
 
 use crate::memory::{BlockId, GpuBlockSpace, RequestId};

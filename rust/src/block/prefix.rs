@@ -1,0 +1,407 @@
+//! Cross-request radix prefix index over KV block hashes — the global
+//! prefix cache (shared system prompts, few-shot templates).
+//!
+//! Full blocks of a shared prompt template are content-hashed as they
+//! are prefilled and registered in a per-replica [`PrefixIndex`] as a
+//! radix tree of refcounted nodes. Every node owns exactly one GPU KV
+//! block, allocated from the engine's own [`KvAllocator`] under a
+//! reserved pseudo request id — so GPU block conservation holds with no
+//! special cases: pool blocks are "used" blocks like any other.
+//!
+//! On admission the scheduler matches a fresh request's template
+//! against the index and grants only the uncached suffix: the matched
+//! path is pinned (+1 refcount per node) for the request's lifetime,
+//! its `prefill_target` shrinks by the matched depth, and VTC charges
+//! only the uncached tokens (prefill charges are per applied chunk, so
+//! this falls out for free).
+//!
+//! Eviction is deepest-leaf-first and only ever frees a node at
+//! refcount 1 (the index's own reference) — a shared block is never
+//! preempted out from under a live request.
+//!
+//! Conversations carry only token *counts*, so block content is
+//! identified by the template's `(group, block index)` pair: two
+//! conversations share KV iff they share a
+//! [`crate::workload::SharedPrefix`] group, and the per-block hash is a
+//! deterministic chain over the group and position.
+
+use std::collections::HashMap;
+
+use crate::memory::{BlockId, RequestId};
+
+use super::KvAllocator;
+
+/// Base of the reserved pseudo request-id range the pool allocates
+/// under. Real request ids are dense small integers; anything at or
+/// above this base belongs to the prefix pool.
+pub const PREFIX_POOL_ID_BASE: RequestId = 0xFFFF_FFFF_0000_0000;
+
+/// Deterministic per-block content hash of a shared template: a
+/// splitmix-style chain over `(group, block index)` — two requests with
+/// the same template group produce identical chains, which is exactly
+/// the "identical token content hashes identically" property a real
+/// token-level hasher provides.
+pub fn block_hash(group: u64, index: u32) -> u64 {
+    let mut h = group
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(index as u64 + 1);
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^ (h >> 31)
+}
+
+/// One radix node: a published full block of some template.
+#[derive(Clone, Debug)]
+struct Node {
+    hash: u64,
+    /// Parent node slot (`None` = depth-1 root child).
+    parent: Option<usize>,
+    /// Template group this chain belongs to.
+    group: u64,
+    /// 1-based depth: number of blocks from the template start.
+    depth: u32,
+    /// Shared-ownership count. The index's own reference counts as 1;
+    /// every request that matched through this node adds 1. Evictable
+    /// only at exactly 1.
+    refcount: u32,
+    /// Number of child nodes (leaf ⇔ 0); eviction is leaf-only so the
+    /// tree never dangles.
+    children: u32,
+    /// The GPU KV block this node owns (under its pseudo request id).
+    block: BlockId,
+}
+
+/// Per-replica refcounted radix index of published template blocks.
+///
+/// The engine is single-threaded per replica, so the index is plain
+/// data; it is `Send` because every field is.
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    /// Slab of nodes; freed slots are recycled via `free`.
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    /// Radix edges: (parent slot or None, child hash) → child slot.
+    edges: HashMap<(Option<usize>, u64), usize>,
+    /// Matched paths pinned per live request (deepest node last).
+    pinned: HashMap<RequestId, Vec<usize>>,
+    /// Published nodes alive right now.
+    live: usize,
+    /// Total nodes ever published (monotone).
+    pub inserts: u64,
+    /// Total nodes ever evicted (monotone).
+    pub evictions: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        PrefixIndex::default()
+    }
+
+    /// Published blocks currently alive in the pool.
+    pub fn live_blocks(&self) -> usize {
+        self.live
+    }
+
+    /// Sum over all nodes of (refcount − 1): outstanding request pins.
+    /// Zero once every matched request has released — the dangling-ref
+    /// invariant the migration regression pins.
+    pub fn pinned_refs(&self) -> u64 {
+        self.nodes
+            .iter()
+            .flatten()
+            .map(|n| (n.refcount - 1) as u64)
+            .sum()
+    }
+
+    /// Every published `(group, depth)` pair — the brute-force oracle
+    /// surface for the property suite.
+    pub fn published(&self) -> Vec<(u64, u32)> {
+        let mut v: Vec<(u64, u32)> = self
+            .nodes
+            .iter()
+            .flatten()
+            .map(|n| (n.group, n.depth))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Deepest published depth per group, sorted by group — the load
+    /// snapshot the prefix-aware placer routes on.
+    pub fn group_depths(&self) -> Vec<(u64, u32)> {
+        let mut best: HashMap<u64, u32> = HashMap::new();
+        for n in self.nodes.iter().flatten() {
+            let d = best.entry(n.group).or_insert(0);
+            if n.depth > *d {
+                *d = n.depth;
+            }
+        }
+        let mut v: Vec<(u64, u32)> = best.into_iter().collect();
+        v.sort_unstable_by_key(|&(g, _)| g);
+        v
+    }
+
+    fn pseudo_id(slot: usize) -> RequestId {
+        PREFIX_POOL_ID_BASE + slot as RequestId
+    }
+
+    /// Walk the longest cached chain of `group`, up to `max_blocks`.
+    /// Returns the node path, shallowest first.
+    fn match_path(&self, group: u64, max_blocks: u32) -> Vec<usize> {
+        let mut path = Vec::new();
+        let mut parent = None;
+        for i in 0..max_blocks {
+            match self.edges.get(&(parent, block_hash(group, i))) {
+                Some(&slot) => {
+                    path.push(slot);
+                    parent = Some(slot);
+                }
+                None => break,
+            }
+        }
+        path
+    }
+
+    /// Longest cached prefix depth for `group` (blocks), read-only.
+    pub fn match_depth(&self, group: u64, max_blocks: u32) -> u32 {
+        self.match_path(group, max_blocks).len() as u32
+    }
+
+    /// Match and pin: the longest cached chain of `group` (≤
+    /// `max_blocks`) gains one reference per node, held until
+    /// [`PrefixIndex::release`]. Returns the matched depth in blocks
+    /// (0 = miss). A request may hold at most one pinned path.
+    pub fn acquire(&mut self, req: RequestId, group: u64, max_blocks: u32) -> u32 {
+        debug_assert!(!self.pinned.contains_key(&req), "double acquire for {req}");
+        let path = self.match_path(group, max_blocks);
+        if path.is_empty() {
+            return 0;
+        }
+        for &slot in &path {
+            self.nodes[slot].as_mut().unwrap().refcount += 1;
+        }
+        let depth = path.len() as u32;
+        self.pinned.insert(req, path);
+        depth
+    }
+
+    /// Drop the request's pinned path (no-op if it holds none).
+    pub fn release(&mut self, req: RequestId) {
+        if let Some(path) = self.pinned.remove(&req) {
+            for slot in path {
+                let n = self.nodes[slot].as_mut().unwrap();
+                debug_assert!(n.refcount > 1, "release underflow at slot {slot}");
+                n.refcount -= 1;
+            }
+        }
+    }
+
+    /// Whether `req` currently pins a matched path.
+    pub fn is_pinned(&self, req: RequestId) -> bool {
+        self.pinned.contains_key(&req)
+    }
+
+    /// Publish the chain of `group` up to `depth_target` blocks,
+    /// allocating one pool block per new node (born at refcount 1, the
+    /// index's own reference). Publication is opportunistic: it stops —
+    /// without error — as soon as the allocator cannot hand out a block
+    /// while keeping `reserve` blocks free. Returns the number of nodes
+    /// inserted.
+    pub fn publish(
+        &mut self,
+        alloc: &mut dyn KvAllocator,
+        group: u64,
+        depth_target: u32,
+        reserve: usize,
+    ) -> u32 {
+        let mut parent = None;
+        let mut inserted = 0u32;
+        for i in 0..depth_target {
+            let hash = block_hash(group, i);
+            if let Some(&slot) = self.edges.get(&(parent, hash)) {
+                parent = Some(slot);
+                continue;
+            }
+            if alloc.available_blocks() <= reserve {
+                break;
+            }
+            let slot = self.free.pop().unwrap_or_else(|| {
+                self.nodes.push(None);
+                self.nodes.len() - 1
+            });
+            let block = match alloc.allocate(Self::pseudo_id(slot), 1) {
+                Some(blocks) => blocks[0],
+                None => {
+                    self.free.push(slot);
+                    break;
+                }
+            };
+            self.nodes[slot] = Some(Node {
+                hash,
+                parent,
+                group,
+                depth: i + 1,
+                refcount: 1,
+                children: 0,
+                block,
+            });
+            self.edges.insert((parent, hash), slot);
+            if let Some(p) = parent {
+                self.nodes[p].as_mut().unwrap().children += 1;
+            }
+            self.live += 1;
+            self.inserts += 1;
+            parent = Some(slot);
+            inserted += 1;
+        }
+        inserted
+    }
+
+    /// Evict the deepest unreferenced leaf (ties → lowest slot),
+    /// releasing its pool block back to the allocator. Returns the
+    /// freed `(group, depth, block)` or `None` when nothing is
+    /// evictable. Never frees a node with refcount > 1 or with
+    /// children.
+    pub fn evict_one(&mut self, alloc: &mut dyn KvAllocator) -> Option<(u64, u32, BlockId)> {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, n)| n.as_ref().map(|n| (slot, n)))
+            .filter(|(_, n)| n.refcount == 1 && n.children == 0)
+            .max_by(|a, b| a.1.depth.cmp(&b.1.depth).then(b.0.cmp(&a.0)))?
+            .0;
+        let n = self.nodes[victim].take().unwrap();
+        self.edges.remove(&(n.parent, n.hash));
+        if let Some(p) = n.parent {
+            self.nodes[p].as_mut().unwrap().children -= 1;
+        }
+        let freed = alloc.release(Self::pseudo_id(victim));
+        debug_assert_eq!(freed, vec![n.block]);
+        self.free.push(victim);
+        self.live -= 1;
+        self.evictions += 1;
+        Some((n.group, n.depth, n.block))
+    }
+
+    /// Tear the whole pool down, releasing every pool block. Requires
+    /// that no request still pins a path (all refcounts are 1).
+    pub fn clear(&mut self, alloc: &mut dyn KvAllocator) -> usize {
+        assert!(
+            self.pinned.is_empty(),
+            "clear with {} pinned paths outstanding",
+            self.pinned.len()
+        );
+        let mut freed = 0;
+        while self.evict_one(alloc).is_some() {
+            freed += 1;
+        }
+        debug_assert_eq!(self.live, 0);
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::block::fixed::FixedBlockAllocator;
+
+    fn pool(n: usize) -> FixedBlockAllocator {
+        FixedBlockAllocator::new(n)
+    }
+
+    #[test]
+    fn hash_chain_is_deterministic_and_group_distinct() {
+        assert_eq!(block_hash(7, 0), block_hash(7, 0));
+        assert_ne!(block_hash(7, 0), block_hash(7, 1));
+        assert_ne!(block_hash(7, 0), block_hash(8, 0));
+    }
+
+    #[test]
+    fn publish_then_match_pins_the_path() {
+        let mut a = pool(16);
+        let mut ix = PrefixIndex::new();
+        assert_eq!(ix.publish(&mut a, 5, 3, 0), 3);
+        assert_eq!(ix.live_blocks(), 3);
+        assert_eq!(a.available_blocks(), 13);
+        // Full match, capped match, and miss.
+        assert_eq!(ix.match_depth(5, 8), 3);
+        assert_eq!(ix.match_depth(5, 2), 2);
+        assert_eq!(ix.match_depth(6, 8), 0);
+        // Acquire pins every node on the path.
+        assert_eq!(ix.acquire(100, 5, 8), 3);
+        assert_eq!(ix.pinned_refs(), 3);
+        // Pinned nodes are not evictable.
+        assert!(ix.evict_one(&mut a).is_none());
+        ix.release(100);
+        assert_eq!(ix.pinned_refs(), 0);
+    }
+
+    #[test]
+    fn republish_is_idempotent() {
+        let mut a = pool(16);
+        let mut ix = PrefixIndex::new();
+        ix.publish(&mut a, 1, 2, 0);
+        assert_eq!(ix.publish(&mut a, 1, 2, 0), 0, "already published");
+        assert_eq!(ix.publish(&mut a, 1, 4, 0), 2, "extends the chain");
+        assert_eq!(ix.inserts, 4);
+    }
+
+    #[test]
+    fn eviction_is_deepest_leaf_first_and_refcount_guarded() {
+        let mut a = pool(16);
+        let mut ix = PrefixIndex::new();
+        ix.publish(&mut a, 1, 3, 0);
+        ix.publish(&mut a, 2, 2, 0);
+        // Deepest leaf overall is group 1 depth 3.
+        let (g, d, _) = ix.evict_one(&mut a).unwrap();
+        assert_eq!((g, d), (1, 3));
+        // Pin group 1; next evictions must come from group 2 only.
+        ix.acquire(7, 1, 8);
+        let (g, d, _) = ix.evict_one(&mut a).unwrap();
+        assert_eq!((g, d), (2, 2));
+        let (g, d, _) = ix.evict_one(&mut a).unwrap();
+        assert_eq!((g, d), (2, 1));
+        assert!(ix.evict_one(&mut a).is_none(), "group 1 is pinned");
+        ix.release(7);
+        assert!(ix.evict_one(&mut a).is_some());
+    }
+
+    #[test]
+    fn publish_respects_the_reserve_and_allocator_capacity() {
+        let mut a = pool(4);
+        let mut ix = PrefixIndex::new();
+        // Keep 2 blocks free: only 2 of 5 requested nodes land.
+        assert_eq!(ix.publish(&mut a, 9, 5, 2), 2);
+        assert_eq!(a.available_blocks(), 2);
+        // Reserve 0 drains the rest.
+        assert_eq!(ix.publish(&mut a, 9, 5, 0), 2);
+        assert_eq!(a.available_blocks(), 0);
+        assert_eq!(ix.live_blocks(), 4);
+    }
+
+    #[test]
+    fn clear_returns_the_allocator_to_initial_capacity() {
+        let mut a = pool(8);
+        let before = a.available_blocks();
+        let mut ix = PrefixIndex::new();
+        ix.publish(&mut a, 1, 3, 0);
+        ix.publish(&mut a, 2, 4, 0);
+        assert_eq!(ix.clear(&mut a), 7);
+        assert_eq!(a.available_blocks(), before);
+        assert_eq!(ix.live_blocks(), 0);
+        assert_eq!(ix.inserts, 7);
+        assert_eq!(ix.evictions, 7);
+    }
+
+    #[test]
+    fn group_depths_reports_the_deepest_published_block() {
+        let mut a = pool(16);
+        let mut ix = PrefixIndex::new();
+        ix.publish(&mut a, 3, 4, 0);
+        ix.publish(&mut a, 1, 2, 0);
+        assert_eq!(ix.group_depths(), vec![(1, 2), (3, 4)]);
+    }
+}

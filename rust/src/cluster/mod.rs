@@ -19,6 +19,11 @@
 //!   replica holding the conversation's CPU KV copy, spilling to the
 //!   least-loaded replica only when the home replica's load exceeds the
 //!   spill threshold — the tunable reuse-vs-balance trade-off.
+//! - [`placement::PlacementKind::PrefixAware`] — KvAffinity plus
+//!   template locality for *fresh* conversations: route a templated
+//!   arrival at the replica whose global prefix cache
+//!   ([`crate::block::prefix`]) holds the deepest published chain for
+//!   its group, under the same spill guard.
 //!
 //! The router measures exactly that trade-off: `affinity_hit_rate`
 //! (later-turn placements that kept their KV locality) and

@@ -21,6 +21,13 @@ pub enum PlacementKind {
     /// `spill_threshold` (0 = spill on any imbalance ≈ least-loaded with
     /// an affinity tiebreak; `f64::INFINITY` = never spill).
     KvAffinity { spill_threshold: f64 },
+    /// KvAffinity for later turns, plus longest-shared-prefix routing
+    /// for fresh conversations carrying a shared template: route to the
+    /// replica whose prefix pool holds the deepest published chain of
+    /// the template's group (ties → lowest index), under the same
+    /// `spill_threshold` against the least-loaded score. Fresh
+    /// conversations without a template fall back to least-loaded.
+    PrefixAware { spill_threshold: f64 },
 }
 
 /// Default affinity/balance trade-off: tolerate the home replica being
@@ -36,6 +43,9 @@ impl PlacementKind {
             "kv_affinity" | "kv-affinity" | "affinity" => Some(PlacementKind::KvAffinity {
                 spill_threshold: DEFAULT_SPILL_THRESHOLD,
             }),
+            "prefix_aware" | "prefix-aware" | "prefix" => Some(PlacementKind::PrefixAware {
+                spill_threshold: DEFAULT_SPILL_THRESHOLD,
+            }),
             _ => None,
         }
     }
@@ -45,6 +55,7 @@ impl PlacementKind {
             PlacementKind::RoundRobin => "round_robin",
             PlacementKind::LeastLoaded => "least_loaded",
             PlacementKind::KvAffinity { .. } => "kv_affinity",
+            PlacementKind::PrefixAware { .. } => "prefix_aware",
         }
     }
 }
@@ -54,7 +65,7 @@ impl PlacementKind {
 /// the deterministic executor reads it synchronously at decision time,
 /// the threaded executor places on the latest reported (slightly stale)
 /// snapshot.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ReplicaLoad {
     /// GPU KV blocks currently allocated.
     pub blocks_in_use: usize,
@@ -65,6 +76,11 @@ pub struct ReplicaLoad {
     pub backlog: usize,
     /// Max decode batch (normalizes the backlog).
     pub max_batch: usize,
+    /// Deepest published prefix-pool chain per template group, sorted by
+    /// group (empty when the prefix cache is off) — what
+    /// [`PlacementKind::PrefixAware`] routes fresh templated
+    /// conversations on.
+    pub prefix_groups: Vec<(u64, u32)>,
 }
 
 impl ReplicaLoad {
@@ -74,6 +90,15 @@ impl ReplicaLoad {
     pub fn score(&self) -> f64 {
         self.blocks_in_use as f64 / self.gpu_blocks.max(1) as f64
             + self.backlog as f64 / self.max_batch.max(1) as f64
+    }
+
+    /// Deepest published chain of `group` in this replica's prefix pool
+    /// (0 = nothing cached).
+    pub fn prefix_depth(&self, group: u64) -> u32 {
+        self.prefix_groups
+            .iter()
+            .find(|&&(g, _)| g == group)
+            .map_or(0, |&(_, d)| d)
     }
 }
 
@@ -127,12 +152,35 @@ impl Placer {
         home: Option<usize>,
         down: Option<&[bool]>,
     ) -> usize {
+        self.place_with_group(loads, home, down, None)
+    }
+
+    /// [`Placer::place_filtered`] with the work unit's shared-template
+    /// group (`None` = no template, or the prefix cache is off). Only
+    /// [`PlacementKind::PrefixAware`] reads it, and only for fresh
+    /// conversations (`home == None`): route to the up replica with the
+    /// deepest published chain of the group — locality worth a real
+    /// prefill saving — unless that replica is more than
+    /// `spill_threshold` busier than the least-loaded one.
+    pub fn place_with_group(
+        &mut self,
+        loads: &[ReplicaLoad],
+        home: Option<usize>,
+        down: Option<&[bool]>,
+        group: Option<u64>,
+    ) -> usize {
         assert!(!loads.is_empty(), "placement over an empty cluster");
         let up = |i: usize| down.is_none_or(|d| !d[i]);
         assert!(
             (0..loads.len()).any(up),
             "placement over a fully drained cluster"
         );
+        // Home-or-spill under a score threshold — shared by KvAffinity's
+        // later-turn pinning and PrefixAware's deepest-chain routing.
+        let sticky = |target: Option<usize>, best: usize, threshold: f64| match target {
+            Some(t) if up(t) && loads[t].score() <= loads[best].score() + threshold => t,
+            _ => best,
+        };
         match self.kind {
             PlacementKind::RoundRobin => loop {
                 let r = self.rr_next % loads.len();
@@ -143,16 +191,27 @@ impl Placer {
             },
             PlacementKind::LeastLoaded => least_loaded_up(loads, &up),
             PlacementKind::KvAffinity { spill_threshold } => {
+                sticky(home, least_loaded_up(loads, &up), spill_threshold)
+            }
+            PlacementKind::PrefixAware { spill_threshold } => {
                 let best = least_loaded_up(loads, &up);
-                match home {
-                    Some(h)
-                        if up(h)
-                            && loads[h].score() <= loads[best].score() + spill_threshold =>
-                    {
-                        h
-                    }
-                    _ => best,
+                if home.is_some() {
+                    // Later turns: exactly KvAffinity (the CPU KV copy
+                    // outweighs any template prefix).
+                    return sticky(home, best, spill_threshold);
                 }
+                let deepest = group.and_then(|g| {
+                    loads
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, _)| up(i))
+                        .map(|(i, l)| (i, l.prefix_depth(g)))
+                        .filter(|&(_, d)| d > 0)
+                        // Deepest chain wins; ties → lowest index.
+                        .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+                        .map(|(i, _)| i)
+                });
+                sticky(deepest, best, spill_threshold)
             }
         }
     }
@@ -168,6 +227,14 @@ mod tests {
             gpu_blocks: 100,
             backlog,
             max_batch: 10,
+            prefix_groups: Vec::new(),
+        }
+    }
+
+    fn load_with_prefix(blocks: usize, groups: &[(u64, u32)]) -> ReplicaLoad {
+        ReplicaLoad {
+            prefix_groups: groups.to_vec(),
+            ..load(blocks, 0)
         }
     }
 
@@ -185,11 +252,23 @@ mod tests {
             PlacementKind::by_name("kv_affinity"),
             Some(PlacementKind::KvAffinity { .. })
         ));
+        assert!(matches!(
+            PlacementKind::by_name("prefix_aware"),
+            Some(PlacementKind::PrefixAware { .. })
+        ));
+        assert_eq!(
+            PlacementKind::by_name("prefix"),
+            PlacementKind::by_name("prefix-aware")
+        );
         assert_eq!(PlacementKind::by_name("nope"), None);
         assert_eq!(PlacementKind::RoundRobin.label(), "round_robin");
         assert_eq!(
             PlacementKind::KvAffinity { spill_threshold: 1.0 }.label(),
             "kv_affinity"
+        );
+        assert_eq!(
+            PlacementKind::PrefixAware { spill_threshold: 1.0 }.label(),
+            "prefix_aware"
         );
     }
 
@@ -237,6 +316,44 @@ mod tests {
         assert_eq!(p.place(&[load(10, 0), load(10, 0)], Some(1)), 1);
         // Any imbalance: spill.
         assert_eq!(p.place(&[load(10, 0), load(11, 0)], Some(1)), 0);
+    }
+
+    #[test]
+    fn prefix_aware_routes_to_the_deepest_published_chain() {
+        let mut p = Placer::new(PlacementKind::PrefixAware { spill_threshold: 0.5 });
+        let loads = vec![
+            load_with_prefix(10, &[(7, 2)]),
+            load_with_prefix(20, &[(7, 5), (9, 1)]),
+            load_with_prefix(0, &[]),
+        ];
+        // Fresh templated conversation: replica 1 holds the deepest
+        // chain of group 7 and is within the threshold of replica 2.
+        assert_eq!(p.place_with_group(&loads, None, None, Some(7)), 1);
+        // Group nobody cached: least loaded.
+        assert_eq!(p.place_with_group(&loads, None, None, Some(42)), 2);
+        // No template at all: least loaded.
+        assert_eq!(p.place_with_group(&loads, None, None, None), 2);
+        // Later turns ignore the template and behave like KvAffinity.
+        assert_eq!(p.place_with_group(&loads, Some(0), None, Some(7)), 0);
+    }
+
+    #[test]
+    fn prefix_aware_spills_past_the_threshold_and_breaks_ties_low() {
+        let mut p = Placer::new(PlacementKind::PrefixAware { spill_threshold: 0.3 });
+        // The deepest-chain replica is 0.8 busier than least-loaded:
+        // locality loses.
+        let hot = vec![load_with_prefix(80, &[(7, 6)]), load_with_prefix(0, &[])];
+        assert_eq!(p.place_with_group(&hot, None, None, Some(7)), 1);
+        // Equal depths tie to the lowest index (determinism).
+        let tied = vec![load_with_prefix(0, &[(7, 3)]), load_with_prefix(0, &[(7, 3)])];
+        assert_eq!(p.place_with_group(&tied, None, None, Some(7)), 0);
+        // A drained deepest-chain replica is skipped.
+        let mut q = Placer::new(PlacementKind::PrefixAware { spill_threshold: 5.0 });
+        let loads = vec![load_with_prefix(0, &[(7, 6)]), load_with_prefix(10, &[(7, 2)])];
+        assert_eq!(
+            q.place_with_group(&loads, None, Some(&[true, false]), Some(7)),
+            1
+        );
     }
 
     #[test]

@@ -141,7 +141,13 @@ impl RouterCore {
                 vec![(replica, due, ReplicaMsg::Rejoin)]
             }
             Work::Fresh(conv) => {
-                let target = self.placer.place_filtered(loads, None, Some(&self.drained));
+                // Fresh conversations carry the template-group hint so
+                // prefix-aware placement can route them at the replica
+                // whose pool already holds the deepest matching chain.
+                let group = conv.prefix.map(|p| p.group);
+                let target =
+                    self.placer
+                        .place_with_group(loads, None, Some(&self.drained), group);
                 self.placements += 1;
                 self.trace.emit(
                     due,
@@ -217,6 +223,11 @@ impl RouterCore {
                 conv: Conversation {
                     id: m.conv_id,
                     tenant: m.tenant,
+                    // History folding breaks template identity: the
+                    // rebased first prompt is history + prompt, not the
+                    // shared template, so the remainder re-prefills in
+                    // full on the target.
+                    prefix: None,
                     turns,
                 },
             },
@@ -514,6 +525,29 @@ impl ClusterOutcome {
     /// Blocks the §3.3 reuse mechanism skipped, all replicas.
     pub fn blocks_reused_total(&self) -> u64 {
         self.replicas.iter().map(|o| o.reuse_blocks_reused).sum()
+    }
+
+    /// Admissions served partly from the global prefix cache, all
+    /// replicas.
+    pub fn prefix_hits_total(&self) -> u64 {
+        self.replicas.iter().map(|o| o.recorder.prefix_hits).sum()
+    }
+
+    /// Prompt tokens never prefilled thanks to prefix hits, all
+    /// replicas.
+    pub fn prefix_saved_tokens_total(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|o| o.recorder.prefix_saved_tokens)
+            .sum()
+    }
+
+    /// Prompt tokens actually prefilled, all replicas.
+    pub fn prefill_tokens_total(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|o| o.recorder.prefill_tokens())
+            .sum()
     }
 }
 

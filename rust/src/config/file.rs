@@ -58,7 +58,8 @@ impl std::fmt::Display for ConfigError {
             ConfigError::UnknownPlacement(p) => {
                 write!(
                     f,
-                    "unknown placement policy {p:?} (round_robin|least_loaded|kv_affinity)"
+                    "unknown placement policy {p:?} \
+                     (round_robin|least_loaded|kv_affinity|prefix_aware)"
                 )
             }
             ConfigError::UnknownPreemptionPolicy(p) => {
@@ -201,6 +202,10 @@ impl ConfigFile {
         if let Some(b) = self.get_f64("prefetch", "io_budget") {
             cfg.prefetch.io_budget = b.clamp(0.0, 1.0);
         }
+        // `[prefix]` — the cross-request global prefix cache.
+        if let Some(e) = self.get_bool("prefix", "enabled") {
+            cfg.prefix.enabled = e;
+        }
         // `[obs]` — observability (tracing / profiling / telemetry).
         if let Some(t) = self.get_bool("obs", "trace") {
             cfg.obs.trace = t;
@@ -247,8 +252,14 @@ impl ConfigFile {
                 .ok_or_else(|| ConfigError::UnknownPlacement(p.into()))?;
         }
         if let Some(s) = self.get_f64("cluster", "spill_threshold") {
-            if let PlacementKind::KvAffinity { .. } = c.placement {
-                c.placement = PlacementKind::KvAffinity { spill_threshold: s };
+            match c.placement {
+                PlacementKind::KvAffinity { .. } => {
+                    c.placement = PlacementKind::KvAffinity { spill_threshold: s };
+                }
+                PlacementKind::PrefixAware { .. } => {
+                    c.placement = PlacementKind::PrefixAware { spill_threshold: s };
+                }
+                _ => {}
             }
         }
         if let Some(p) = self.get_bool("cluster", "parallel") {
@@ -368,6 +379,28 @@ pattern = "markov"
         assert_eq!(c.engine().unwrap().prefetch.io_budget, 1.0);
         let d = ConfigFile::parse("").unwrap().engine().unwrap();
         assert_eq!(d.prefetch.depth, 0);
+    }
+
+    #[test]
+    fn prefix_section_enables_the_global_prefix_cache() {
+        let c = ConfigFile::parse("[prefix]\nenabled = true").unwrap();
+        assert!(c.engine().unwrap().prefix.enabled);
+        // Absent section keeps the cache off (seed behavior).
+        let d = ConfigFile::parse("").unwrap().engine().unwrap();
+        assert!(!d.prefix.enabled);
+    }
+
+    #[test]
+    fn prefix_aware_placement_and_spill_threshold() {
+        use crate::cluster::PlacementKind;
+        let c = ConfigFile::parse(
+            "[cluster]\nplacement = \"prefix_aware\"\nspill_threshold = 0.75",
+        )
+        .unwrap();
+        assert_eq!(
+            c.cluster().unwrap().placement,
+            PlacementKind::PrefixAware { spill_threshold: 0.75 }
+        );
     }
 
     #[test]

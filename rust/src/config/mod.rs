@@ -290,6 +290,18 @@ impl Default for PrefetchConfig {
     }
 }
 
+/// `[prefix]` section: the cross-request global prefix cache
+/// ([`crate::block::prefix::PrefixIndex`]). Off by default — every
+/// existing seeded e2e pin depends on the engine never touching the
+/// index, so enabling it is an explicit opt-in (config `[prefix]
+/// enabled = true` or CLI `--prefix-cache`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixConfig {
+    /// Match shared prompt templates against the per-replica prefix
+    /// index at admission and publish their full blocks as prefilled.
+    pub enabled: bool,
+}
+
 /// Which eviction mechanism the [`crate::coordinator::switch`] planner
 /// uses when the scheduler (or allocator pressure) preempts a victim.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -392,6 +404,8 @@ pub struct EngineConfig {
     pub fairness: FairnessConfig,
     /// Lookahead swap-in prefetcher (off by default).
     pub prefetch: PrefetchConfig,
+    /// Cross-request global prefix cache (off by default).
+    pub prefix: PrefixConfig,
     /// Pluggable eviction policy (`swap_all` default — seed behavior).
     pub preemption: PreemptionConfig,
     /// Observability: lifecycle tracing, epoch profiling, telemetry
@@ -413,6 +427,7 @@ impl EngineConfig {
             swap_cost: SwapCostConfig::default(),
             fairness: FairnessConfig::default(),
             prefetch: PrefetchConfig::default(),
+            prefix: PrefixConfig::default(),
             preemption: PreemptionConfig::default(),
             obs: ObsConfig::default(),
             label: "vllm".into(),
@@ -628,6 +643,16 @@ mod tests {
         for cfg in EngineConfig::ablation_ladder() {
             assert_eq!(cfg.prefetch.depth, 0, "{} prefetches by default", cfg.label);
             assert!(cfg.prefetch.io_budget > 0.0 && cfg.prefetch.io_budget <= 1.0);
+        }
+    }
+
+    #[test]
+    fn prefix_cache_defaults_off_everywhere() {
+        // The global prefix cache is opt-in on every ladder rung: with
+        // it off the engine never touches the index and every seeded
+        // e2e pin stays byte-identical.
+        for cfg in EngineConfig::ablation_ladder() {
+            assert!(!cfg.prefix.enabled, "{} prefix-caches by default", cfg.label);
         }
     }
 

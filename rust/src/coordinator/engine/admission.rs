@@ -33,11 +33,53 @@ impl ServingEngine {
         }
         self.cpu.drop_request(id);
         self.reuse.forget(id);
+        self.prefix.release(id);
         let r = self.reqs.get_mut(id);
         r.state = ReqState::Finished;
         r.kv = KvLocation::None;
         self.rec.rejected_conversations += 1;
         true
+    }
+
+    /// Global prefix cache, admission side: match a fresh conversation's
+    /// shared template against the index and pin the longest cached
+    /// chain, so only the uncached suffix needs prefilling (and only it
+    /// is VTC-charged — prefill charges are per applied chunk). Turn-0
+    /// only: later turns' block positions no longer align with the
+    /// template.
+    fn try_prefix_match(&mut self, id: RequestId) {
+        if !self.cfg.prefix.enabled {
+            return;
+        }
+        let r = self.reqs.get(id);
+        let Some(p) = r.conv.prefix else { return };
+        // Cap the match one token short of the prompt: the chunk that
+        // completes the (shrunk) prefill still emits the turn's first
+        // token, so served outputs are byte-identical to a cache miss.
+        let max_tokens = p.tokens.min(r.conv.turns[0].prompt_tokens.saturating_sub(1));
+        let max_blocks = max_tokens / self.block_size as u32;
+        if max_blocks == 0 {
+            return;
+        }
+        let depth = self.prefix.acquire(id, p.group, max_blocks);
+        if depth == 0 {
+            return;
+        }
+        let tokens = depth * self.block_size as u32;
+        let r = self.reqs.get_mut(id);
+        r.prefix_tokens = tokens;
+        r.prefill_target = r.prefill_target.saturating_sub(tokens);
+        self.rec.prefix_hits += 1;
+        self.rec.prefix_hit_blocks += depth as u64;
+        self.rec.prefix_saved_tokens += tokens as u64;
+        self.trace.emit(
+            self.now,
+            TraceEvent::PrefixHit {
+                req: id,
+                blocks: depth as usize,
+                tokens: tokens as usize,
+            },
+        );
     }
 
     pub(super) fn admit_arrivals(&mut self) {
@@ -49,7 +91,9 @@ impl ServingEngine {
             self.rec.turn_arrival(id, 0, t, tenant);
             self.trace.emit(t, TraceEvent::Arrival { req: id, turn: 0, tenant });
             self.reqs.insert(r);
-            self.reject_if_oversized(id);
+            if !self.reject_if_oversized(id) {
+                self.try_prefix_match(id);
+            }
         }
         // Turns whose think time elapsed AND whose turn-end swap-out has
         // drained (requests still in SwappingOutTurnEnd stay pending and

@@ -75,9 +75,14 @@ impl ServingEngine {
             .copied()
             .filter(|&id| self.reqs.get(id).state == ReqState::Running)
             .collect();
+        // Context length includes pooled prefix blocks: they are read by
+        // attention even though this request never prefilled them.
         let ctx_total: u64 = running_ids
             .iter()
-            .map(|&id| self.reqs.get(id).tokens_in_cache)
+            .map(|&id| {
+                let r = self.reqs.get(id);
+                r.tokens_in_cache + r.prefix_tokens as u64
+            })
             .sum();
         let batch_now = running_ids.len();
         let avg_ctx = if batch_now > 0 {
@@ -176,6 +181,19 @@ impl ServingEngine {
                     stall = stall.max(t.saturating_sub(self.now));
                     continue;
                 }
+                // (2.5) Reclaim speculative pool state before any live
+                // victim: evict the deepest unreferenced prefix block —
+                // shared blocks a request still pins are never touched.
+                if self.cfg.prefix.enabled {
+                    if let Some((group, depth, _)) =
+                        self.prefix.evict_one(self.alloc.as_dyn())
+                    {
+                        self.rec.prefix_evicted_blocks += 1;
+                        self.trace
+                            .emit(self.now, TraceEvent::PrefixEvict { group, depth });
+                        continue;
+                    }
+                }
                 let ranks: Vec<VictimRank> = self
                     .reqs
                     .iter()
@@ -241,7 +259,10 @@ impl ServingEngine {
         let decode_batch = decode_set.len();
         let decode_ctx: u64 = decode_set
             .iter()
-            .map(|&id| self.reqs.get(id).tokens_in_cache)
+            .map(|&id| {
+                let r = self.reqs.get(id);
+                r.tokens_in_cache + r.prefix_tokens as u64
+            })
             .sum();
         // Decode-ready requests the budget (or a monolithic prefill)
         // held back this iteration — the decode-interference population.
@@ -259,7 +280,7 @@ impl ServingEngine {
         for &(id, take) in &prefill_take {
             let r = self.reqs.get_mut(id);
             let tenant = r.tenant();
-            prefill_ctx += r.tokens_in_cache;
+            prefill_ctx += r.tokens_in_cache + r.prefix_tokens as u64;
             prefill_new += take as u64;
             if r.apply_prefill(take) {
                 // The completing chunk emits the turn's next output token
@@ -273,6 +294,41 @@ impl ServingEngine {
             // accounting by prefilling atomically. (The emitted token is
             // charged with the emitters below.)
             self.policy.on_tokens(tenant, take as u64, 0);
+        }
+        // Publish newly prefilled template blocks into the prefix pool
+        // (opportunistic: one GPU block always stays in reserve, and a
+        // refused allocation just means the chain stops short). A second
+        // pass so the `get_mut` prefill loop above holds no borrows.
+        if self.cfg.prefix.enabled {
+            for &(id, _) in &prefill_take {
+                let r = self.reqs.get(id);
+                let Some(p) = (if r.turn == 0 { r.conv.prefix } else { None }) else {
+                    continue;
+                };
+                // Absolute template position reached: pooled tokens plus
+                // this request's own prefill progress, capped at the
+                // template length.
+                let abs = r.prefix_tokens as u64 + r.prefill_done as u64;
+                let depth_target =
+                    (abs.min(p.tokens as u64) / self.block_size as u64) as u32;
+                if depth_target == 0 {
+                    continue;
+                }
+                let inserted =
+                    self.prefix
+                        .publish(self.alloc.as_dyn(), p.group, depth_target, 1);
+                if inserted > 0 {
+                    self.rec.prefix_inserts += inserted as u64;
+                    self.trace.emit(
+                        self.now,
+                        TraceEvent::PrefixInsert {
+                            group: p.group,
+                            blocks: inserted as usize,
+                            depth: depth_target,
+                        },
+                    );
+                }
+            }
         }
         for &id in &decode_set {
             let r = self.reqs.get_mut(id);
@@ -503,6 +559,9 @@ impl ServingEngine {
             cpu_blocks_used_final: self.cpu.used_slots(),
             cpu_blocks_capacity: self.cpu.capacity(),
             vtc_counters: self.policy.vtc_counters().unwrap_or_default(),
+            block_size: self.block_size,
+            prefix_blocks_final: self.prefix.live_blocks(),
+            prefix_pinned_refs_final: self.prefix.pinned_refs(),
             recorder: self.rec,
         }
     }

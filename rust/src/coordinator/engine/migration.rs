@@ -86,6 +86,11 @@ impl ServingEngine {
         );
         self.cpu.drop_request(id);
         self.reuse.forget(id);
+        // Drop the prefix-pool pins too. Without this, a migrated
+        // conversation's matched path stays pinned forever: the pool
+        // nodes can never be evicted and `pinned_refs` dangles — the
+        // thundering-herd drain regression in `prefix_e2e`.
+        self.prefix.release(id);
         // Remove the record entirely: the conversation may return to this
         // replica later and re-insert under the same id; a stale Finished
         // entry would leak and be rescanned every iteration.
@@ -162,6 +167,7 @@ impl ServingEngine {
             gpu_blocks: self.gpu_capacity_blocks(),
             backlog: self.backlog(),
             max_batch: self.max_batch(),
+            prefix_groups: self.prefix.group_depths(),
         }
     }
 

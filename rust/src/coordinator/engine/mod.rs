@@ -38,6 +38,7 @@ mod prefetch;
 mod tests;
 
 use crate::block::{buddy::BlockGroupAllocator, fixed::FixedBlockAllocator};
+use crate::block::prefix::PrefixIndex;
 use crate::block::KvAllocator;
 use crate::config::{EngineConfig, Granularity, PrefillMode, Preset};
 use crate::coordinator::priority::Pattern;
@@ -83,6 +84,17 @@ pub struct ServeOutcome {
     /// fairness policy drove priorities (empty otherwise). Sorted by
     /// tenant id.
     pub vtc_counters: Vec<(u32, f64)>,
+    /// KV block size in tokens (constant over the run) — lets invariant
+    /// audits convert the prefix counters between blocks and tokens.
+    pub block_size: usize,
+    /// Prefix-pool blocks still published when the run ended (0 when the
+    /// cache is disabled; the pool outlives requests by design, so a
+    /// drained run with the cache on legitimately reports > 0).
+    pub prefix_blocks_final: usize,
+    /// Outstanding request pins on prefix-pool nodes at end of run. Must
+    /// be 0 once every request finished/rejected/migrated — the dangling
+    /// index-entry regression surfaces here.
+    pub prefix_pinned_refs_final: u64,
 }
 
 impl ServeOutcome {
@@ -136,6 +148,10 @@ pub struct ServingEngine {
     alloc: Alloc,
     cpu: CpuSwapSpace,
     reuse: crate::block::reuse::KvCacheReuse,
+    /// Cross-request radix prefix index (global prefix cache). Inert —
+    /// never matched against, never published to — unless
+    /// `cfg.prefix.enabled`.
+    prefix: PrefixIndex,
     seg: SegmentBuilder,
     pub mgr: SwapManager,
     /// Source of scheduling priorities: the offline trace or an online
@@ -273,6 +289,7 @@ impl ServingEngine {
             alloc,
             cpu: CpuSwapSpace::new(cpu_blocks),
             reuse,
+            prefix: PrefixIndex::new(),
             seg,
             mgr,
             policy,

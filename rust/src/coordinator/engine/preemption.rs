@@ -638,6 +638,7 @@ impl ServingEngine {
             self.alloc.as_dyn().release(id);
             self.cpu.drop_request(id);
             self.reuse.forget(id);
+            self.prefix.release(id);
             let r = self.reqs.get_mut(id);
             r.state = ReqState::Finished;
             r.kv = KvLocation::None;

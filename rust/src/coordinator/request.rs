@@ -59,6 +59,13 @@ pub struct Request {
     /// Tokens that must be prefilled this turn (prompt, plus the whole
     /// lost context after a recompute-preemption).
     pub prefill_target: u32,
+    /// Leading tokens of the first turn's prompt served from the global
+    /// prefix cache ([`crate::block::prefix`]) instead of being
+    /// prefilled. Excluded from `tokens_in_cache` and from every
+    /// prefill/recompute target: the shared pool blocks stay pinned (and
+    /// valid) for the request's whole lifetime, even across
+    /// recompute-preemptions. 0 when no prefix matched.
+    pub prefix_tokens: u32,
     /// Output tokens generated this turn.
     pub generated: u32,
     /// When the current turn arrived (TTFT reference point).
@@ -83,6 +90,7 @@ impl Request {
             tokens_in_cache: 0,
             prefill_done: 0,
             prefill_target: prompt,
+            prefix_tokens: 0,
             generated: 0,
             turn_arrival: arrival,
             arrival,
@@ -177,8 +185,11 @@ impl Request {
         self.generated = 0;
         self.last_emit = None;
         self.prefill_target = if self.kv == KvLocation::None {
+            // Prefix-cache tokens never need recomputing: the shared
+            // pool blocks are still pinned and valid.
             Self::prefill_target_from(
-                self.history_tokens() + self.cur_turn().prompt_tokens as u64,
+                (self.history_tokens() + self.cur_turn().prompt_tokens as u64)
+                    .saturating_sub(self.prefix_tokens as u64),
             )
         } else {
             self.cur_turn().prompt_tokens
@@ -194,9 +205,10 @@ impl Request {
         // Everything materialized so far must be recomputed: history +
         // this turn's prompt + already-generated output.
         self.prefill_target = Self::prefill_target_from(
-            self.history_tokens()
+            (self.history_tokens()
                 + self.cur_turn().prompt_tokens as u64
-                + self.generated as u64,
+                + self.generated as u64)
+                .saturating_sub(self.prefix_tokens as u64),
         );
         self.prefill_done = 0;
     }
@@ -278,6 +290,7 @@ mod tests {
         Conversation {
             id: 0,
             tenant: 0,
+            prefix: None,
             turns: turns
                 .iter()
                 .map(|&(p, r)| Turn {
@@ -370,6 +383,25 @@ mod tests {
         r.drop_context();
         // history 6e9 + prompt 30 + generated 10: saturates.
         assert_eq!(r.prefill_target, u32::MAX, "must saturate, not wrap");
+    }
+
+    #[test]
+    fn prefix_tokens_stay_out_of_every_recompute_target() {
+        let mut r = Request::new(1, conv(&[(100, 50), (30, 40)]), 0);
+        r.prefix_tokens = 64; // leading 64 prompt tokens served from the pool
+        r.prefill_target = 100 - 64;
+        r.generated = 50;
+        r.kv = KvLocation::None; // context lost at turn end
+        r.tokens_in_cache = 0;
+        r.advance_turn(1_000);
+        // history (100+50) + prompt 30 − pooled 64
+        assert_eq!(r.prefill_target, 180 - 64);
+        r.prefill_done = r.prefill_target;
+        r.generated = 10;
+        r.kv = KvLocation::Gpu;
+        r.drop_context();
+        // history 150 + prompt 30 + generated 10 − pooled 64
+        assert_eq!(r.prefill_target, 190 - 64);
     }
 
     #[test]

@@ -43,7 +43,7 @@ use crate::util::rng::Rng;
 use crate::util::stats::Percentiles;
 
 /// The PR this tree's ledger is stamped with.
-pub const PR: u32 = 8;
+pub const PR: u32 = 9;
 
 /// The churn mix every section measures under — identical to the
 /// preemption showdown's (6 tenants, bursty arrivals, VTC, hard

@@ -23,6 +23,7 @@ pub mod fig12;
 pub mod fig13;
 pub mod gauntlet;
 pub mod ledger;
+pub mod locality;
 pub mod preemption;
 pub mod prefetch;
 pub mod runner;

@@ -71,7 +71,16 @@
 //!   (default; every e2e pin reproduces byte-for-byte) and the threaded
 //!   executor (`--parallel`: one OS thread per replica, real channels,
 //!   wall-clock speedup reported in the perf ledger's `parallel`
-//!   section).
+//!   section);
+//! - the **global prefix cache** ([`block::prefix::PrefixIndex`],
+//!   [`config::PrefixConfig`], off by default): a per-replica
+//!   refcounted radix index of content-hashed shared-template blocks —
+//!   admission matches a templated request's longest cached chain and
+//!   prefills only the uncached suffix, VTC charges only uncached
+//!   tokens, and [`cluster::PlacementKind::PrefixAware`] routes fresh
+//!   templated conversations at the replica holding the deepest
+//!   published chain (`exp locality` runs the shared-fleet vs
+//!   disjoint-chat showdown).
 //!
 //! ## Architecture (three layers, Python never on the request path)
 //!

@@ -7,14 +7,16 @@
 //!     fairness-policy showdown (`exp fairness`), the chunked-prefill
 //!     showdown (`exp chunked`), the multi-replica placement showdown
 //!     (`exp cluster`), the lookahead swap-in prefetch showdown
-//!     (`exp prefetch`), or the preemption-policy showdown
-//!     (`exp preemption`).
+//!     (`exp prefetch`), the preemption-policy showdown
+//!     (`exp preemption`), or the prefix-locality showdown
+//!     (`exp locality`: shared-template fleets vs disjoint chat x
+//!     round_robin/kv_affinity/prefix_aware with the prefix cache on).
 //!
 //! fastswitch exp ledger [--ledger-out FILE] [--conversations N] [--seed S]
 //!     Measure the per-PR perf ledger matrix (hotpath ns/op, scheduler
 //!     epoch cost, throughput at 1/3 replicas, deterministic-vs-threaded
 //!     executor wall-clock, per-policy tail latency) and write the
-//!     schema-stable JSON (default BENCH_PR8.json).
+//!     schema-stable JSON (default BENCH_PR9.json).
 //!
 //! fastswitch exp gauntlet [--gauntlet-out FILE] [--conversations N] [--seed S]
 //!     [--herd-spike F] [--think-floor F]
@@ -22,7 +24,7 @@
 //!     adversarial scenario (agentic, mega_context, thundering_herd,
 //!     diurnal) on the 3-replica cluster path, invariant-checked per
 //!     cell, writing the schema-stable scorecard (default
-//!     GAUNTLET_PR8.json). --herd-spike scales the thundering-herd
+//!     GAUNTLET_PR9.json). --herd-spike scales the thundering-herd
 //!     within-wave arrival spike; --think-floor raises the agentic
 //!     think-time floor (seconds).
 //!
@@ -35,8 +37,9 @@
 //!     [--iter-budget N (0 = roofline auto)]
 //!     [--prefetch-depth K (0 = off)] [--prefetch-io-budget F]
 //!     [--preemption-policy swap_all|cost_aware|partial_tail]
-//!     [--replicas N] [--placement round_robin|least_loaded|kv_affinity]
-//!     [--spill-threshold F] [--parallel]
+//!     [--replicas N]
+//!     [--placement round_robin|least_loaded|kv_affinity|prefix_aware]
+//!     [--spill-threshold F] [--parallel] [--prefix-cache]
 //!     [--scenario agentic|mega_context|thundering_herd|diurnal]
 //!     [--conversations N] [--rate R] [--seed S] [--config FILE]
 //!     [--trace] [--trace-out FILE] [--obs-profile]
@@ -148,9 +151,10 @@ fn cmd_exp(args: &Args) {
         "cluster" => reports.push(exp::cluster::run(&scale)),
         "prefetch" => reports.push(exp::prefetch::run(&scale)),
         "preemption" => reports.push(exp::preemption::run(&scale)),
+        "locality" => reports.push(exp::locality::run(&scale)),
         "ledger" => reports.push(exp::ledger::run(
             &scale,
-            args.get_or("ledger-out", "BENCH_PR8.json"),
+            args.get_or("ledger-out", "BENCH_PR9.json"),
         )),
         "gauntlet" => {
             let canon = ScenarioParams::default();
@@ -162,7 +166,7 @@ fn cmd_exp(args: &Args) {
             reports.push(exp::gauntlet::run(
                 &scale,
                 &params,
-                args.get_or("gauntlet-out", "GAUNTLET_PR8.json"),
+                args.get_or("gauntlet-out", "GAUNTLET_PR9.json"),
             ));
         }
         other => eprintln!("unknown experiment {other:?}"),
@@ -171,7 +175,7 @@ fn cmd_exp(args: &Args) {
         for e in [
             "fig1", "fig2", "fig3", "fig4", "fig6", "fig8", "fig9", "fig10", "fig11",
             "fig12", "fig13", "table1", "fairness", "chunked", "cluster", "prefetch",
-            "preemption", "gauntlet", "ledger",
+            "preemption", "locality", "gauntlet", "ledger",
         ] {
             eprintln!("[exp] running {e} ...");
             run_one(e, &mut reports);
@@ -273,17 +277,25 @@ fn cmd_simulate(args: &Args) {
     }
     if let Some(p) = args.get("placement") {
         ccfg.placement = PlacementKind::by_name(p)
-            .expect("unknown placement (round_robin|least_loaded|kv_affinity)");
+            .expect("unknown placement (round_robin|least_loaded|kv_affinity|prefix_aware)");
     }
     if let Some(s) = args.get("spill-threshold") {
-        if let PlacementKind::KvAffinity { .. } = ccfg.placement {
-            ccfg.placement = PlacementKind::KvAffinity {
-                spill_threshold: s.parse().expect("spill-threshold"),
-            };
+        let spill_threshold = s.parse().expect("spill-threshold");
+        match ccfg.placement {
+            PlacementKind::KvAffinity { .. } => {
+                ccfg.placement = PlacementKind::KvAffinity { spill_threshold };
+            }
+            PlacementKind::PrefixAware { .. } => {
+                ccfg.placement = PlacementKind::PrefixAware { spill_threshold };
+            }
+            _ => {}
         }
     }
     if args.flag("parallel") {
         ccfg.parallel = true;
+    }
+    if args.flag("prefix-cache") {
+        cfg.prefix.enabled = true;
     }
     if args.flag("trace") {
         cfg.obs.trace = true;
@@ -539,6 +551,13 @@ fn print_cluster_summary(out: &ClusterOutcome, multi_tenant: bool) {
         out.swap_blocks_total(),
         out.swap_bytes_total() as f64 / 1e9
     );
+    if out.prefix_hits_total() > 0 {
+        println!(
+            "prefix cache           : {} hits, {} prompt tokens never prefilled",
+            out.prefix_hits_total(),
+            out.prefix_saved_tokens_total()
+        );
+    }
     println!("== per-replica breakdown ==");
     for (i, o) in out.replicas.iter().enumerate() {
         println!(

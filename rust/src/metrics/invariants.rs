@@ -20,7 +20,13 @@
 //! - **monotone VTC** — when an online VTC-family policy ran, every
 //!   final virtual-time counter is finite, non-negative, and at least
 //!   the tenant's served tokens (charges are weighted ≥ 1 per token and
-//!   counters are only ever lifted, never decreased).
+//!   counters are only ever lifted, never decreased);
+//! - **prefix-pool accounting** — the global prefix cache's counters
+//!   close: saved tokens equal hit blocks × block size, live pool
+//!   blocks equal inserts − evictions and are a subset of the used GPU
+//!   blocks (pool blocks are allocated from the same space, so GPU
+//!   conservation above already covers them), and no request pin
+//!   dangles once the run has drained.
 //!
 //! Checks return violations as strings rather than panicking so the
 //! gauntlet can finish writing its scorecard (with the violation count
@@ -122,6 +128,42 @@ pub fn check_engine(out: &ServeOutcome) -> Vec<String> {
                 _ => {}
             }
         }
+    }
+
+    // Prefix-pool accounting.
+    let rec = &out.recorder;
+    if rec.prefix_saved_tokens != rec.prefix_hit_blocks * out.block_size as u64 {
+        v.push(format!(
+            "[{label}] prefix saved tokens {} != hit blocks {} x block size {}",
+            rec.prefix_saved_tokens, rec.prefix_hit_blocks, out.block_size
+        ));
+    }
+    if rec.prefix_hits > 0 && rec.prefix_hit_blocks < rec.prefix_hits {
+        v.push(format!(
+            "[{label}] prefix hit blocks {} below hit count {} (every hit pins >= 1 block)",
+            rec.prefix_hit_blocks, rec.prefix_hits
+        ));
+    }
+    if rec.prefix_inserts < rec.prefix_evicted_blocks
+        || out.prefix_blocks_final as u64 != rec.prefix_inserts - rec.prefix_evicted_blocks
+    {
+        v.push(format!(
+            "[{label}] prefix pool conservation: live {} != inserts {} - evictions {}",
+            out.prefix_blocks_final, rec.prefix_inserts, rec.prefix_evicted_blocks
+        ));
+    }
+    if out.prefix_blocks_final > out.gpu_blocks_used_final {
+        v.push(format!(
+            "[{label}] prefix pool blocks {} exceed used gpu blocks {}",
+            out.prefix_blocks_final, out.gpu_blocks_used_final
+        ));
+    }
+    if out.prefix_pinned_refs_final != 0 {
+        v.push(format!(
+            "[{label}] {} prefix pins dangle after the run drained \
+             (a finished/rejected/migrated request failed to release its path)",
+            out.prefix_pinned_refs_final
+        ));
     }
     v
 }
@@ -260,6 +302,9 @@ mod tests {
             cpu_blocks_used_final: 3,
             cpu_blocks_capacity: 50,
             vtc_counters: vec![(0, 4.0)],
+            block_size: 4,
+            prefix_blocks_final: 0,
+            prefix_pinned_refs_final: 0,
         }
     }
 
@@ -324,6 +369,51 @@ mod tests {
         let mut o = clean_outcome();
         o.vtc_counters = Vec::new();
         assert!(check_engine(&o).is_empty());
+    }
+
+    #[test]
+    fn prefix_pool_violations_are_caught() {
+        // Saved-token identity: 2 hit blocks at block size 4 must save 8.
+        let mut o = clean_outcome();
+        o.recorder.prefix_hits = 1;
+        o.recorder.prefix_hit_blocks = 2;
+        o.recorder.prefix_saved_tokens = 7;
+        assert!(check_engine(&o)[0].contains("prefix saved tokens"));
+        // Hit without a block.
+        let mut o = clean_outcome();
+        o.recorder.prefix_hits = 1;
+        assert!(check_engine(&o)
+            .iter()
+            .any(|m| m.contains("below hit count")));
+        // Pool conservation: live != inserts − evictions.
+        let mut o = clean_outcome();
+        o.recorder.prefix_inserts = 3;
+        o.recorder.prefix_evicted_blocks = 1;
+        assert!(check_engine(&o)
+            .iter()
+            .any(|m| m.contains("prefix pool conservation")));
+        // Pool blocks exceeding the used-GPU footprint.
+        let mut o = clean_outcome();
+        o.recorder.prefix_inserts = 2;
+        o.prefix_blocks_final = 2; // gpu_blocks_used_final is 0
+        assert!(check_engine(&o)
+            .iter()
+            .any(|m| m.contains("exceed used gpu blocks")));
+        // Dangling pin after drain (the migration regression's surface).
+        let mut o = clean_outcome();
+        o.prefix_pinned_refs_final = 1;
+        assert!(check_engine(&o).iter().any(|m| m.contains("dangle")));
+        // A consistent prefix run is clean.
+        let mut o = clean_outcome();
+        o.recorder.prefix_hits = 1;
+        o.recorder.prefix_hit_blocks = 2;
+        o.recorder.prefix_saved_tokens = 8;
+        o.recorder.prefix_inserts = 3;
+        o.recorder.prefix_evicted_blocks = 1;
+        o.prefix_blocks_final = 2;
+        o.gpu_blocks_used_final = 2;
+        o.gpu_blocks_free_final = 98;
+        assert_eq!(check_engine(&o), Vec::<String>::new());
     }
 
     fn clean_cluster() -> ClusterOutcome {

@@ -84,6 +84,18 @@ pub struct Recorder {
     pub evict_swap_decisions: u64,
     /// Planner decisions that chose recompute (`cost_aware` crossover).
     pub evict_recompute_decisions: u64,
+    // ---- global prefix cache (block::prefix) ----------------------------
+    /// Fresh requests whose template matched a cached prefix chain.
+    pub prefix_hits: u64,
+    /// Pool blocks matched (and pinned) across all prefix hits.
+    pub prefix_hit_blocks: u64,
+    /// Prompt tokens never prefilled thanks to prefix hits — always
+    /// `prefix_hit_blocks × block_size` (an invariant-audit identity).
+    pub prefix_saved_tokens: u64,
+    /// Template blocks published into the prefix pool.
+    pub prefix_inserts: u64,
+    /// Prefix-pool blocks reclaimed under memory pressure.
+    pub prefix_evicted_blocks: u64,
     // ---- observability (obs) --------------------------------------------
     /// Latency summary mode. [`TelemetryMode::Exact`] (the default)
     /// keeps every sample and is what the e2e pins measure;

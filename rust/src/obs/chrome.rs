@@ -7,8 +7,8 @@
 //! `done - at`); everything else is an instant (`"ph": "i"`). `pid` is
 //! the replica lane (0 for single-engine runs, replica count = router
 //! lane), `tid` groups events by subsystem so the viewer stacks
-//! lifecycle, swap, prefetch, routing, and actor-mailbox rows
-//! separately. Timestamps
+//! lifecycle, swap, prefetch, routing, actor-mailbox, and prefix-cache
+//! rows separately. Timestamps
 //! are virtual nanoseconds rendered as microseconds (the unit the
 //! viewer expects).
 
@@ -28,6 +28,9 @@ fn tid(ev: &TraceEvent) -> u32 {
         | TraceEvent::Drain { .. }
         | TraceEvent::Rejoin { .. } => 3,
         TraceEvent::MailboxDepth { .. } => 4,
+        TraceEvent::PrefixHit { .. }
+        | TraceEvent::PrefixInsert { .. }
+        | TraceEvent::PrefixEvict { .. } => 5,
         _ => 0,
     }
 }
@@ -115,6 +118,20 @@ fn args_json(ev: &TraceEvent) -> String {
         TraceEvent::Rejoin { replica } => push_arg(&mut a, "replica", replica),
         TraceEvent::MailboxDepth { actor, depth } => {
             push_arg(&mut a, "actor", actor);
+            push_arg(&mut a, "depth", depth);
+        }
+        TraceEvent::PrefixHit { req, blocks, tokens } => {
+            push_arg(&mut a, "req", req);
+            push_arg(&mut a, "blocks", blocks);
+            push_arg(&mut a, "tokens", tokens);
+        }
+        TraceEvent::PrefixInsert { group, blocks, depth } => {
+            push_arg(&mut a, "group", group);
+            push_arg(&mut a, "blocks", blocks);
+            push_arg(&mut a, "depth", depth);
+        }
+        TraceEvent::PrefixEvict { group, depth } => {
+            push_arg(&mut a, "group", group);
             push_arg(&mut a, "depth", depth);
         }
     }

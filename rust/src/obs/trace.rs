@@ -105,6 +105,16 @@ pub enum TraceEvent {
     /// replica index, or the replica count for the router's own work
     /// mailbox (matching the trace-lane numbering).
     MailboxDepth { actor: u32, depth: u32 },
+    /// Admission matched a fresh request against the global prefix
+    /// cache: `blocks` pool blocks (= `tokens` prompt tokens) are served
+    /// from the shared pool instead of being prefilled.
+    PrefixHit { req: RequestId, blocks: usize, tokens: usize },
+    /// Newly prefilled template blocks were published into the prefix
+    /// pool: `blocks` fresh nodes, chain now `depth` blocks deep.
+    PrefixInsert { group: u64, blocks: usize, depth: u32 },
+    /// Memory pressure evicted the deepest unreferenced prefix-pool
+    /// block (refcount 1 — never a block a live request still pins).
+    PrefixEvict { group: u64, depth: u32 },
 }
 
 impl TraceEvent {
@@ -130,6 +140,9 @@ impl TraceEvent {
             TraceEvent::Drain { .. } => "Drain",
             TraceEvent::Rejoin { .. } => "Rejoin",
             TraceEvent::MailboxDepth { .. } => "MailboxDepth",
+            TraceEvent::PrefixHit { .. } => "PrefixHit",
+            TraceEvent::PrefixInsert { .. } => "PrefixInsert",
+            TraceEvent::PrefixEvict { .. } => "PrefixEvict",
         }
     }
 

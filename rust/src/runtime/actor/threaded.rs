@@ -112,7 +112,7 @@ impl Executor for ThreadedExecutor {
                 if views.iter().any(|v| v.runnable && v.now < due) {
                     break;
                 }
-                let loads: Vec<ReplicaLoad> = views.iter().map(|v| v.load).collect();
+                let loads: Vec<ReplicaLoad> = views.iter().map(|v| v.load.clone()).collect();
                 let deliveries = core.route(&loads).expect("peeked work vanished");
                 for (replica, msg_due, msg) in deliveries {
                     send(&mut views, replica, msg_due, msg);

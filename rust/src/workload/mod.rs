@@ -10,6 +10,6 @@ pub mod tenants;
 pub mod trace;
 
 pub use scenario::{DrainPlan, ScenarioParams, ScenarioSpec, ScenarioWorkload};
-pub use sharegpt::{Conversation, ShareGptConfig, Turn};
+pub use sharegpt::{Conversation, ShareGptConfig, SharedPrefix, Turn};
 pub use tenants::{assign_tenants, conversations_per_tenant, TenantMix};
 pub use trace::{ArrivalTrace, TraceEntry};

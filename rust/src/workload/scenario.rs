@@ -265,7 +265,7 @@ fn agentic(n: usize, rate: f64, seed: u64, params: &ScenarioParams) -> ScenarioW
                     },
                 })
                 .collect();
-            Conversation { id: id as u64, tenant: 0, turns }
+            Conversation { id: id as u64, tenant: 0, prefix: None, turns }
         })
         .collect();
     split_tenants(&mut convs, seed);
@@ -288,6 +288,7 @@ fn mega_context(n: usize, rate: f64, seed: u64, max_model_len: usize) -> Scenari
             Conversation {
                 id: id as u64,
                 tenant: 0,
+                prefix: None,
                 turns: vec![Turn {
                     prompt_tokens: prompt,
                     response_tokens: response,
@@ -317,7 +318,7 @@ fn herd(n: usize, rate: f64, seed: u64, params: &ScenarioParams) -> ScenarioWork
                     },
                 })
                 .collect();
-            Conversation { id: id as u64, tenant: 0, turns }
+            Conversation { id: id as u64, tenant: 0, prefix: None, turns }
         })
         .collect();
     split_tenants(&mut convs, seed);

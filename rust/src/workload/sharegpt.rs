@@ -26,12 +26,28 @@ pub struct Turn {
     pub think_time_s: f64,
 }
 
+/// A shared prompt template: the leading `tokens` of the first turn's
+/// prompt are byte-identical across every conversation carrying the
+/// same `group` (a system prompt / few-shot preamble). Turns carry only
+/// token counts, so the group id *is* the template identity — the
+/// global prefix cache ([`crate::block::prefix`]) hashes template
+/// blocks as `(group, block index)` chains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SharedPrefix {
+    pub group: u64,
+    /// Shared leading length in tokens (≤ the first turn's prompt).
+    pub tokens: u32,
+}
+
 #[derive(Clone, Debug)]
 pub struct Conversation {
     pub id: u64,
     /// Owning tenant (client account) — the fairness accounting unit.
     /// 0 by default; see [`crate::workload::tenants::assign_tenants`].
     pub tenant: u32,
+    /// Shared prompt template, if the first prompt opens with one
+    /// (`None` = fully distinct prompt — the default everywhere).
+    pub prefix: Option<SharedPrefix>,
     pub turns: Vec<Turn>,
 }
 
@@ -116,6 +132,7 @@ pub fn generate(cfg: &ShareGptConfig, n: usize, seed: u64) -> Vec<Conversation> 
             Conversation {
                 id: id as u64,
                 tenant: 0,
+                prefix: None,
                 turns,
             }
         })

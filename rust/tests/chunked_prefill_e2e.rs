@@ -49,6 +49,7 @@ fn workload() -> (Vec<Conversation>, ArrivalTrace) {
         convs.push(Conversation {
             id: i,
             tenant: 1 + i as u32,
+            prefix: None,
             turns: vec![
                 turn(32, 150, 0.0),
                 turn(32, 150, 1.0),
@@ -65,6 +66,7 @@ fn workload() -> (Vec<Conversation>, ArrivalTrace) {
         convs.push(Conversation {
             id,
             tenant: 0,
+            prefix: None,
             turns: vec![turn(1024, 16, 0.0)],
         });
         entries.push(TraceEntry {

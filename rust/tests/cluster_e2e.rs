@@ -65,6 +65,7 @@ fn one_conversation() -> (Vec<Conversation>, ArrivalTrace) {
     let convs = vec![Conversation {
         id: 0,
         tenant: 0,
+        prefix: None,
         turns: vec![turn(64, 32, 0.0), turn(64, 32, 1.0), turn(64, 32, 1.0)],
     }];
     let arrivals = ArrivalTrace {
@@ -136,16 +137,19 @@ fn aggregate_fairness_spans_all_replicas() {
         Conversation {
             id: 0,
             tenant: 0,
+            prefix: None,
             turns: vec![turn(64, 32, 0.0)],
         },
         Conversation {
             id: 1,
             tenant: 0,
+            prefix: None,
             turns: vec![turn(64, 32, 0.0)],
         },
         Conversation {
             id: 2,
             tenant: 1,
+            prefix: None,
             turns: vec![turn(64, 32, 0.0)],
         },
     ];
@@ -184,6 +188,7 @@ fn least_loaded_spreads_simultaneous_demand() {
         .map(|i| Conversation {
             id: i,
             tenant: (i % 2) as u32,
+            prefix: None,
             turns: vec![turn(128, 64, 0.0)],
         })
         .collect();
@@ -214,6 +219,7 @@ fn cluster_run_is_deterministic() {
             .map(|i| Conversation {
                 id: i,
                 tenant: (i % 2) as u32,
+                prefix: None,
                 turns: vec![turn(64, 32, 0.0), turn(32, 32, 1.0), turn(32, 32, 1.0)],
             })
             .collect();

@@ -43,6 +43,7 @@ fn run_depth(depth: u64) -> ServeOutcome {
     let convs = vec![Conversation {
         id: 0,
         tenant: 0,
+        prefix: None,
         turns: vec![turn(64, 32, 0.0), turn(64, 32, 2.0), turn(64, 32, 2.0)],
     }];
     let arrivals = ArrivalTrace {

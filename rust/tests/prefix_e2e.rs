@@ -1,0 +1,253 @@
+//! Deterministic end-to-end pins for the global prefix cache: two
+//! tenants whose agent fleets open with the same shared system-prompt
+//! template must be served *identical* outputs at strictly fewer
+//! prefilled tokens and a strictly lower VTC charge when the cache is
+//! on; the same seed must reproduce byte-identical runs; and
+//! `prefix.enabled = false` must reproduce the default (cache-less)
+//! baseline exactly. The final test pins the migration regression the
+//! feature was fixed against: a drained replica's conversations
+//! migrate off while still pinning template blocks, and
+//! `evict_for_migration` must release those pins — the invariant audit
+//! catches the dangle otherwise.
+
+use fastswitch::cluster::{
+    ClusterConfig, ClusterOutcome, ClusterRouter, PlacementKind, DEFAULT_SPILL_THRESHOLD,
+};
+use fastswitch::config::{EngineConfig, GpuSpec, ModelSpec, Preset};
+use fastswitch::coordinator::engine::{ServeOutcome, ServingEngine};
+use fastswitch::coordinator::priority::Pattern;
+use fastswitch::fairness::PolicyKind;
+use fastswitch::metrics::invariants::{check_cluster, check_engine};
+use fastswitch::workload::{ArrivalTrace, Conversation, SharedPrefix, TraceEntry, Turn};
+
+/// LLaMA-8B timing constants on an uncontended 400-block testbed (the
+/// same shrink trick as `prefetch_e2e`): block size 16, so the 64-token
+/// template below is exactly 4 pool blocks.
+fn preset(gpu_blocks_target: usize) -> Preset {
+    let model = ModelSpec::llama8b();
+    let mut gpu = GpuSpec::a10();
+    gpu.hbm_bytes = ((model.weight_bytes()
+        + gpu_blocks_target as u64 * model.block_bytes()) as f64
+        / gpu.mem_util) as u64
+        + (1 << 20);
+    Preset {
+        model,
+        gpu,
+        cpu_swap_bytes: 4096 * 4 * 1024 * 1024,
+    }
+}
+
+fn turn(prompt: u32, response: u32, think: f64) -> Turn {
+    Turn {
+        prompt_tokens: prompt,
+        response_tokens: response,
+        think_time_s: think,
+    }
+}
+
+const TEMPLATE_TOKENS: u32 = 64; // 4 blocks of 16
+
+/// Two tenants x three conversations, arrivals 2 s apart: each
+/// tenant's first conversation publishes its template, the later two
+/// hit it (4 hits x 4 blocks = 256 tokens saved in total).
+fn fleet_workload() -> (Vec<Conversation>, ArrivalTrace) {
+    let mut convs = Vec::new();
+    let mut entries = Vec::new();
+    for i in 0..6u64 {
+        let tenant = (i % 2) as u32;
+        convs.push(Conversation {
+            id: i,
+            tenant,
+            prefix: Some(SharedPrefix {
+                group: tenant as u64,
+                tokens: TEMPLATE_TOKENS,
+            }),
+            turns: vec![turn(96, 32, 0.0)],
+        });
+        entries.push(TraceEntry {
+            conversation: i,
+            arrival: i * 2_000_000_000,
+        });
+    }
+    (convs, ArrivalTrace { entries })
+}
+
+fn run_fleet(enabled: bool) -> ServeOutcome {
+    let (convs, arrivals) = fleet_workload();
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.fairness.policy = PolicyKind::Vtc;
+    cfg.prefix.enabled = enabled;
+    let mut e = ServingEngine::new(cfg, preset(400), Pattern::Markov, convs, arrivals, 13);
+    e.charge_sched_overhead = false; // determinism
+    e.run(400_000)
+}
+
+#[test]
+fn cache_serves_identical_outputs_at_strictly_fewer_prefilled_tokens() {
+    let off = run_fleet(false);
+    let on = run_fleet(true);
+    // Same service rendered either way: every conversation finishes and
+    // every tenant receives the same tokens.
+    assert_eq!(off.recorder.finished_conversations, 6);
+    assert_eq!(on.recorder.finished_conversations, 6);
+    assert_eq!(
+        on.recorder.tokens_by_tenant(),
+        off.recorder.tokens_by_tenant(),
+        "the cache must not change what is served"
+    );
+    // Cache off: the feature is inert — zero hits, zero pool blocks.
+    assert_eq!(off.recorder.prefix_hits, 0);
+    assert_eq!(off.recorder.prefix_inserts, 0);
+    assert_eq!(off.prefix_blocks_final, 0);
+    // Cache on: each tenant's first conversation publishes 4 blocks,
+    // the later four conversations each hit the full template.
+    assert_eq!(on.recorder.prefix_hits, 4);
+    assert_eq!(on.recorder.prefix_hit_blocks, 16);
+    assert_eq!(on.recorder.prefix_saved_tokens, 4 * TEMPLATE_TOKENS as u64);
+    assert_eq!(on.prefix_blocks_final, 8, "two 4-block template chains");
+    assert_eq!(on.prefix_pinned_refs_final, 0, "all pins released at drain");
+    // The saved tokens come straight out of the prefill bill.
+    assert_eq!(off.recorder.prefill_tokens(), 6 * 96);
+    assert_eq!(
+        on.recorder.prefill_tokens(),
+        off.recorder.prefill_tokens() - on.recorder.prefix_saved_tokens,
+        "prefilled tokens must shrink by exactly the saved tokens"
+    );
+    // Both runs pass the full engine invariant audit.
+    assert_eq!(check_engine(&off), Vec::<String>::new());
+    assert_eq!(check_engine(&on), Vec::<String>::new());
+}
+
+#[test]
+fn vtc_charges_strictly_less_for_sharing_tenants_and_fairness_holds() {
+    let off = run_fleet(false);
+    let on = run_fleet(true);
+    assert_eq!(off.vtc_counters.len(), 2);
+    assert_eq!(on.vtc_counters.len(), 2);
+    // VTC charges only the uncached work: every sharing tenant's final
+    // counter is strictly lower with the cache on.
+    for (&(t_on, c_on), &(t_off, c_off)) in on.vtc_counters.iter().zip(&off.vtc_counters) {
+        assert_eq!(t_on, t_off);
+        assert!(
+            c_on < c_off,
+            "tenant {t_on}: VTC charge {c_on} !< cache-off charge {c_off}"
+        );
+    }
+    // Reuse must not tilt fairness: both tenants share equally, so the
+    // Jain index stays within 2% of the cache-off baseline.
+    let (j_on, j_off) = (on.recorder.jain_fairness(), off.recorder.jain_fairness());
+    assert!(j_on > 0.0 && j_on <= 1.0 + 1e-12);
+    assert!(
+        (j_on - j_off).abs() <= 0.02,
+        "jain drifted: on {j_on} vs off {j_off}"
+    );
+}
+
+#[test]
+fn same_seed_is_byte_identical() {
+    let a = run_fleet(true);
+    let b = run_fleet(true);
+    assert_eq!(a.span, b.span);
+    assert_eq!(a.iterations, b.iterations);
+    assert_eq!(a.recorder.total_tokens, b.recorder.total_tokens);
+    assert_eq!(a.recorder.tokens_by_tenant(), b.recorder.tokens_by_tenant());
+    assert_eq!(a.recorder.prefill_tokens(), b.recorder.prefill_tokens());
+    assert_eq!(a.recorder.prefix_hits, b.recorder.prefix_hits);
+    assert_eq!(a.recorder.prefix_saved_tokens, b.recorder.prefix_saved_tokens);
+    assert_eq!(a.vtc_counters, b.vtc_counters);
+    assert_eq!(a.prefix_blocks_final, b.prefix_blocks_final);
+}
+
+#[test]
+fn disabled_cache_reproduces_the_default_baseline_exactly() {
+    // `[prefix] enabled = false` is the default: an explicit-off run
+    // and an untouched-config run must be the same simulation, byte for
+    // byte — the feature gate keeps every pre-existing pin intact.
+    let (convs, arrivals) = fleet_workload();
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.fairness.policy = PolicyKind::Vtc;
+    assert!(!cfg.prefix.enabled, "prefix cache must default off");
+    let mut e = ServingEngine::new(cfg, preset(400), Pattern::Markov, convs, arrivals, 13);
+    e.charge_sched_overhead = false;
+    let default_run = e.run(400_000);
+    let explicit_off = run_fleet(false);
+    assert_eq!(default_run.span, explicit_off.span);
+    assert_eq!(default_run.iterations, explicit_off.iterations);
+    assert_eq!(
+        default_run.recorder.total_tokens,
+        explicit_off.recorder.total_tokens
+    );
+    assert_eq!(default_run.vtc_counters, explicit_off.vtc_counters);
+    assert_eq!(default_run.recorder.prefix_hits, 0);
+    assert_eq!(default_run.prefix_blocks_final, 0);
+}
+
+/// Thundering-herd-style drain: eight two-turn conversations sharing
+/// one template on a 2-replica cluster; replica 0 drains mid-run, so
+/// conversations holding pinned template paths migrate off it.
+fn run_drained_cluster() -> ClusterOutcome {
+    let mut convs = Vec::new();
+    let mut entries = Vec::new();
+    for i in 0..8u64 {
+        convs.push(Conversation {
+            id: i,
+            tenant: (i % 4) as u32,
+            prefix: Some(SharedPrefix {
+                group: 0,
+                tokens: TEMPLATE_TOKENS,
+            }),
+            turns: vec![turn(96, 16, 0.0), turn(32, 16, 1.0)],
+        });
+        entries.push(TraceEntry {
+            conversation: i,
+            arrival: i * 500_000_000,
+        });
+    }
+    let arrivals = ArrivalTrace { entries };
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.fairness.policy = PolicyKind::Vtc;
+    cfg.prefix.enabled = true;
+    let mut router = ClusterRouter::new(
+        cfg,
+        preset(400),
+        Pattern::Markov,
+        ClusterConfig {
+            replicas: 2,
+            placement: PlacementKind::KvAffinity {
+                spill_threshold: DEFAULT_SPILL_THRESHOLD,
+            },
+            parallel: false,
+        },
+        convs,
+        arrivals,
+        13,
+    );
+    router.set_charge_sched_overhead(false);
+    // Drain while later turns (and their pinned template paths) are
+    // still outstanding on replica 0.
+    router.set_drain(0, 2_000_000_000);
+    router.run(800_000)
+}
+
+#[test]
+fn migrated_conversations_release_their_prefix_pins() {
+    let out = run_drained_cluster();
+    // The drain forced real migrations of conversations that were
+    // admitted through the cache.
+    assert!(out.migrations > 0, "drain must force migrations");
+    assert!(
+        out.prefix_hits_total() > 0,
+        "the shared-template fleet must hit the cache before the drain"
+    );
+    // The regression this pins: evict_for_migration must release the
+    // migrated request's pinned path. A dangling pin shows up as
+    // `prefix_pinned_refs_final != 0` on the drained replica and fails
+    // the cluster-wide invariant audit.
+    assert_eq!(check_cluster(&out, 8, false), Vec::<String>::new());
+    for (i, r) in out.replicas.iter().enumerate() {
+        assert_eq!(
+            r.prefix_pinned_refs_final, 0,
+            "replica {i} drained with dangling prefix pins"
+        );
+    }
+}

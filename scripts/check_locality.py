@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Validate an `exp locality` report (LOCALITY_PR<N>.md) markdown table.
+
+Usage: check_locality.py LOCALITY.md
+
+Checks that the prefix-locality showdown grid covers every placement x
+fleet cell exactly once, that the disjoint (no-template) rows are the
+exact null result (zero hits, zero saved tokens — the cache must be
+inert when nothing shares a prefix), that the prefix_aware shared-fleet
+row actually hits the cache and saves prompt tokens, and that every
+Jain index is a valid fairness value. Exits non-zero with a
+per-violation message on failure — CI gates the `exp locality` smoke
+run on this.
+"""
+
+import sys
+
+PLACEMENTS = ["round_robin", "kv_affinity", "prefix_aware"]
+FLEETS = ["shared", "disjoint"]
+COLUMNS = 8  # placement, fleet, hit rate, saved, prefill, jain, p99 ttft, affinity
+
+errors = []
+
+
+def fail(msg):
+    errors.append(msg)
+
+
+def num(cell):
+    """Numeric cell value, stripping the %/x suffixes the reporter appends."""
+    return float(cell.rstrip("%x"))
+
+
+def parse_rows(text):
+    rows = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if len(cells) != COLUMNS:
+            continue
+        if cells[0] == "placement" or set(cells[0]) <= {"-"}:
+            continue  # header / separator
+        rows.append(cells)
+    return rows
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    with open(sys.argv[1]) as f:
+        text = f.read()
+
+    if "### locality" not in text:
+        fail("missing '### locality' report header")
+    rows = parse_rows(text)
+
+    seen = {}
+    for i, r in enumerate(rows):
+        placement, fleet = r[0], r[1]
+        if placement not in PLACEMENTS:
+            fail(f"row {i}: unknown placement {placement!r}")
+        if fleet not in FLEETS:
+            fail(f"row {i}: unknown fleet {fleet!r}")
+        if (placement, fleet) in seen:
+            fail(f"row {i}: duplicate cell ({placement}, {fleet})")
+        seen[(placement, fleet)] = r
+        try:
+            hit, saved, prefill, jain = num(r[2]), num(r[3]), num(r[4]), num(r[5])
+        except ValueError as e:
+            fail(f"row {i} ({placement}, {fleet}): non-numeric cell: {e}")
+            continue
+        if prefill <= 0:
+            fail(f"({placement}, {fleet}): no prompt tokens prefilled ({r[4]})")
+        if not 0.0 < jain <= 1.0 + 1e-9:
+            fail(f"({placement}, {fleet}): jain {jain} outside (0, 1]")
+        if fleet == "disjoint":
+            if hit != 0.0:
+                fail(f"({placement}, disjoint): hit rate {r[2]} != 0 — "
+                     f"cache matched with no shared templates")
+            if saved != 0.0:
+                fail(f"({placement}, disjoint): saved tokens {r[3]} != 0")
+
+    expected = {(p, f) for p in PLACEMENTS for f in FLEETS}
+    for missing in sorted(expected - set(seen)):
+        fail(f"missing cell {missing!r}")
+
+    pa = seen.get(("prefix_aware", "shared"))
+    if pa is not None:
+        try:
+            hit, saved = num(pa[2]), num(pa[3])
+            if hit <= 0.0:
+                fail(f"(prefix_aware, shared): hit rate {pa[2]} — the "
+                     f"templated fleet never hit the cache")
+            if saved <= 0.0:
+                fail(f"(prefix_aware, shared): saved tokens {pa[3]} — "
+                     f"hits must save prompt tokens")
+            dis = seen.get(("prefix_aware", "disjoint"))
+            if dis is not None and hit <= num(dis[2]):
+                fail(f"(prefix_aware): shared hit rate {pa[2]} not above "
+                     f"disjoint {dis[2]}")
+        except ValueError:
+            pass  # already reported above
+
+    if errors:
+        for e in errors:
+            print(f"check_locality: {e}", file=sys.stderr)
+        return 1
+    print(f"check_locality: OK — {len(rows)} cells "
+          f"({len(PLACEMENTS)} placements x {len(FLEETS)} fleets), "
+          f"shared fleet hit rate {seen[('prefix_aware', 'shared')][2]}, "
+          f"disjoint rows inert")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
