@@ -159,6 +159,55 @@ fn bench_scheduler() {
     });
 }
 
+fn bench_scheduler_scale() {
+    // The PR-10 sublinearity sweep: per-epoch cost of the sort-based
+    // oracle vs the incremental candidate index at growing queue
+    // depths, with a fixed 32-entry churn per epoch (what a priority
+    // update actually dirties). The sort line should grow roughly
+    // n log n; the incremental line should stay near-flat.
+    use fastswitch::coordinator::queue::{CandidateIndex, EpochScratch};
+    section("scheduler scale sweep (32-entry churn per epoch, both paths)");
+    for &depth in &[100usize, 1_000, 10_000, 100_000] {
+        let mut rng = Rng::new(0x5CA1E ^ depth as u64);
+        let mut cands: Vec<Candidate> = (0..depth as u64)
+            .map(|id| {
+                let running = rng.chance(0.05);
+                Candidate {
+                    id,
+                    priority: rng.usize(0, 8) as i64,
+                    turn_arrival: rng.next_u64() % 1_000_000,
+                    state: if running {
+                        ReqState::Running
+                    } else {
+                        ReqState::SwappedOut
+                    },
+                    blocks_held: if running { rng.usize(4, 16) } else { 0 },
+                    blocks_needed: if running { rng.usize(0, 2) } else { rng.usize(1, 16) },
+                    prefill_remaining: 0,
+                }
+            })
+            .collect();
+        let mut index = CandidateIndex::new(1_024);
+        for &c in &cands {
+            index.upsert(c);
+        }
+        let mut scratch = EpochScratch::default();
+        let iters = (400_000 / depth).clamp(4, 400) as u32;
+        bench(&format!("incremental walk, depth {depth}"), 2, iters, || {
+            for _ in 0..32 {
+                let i = rng.usize(0, depth);
+                cands[i].priority = rng.usize(0, 8) as i64;
+                index.upsert(cands[i]);
+            }
+            index.schedule_into(1_024, 64, IterBudget::chunked(256, 64), &mut scratch);
+            black_box(scratch.sched.admitted());
+        });
+        bench(&format!("sort oracle, depth {depth}"), 2, iters, || {
+            black_box(schedule(&cands, 1_024, 64, IterBudget::chunked(256, 64)).admitted());
+        });
+    }
+}
+
 fn bench_engine_iteration() {
     section("end-to-end engine (quick sim, wall time per virtual iteration)");
     use fastswitch::config::{EngineConfig, Preset};
@@ -190,5 +239,6 @@ fn main() {
     bench_swap_manager();
     bench_conflict_detection();
     bench_scheduler();
+    bench_scheduler_scale();
     bench_engine_iteration();
 }

@@ -190,6 +190,9 @@ impl ConfigFile {
             cfg.scheduler.prefill_mode = crate::config::PrefillMode::by_name(m)
                 .ok_or_else(|| ConfigError::UnknownPrefillMode(m.into()))?;
         }
+        if let Some(i) = self.get_bool("scheduler", "incremental") {
+            cfg.scheduler.incremental = i;
+        }
         // `[preemption]` — the pluggable context-switch eviction policy.
         if let Some(p) = self.get("preemption", "policy") {
             cfg.preemption.policy = crate::config::PreemptionPolicyKind::by_name(p)
@@ -365,6 +368,14 @@ pattern = "markov"
         assert_eq!(e.scheduler.prefill_chunk, 128);
         assert_eq!(e.scheduler.max_tokens_per_iter, 256);
         assert_eq!(e.scheduler.prefill_mode, PrefillMode::Monolithic);
+    }
+
+    #[test]
+    fn scheduler_section_selects_the_scheduler_path() {
+        let c = ConfigFile::parse("[scheduler]\nincremental = false").unwrap();
+        assert!(!c.engine().unwrap().scheduler.incremental);
+        let c = ConfigFile::parse("[scheduler]\nchunk_tokens = 128").unwrap();
+        assert!(c.engine().unwrap().scheduler.incremental, "default is on");
     }
 
     #[test]

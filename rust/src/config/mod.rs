@@ -247,6 +247,13 @@ pub struct SchedulerConfig {
     pub prefill_mode: PrefillMode,
     /// Number of distinct priority levels in the traces.
     pub priority_levels: usize,
+    /// Scheduler path: `true` (default) walks the incremental bucketed
+    /// candidate index ([`crate::coordinator::queue`], O(admitted +
+    /// dirty) per epoch); `false` re-sorts every candidate per
+    /// iteration (the reference oracle — CLI `--sort-scheduler`,
+    /// config `[scheduler] incremental`). Both produce byte-identical
+    /// schedules.
+    pub incremental: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -259,6 +266,7 @@ impl Default for SchedulerConfig {
             max_tokens_per_iter: 0, // auto (roofline-sized)
             prefill_mode: PrefillMode::Chunked,
             priority_levels: 8,
+            incremental: true,
         }
     }
 }

@@ -149,8 +149,14 @@ impl ServingEngine {
         self.policy.on_schedule(epoch, &active);
         for (id, tenant) in live {
             let p = self.policy.priority_of(id, tenant, epoch);
-            self.reqs.get_mut(id).priority = p;
             self.cpu.set_priority(id, p);
+            // Write (and dirty) the table only when the score actually
+            // moved: unchanged parked requests must stay clean so the
+            // incremental index re-keys O(moved) entries per epoch, not
+            // O(live).
+            if self.reqs.get(id).priority != p {
+                self.reqs.get_mut(id).priority = p;
+            }
         }
     }
 
@@ -182,84 +188,128 @@ impl ServingEngine {
         self.prefill_blocks(r, self.admit_take(r))
     }
 
-    pub(super) fn candidates(&self) -> Vec<Candidate> {
-        self.reqs
-            .iter()
-            .filter(|r| {
-                matches!(
-                    r.state,
-                    ReqState::Running
-                        | ReqState::Prefilling
-                        | ReqState::SwappingIn
-                        | ReqState::Queued
-                        | ReqState::SwappedOut
-                        | ReqState::PartiallyResident
-                )
-            })
-            .map(|r| {
-                let held = self.alloc.as_dyn_ref().table(r.id).len();
-                // Off-GPU candidates normally hold no blocks (a draining
-                // async swap-out's source blocks are counted conservatively
-                // on top of the full re-admission ask — see `schedule`'s
-                // transient-inflation note). A *prefetched* candidate is
-                // the exception: its context blocks are already resident,
-                // so only the remainder of the ask is fresh demand.
-                let full_swap_in = |r: &Request| {
-                    let full = Request::blocks_for(r.tokens_in_cache, self.block_size)
-                        + self.chunk_blocks(r);
-                    if self.mgr.prefetch_pending(r.id) {
-                        full.saturating_sub(held)
-                    } else {
-                        full
-                    }
-                };
-                let needed = match r.state {
-                    ReqState::Running => {
-                        Request::blocks_for(r.tokens_in_cache + 1, self.block_size)
-                            .saturating_sub(held)
-                    }
-                    ReqState::Prefilling => self.chunk_blocks(r),
-                    ReqState::SwappingIn => 0,
-                    ReqState::SwappedOut => full_swap_in(r),
-                    // Partial-tail eviction: the head is still resident,
-                    // so re-admission needs only the missing tail plus
-                    // this iteration's growth. (While the tail swap-out
-                    // drains, `held` still counts the draining source
-                    // blocks — the same conservative transient as a
-                    // draining full swap-out.)
-                    ReqState::PartiallyResident => {
-                        (Request::blocks_for(r.tokens_in_cache, self.block_size)
-                            + self.chunk_blocks(r))
-                        .saturating_sub(held)
-                    }
-                    ReqState::Queued => {
-                        if r.kv == KvLocation::Cpu {
-                            full_swap_in(r)
-                        } else {
-                            self.chunk_blocks(r)
-                        }
-                    }
-                    _ => 0,
-                };
-                Candidate {
-                    id: r.id,
-                    priority: r.priority,
-                    turn_arrival: r.turn_arrival,
-                    // Queued-with-CPU-KV and partially-resident requests
-                    // behave like SwappedOut for the scheduler (need
-                    // promotion, not a fresh start).
-                    state: if (r.state == ReqState::Queued && r.kv == KvLocation::Cpu)
-                        || r.state == ReqState::PartiallyResident
-                    {
-                        ReqState::SwappedOut
-                    } else {
-                        r.state
-                    },
-                    blocks_held: held,
-                    blocks_needed: needed,
-                    prefill_remaining: r.prefill_remaining(),
+    /// States the scheduler sees at all; everything else is parked
+    /// (think time, draining turn-end swap-out) or finished. Shared by
+    /// the sort-path collection and the incremental index refresh.
+    pub(super) fn schedulable(state: ReqState) -> bool {
+        matches!(
+            state,
+            ReqState::Running
+                | ReqState::Prefilling
+                | ReqState::SwappingIn
+                | ReqState::Queued
+                | ReqState::SwappedOut
+                | ReqState::PartiallyResident
+        )
+    }
+
+    /// The scheduler's view of one schedulable request — the single
+    /// source of candidate truth for both scheduler paths: the sort
+    /// path maps it over every live request, the incremental path
+    /// re-evaluates it for dirty requests only.
+    pub(super) fn candidate_for(&self, r: &Request) -> Candidate {
+        let held = self.alloc.as_dyn_ref().table(r.id).len();
+        // Off-GPU candidates normally hold no blocks (a draining
+        // async swap-out's source blocks are counted conservatively
+        // on top of the full re-admission ask — see `schedule`'s
+        // transient-inflation note). A *prefetched* candidate is
+        // the exception: its context blocks are already resident,
+        // so only the remainder of the ask is fresh demand.
+        let full_swap_in = |r: &Request| {
+            let full = Request::blocks_for(r.tokens_in_cache, self.block_size)
+                + self.chunk_blocks(r);
+            if self.mgr.prefetch_pending(r.id) {
+                full.saturating_sub(held)
+            } else {
+                full
+            }
+        };
+        let needed = match r.state {
+            ReqState::Running => {
+                Request::blocks_for(r.tokens_in_cache + 1, self.block_size)
+                    .saturating_sub(held)
+            }
+            ReqState::Prefilling => self.chunk_blocks(r),
+            ReqState::SwappingIn => 0,
+            ReqState::SwappedOut => full_swap_in(r),
+            // Partial-tail eviction: the head is still resident,
+            // so re-admission needs only the missing tail plus
+            // this iteration's growth. (While the tail swap-out
+            // drains, `held` still counts the draining source
+            // blocks — the same conservative transient as a
+            // draining full swap-out.)
+            ReqState::PartiallyResident => {
+                (Request::blocks_for(r.tokens_in_cache, self.block_size)
+                    + self.chunk_blocks(r))
+                .saturating_sub(held)
+            }
+            ReqState::Queued => {
+                if r.kv == KvLocation::Cpu {
+                    full_swap_in(r)
+                } else {
+                    self.chunk_blocks(r)
                 }
-            })
-            .collect()
+            }
+            _ => 0,
+        };
+        Candidate {
+            id: r.id,
+            priority: r.priority,
+            turn_arrival: r.turn_arrival,
+            // Queued-with-CPU-KV and partially-resident requests
+            // behave like SwappedOut for the scheduler (need
+            // promotion, not a fresh start).
+            state: if (r.state == ReqState::Queued && r.kv == KvLocation::Cpu)
+                || r.state == ReqState::PartiallyResident
+            {
+                ReqState::SwappedOut
+            } else {
+                r.state
+            },
+            blocks_held: held,
+            blocks_needed: needed,
+            prefill_remaining: r.prefill_remaining(),
+        }
+    }
+
+    /// Sort-path candidate collection into a reusable buffer (cleared
+    /// first) — the oracle's input, O(live requests) per call.
+    pub(super) fn collect_candidates_into(&self, out: &mut Vec<Candidate>) {
+        out.clear();
+        out.extend(
+            self.reqs
+                .iter()
+                .filter(|r| Self::schedulable(r.state))
+                .map(|r| self.candidate_for(r)),
+        );
+    }
+
+    pub(super) fn candidates(&self) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        self.collect_candidates_into(&mut out);
+        out
+    }
+
+    /// Sync the incremental candidate index with every request the
+    /// table marked dirty since the last refresh: still-schedulable
+    /// requests are re-keyed from their live state, everything else
+    /// (parked, finished, migrated away) drops out of the index. Cost
+    /// is O(dirty log n) — untouched entries are never revisited.
+    pub(super) fn refresh_index(&mut self) {
+        let mut dirty = std::mem::take(&mut self.scratch.dirty);
+        self.reqs.drain_dirty_into(&mut dirty);
+        for &id in dirty.iter() {
+            let cand = match self.reqs.try_get(id) {
+                Some(r) if Self::schedulable(r.state) => Some(self.candidate_for(r)),
+                _ => None,
+            };
+            match cand {
+                Some(c) => self.index.upsert(c),
+                None => {
+                    self.index.remove(id);
+                }
+            }
+        }
+        self.scratch.dirty = dirty;
     }
 }

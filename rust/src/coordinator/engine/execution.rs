@@ -39,13 +39,31 @@ impl ServingEngine {
         self.harvest_async();
         self.update_priorities();
 
-        let cands = self.candidates();
-        let sched = schedule(
-            &cands,
-            self.gpu_blocks,
-            self.cfg.scheduler.max_batch,
-            self.budget(),
-        );
+        // The scratch arena is moved out for the iteration (borrow
+        // split: the schedule it holds is read while `self` is mutated)
+        // and restored once the admission machinery is done with it.
+        let mut scratch = std::mem::take(&mut self.scratch);
+        if self.cfg.scheduler.incremental {
+            self.refresh_index();
+            self.index.schedule_into(
+                self.gpu_blocks,
+                self.cfg.scheduler.max_batch,
+                self.budget(),
+                &mut scratch,
+            );
+        } else {
+            // Sort-based oracle path: still drain the dirty set so it
+            // cannot grow without bound while the index sits idle.
+            self.reqs.drain_dirty_into(&mut scratch.dirty);
+            self.collect_candidates_into(&mut scratch.cands);
+            scratch.sched = schedule(
+                &scratch.cands,
+                self.gpu_blocks,
+                self.cfg.scheduler.max_batch,
+                self.budget(),
+            );
+        }
+        let sched = &scratch.sched;
         if let Some(t) = seg_t {
             self.rec
                 .profiler
@@ -61,7 +79,7 @@ impl ServingEngine {
         // deficit-driven sweep that evicts only the minimal tails the
         // admitted set actually needs.
         if self.planner.kind() == PreemptionPolicyKind::PartialTail {
-            stall += self.partial_preemption_sweep(&cands, &sched);
+            stall += self.partial_preemption_sweep(sched);
         } else {
             for &id in &sched.preempt {
                 stall += self.evict_unadmitted(id);
@@ -133,6 +151,9 @@ impl ServingEngine {
                 _ => {}
             }
         }
+        // The schedule has been fully consumed: give the arena back so
+        // the prefetch pass (and the next iteration) can reuse it.
+        self.scratch = scratch;
 
         // Growth allocation for this iteration's grants (a decode slot
         // or a chunk's blocks each); preempt lowest-priority victims on
@@ -163,6 +184,9 @@ impl ServingEngine {
             loop {
                 if let Some(b) = self.alloc.as_dyn().allocate(id, need) {
                     new_blocks.extend(b);
+                    // Residency grew outside the request table: mark the
+                    // grower dirty so the index re-reads `blocks_held`.
+                    self.reqs.touch(id);
                     break;
                 }
                 // Pressure order: (0) reclaim a speculative prefetch —

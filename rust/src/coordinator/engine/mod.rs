@@ -42,6 +42,7 @@ use crate::block::prefix::PrefixIndex;
 use crate::block::KvAllocator;
 use crate::config::{EngineConfig, Granularity, PrefillMode, Preset};
 use crate::coordinator::priority::Pattern;
+use crate::coordinator::queue::{CandidateIndex, EpochScratch};
 use crate::coordinator::request::RequestTable;
 use crate::coordinator::scheduler::IterBudget;
 use crate::coordinator::switch::{ContextSwitchPlanner, SwitchCostModel};
@@ -210,6 +211,15 @@ pub struct ServingEngine {
     /// EMA of recent working-iteration spans (ns) — converts the epoch
     /// lookahead depth into the wall-clock horizon for pending turns.
     iter_span_ema: f64,
+    /// Incremental bucketed candidate index — the default scheduler
+    /// path ([`crate::coordinator::queue`]). Refreshed from the request
+    /// table's dirty set each iteration; byte-identical to the
+    /// sort-based oracle. Maintained only when
+    /// `cfg.scheduler.incremental` (the sort path ignores it).
+    index: CandidateIndex,
+    /// Per-epoch scratch arena: candidate/schedule/projection buffers
+    /// cleared-not-dropped between iterations.
+    scratch: EpochScratch,
 }
 
 // A replica actor moves its engine onto an OS thread under the threaded
@@ -315,6 +325,8 @@ impl ServingEngine {
             prefetch_never_fits: std::collections::HashSet::new(),
             partial_pending: std::collections::HashMap::new(),
             iter_span_ema: iter_span_seed,
+            index: CandidateIndex::new(gpu_blocks),
+            scratch: EpochScratch::default(),
         }
     }
 

@@ -15,7 +15,7 @@ use super::ServingEngine;
 use crate::block::KvAllocator;
 use crate::config::SwapMode;
 use crate::coordinator::request::{KvLocation, ReqState, Request};
-use crate::coordinator::scheduler::{Candidate, Schedule};
+use crate::coordinator::scheduler::Schedule;
 use crate::coordinator::switch::{
     ContextSwitchPlanner, EvictionAction, VictimCtx, VictimRank,
 };
@@ -215,22 +215,17 @@ impl ServingEngine {
     /// token grant this iteration and re-enter admission next time. Any
     /// shortfall the estimate misses is caught by the growth-allocation
     /// pressure path, exactly like a draining async swap-out.
-    pub(super) fn partial_preemption_sweep(
-        &mut self,
-        cands: &[Candidate],
-        sched: &Schedule,
-    ) -> Ns {
-        let admitted: std::collections::HashSet<RequestId> = sched
+    pub(super) fn partial_preemption_sweep(&mut self, sched: &Schedule) -> Ns {
+        // Re-derive each admitted request's block ask from live state
+        // (nothing has mutated since the schedule was built), so the
+        // sweep is identical under both scheduler paths and O(admitted)
+        // rather than a scan of the full candidate list.
+        let needed: usize = sched
             .keep
             .iter()
             .chain(&sched.promote)
             .chain(&sched.start)
-            .copied()
-            .collect();
-        let needed: usize = cands
-            .iter()
-            .filter(|c| admitted.contains(&c.id))
-            .map(|c| c.blocks_needed)
+            .map(|&id| self.candidate_for(self.reqs.get(id)).blocks_needed)
             .sum();
         let mut deficit =
             needed.saturating_sub(self.alloc.as_dyn_ref().available_blocks());

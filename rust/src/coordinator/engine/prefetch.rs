@@ -19,6 +19,20 @@ impl ServingEngine {
     /// blocks returned (the CPU copy stays the valid version under the
     /// contamination rules).
     pub(super) fn rebuild_prefetch_predictions(&mut self, epoch: u64, depth: u64) {
+        if self.cfg.scheduler.incremental {
+            self.rebuild_predictions_incremental(epoch, depth);
+        } else {
+            self.rebuild_predictions_sorted(epoch, depth);
+        }
+        // Misprediction cleanup: a landed prefetch for a request that is
+        // still parked off-GPU and no longer projected (priority flip,
+        // pending turn migrated away) is canceled.
+        self.cancel_stale_prefetches(depth);
+    }
+
+    /// Oracle projection path: full candidate collection +
+    /// [`predict_admission`] — O(n log n) per lookahead offset.
+    fn rebuild_predictions_sorted(&mut self, epoch: u64, depth: u64) {
         let cands = self.candidates();
         // One projection per candidate via `project_priorities`, which
         // leaves the policy's sequential state (the trace memo) parked
@@ -43,9 +57,51 @@ impl ServingEngine {
             |id, offset| projections[&id][(offset - 1) as usize],
         );
         self.prefetch_queue = predicted;
-        // Misprediction cleanup: a landed prefetch for a request that is
-        // still parked off-GPU and no longer projected (priority flip,
-        // pending turn migrated away) is canceled.
+    }
+
+    /// Incremental projection path: the candidate index re-keys only the
+    /// entries whose projected priority moved, and the projection rows
+    /// live in the epoch-scratch arena (flat, row-major, binary-searched
+    /// by sorted id) — no per-epoch allocation in steady state beyond
+    /// the policy's own projection rows.
+    fn rebuild_predictions_incremental(&mut self, epoch: u64, depth: u64) {
+        self.refresh_index();
+        let mut scratch = std::mem::take(&mut self.scratch);
+        // The projection buffers are split out of the arena for the
+        // call: the closure reads them while `predict_into` holds the
+        // rest of the scratch mutably.
+        let mut proj_ids = std::mem::take(&mut scratch.proj_ids);
+        let mut proj = std::mem::take(&mut scratch.proj);
+        proj_ids.clear();
+        proj.clear();
+        proj_ids.extend(self.index.ids());
+        proj_ids.sort_unstable();
+        for &id in proj_ids.iter() {
+            let tenant = self.reqs.get(id).tenant();
+            let row = self.policy.project_priorities(id, tenant, epoch, depth);
+            debug_assert_eq!(row.len(), depth as usize);
+            proj.extend_from_slice(&row);
+        }
+        self.index.predict_into(
+            self.gpu_blocks,
+            self.cfg.scheduler.max_batch,
+            depth,
+            |id, offset| {
+                let i = proj_ids.binary_search(&id).expect("projected id indexed");
+                proj[i * depth as usize + (offset - 1) as usize]
+            },
+            &mut scratch,
+        );
+        self.prefetch_queue.clear();
+        self.prefetch_queue.extend_from_slice(&scratch.promote_out);
+        scratch.proj_ids = proj_ids;
+        scratch.proj = proj;
+        self.scratch = scratch;
+    }
+
+    /// Shared misprediction cleanup (see
+    /// [`ServingEngine::rebuild_prefetch_predictions`]).
+    fn cancel_stale_prefetches(&mut self, depth: u64) {
         for id in self.mgr.prefetched_ids() {
             if self.prefetch_queue.contains(&id) || !self.reqs.contains(id) {
                 continue;
@@ -64,6 +120,8 @@ impl ServingEngine {
                     self.mgr.cancel_prefetch(id, self.now)
                 {
                     self.alloc.as_dyn().release(id);
+                    // The speculative residency is gone: re-key.
+                    self.reqs.touch(id);
                 }
             }
         }
@@ -176,6 +234,9 @@ impl ServingEngine {
                 break;
             };
             let op = self.build_swap_in_op(id, &blocks);
+            // Whether the submit sticks or the blocks bounce right back,
+            // this request's residency/prefetch view changed: re-key.
+            self.reqs.touch(id);
             match self.mgr.submit_prefetch(op, self.now) {
                 PrefetchSubmit::Started => {
                     self.prefetch_queue.remove(i);
@@ -219,6 +280,9 @@ impl ServingEngine {
         match self.mgr.cancel_prefetch(victim, self.now)? {
             PrefetchCancel::Freed { .. } => {
                 self.alloc.as_dyn().release(victim);
+                // Blocks and prefetch-pending status changed under the
+                // victim's feet: re-key it in the candidate index.
+                self.reqs.touch(victim);
                 Some(self.now)
             }
             PrefetchCancel::Draining { done } => {

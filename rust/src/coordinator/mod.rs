@@ -9,6 +9,10 @@
 //!   budget: who runs, who is preempted, who swaps in, and how many
 //!   decode/prefill-chunk tokens each admitted request processes (pure,
 //!   unit-testable).
+//! - [`queue`] — the incremental bucketed candidate index and the
+//!   epoch-scratch arena: the default sublinear scheduler path, kept
+//!   byte-identical to [`scheduler::schedule`] (the retained oracle) and
+//!   updated only at dirty entries per epoch.
 //! - [`switch`] — the context-switch planner: every evict decision goes
 //!   through a pluggable [`switch::PreemptionPolicy`] (`swap_all` |
 //!   `cost_aware` | `partial_tail`) consulting a swap-vs-recompute cost
@@ -20,6 +24,7 @@
 
 pub mod engine;
 pub mod priority;
+pub mod queue;
 pub mod request;
 pub mod scheduler;
 pub mod switch;

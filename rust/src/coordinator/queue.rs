@@ -1,0 +1,792 @@
+//! Incremental candidate index: the sublinear scheduler epoch.
+//!
+//! [`crate::coordinator::scheduler::schedule`] re-collects every live
+//! request into a fresh `Vec<Candidate>` and full-sorts it each
+//! iteration — O(n log n) in total queue depth, with allocator churn on
+//! top. At the ROADMAP's north-star scale (100k+ queued requests per
+//! replica) that full re-sort, not PCIe, becomes the context-switch
+//! bottleneck. [`CandidateIndex`] keeps the same candidates in priority
+//! buckets (an ordered map of priority level → FCFS bucket, tie-broken
+//! `(turn_arrival, id)` — exactly the sort key of the legacy path),
+//! updated incrementally at the engine's state-change sites (arrival,
+//! turn fire, promote, preempt, finish, priority re-score) so only
+//! *dirty* entries are re-keyed per epoch.
+//!
+//! # Byte-identity with the sort-based oracle
+//!
+//! [`CandidateIndex::schedule_into`] must produce a [`Schedule`] equal
+//! field-for-field to `schedule()` on the same candidate set — the
+//! legacy path stays in the tree as the reference oracle, and
+//! `rust/tests/sched_scale.rs` churns both paths in lockstep asserting
+//! equality every epoch. The walk mirrors the oracle's three passes:
+//!
+//! 1. **Pinned swap-ins** (`pinned` buckets, highest priority first):
+//!    admitted unconditionally, blocks accounted first.
+//! 2. **Ranked admission** (`ranked` buckets): admit while the batch and
+//!    block budgets hold. The oracle does *not* stop at the first
+//!    non-fitting candidate — a later, smaller ask may still fit — so a
+//!    naive "stop at first miss" diverges. The walk instead stops only
+//!    when no unvisited candidate could possibly be admitted:
+//!    `admitted == max_batch`, or `blocks + min_need > total_blocks`
+//!    where `min_need` is the exact minimum `held + needed` over the
+//!    *unvisited* candidates, maintained as a counting multiset
+//!    (`need_counts`) that visited entries are deducted from during the
+//!    walk and restored to afterwards. Either condition implies the
+//!    oracle admits nothing further, so the walk is O(visited) with
+//!    visited ≈ admitted in steady state.
+//! 3. **Preempt sweep** (`resident` buckets): every on-GPU
+//!    (Running/Prefilling) candidate not admitted is preempted, in
+//!    bucket order — identical to the oracle's in-order preempt pushes
+//!    because `preempt` is exactly the resident complement of the
+//!    admitted set under the same total order.
+//!
+//! The grant pass then replays the oracle's decode-first / chunked-fill
+//! logic over the admitted candidates in admission order (which *is*
+//! sorted order). Epoch cost: O(admitted + dirty + preempted) instead
+//! of O(total log total).
+//!
+//! [`EpochScratch`] is the companion arena: every per-epoch vector, the
+//! membership set, and the prefetch-projection scratch are
+//! cleared-not-dropped between iterations so the steady-state epoch
+//! performs no heap allocation at all.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+
+use crate::coordinator::request::ReqState;
+use crate::coordinator::scheduler::{Candidate, IterBudget, Schedule, TokenGrant};
+use crate::memory::RequestId;
+use crate::sim::clock::Ns;
+
+/// Bucket key within one priority level: FCFS, then id — the tail of
+/// the oracle's `(priority desc, turn_arrival asc, id asc)` sort key.
+type BucketKey = (Ns, RequestId);
+/// Priority level → FCFS-ordered bucket; walked highest level first.
+type Buckets = BTreeMap<i64, BTreeSet<BucketKey>>;
+
+fn bucket_insert(map: &mut Buckets, priority: i64, key: BucketKey) {
+    map.entry(priority).or_default().insert(key);
+}
+
+fn bucket_remove(map: &mut Buckets, priority: i64, key: &BucketKey) {
+    if let Some(b) = map.get_mut(&priority) {
+        b.remove(key);
+        if b.is_empty() {
+            map.remove(&priority);
+        }
+    }
+}
+
+fn multiset_insert(ms: &mut BTreeMap<usize, usize>, k: usize) {
+    *ms.entry(k).or_insert(0) += 1;
+}
+
+fn multiset_remove(ms: &mut BTreeMap<usize, usize>, k: usize) {
+    match ms.get_mut(&k) {
+        Some(n) if *n > 1 => *n -= 1,
+        Some(_) => {
+            ms.remove(&k);
+        }
+        None => debug_assert!(false, "multiset underflow at key {k}"),
+    }
+}
+
+/// Buffers one admission walk reads and writes: the admitted-candidate
+/// sequence (grant pass input), the membership set (preempt sweep), and
+/// the `need_counts` restore log. Grouped so a walk borrows them as one
+/// unit alongside whichever [`Schedule`] it targets.
+#[derive(Clone, Debug, Default)]
+pub struct WalkScratch {
+    /// Admitted (grantable) candidates in admission = sorted order.
+    admit: Vec<Candidate>,
+    /// Admitted-membership set for the preempt sweep.
+    in_set: HashSet<RequestId>,
+    /// `need_counts` deductions to restore after an early-exited walk.
+    visited_needs: Vec<usize>,
+}
+
+impl WalkScratch {
+    fn clear(&mut self) {
+        self.admit.clear();
+        self.in_set.clear();
+        self.visited_needs.clear();
+    }
+}
+
+/// Reusable per-epoch scratch (the arena half of the tentpole): owned by
+/// the engine, `clear()`ed — never dropped — between iterations, so the
+/// candidate vector, schedule vectors, membership set, and prefetch
+/// projection buffers all retain their high-water capacity.
+#[derive(Clone, Debug, Default)]
+pub struct EpochScratch {
+    /// Sort-path candidate list (the oracle's input), reused.
+    pub cands: Vec<Candidate>,
+    /// The iteration's schedule — both paths write here.
+    pub sched: Schedule,
+    /// Dirty request ids drained from the table each refresh.
+    pub dirty: Vec<RequestId>,
+    /// Admission-walk working set.
+    pub walk: WalkScratch,
+    /// `(id, previous priority, projected priority)` re-key log for
+    /// projection application and rollback.
+    pub moved: Vec<(RequestId, i64, i64)>,
+    /// Scratch schedule for projection walks (`sched` may still be
+    /// borrowed by the iteration when the prefetch pass runs).
+    pub predict_sched: Schedule,
+    /// Projected promotions accumulated across lookahead offsets.
+    pub promote_out: Vec<RequestId>,
+    /// Prefetch projection scratch: candidate ids, row-major with
+    /// `proj[i * depth + (offset-1)]` the projected priority of
+    /// `proj_ids[i]` at `offset` epochs ahead.
+    pub proj_ids: Vec<RequestId>,
+    pub proj: Vec<i64>,
+}
+
+impl EpochScratch {
+    /// Clear every buffer, retaining capacity.
+    pub fn clear(&mut self) {
+        self.cands.clear();
+        self.sched.clear();
+        self.dirty.clear();
+        self.walk.clear();
+        self.moved.clear();
+        self.predict_sched.clear();
+        self.promote_out.clear();
+        self.proj_ids.clear();
+        self.proj.clear();
+    }
+}
+
+/// The bucketed candidate index. See the module docs for the walk's
+/// byte-identity argument; see [`CandidateIndex::upsert`] /
+/// [`CandidateIndex::remove`] for the incremental-maintenance contract.
+#[derive(Clone, Debug, Default)]
+pub struct CandidateIndex {
+    /// Current candidate snapshot per request — the removal/re-key
+    /// handle and the `blocks_needed` lookup for the partial sweep.
+    entries: HashMap<RequestId, Candidate>,
+    /// Pass-2 population: every candidate except in-flight swap-ins.
+    ranked: Buckets,
+    /// Pass-1 population: pinned in-flight swap-ins.
+    pinned: Buckets,
+    /// Preempt-sweep population: Running / Prefilling candidates.
+    resident: Buckets,
+    /// Counting multiset of `held + needed` over the `ranked`
+    /// population — the early-exit lower bound.
+    need_counts: BTreeMap<usize, usize>,
+    /// GPU KV capacity in blocks; [`CandidateIndex::upsert`] fails fast
+    /// on a candidate that could never be admitted (the oracle's
+    /// per-call capacity assert, moved to update time).
+    capacity: usize,
+}
+
+impl CandidateIndex {
+    pub fn new(capacity: usize) -> Self {
+        CandidateIndex {
+            capacity,
+            ..CandidateIndex::default()
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Current candidate snapshot for `id`, if indexed.
+    pub fn get(&self, id: RequestId) -> Option<&Candidate> {
+        self.entries.get(&id)
+    }
+
+    /// Indexed request ids, in unspecified (hash-map) order — callers
+    /// that need determinism sort the collected ids themselves.
+    pub fn ids(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.entries.keys().copied()
+    }
+
+    fn attach(&mut self, c: &Candidate) {
+        let key = (c.turn_arrival, c.id);
+        if c.state == ReqState::SwappingIn {
+            bucket_insert(&mut self.pinned, c.priority, key);
+        } else {
+            bucket_insert(&mut self.ranked, c.priority, key);
+            multiset_insert(&mut self.need_counts, c.blocks_held + c.blocks_needed);
+            if matches!(c.state, ReqState::Running | ReqState::Prefilling) {
+                bucket_insert(&mut self.resident, c.priority, key);
+            }
+        }
+    }
+
+    fn detach(&mut self, c: &Candidate) {
+        let key = (c.turn_arrival, c.id);
+        if c.state == ReqState::SwappingIn {
+            bucket_remove(&mut self.pinned, c.priority, &key);
+        } else {
+            bucket_remove(&mut self.ranked, c.priority, &key);
+            multiset_remove(&mut self.need_counts, c.blocks_held + c.blocks_needed);
+            if matches!(c.state, ReqState::Running | ReqState::Prefilling) {
+                bucket_remove(&mut self.resident, c.priority, &key);
+            }
+        }
+    }
+
+    /// Insert or re-key one candidate. The engine calls this for every
+    /// *dirty* request at the top of the iteration — any request whose
+    /// state, priority, turn arrival, residency, or block demand may
+    /// have changed since the last refresh.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `blocks_needed` exceeds the GPU capacity — the same
+    /// "could never be admitted, would starve forever" misconfiguration
+    /// the sort-based `schedule()` fails fast on, caught at update time.
+    pub fn upsert(&mut self, c: Candidate) {
+        assert!(
+            c.blocks_needed <= self.capacity,
+            "capacity misconfiguration: request {} needs {} fresh GPU \
+             blocks but the KV space has only {} in total — it could \
+             never be admitted and would starve in the queue forever; \
+             reject it at arrival (max-model-len) or provision more blocks",
+            c.id,
+            c.blocks_needed,
+            self.capacity
+        );
+        if let Some(old) = self.entries.insert(c.id, c) {
+            self.detach(&old);
+        }
+        self.attach(&c);
+    }
+
+    /// Drop a request from the index (finished, rejected, migrated, or
+    /// parked in a non-schedulable state). Returns whether it was
+    /// present.
+    pub fn remove(&mut self, id: RequestId) -> bool {
+        match self.entries.remove(&id) {
+            Some(old) => {
+                self.detach(&old);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Re-key one entry to a projected priority (lookahead pass). The
+    /// block-demand multiset round-trips through detach/attach, so only
+    /// the bucket position moves.
+    fn rekey(&mut self, id: RequestId, priority: i64) {
+        if let Some(mut c) = self.entries.get(&id).copied() {
+            self.detach(&c);
+            c.priority = priority;
+            self.entries.insert(id, c);
+            self.attach(&c);
+        }
+    }
+
+    /// Build this iteration's schedule into `scratch.sched` —
+    /// byte-identical to `schedule()` over the same candidates, at
+    /// O(admitted + preempted) instead of O(total log total).
+    pub fn schedule_into(
+        &mut self,
+        total_blocks: usize,
+        max_batch: usize,
+        budget: IterBudget,
+        scratch: &mut EpochScratch,
+    ) {
+        let EpochScratch { sched, walk, .. } = scratch;
+        self.walk(total_blocks, max_batch, budget, sched, walk);
+    }
+
+    fn walk(
+        &mut self,
+        total_blocks: usize,
+        max_batch: usize,
+        budget: IterBudget,
+        out: &mut Schedule,
+        ws: &mut WalkScratch,
+    ) {
+        out.clear();
+        ws.clear();
+        let WalkScratch {
+            admit,
+            in_set,
+            visited_needs,
+        } = ws;
+        let mut blocks = 0usize;
+        let mut admitted = 0usize;
+
+        // Pass 1: pinned in-flight swap-ins, highest priority first.
+        for bucket in self.pinned.values().rev() {
+            for &(_, id) in bucket {
+                let c = &self.entries[&id];
+                blocks += c.blocks_held + c.blocks_needed;
+                admitted += 1;
+                out.keep.push(id);
+                in_set.insert(id);
+            }
+        }
+
+        // Pass 2: ranked admission with the exact early exit. Visited
+        // entries are deducted from `need_counts` so the bound is the
+        // minimum over *unvisited* candidates only.
+        'walk: for bucket in self.ranked.values().rev() {
+            for &(_, id) in bucket {
+                if admitted >= max_batch {
+                    break 'walk;
+                }
+                match self.need_counts.keys().next() {
+                    None => break 'walk,
+                    Some(&min_need) if blocks + min_need > total_blocks => break 'walk,
+                    Some(_) => {}
+                }
+                let c = self.entries[&id];
+                let need = c.blocks_held + c.blocks_needed;
+                multiset_remove(&mut self.need_counts, need);
+                visited_needs.push(need);
+                if blocks + need <= total_blocks {
+                    blocks += need;
+                    admitted += 1;
+                    in_set.insert(id);
+                    match c.state {
+                        ReqState::Running | ReqState::Prefilling => out.keep.push(id),
+                        ReqState::SwappedOut => out.promote.push(id),
+                        ReqState::Queued => {
+                            debug_assert_eq!(
+                                c.blocks_held, 0,
+                                "queued request holding GPU blocks"
+                            );
+                            out.start.push(id);
+                        }
+                        _ => {}
+                    }
+                    admit.push(c);
+                }
+                // Not admitted: if resident it falls out of the sweep
+                // below, exactly like the oracle's in-pass preempt push.
+            }
+        }
+        for &need in visited_needs.iter() {
+            multiset_insert(&mut self.need_counts, need);
+        }
+
+        // Pass 2b: preempt sweep — resident complement of the admitted
+        // set, in the same total order the oracle emits preempts in.
+        for bucket in self.resident.values().rev() {
+            for &(_, id) in bucket {
+                if !in_set.contains(&id) {
+                    out.preempt.push(id);
+                }
+            }
+        }
+
+        // Pass 3: token grants over the admitted (non-swap-in) set in
+        // admission order — a verbatim replay of the oracle's grant
+        // logic over the identical sequence.
+        if budget.monolithic {
+            let any_prefill = admit.iter().any(|c| c.prefill_remaining > 0);
+            for c in admit.iter() {
+                if any_prefill {
+                    if c.prefill_remaining > 0 {
+                        out.grants.push(TokenGrant {
+                            id: c.id,
+                            decode: 0,
+                            prefill: c.prefill_remaining,
+                        });
+                    }
+                } else {
+                    out.grants.push(TokenGrant {
+                        id: c.id,
+                        decode: 1,
+                        prefill: 0,
+                    });
+                }
+            }
+        } else {
+            let decode_claims =
+                admit.iter().filter(|c| c.prefill_remaining == 0).count() as u32;
+            let mut left = budget.max_tokens.max(decode_claims);
+            for c in admit.iter() {
+                if left == 0 {
+                    break;
+                }
+                if c.prefill_remaining == 0 {
+                    out.grants.push(TokenGrant {
+                        id: c.id,
+                        decode: 1,
+                        prefill: 0,
+                    });
+                    left -= 1;
+                }
+            }
+            for c in admit.iter() {
+                if left == 0 {
+                    break;
+                }
+                if c.prefill_remaining > 0 {
+                    let take = c.prefill_remaining.min(budget.chunk).min(left);
+                    out.grants.push(TokenGrant {
+                        id: c.id,
+                        decode: 0,
+                        prefill: take,
+                    });
+                    left -= take;
+                }
+            }
+        }
+    }
+
+    /// Incremental lookahead projection into `scratch.promote_out` —
+    /// the bucketed counterpart of `predict_admission()`, byte-identical
+    /// output. Per offset only the entries whose projected priority
+    /// *moved* are re-keyed (and rolled back afterwards), so an offset
+    /// costs O(moved log n + walk) instead of a full O(n log n) re-sort.
+    ///
+    /// `future_priority` may be called in arbitrary per-offset order
+    /// (the oracle calls it in candidate-vector order) — it must be a
+    /// pure function of `(id, offset)`, which every live policy's
+    /// projection is.
+    pub fn predict_into(
+        &mut self,
+        total_blocks: usize,
+        max_batch: usize,
+        depth: u64,
+        mut future_priority: impl FnMut(RequestId, u64) -> i64,
+        scratch: &mut EpochScratch,
+    ) {
+        scratch.promote_out.clear();
+        for offset in 1..=depth {
+            // Snapshot the moved set first (the entries map cannot be
+            // mutated mid-iteration), then apply, walk, and roll back.
+            scratch.moved.clear();
+            for (&id, c) in self.entries.iter() {
+                let p = future_priority(id, offset);
+                if p != c.priority {
+                    scratch.moved.push((id, c.priority, p));
+                }
+            }
+            for &(id, _, projected) in scratch.moved.iter() {
+                self.rekey(id, projected);
+            }
+            let EpochScratch {
+                predict_sched,
+                walk,
+                ..
+            } = scratch;
+            self.walk(
+                total_blocks,
+                max_batch,
+                IterBudget::chunked(1, 1),
+                predict_sched,
+                walk,
+            );
+            for &id in &scratch.predict_sched.promote {
+                if !scratch.promote_out.contains(&id) {
+                    scratch.promote_out.push(id);
+                }
+            }
+            for &(id, previous, _) in scratch.moved.iter() {
+                self.rekey(id, previous);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{predict_admission, schedule};
+
+    fn cand(
+        id: RequestId,
+        priority: i64,
+        state: ReqState,
+        held: usize,
+        needed: usize,
+    ) -> Candidate {
+        Candidate {
+            id,
+            priority,
+            turn_arrival: id,
+            state,
+            blocks_held: held,
+            blocks_needed: needed,
+            prefill_remaining: match state {
+                ReqState::Prefilling | ReqState::Queued => 64,
+                _ => 0,
+            },
+        }
+    }
+
+    fn index_of(cands: &[Candidate], capacity: usize) -> CandidateIndex {
+        let mut ix = CandidateIndex::new(capacity);
+        for &c in cands {
+            ix.upsert(c);
+        }
+        ix
+    }
+
+    fn assert_matches_oracle(
+        cands: &[Candidate],
+        total_blocks: usize,
+        max_batch: usize,
+        budget: IterBudget,
+    ) {
+        let oracle = schedule(cands, total_blocks, max_batch, budget);
+        let mut ix = index_of(cands, total_blocks);
+        let mut scratch = EpochScratch::default();
+        ix.schedule_into(total_blocks, max_batch, budget, &mut scratch);
+        assert_eq!(scratch.sched, oracle);
+    }
+
+    fn wide() -> IterBudget {
+        IterBudget::chunked(4096, 512)
+    }
+
+    #[test]
+    fn matches_oracle_on_the_pinned_scheduler_shapes() {
+        // The exact candidate sets the scheduler unit tests pin.
+        assert_matches_oracle(
+            &[
+                cand(1, 1, ReqState::Running, 10, 1),
+                cand(2, 9, ReqState::SwappedOut, 0, 10),
+                cand(3, 5, ReqState::Running, 10, 1),
+            ],
+            22,
+            8,
+            wide(),
+        );
+        let batch: Vec<Candidate> =
+            (0..6).map(|i| cand(i, 5, ReqState::Running, 1, 0)).collect();
+        assert_matches_oracle(&batch, 1000, 4, wide());
+        assert_matches_oracle(
+            &[
+                cand(1, 0, ReqState::SwappingIn, 0, 10),
+                cand(2, 9, ReqState::SwappedOut, 0, 10),
+            ],
+            10,
+            8,
+            wide(),
+        );
+        assert_matches_oracle(
+            &[
+                cand(1, 1, ReqState::SwappedOut, 0, 10),
+                cand(2, 2, ReqState::Queued, 0, 10),
+            ],
+            10,
+            8,
+            wide(),
+        );
+        assert_matches_oracle(&[], 100, 8, wide());
+    }
+
+    #[test]
+    fn matches_oracle_when_a_later_smaller_ask_still_fits() {
+        // The shape a naive first-miss early exit gets wrong: the
+        // priority-8 candidate does not fit, the priority-7 one does.
+        assert_matches_oracle(
+            &[
+                cand(1, 9, ReqState::Running, 6, 0),
+                cand(2, 8, ReqState::SwappedOut, 0, 8),
+                cand(3, 7, ReqState::SwappedOut, 0, 4),
+                cand(4, 6, ReqState::Queued, 0, 2),
+            ],
+            10,
+            8,
+            wide(),
+        );
+    }
+
+    #[test]
+    fn matches_oracle_on_grant_budgets() {
+        let mut p = cand(1, 9, ReqState::Prefilling, 0, 4);
+        p.prefill_remaining = 100;
+        let cands = vec![
+            p,
+            cand(2, 1, ReqState::Running, 4, 1),
+            cand(3, 2, ReqState::Running, 4, 1),
+        ];
+        assert_matches_oracle(&cands, 100, 8, IterBudget::chunked(10, 64));
+        assert_matches_oracle(&cands, 100, 8, IterBudget::chunked(2, 64));
+        assert_matches_oracle(&cands, 100, 8, IterBudget::monolithic());
+        assert_matches_oracle(&cands, 100, 8, IterBudget::chunked(1, 1));
+    }
+
+    #[test]
+    fn upsert_rekeys_and_remove_detaches() {
+        let mut ix = CandidateIndex::new(100);
+        let mut scratch = EpochScratch::default();
+        let mut cands = vec![
+            cand(1, 5, ReqState::Running, 4, 1),
+            cand(2, 3, ReqState::SwappedOut, 0, 6),
+        ];
+        for &c in &cands {
+            ix.upsert(c);
+        }
+        // Re-score request 2 above request 1 and re-check equivalence.
+        cands[1].priority = 9;
+        ix.upsert(cands[1]);
+        let oracle = schedule(&cands, 100, 8, wide());
+        ix.schedule_into(100, 8, wide(), &mut scratch);
+        assert_eq!(scratch.sched, oracle);
+        // Finish request 1: the index must forget it entirely.
+        assert!(ix.remove(1));
+        assert!(!ix.remove(1), "double remove");
+        let oracle = schedule(&cands[1..], 100, 8, wide());
+        ix.schedule_into(100, 8, wide(), &mut scratch);
+        assert_eq!(scratch.sched, oracle);
+        assert_eq!(ix.len(), 1);
+    }
+
+    #[test]
+    fn early_exit_restores_the_need_multiset() {
+        // A batch-limited walk visits only `max_batch` entries; the
+        // deducted needs must be restored or the next walk diverges.
+        let cands: Vec<Candidate> = (0..16)
+            .map(|i| cand(i, 5, ReqState::SwappedOut, 0, 2))
+            .collect();
+        let mut ix = index_of(&cands, 1000);
+        let mut scratch = EpochScratch::default();
+        for _ in 0..3 {
+            let oracle = schedule(&cands, 1000, 4, wide());
+            ix.schedule_into(1000, 4, wide(), &mut scratch);
+            assert_eq!(scratch.sched, oracle);
+        }
+    }
+
+    #[test]
+    fn predict_matches_oracle_including_order_and_dedup() {
+        let cands = vec![
+            cand(1, 9, ReqState::Running, 10, 0),
+            cand(2, 1, ReqState::SwappedOut, 0, 10),
+        ];
+        let future = |id: RequestId, offset: u64| match (id, offset) {
+            (1, 2) => 1,
+            (2, 2) => 9,
+            (1, _) => 9,
+            (2, _) => 1,
+            _ => unreachable!(),
+        };
+        let mut ix = index_of(&cands, 10);
+        let mut scratch = EpochScratch::default();
+        for depth in 0..=3 {
+            let oracle = predict_admission(&cands, 10, 8, depth, future);
+            ix.predict_into(10, 8, depth, future, &mut scratch);
+            assert_eq!(scratch.promote_out, oracle, "depth {depth}");
+        }
+        // Projection must leave the index untouched: the live schedule
+        // afterwards still matches the oracle on current priorities.
+        let oracle = schedule(&cands, 10, 8, wide());
+        ix.schedule_into(10, 8, wide(), &mut scratch);
+        assert_eq!(scratch.sched, oracle);
+    }
+
+    #[test]
+    fn predict_orders_by_first_projected_admission() {
+        let cands = vec![
+            cand(2, 0, ReqState::SwappedOut, 0, 10),
+            cand(3, 0, ReqState::SwappedOut, 0, 10),
+        ];
+        let future = |id: RequestId, offset: u64| match (id, offset) {
+            (3, 1) => 9,
+            (2, 1) => 1,
+            _ => 5,
+        };
+        let mut ix = index_of(&cands, 10);
+        let mut scratch = EpochScratch::default();
+        ix.predict_into(10, 8, 2, future, &mut scratch);
+        assert_eq!(scratch.promote_out, vec![3, 2]);
+        assert_eq!(
+            predict_admission(&cands, 10, 8, 2, future),
+            scratch.promote_out
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity misconfiguration")]
+    fn impossible_candidate_fails_fast_at_upsert() {
+        let mut ix = CandidateIndex::new(100);
+        ix.upsert(cand(7, 5, ReqState::Queued, 0, 101));
+    }
+
+    #[test]
+    fn seeded_churn_stays_byte_identical_to_the_oracle() {
+        // Miniature of the `tests/sched_scale.rs` suite, kept here so
+        // the invariant is enforced at unit granularity too.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x5EED_10);
+        let total_blocks = 64;
+        let mut cands: Vec<Candidate> = Vec::new();
+        let mut ix = CandidateIndex::new(total_blocks);
+        let mut scratch = EpochScratch::default();
+        let mut next_id = 0u64;
+        for epoch in 0..400 {
+            // One churn op per epoch: arrive / finish / re-score / flip.
+            let op = rng.usize(0, 4);
+            match op {
+                0 => {
+                    let states = [
+                        ReqState::Queued,
+                        ReqState::SwappedOut,
+                        ReqState::Running,
+                        ReqState::Prefilling,
+                        ReqState::SwappingIn,
+                    ];
+                    let state = states[rng.usize(0, states.len())];
+                    let held = match state {
+                        ReqState::Running | ReqState::Prefilling => rng.usize(1, 6),
+                        _ => 0,
+                    };
+                    let mut c = cand(
+                        next_id,
+                        rng.usize(0, 8) as i64,
+                        state,
+                        held,
+                        rng.usize(0, 9),
+                    );
+                    c.turn_arrival = rng.usize(0, 1000) as Ns;
+                    next_id += 1;
+                    cands.push(c);
+                    ix.upsert(c);
+                }
+                1 if !cands.is_empty() => {
+                    let i = rng.usize(0, cands.len());
+                    let gone = cands.swap_remove(i);
+                    ix.remove(gone.id);
+                }
+                2 if !cands.is_empty() => {
+                    let i = rng.usize(0, cands.len());
+                    cands[i].priority = rng.usize(0, 8) as i64;
+                    ix.upsert(cands[i]);
+                }
+                3 if !cands.is_empty() => {
+                    // Promote/preempt-style flip: state + residency move.
+                    let i = rng.usize(0, cands.len());
+                    let c = &mut cands[i];
+                    if c.state == ReqState::SwappedOut {
+                        c.state = ReqState::Running;
+                        c.blocks_held = c.blocks_needed.max(1);
+                        c.blocks_needed = 0;
+                    } else {
+                        c.state = ReqState::SwappedOut;
+                        c.blocks_needed =
+                            (c.blocks_held + c.blocks_needed).clamp(1, total_blocks);
+                        c.blocks_held = 0;
+                    }
+                    let c = cands[i];
+                    ix.upsert(c);
+                }
+                _ => {}
+            }
+            let max_batch = 1 + rng.usize(0, 8);
+            let budget = if epoch % 7 == 0 {
+                IterBudget::monolithic()
+            } else {
+                IterBudget::chunked(1 + rng.usize(0, 64) as u32, 16)
+            };
+            let oracle = schedule(&cands, total_blocks, max_batch, budget);
+            ix.schedule_into(total_blocks, max_batch, budget, &mut scratch);
+            assert_eq!(scratch.sched, oracle, "diverged at epoch {epoch}");
+        }
+    }
+}

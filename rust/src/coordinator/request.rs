@@ -215,14 +215,24 @@ impl Request {
 }
 
 /// All live requests, indexed by id.
+///
+/// The table doubles as the scheduler's dirty-tracking choke point
+/// (see [`crate::coordinator::queue`]): every mutable access marks the
+/// request dirty, and the engine drains the dirty set each iteration to
+/// re-key only changed entries in the incremental candidate index.
+/// External events that change a request's scheduler view without
+/// touching the record itself (block allocation, prefetch submission)
+/// are reported via [`RequestTable::touch`].
 #[derive(Clone, Debug, Default)]
 pub struct RequestTable {
     reqs: Vec<Request>,
     index: std::collections::HashMap<RequestId, usize>,
+    dirty: std::collections::HashSet<RequestId>,
 }
 
 impl RequestTable {
     pub fn insert(&mut self, r: Request) {
+        self.dirty.insert(r.id);
         self.index.insert(r.id, self.reqs.len());
         self.reqs.push(r);
     }
@@ -231,7 +241,12 @@ impl RequestTable {
         &self.reqs[self.index[&id]]
     }
 
+    pub fn try_get(&self, id: RequestId) -> Option<&Request> {
+        self.index.get(&id).map(|&i| &self.reqs[i])
+    }
+
     pub fn get_mut(&mut self, id: RequestId) -> &mut Request {
+        self.dirty.insert(id);
         &mut self.reqs[self.index[&id]]
     }
 
@@ -239,11 +254,27 @@ impl RequestTable {
         self.index.contains_key(&id)
     }
 
+    /// Mark a request's scheduler view dirty without mutating the
+    /// record — for residency/prefetch changes tracked outside the
+    /// table (allocator grants and releases, swap-manager transitions).
+    pub fn touch(&mut self, id: RequestId) {
+        self.dirty.insert(id);
+    }
+
+    /// Drain the accumulated dirty set into `out` (cleared first). The
+    /// order is unspecified; per-id index refreshes are
+    /// order-independent.
+    pub fn drain_dirty_into(&mut self, out: &mut Vec<RequestId>) {
+        out.clear();
+        out.extend(self.dirty.drain());
+    }
+
     /// Remove a request entirely (cluster migration: the conversation
     /// leaves this replica and may later return under the same id, so a
     /// stale record must not linger). Swap-remove keeps the index dense.
     pub fn remove(&mut self, id: RequestId) -> Option<Request> {
         let idx = self.index.remove(&id)?;
+        self.dirty.insert(id);
         let r = self.reqs.swap_remove(idx);
         if idx < self.reqs.len() {
             let moved = self.reqs[idx].id;
@@ -257,6 +288,7 @@ impl RequestTable {
     }
 
     pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut Request> {
+        self.dirty.extend(self.reqs.iter().map(|r| r.id));
         self.reqs.iter_mut()
     }
 
@@ -436,6 +468,29 @@ mod tests {
         assert_eq!(t.ids_in_state(ReqState::Queued), vec![1]);
         assert_eq!(t.ids_in_state(ReqState::Running), vec![2]);
         assert!(!t.all_finished());
+    }
+
+    #[test]
+    fn table_tracks_dirty_ids_across_mutation_paths() {
+        let mut t = RequestTable::default();
+        let mut dirty = Vec::new();
+        t.insert(Request::new(1, conv(&[(10, 10)]), 0));
+        t.insert(Request::new(2, conv(&[(10, 10)]), 0));
+        t.drain_dirty_into(&mut dirty);
+        dirty.sort_unstable();
+        assert_eq!(dirty, vec![1, 2], "insert marks dirty");
+        t.drain_dirty_into(&mut dirty);
+        assert!(dirty.is_empty(), "drain clears the set");
+        t.get_mut(2).state = ReqState::Running;
+        t.touch(1);
+        t.drain_dirty_into(&mut dirty);
+        dirty.sort_unstable();
+        assert_eq!(dirty, vec![1, 2], "get_mut and touch mark dirty");
+        t.remove(1);
+        t.drain_dirty_into(&mut dirty);
+        assert_eq!(dirty, vec![1], "remove marks dirty");
+        assert!(t.try_get(1).is_none());
+        assert_eq!(t.try_get(2).map(|r| r.id), Some(2));
     }
 
     #[test]

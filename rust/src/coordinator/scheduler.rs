@@ -139,6 +139,18 @@ impl Schedule {
             .map(|g| (g.decode + g.prefill) as u64)
             .sum()
     }
+
+    /// Empty every membership and grant vector, retaining capacity —
+    /// the epoch-scratch arena ([`crate::coordinator::queue`]) reuses
+    /// one `Schedule` across iterations instead of reallocating five
+    /// vectors per epoch.
+    pub fn clear(&mut self) {
+        self.keep.clear();
+        self.promote.clear();
+        self.start.clear();
+        self.preempt.clear();
+        self.grants.clear();
+    }
 }
 
 fn on_gpu(state: ReqState) -> bool {

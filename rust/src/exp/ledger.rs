@@ -2,12 +2,17 @@
 //! matrix, regenerated into a schema-stable `BENCH_PR<N>.json` at the
 //! repo root so every performance delta shows up as a reviewable diff.
 //!
-//! The matrix has four sections (schema in [`crate::obs::ledger`]):
+//! The matrix sections (schema in [`crate::obs::ledger`]):
 //!
 //! - **hotpath** — ns/op micro-measurements of the L3 hot operations
 //!   (RNG draw, reservoir insert, trace emit on/off, percentile merge);
 //! - **scheduler_epoch** — mean wall-ns per priority-update epoch by
 //!   pipeline stage, from the [`crate::obs::EpochProfiler`];
+//! - **sched_scale** — scheduler epoch ns/op at queue depths 10²–10⁵
+//!   for the sort-based oracle vs the incremental
+//!   [`crate::coordinator::queue::CandidateIndex`], asserting
+//!   byte-identical schedules while timing (the ratio must grow with
+//!   depth — that is the sublinearity claim);
 //! - **throughput** — end-to-end tokens/s at 1 and 3 replicas on the
 //!   bursty 6-tenant churn mix;
 //! - **parallel** — wall-clock of the 3-replica churn run under the
@@ -34,16 +39,19 @@ use crate::cluster::ClusterConfig;
 use crate::config::{EngineConfig, Preset};
 use crate::coordinator::priority::Pattern;
 use crate::fairness::PolicyKind;
+use crate::coordinator::queue::{CandidateIndex, EpochScratch};
+use crate::coordinator::request::ReqState;
+use crate::coordinator::scheduler::{schedule, Candidate, IterBudget};
 use crate::obs::ledger::{
-    EpochCost, HotpathRow, Ledger, LedgerConfig, ParallelRow, PolicyRow, ThroughputRow,
-    LEDGER_SCHEMA,
+    EpochCost, HotpathRow, Ledger, LedgerConfig, ParallelRow, PolicyRow, SchedScaleRow,
+    ThroughputRow, LEDGER_SCHEMA,
 };
 use crate::obs::{Reservoir, Stage, TraceEvent, TraceSink};
 use crate::util::rng::Rng;
 use crate::util::stats::Percentiles;
 
 /// The PR this tree's ledger is stamped with.
-pub const PR: u32 = 9;
+pub const PR: u32 = 10;
 
 /// The churn mix every section measures under — identical to the
 /// preemption showdown's (6 tenants, bursty arrivals, VTC, hard
@@ -106,6 +114,104 @@ fn hotpath_rows() -> Vec<HotpathRow> {
             black_box(Percentiles::merged(parts.clone()).p(99.0));
         }),
     ]
+}
+
+/// Queue depths the scheduler-scale sweep measures at. Anything below
+/// the default conversation count is a quick run (the CI smoke and the
+/// unit test), which stops at the 10³ cell so it stays fast; the full
+/// run sweeps to the 100k-deep queue the sublinearity claim is about.
+fn sched_scale_depths(scale: &Scale) -> &'static [usize] {
+    if scale.conversations < Scale::default().conversations {
+        &[100, 1_000]
+    } else {
+        &[100, 1_000, 10_000, 100_000]
+    }
+}
+
+/// A plausible parked-fleet candidate: a thin resident slice on top of
+/// a deep swapped-out backlog — the regime where the sort-based oracle
+/// pays O(n log n) per epoch for an O(admitted) decision.
+fn synth_candidate(id: u64, rng: &mut Rng) -> Candidate {
+    let (state, blocks_held, blocks_needed, prefill_remaining) = match rng.usize(0, 16) {
+        0 => (ReqState::Running, rng.usize(4, 16), rng.usize(0, 2), 0u32),
+        1 => (ReqState::Prefilling, rng.usize(1, 8), rng.usize(0, 2), 96),
+        2 => (ReqState::Queued, 0, rng.usize(1, 16), rng.usize(64, 512) as u32),
+        _ => (ReqState::SwappedOut, 0, rng.usize(1, 16), 0),
+    };
+    Candidate {
+        id,
+        priority: rng.usize(0, 8) as i64,
+        turn_arrival: rng.next_u64() % 1_000_000,
+        state,
+        blocks_held,
+        blocks_needed,
+        prefill_remaining,
+    }
+}
+
+/// Time one scheduling epoch over a synthetic `depth`-deep population
+/// for both scheduler paths, asserting byte-identical schedules while
+/// the clock runs. The churn per epoch is fixed (32 re-keys — what a
+/// priority-update epoch actually dirties), so the incremental cost
+/// should stay flat as `depth` grows while the sort cost keeps
+/// climbing.
+fn sched_scale_row(depth: usize) -> SchedScaleRow {
+    const TOTAL_BLOCKS: usize = 1_024;
+    const MAX_BATCH: usize = 64;
+    const CHURN: usize = 32;
+    let budget = IterBudget::chunked(256, 64);
+    let mut rng = Rng::new(0x5CA1E ^ depth as u64);
+    let mut cands: Vec<Candidate> = (0..depth as u64)
+        .map(|id| synth_candidate(id, &mut rng))
+        .collect();
+    let mut index = CandidateIndex::new(TOTAL_BLOCKS);
+    for &c in &cands {
+        index.upsert(c);
+    }
+    let mut scratch = EpochScratch::default();
+    // Fewer timing epochs at the deep end keep the sweep bounded; the
+    // per-epoch work there is large enough to time reliably anyway.
+    let epochs = (1_000_000 / depth).clamp(8, 512);
+    let mut sort_ns = 0u128;
+    let mut incremental_ns = 0u128;
+    let mut touched = Vec::with_capacity(CHURN);
+    for _ in 0..epochs {
+        // Identical churn feeds both paths.
+        touched.clear();
+        for _ in 0..CHURN {
+            let i = rng.usize(0, depth);
+            cands[i].priority = rng.usize(0, 8) as i64;
+            touched.push(i);
+        }
+        let t_inc = Instant::now();
+        for &i in &touched {
+            index.upsert(cands[i]);
+        }
+        index.schedule_into(TOTAL_BLOCKS, MAX_BATCH, budget, &mut scratch);
+        incremental_ns += t_inc.elapsed().as_nanos();
+        let t_sort = Instant::now();
+        let oracle = schedule(&cands, TOTAL_BLOCKS, MAX_BATCH, budget);
+        sort_ns += t_sort.elapsed().as_nanos();
+        assert_eq!(
+            scratch.sched, oracle,
+            "incremental scheduler diverged from the sort oracle at depth {depth}"
+        );
+    }
+    let sort_ns_per_epoch = sort_ns as f64 / epochs as f64;
+    let incremental_ns_per_epoch = incremental_ns as f64 / epochs as f64;
+    SchedScaleRow {
+        depth,
+        sort_ns_per_epoch,
+        incremental_ns_per_epoch,
+        ratio: sort_ns_per_epoch / incremental_ns_per_epoch.max(1.0),
+    }
+}
+
+fn sched_scale_rows(scale: &Scale) -> Vec<SchedScaleRow> {
+    sched_scale_depths(scale)
+        .iter()
+        .map(|&d| sched_scale_row(d))
+        .collect()
 }
 
 /// Measure the full matrix at `scale`.
@@ -214,6 +320,7 @@ pub fn build(scale: &Scale) -> Ledger {
         },
         hotpath: hotpath_rows(),
         scheduler_epoch,
+        sched_scale: sched_scale_rows(scale),
         throughput,
         parallel,
         policies,
@@ -237,6 +344,13 @@ pub fn run(scale: &Scale, out_path: &str) -> Report {
         "total_ns_mean".into(),
         f2(ledger.scheduler_epoch.total_ns_mean),
     ]);
+    for s in &ledger.sched_scale {
+        rep.row(vec![
+            "sched_scale".into(),
+            format!("depth {} sort/incremental", s.depth),
+            f2(s.ratio),
+        ]);
+    }
     for t in &ledger.throughput {
         rep.row(vec![
             "throughput".into(),
@@ -305,6 +419,17 @@ mod tests {
         assert!(l.parallel.speedup.is_finite() && l.parallel.speedup > 0.0);
         assert!(!l.hotpath.is_empty());
         assert!(l.hotpath.iter().all(|h| h.ns_per_op.is_finite()));
+        // Quick scale sweeps the 10² and 10³ cells; the row itself
+        // asserts byte-identity between the two scheduler paths. No
+        // ratio floor here — debug-build timings are too noisy for
+        // that; the release-mode BENCH run is where the claim is held.
+        assert_eq!(l.sched_scale.len(), 2);
+        assert!(l.sched_scale.windows(2).all(|w| w[0].depth < w[1].depth));
+        for s in &l.sched_scale {
+            assert!(s.sort_ns_per_epoch > 0.0);
+            assert!(s.incremental_ns_per_epoch > 0.0);
+            assert!(s.ratio.is_finite() && s.ratio > 0.0);
+        }
         let j = l.to_json();
         assert!(j.contains(LEDGER_SCHEMA));
         assert_eq!(j.matches('{').count(), j.matches('}').count());

@@ -15,8 +15,9 @@
 //! fastswitch exp ledger [--ledger-out FILE] [--conversations N] [--seed S]
 //!     Measure the per-PR perf ledger matrix (hotpath ns/op, scheduler
 //!     epoch cost, throughput at 1/3 replicas, deterministic-vs-threaded
-//!     executor wall-clock, per-policy tail latency) and write the
-//!     schema-stable JSON (default BENCH_PR9.json).
+//!     executor wall-clock, per-policy tail latency, scheduler-scale
+//!     depth sweep) and write the schema-stable JSON (default
+//!     BENCH_PR10.json).
 //!
 //! fastswitch exp gauntlet [--gauntlet-out FILE] [--conversations N] [--seed S]
 //!     [--herd-spike F] [--think-floor F]
@@ -24,7 +25,7 @@
 //!     adversarial scenario (agentic, mega_context, thundering_herd,
 //!     diurnal) on the 3-replica cluster path, invariant-checked per
 //!     cell, writing the schema-stable scorecard (default
-//!     GAUNTLET_PR9.json). --herd-spike scales the thundering-herd
+//!     GAUNTLET_PR10.json). --herd-spike scales the thundering-herd
 //!     within-wave arrival spike; --think-floor raises the agentic
 //!     think-time floor (seconds).
 //!
@@ -34,7 +35,7 @@
 //!     [--fairness trace|vtc|slo] [--tenants N] [--heavy-share F]
 //!     [--arrivals poisson|bursty] [--burst B]
 //!     [--prefill-mode chunked|monolithic] [--chunk-tokens N]
-//!     [--iter-budget N (0 = roofline auto)]
+//!     [--iter-budget N (0 = roofline auto)] [--sort-scheduler]
 //!     [--prefetch-depth K (0 = off)] [--prefetch-io-budget F]
 //!     [--preemption-policy swap_all|cost_aware|partial_tail]
 //!     [--replicas N]
@@ -154,7 +155,7 @@ fn cmd_exp(args: &Args) {
         "locality" => reports.push(exp::locality::run(&scale)),
         "ledger" => reports.push(exp::ledger::run(
             &scale,
-            args.get_or("ledger-out", "BENCH_PR9.json"),
+            args.get_or("ledger-out", "BENCH_PR10.json"),
         )),
         "gauntlet" => {
             let canon = ScenarioParams::default();
@@ -166,7 +167,7 @@ fn cmd_exp(args: &Args) {
             reports.push(exp::gauntlet::run(
                 &scale,
                 &params,
-                args.get_or("gauntlet-out", "GAUNTLET_PR9.json"),
+                args.get_or("gauntlet-out", "GAUNTLET_PR10.json"),
             ));
         }
         other => eprintln!("unknown experiment {other:?}"),
@@ -250,6 +251,11 @@ fn cmd_simulate(args: &Args) {
     }
     if let Some(b) = args.get("iter-budget") {
         cfg.scheduler.max_tokens_per_iter = b.parse().expect("iter-budget");
+    }
+    if args.flag("sort-scheduler") {
+        // Escape hatch to the sort-based reference scheduler (the
+        // incremental index is the default; both are byte-identical).
+        cfg.scheduler.incremental = false;
     }
     if let Some(d) = args.get("prefetch-depth") {
         cfg.prefetch.depth = d.parse().expect("prefetch-depth");

@@ -63,6 +63,11 @@ struct TurnRecord {
 pub struct Recorder {
     turns: Vec<TurnRecord>,
     open: HashMap<(RequestId, u32), usize>,
+    /// Distinct tenants observed, kept sorted as turns arrive — the
+    /// compute-once backing for [`Recorder::tenants`], which the
+    /// fairness summaries call per report row (previously a full
+    /// sort+dedup scan of every turn each time).
+    seen_tenants: Vec<u32>,
     pub iterations: Vec<IterationSample>,
     pub total_tokens: u64,
     pub finished_turns: u64,
@@ -127,6 +132,9 @@ impl Recorder {
             ..Default::default()
         });
         self.open.insert((req, turn), idx);
+        if let Err(pos) = self.seen_tenants.binary_search(&tenant) {
+            self.seen_tenants.insert(pos, tenant);
+        }
     }
 
     /// A decode/prefill step produced a token for (req, turn).
@@ -243,12 +251,11 @@ impl Recorder {
 
     // ---- per-tenant summaries (fairness policies) -----------------------
 
-    /// Distinct tenants observed, sorted.
+    /// Distinct tenants observed, sorted. O(1) per call: the set is
+    /// maintained incrementally at [`Recorder::turn_arrival`], not
+    /// rescanned from the turn log.
     pub fn tenants(&self) -> Vec<u32> {
-        let mut v: Vec<u32> = self.turns.iter().map(|t| t.tenant).collect();
-        v.sort_unstable();
-        v.dedup();
-        v
+        self.seen_tenants.clone()
     }
 
     /// Both per-tenant latency breakdowns from ONE tenant-indexed pass
@@ -421,6 +428,21 @@ mod tests {
         assert_eq!(ttft.len(), 2);
         assert!((ttft.min() - 0.5).abs() < 1e-9);
         assert!((ttft.max() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tenants_match_the_turn_log_scan() {
+        // The incremental sorted set must equal what the old
+        // sort+dedup scan over every recorded turn produced.
+        let mut r = Recorder::default();
+        for (req, tenant) in [(1, 7), (2, 0), (3, 7), (4, 3), (5, 0), (6, 9)] {
+            r.turn_arrival(req, 0, 0, tenant);
+        }
+        let mut scanned: Vec<u32> = r.turns.iter().map(|t| t.tenant).collect();
+        scanned.sort_unstable();
+        scanned.dedup();
+        assert_eq!(r.tenants(), scanned);
+        assert_eq!(r.tenants(), vec![0, 3, 7, 9]);
     }
 
     #[test]

@@ -12,7 +12,9 @@
 use std::fmt::Write as _;
 
 /// Schema identifier — bump only on breaking key/type changes.
-pub const LEDGER_SCHEMA: &str = "fastswitch-ledger-v1";
+/// v2: added the `sched_scale` section (scheduler-epoch cost vs queue
+/// depth, sort oracle vs incremental index).
+pub const LEDGER_SCHEMA: &str = "fastswitch-ledger-v2";
 
 /// Workload/config fingerprint the matrix was measured under.
 #[derive(Clone, Debug)]
@@ -63,6 +65,18 @@ pub struct ParallelRow {
     pub speedup: f64,
 }
 
+/// Scheduler-epoch cost at one candidate-queue depth, sort-based oracle
+/// vs incremental bucketed index on identical candidate churn. `ratio`
+/// is `sort / incremental` (> 1 means the index wins); it must grow
+/// with depth — the sublinearity evidence the CI schema check gates on.
+#[derive(Clone, Debug)]
+pub struct SchedScaleRow {
+    pub depth: usize,
+    pub sort_ns_per_epoch: f64,
+    pub incremental_ns_per_epoch: f64,
+    pub ratio: f64,
+}
+
 /// Tail latency + stall breakdown for one preemption policy on the
 /// churn mix.
 #[derive(Clone, Debug)]
@@ -87,6 +101,7 @@ pub struct Ledger {
     pub config: LedgerConfig,
     pub hotpath: Vec<HotpathRow>,
     pub scheduler_epoch: EpochCost,
+    pub sched_scale: Vec<SchedScaleRow>,
     pub throughput: Vec<ThroughputRow>,
     pub parallel: ParallelRow,
     pub policies: Vec<PolicyRow>,
@@ -145,6 +160,20 @@ impl Ledger {
         let _ = writeln!(o, "    \"execution_ns_mean\": {},", num(e.execution_ns_mean));
         let _ = writeln!(o, "    \"total_ns_mean\": {}", num(e.total_ns_mean));
         let _ = writeln!(o, "  }},");
+        let _ = writeln!(o, "  \"sched_scale\": [");
+        for (i, s) in self.sched_scale.iter().enumerate() {
+            let comma = if i + 1 < self.sched_scale.len() { "," } else { "" };
+            let _ = writeln!(
+                o,
+                "    {{\"depth\": {}, \"sort_ns_per_epoch\": {}, \
+                 \"incremental_ns_per_epoch\": {}, \"ratio\": {}}}{comma}",
+                s.depth,
+                num(s.sort_ns_per_epoch),
+                num(s.incremental_ns_per_epoch),
+                num(s.ratio)
+            );
+        }
+        let _ = writeln!(o, "  ],");
         let _ = writeln!(o, "  \"throughput\": [");
         for (i, t) in self.throughput.iter().enumerate() {
             let comma = if i + 1 < self.throughput.len() { "," } else { "" };
@@ -218,6 +247,20 @@ mod tests {
                 execution_ns_mean: 400.0,
                 total_ns_mean: 750.0,
             },
+            sched_scale: vec![
+                SchedScaleRow {
+                    depth: 100,
+                    sort_ns_per_epoch: 4000.0,
+                    incremental_ns_per_epoch: 2000.0,
+                    ratio: 2.0,
+                },
+                SchedScaleRow {
+                    depth: 1000,
+                    sort_ns_per_epoch: 60000.0,
+                    incremental_ns_per_epoch: 3000.0,
+                    ratio: 20.0,
+                },
+            ],
             throughput: vec![
                 ThroughputRow { replicas: 1, tokens_per_s: 1000.0 },
                 ThroughputRow { replicas: 3, tokens_per_s: 2800.0 },
@@ -252,7 +295,9 @@ mod tests {
             "\"tenants\"", "\"heavy_share\"", "\"burst\"", "\"priority_update_freq\"",
             "\"hotpath\"", "\"ns_per_op\"", "\"scheduler_epoch\"", "\"admission_ns_mean\"",
             "\"preemption_ns_mean\"", "\"prefetch_ns_mean\"", "\"execution_ns_mean\"",
-            "\"total_ns_mean\"", "\"throughput\"", "\"replicas\"", "\"tokens_per_s\"",
+            "\"total_ns_mean\"", "\"sched_scale\"", "\"depth\"",
+            "\"sort_ns_per_epoch\"", "\"incremental_ns_per_epoch\"", "\"ratio\"",
+            "\"throughput\"", "\"replicas\"", "\"tokens_per_s\"",
             "\"parallel\"", "\"deterministic_wall_s\"", "\"parallel_wall_s\"",
             "\"speedup\"",
             "\"policies\"", "\"policy\"", "\"ttft_p50_s\"", "\"ttft_p99_s\"",

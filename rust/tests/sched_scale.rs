@@ -1,0 +1,279 @@
+//! Scheduler-scale equivalence suite: the incremental bucketed
+//! candidate index ([`fastswitch::coordinator::queue`]) must produce
+//! **byte-identical** output to the sort-based `schedule()` oracle —
+//! same `Schedule` under arbitrary churn, same lookahead projection,
+//! and the same end-to-end simulation down to every metric byte when
+//! the engine flag flips between the two paths. The sort path is the
+//! reference semantics; the index is only allowed to be faster.
+
+use fastswitch::config::{EngineConfig, PrefillMode, Preset};
+use fastswitch::coordinator::engine::ServeOutcome;
+use fastswitch::coordinator::priority::Pattern;
+use fastswitch::coordinator::queue::{CandidateIndex, EpochScratch};
+use fastswitch::coordinator::request::ReqState;
+use fastswitch::coordinator::scheduler::{
+    predict_admission, schedule, Candidate, IterBudget,
+};
+use fastswitch::memory::RequestId;
+use fastswitch::exp::runner::{run_sim_with, Scale, WorkloadSpec};
+use fastswitch::fairness::PolicyKind;
+use fastswitch::util::rng::Rng;
+use std::fmt::Write as _;
+
+const TOTAL_BLOCKS: usize = 256;
+
+/// One random churn op applied to both stores identically: arrivals,
+/// departures, re-scores, residency flips, prefill progress.
+fn churn_once(
+    rng: &mut Rng,
+    cands: &mut Vec<Candidate>,
+    ix: &mut CandidateIndex,
+    next_id: &mut u64,
+) {
+    match rng.usize(0, 5) {
+        0 => {
+            let states = [
+                ReqState::Queued,
+                ReqState::SwappedOut,
+                ReqState::PartiallyResident,
+                ReqState::Running,
+                ReqState::Prefilling,
+                ReqState::SwappingIn,
+            ];
+            let state = states[rng.usize(0, states.len())];
+            let held = match state {
+                ReqState::Running | ReqState::Prefilling => rng.usize(1, 12),
+                ReqState::PartiallyResident => rng.usize(1, 6),
+                _ => 0,
+            };
+            let prefill = match state {
+                ReqState::Queued => rng.usize(16, 600) as u32,
+                ReqState::Prefilling => rng.usize(1, 200) as u32,
+                _ => 0,
+            };
+            let c = Candidate {
+                id: *next_id,
+                priority: rng.usize(0, 8) as i64,
+                turn_arrival: rng.usize(0, 4000) as u64,
+                state,
+                blocks_held: held,
+                blocks_needed: rng.usize(0, 13),
+                prefill_remaining: prefill,
+            };
+            *next_id += 1;
+            cands.push(c);
+            ix.upsert(c);
+        }
+        1 if !cands.is_empty() => {
+            let i = rng.usize(0, cands.len());
+            let gone = cands.swap_remove(i);
+            assert!(ix.remove(gone.id), "index lost a live entry");
+        }
+        2 if !cands.is_empty() => {
+            let i = rng.usize(0, cands.len());
+            cands[i].priority = rng.usize(0, 8) as i64;
+            if rng.chance(0.3) {
+                cands[i].turn_arrival = rng.usize(0, 4000) as u64;
+            }
+            ix.upsert(cands[i]);
+        }
+        3 if !cands.is_empty() => {
+            // Promote/preempt-style flip: state + residency move.
+            let i = rng.usize(0, cands.len());
+            let c = &mut cands[i];
+            if matches!(c.state, ReqState::SwappedOut | ReqState::Queued) {
+                c.state = ReqState::Running;
+                c.blocks_held = c.blocks_needed.max(1);
+                c.blocks_needed = 0;
+                c.prefill_remaining = 0;
+            } else {
+                c.state = ReqState::SwappedOut;
+                c.blocks_needed =
+                    (c.blocks_held + c.blocks_needed).clamp(1, TOTAL_BLOCKS);
+                c.blocks_held = 0;
+            }
+            let c = *c;
+            ix.upsert(c);
+        }
+        4 if !cands.is_empty() => {
+            // Prefill progress / demand growth without a state change.
+            let i = rng.usize(0, cands.len());
+            let c = &mut cands[i];
+            c.prefill_remaining = c.prefill_remaining.saturating_sub(64);
+            c.blocks_needed = rng.usize(0, 13);
+            let c = *c;
+            ix.upsert(c);
+        }
+        _ => {}
+    }
+}
+
+/// The big churn gauntlet: hundreds of epochs of mixed ops, an epoch
+/// budget that keeps changing shape (chunked and monolithic), and a
+/// schedule comparison after every single epoch.
+#[test]
+fn churned_index_schedules_byte_identically_to_the_sort_oracle() {
+    let mut rng = Rng::new(0x10_5CA1E);
+    let mut cands: Vec<Candidate> = Vec::new();
+    let mut ix = CandidateIndex::new(TOTAL_BLOCKS);
+    let mut scratch = EpochScratch::default();
+    let mut next_id = 0u64;
+    let mut admitted_total = 0usize;
+    for epoch in 0..1200 {
+        let ops = 1 + rng.usize(0, 4);
+        for _ in 0..ops {
+            churn_once(&mut rng, &mut cands, &mut ix, &mut next_id);
+        }
+        let max_batch = 1 + rng.usize(0, 24);
+        let budget = if epoch % 9 == 0 {
+            IterBudget::monolithic()
+        } else {
+            IterBudget::chunked(1 + rng.usize(0, 256) as u32, 1 + rng.usize(0, 64) as u32)
+        };
+        let oracle = schedule(&cands, TOTAL_BLOCKS, max_batch, budget);
+        ix.schedule_into(TOTAL_BLOCKS, max_batch, budget, &mut scratch);
+        assert_eq!(
+            scratch.sched, oracle,
+            "index diverged from oracle at epoch {epoch} ({} candidates)",
+            cands.len()
+        );
+        admitted_total += oracle.admitted();
+    }
+    assert!(!cands.is_empty(), "churn degenerated to an empty population");
+    assert!(admitted_total > 0, "gauntlet never admitted anything");
+}
+
+/// The lookahead projection must also match the oracle exactly —
+/// including first-projected-admission ordering and dedup across
+/// offsets — and must leave the index state untouched afterwards.
+#[test]
+fn churned_index_predictions_match_the_oracle() {
+    let mut rng = Rng::new(0xFACE_0FF);
+    let mut cands: Vec<Candidate> = Vec::new();
+    let mut ix = CandidateIndex::new(TOTAL_BLOCKS);
+    let mut scratch = EpochScratch::default();
+    let mut next_id = 0u64;
+    // Pure function of (id, offset): a keyed hash, so the projected
+    // ranking is deterministic but uncorrelated with current priority.
+    let future = |id: RequestId, offset: u64| {
+        (id.wrapping_mul(0x9E37_79B9).wrapping_add(offset * 31) % 8) as i64
+    };
+    for round in 0..200 {
+        for _ in 0..3 {
+            churn_once(&mut rng, &mut cands, &mut ix, &mut next_id);
+        }
+        let depth = 1 + round % 4;
+        let oracle = predict_admission(&cands, TOTAL_BLOCKS, 16, depth, future);
+        ix.predict_into(TOTAL_BLOCKS, 16, depth, future, &mut scratch);
+        assert_eq!(
+            scratch.promote_out, oracle,
+            "projection diverged at round {round} depth {depth}"
+        );
+        // Rollback check: the live schedule still matches afterwards.
+        let budget = IterBudget::chunked(64, 16);
+        let live = schedule(&cands, TOTAL_BLOCKS, 8, budget);
+        ix.schedule_into(TOTAL_BLOCKS, 8, budget, &mut scratch);
+        assert_eq!(scratch.sched, live, "projection mutated the index (round {round})");
+    }
+}
+
+fn scale() -> Scale {
+    Scale {
+        conversations: 24,
+        request_rate: 2.0,
+        seed: 123,
+        max_iters: 400_000,
+        charge_sched_overhead: false,
+    }
+}
+
+fn spec() -> WorkloadSpec {
+    WorkloadSpec {
+        tenants: 4,
+        heavy_share: 0.5,
+        burst: Some(4.0),
+        ..WorkloadSpec::default()
+    }
+}
+
+/// Full-precision digest of a run: any byte of drift between the two
+/// scheduler paths flips it.
+fn digest(out: &ServeOutcome) -> String {
+    let mut s = String::new();
+    let ttft = out.recorder.ttft();
+    let tbt = out.recorder.tbt();
+    let st = &out.swap_stats;
+    let _ = write!(
+        s,
+        "span={} iters={} tokens={} turns={} convs={} rejected={} preempt={} \
+         recompute={} partial={} ttft=({:e},{:e}) tbt=({:e},{:e}) \
+         swap=({},{},{},{},{}) prefetch=({},{},{},{}) ",
+        out.span,
+        out.iterations,
+        out.recorder.total_tokens,
+        out.recorder.finished_turns,
+        out.recorder.finished_conversations,
+        out.recorder.rejected_conversations,
+        out.recorder.preemptions,
+        out.recorder.recompute_preemptions,
+        out.recorder.partial_evictions,
+        ttft.p(50.0),
+        ttft.p(99.0),
+        tbt.p(50.0),
+        tbt.p(99.0),
+        st.swap_out_ops,
+        st.swap_in_ops,
+        st.total_bytes,
+        st.total_blocks,
+        st.conflicts,
+        st.prefetch_ops,
+        st.prefetch_hits,
+        st.prefetch_canceled,
+        st.prefetch_wasted_bytes,
+    );
+    for (tenant, n) in out.recorder.tokens_by_tenant() {
+        let _ = write!(s, "t{tenant}={n} ");
+    }
+    s
+}
+
+fn run_with(incremental: bool, mutate: impl FnOnce(&mut EngineConfig)) -> ServeOutcome {
+    let mut cfg = EngineConfig::fastswitch();
+    cfg.scheduler.priority_update_freq = 0.04;
+    cfg.fairness.policy = PolicyKind::Vtc;
+    cfg.prefetch.depth = 2;
+    cfg.scheduler.incremental = incremental;
+    mutate(&mut cfg);
+    run_sim_with(cfg, Preset::llama8b_a10(), Pattern::Markov, &scale(), &spec())
+}
+
+/// The e2e pin: the default-config simulation (VTC churn, bursty
+/// multi-tenant arrivals, depth-2 prefetch) reports byte-identical
+/// metrics whether the engine walks the incremental index or re-sorts
+/// every epoch — i.e. this PR changes nothing but the clock.
+#[test]
+fn e2e_simulation_is_bit_identical_across_scheduler_paths() {
+    let a = digest(&run_with(true, |_| {}));
+    let b = digest(&run_with(false, |_| {}));
+    assert!(!a.is_empty());
+    assert_eq!(
+        a, b,
+        "incremental and sort-based scheduler paths must agree byte-for-byte"
+    );
+}
+
+/// Same pin through the monolithic-prefill grant path, which takes the
+/// all-or-nothing branch of the grant pass.
+#[test]
+fn e2e_monolithic_prefill_is_bit_identical_across_scheduler_paths() {
+    let mono = |cfg: &mut EngineConfig| {
+        cfg.scheduler.prefill_mode = PrefillMode::Monolithic;
+    };
+    let a = digest(&run_with(true, mono));
+    let b = digest(&run_with(false, mono));
+    assert!(!a.is_empty());
+    assert_eq!(
+        a, b,
+        "monolithic-prefill runs must agree byte-for-byte across scheduler paths"
+    );
+}

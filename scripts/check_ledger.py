@@ -1,18 +1,22 @@
 #!/usr/bin/env python3
-"""Validate a BENCH_PR<N>.json perf ledger against fastswitch-ledger-v1.
+"""Validate a BENCH_PR<N>.json perf ledger against fastswitch-ledger-v2.
 
 Usage: check_ledger.py LEDGER.json
 
 Checks the schema tag, every required key, value types, and basic sanity
-(non-negative measurements, non-empty sections). Exits non-zero with a
-per-violation message on failure — CI gates the `exp ledger` smoke run
-on this.
+(non-negative measurements, non-empty sections). The sched_scale section
+gets extra scrutiny: a strictly increasing depth grid, sane sort-path
+cost growth, and a sort/incremental ratio that improves from the shallow
+end to the deep end — the sublinearity claim the incremental scheduler
+makes. Exits non-zero with a per-violation message on failure — CI gates
+the `exp ledger` smoke run on this. `scripts/test_check_ledger.py` runs
+this validator against the good/broken fixtures in `scripts/fixtures/`.
 """
 
 import json
 import sys
 
-SCHEMA = "fastswitch-ledger-v1"
+SCHEMA = "fastswitch-ledger-v2"
 
 CONFIG_KEYS = {
     "conversations": int,
@@ -29,6 +33,12 @@ EPOCH_KEYS = {
     "prefetch_ns_mean": float,
     "execution_ns_mean": float,
     "total_ns_mean": float,
+}
+SCHED_SCALE_KEYS = {
+    "depth": int,
+    "sort_ns_per_epoch": float,
+    "incremental_ns_per_epoch": float,
+    "ratio": float,
 }
 THROUGHPUT_KEYS = {"replicas": int, "tokens_per_s": float}
 PARALLEL_KEYS = {
@@ -80,6 +90,46 @@ def check_obj(obj, keys, where):
             fail(f"{where}: unknown key {key!r} (schema drift?)")
 
 
+def check_sched_scale(rows):
+    """Section-specific sanity beyond the key/type checks: strictly
+    increasing depth grid, positive timings, a sort cost that does not
+    collapse as the queue deepens, and a sort/incremental ratio that is
+    better at the deep end than the shallow end."""
+    if not isinstance(rows, list) or len(rows) < 2:
+        fail(f"sched_scale: expected >= 2 depth rows, got {rows!r}")
+        return
+    try:
+        depths = [r["depth"] for r in rows]
+        sorts = [r["sort_ns_per_epoch"] for r in rows]
+        incs = [r["incremental_ns_per_epoch"] for r in rows]
+        ratios = [r["ratio"] for r in rows]
+    except (TypeError, KeyError):
+        return  # missing keys / wrong row types already reported above
+    if not all(isinstance(d, int) for d in depths) or not all(
+        isinstance(v, (int, float)) and not isinstance(v, bool)
+        for v in sorts + incs + ratios
+    ):
+        return  # wrong value types already reported above
+    if depths != sorted(set(depths)):
+        fail(f"sched_scale: depth grid must be strictly increasing, got {depths}")
+    for vals, name in [(sorts, "sort_ns_per_epoch"),
+                       (incs, "incremental_ns_per_epoch"),
+                       (ratios, "ratio")]:
+        for i, v in enumerate(vals):
+            if v <= 0:
+                fail(f"sched_scale[{i}].{name}: expected positive, got {v!r}")
+    # Sorting a 10x deeper queue cannot get 2x cheaper; a violation
+    # means the timing harness (not the scheduler) is broken.
+    for i, (a, b) in enumerate(zip(sorts, sorts[1:])):
+        if b < a * 0.5:
+            fail(f"sched_scale: sort_ns_per_epoch collapsed {a!r} -> {b!r} "
+                 f"between rows {i} and {i + 1} — timing looks broken")
+    if ratios and ratios[-1] < ratios[0]:
+        fail(f"sched_scale: sort/incremental ratio must improve with depth, "
+             f"got {ratios[0]!r} at depth {depths[0]} vs {ratios[-1]!r} "
+             f"at depth {depths[-1]}")
+
+
 def main():
     if len(sys.argv) != 2:
         print(__doc__.strip(), file=sys.stderr)
@@ -97,6 +147,7 @@ def main():
     check_obj(ledger.get("parallel"), PARALLEL_KEYS, "parallel")
     for section, keys in [
         ("hotpath", HOTPATH_KEYS),
+        ("sched_scale", SCHED_SCALE_KEYS),
         ("throughput", THROUGHPUT_KEYS),
         ("policies", POLICY_KEYS),
     ]:
@@ -106,9 +157,10 @@ def main():
             continue
         for i, row in enumerate(rows):
             check_obj(row, keys, f"{section}[{i}]")
+    check_sched_scale(ledger.get("sched_scale"))
 
     top = {"schema", "pr", "config", "hotpath", "scheduler_epoch",
-           "throughput", "parallel", "policies"}
+           "sched_scale", "throughput", "parallel", "policies"}
     for key in set(ledger) - top:
         fail(f"top level: unknown key {key!r} (schema drift?)")
 
@@ -117,8 +169,9 @@ def main():
             print(f"check_ledger: {e}", file=sys.stderr)
         return 1
     n_pol = len(ledger["policies"])
+    depths = [r["depth"] for r in ledger["sched_scale"]]
     print(f"check_ledger: OK — PR {ledger['pr']}, {len(ledger['hotpath'])} "
-          f"hotpath rows, {n_pol} policies")
+          f"hotpath rows, sched_scale depths {depths}, {n_pol} policies")
     return 0
 
 

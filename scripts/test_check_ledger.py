@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Fixture tests for check_ledger.py — run with `python3 scripts/test_check_ledger.py`.
+
+Drives the validator as a subprocess against the fixtures in
+scripts/fixtures/: the good ledger must pass clean, and the broken one
+must be rejected with a message for every planted violation (shuffled
+depth grid, negative timing, regressing sort/incremental ratio,
+collapsed sort cost, unknown row key). Stdlib only — CI runs this before
+validating the freshly generated BENCH_PR<N>.json.
+"""
+
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+CHECKER = os.path.join(HERE, "check_ledger.py")
+FIXTURES = os.path.join(HERE, "fixtures")
+
+
+def run(path):
+    proc = subprocess.run(
+        [sys.executable, CHECKER, path],
+        capture_output=True,
+        text=True,
+    )
+    return proc.returncode, proc.stdout + proc.stderr
+
+
+def main():
+    failures = []
+
+    code, out = run(os.path.join(FIXTURES, "ledger_good.json"))
+    if code != 0:
+        failures.append(f"good fixture rejected (exit {code}):\n{out}")
+    elif "OK" not in out:
+        failures.append(f"good fixture: expected an OK summary, got:\n{out}")
+
+    code, out = run(os.path.join(FIXTURES, "ledger_bad_sched_scale.json"))
+    if code == 0:
+        failures.append("broken fixture accepted — validator is toothless")
+    else:
+        for needle in [
+            "depth grid must be strictly increasing",
+            "negative measurement",
+            "ratio must improve with depth",
+            "sort_ns_per_epoch collapsed",
+            "unknown key 'surprise'",
+        ]:
+            if needle not in out:
+                failures.append(
+                    f"broken fixture: missing violation {needle!r} in:\n{out}"
+                )
+
+    if failures:
+        for f in failures:
+            print(f"test_check_ledger: FAIL — {f}", file=sys.stderr)
+        return 1
+    print("test_check_ledger: OK — good fixture passes, broken fixture "
+          "rejected with every planted violation reported")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
